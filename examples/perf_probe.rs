@@ -1,0 +1,31 @@
+// Micro-breakdown of the serving hot path: time each artifact call
+// directly to find where the per-request milliseconds go.
+use std::time::Instant;
+use xai_accel::runtime::ArtifactRegistry;
+use xai_accel::util::rng::Rng;
+
+fn time_it(label: &str, iters: usize, mut f: impl FnMut()) {
+    let t0 = Instant::now();
+    for _ in 0..iters { f(); }
+    let dt = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{label:<22} {:.1}us/call", dt * 1e6);
+}
+
+fn main() {
+    let reg = ArtifactRegistry::load(std::path::Path::new("artifacts")).unwrap();
+    let mut rng = Rng::new(0);
+    let img: Vec<f32> = (0..256).map(|_| rng.gauss_f32()).collect();
+    let img32: Vec<f32> = (0..32*256).map(|_| rng.gauss_f32()).collect();
+    let x: Vec<f32> = (0..256).map(|_| 3.0 + rng.gauss_f32()).collect();
+    let t6: Vec<f32> = (0..6*64).map(|_| rng.gauss_f32()).collect();
+    let v6: Vec<f32> = (0..64*8).map(|_| rng.gauss_f32()).collect();
+    let onehot = vec![1f32, 0.0, 0.0, 0.0];
+
+    time_it("cnn_fwd_b1", 200, || { reg.get("cnn_fwd_b1").unwrap().run(&[img.clone()]).unwrap(); });
+    time_it("cnn_fwd_b32", 200, || { reg.get("cnn_fwd_b32").unwrap().run(&[img32.clone()]).unwrap(); });
+    time_it("distill_16x16", 100, || { reg.get("distill_16x16").unwrap().run(&[x.clone(), img.clone()]).unwrap(); });
+    time_it("occlusion_16x16_b4", 100, || { reg.get("occlusion_16x16_b4").unwrap().run(&[x.clone(), img.clone()]).unwrap(); });
+    time_it("shapley_n6_b8", 200, || { reg.get("shapley_n6_b8").unwrap().run(&[t6.clone(), v6.clone()]).unwrap(); });
+    time_it("ig_cnn_s32", 100, || { reg.get("ig_cnn_s32").unwrap().run(&[img.clone(), x.clone(), onehot.clone()]).unwrap(); });
+    time_it("saliency_cnn", 200, || { reg.get("saliency_cnn").unwrap().run(&[img.clone(), onehot.clone()]).unwrap(); });
+}

@@ -1,0 +1,169 @@
+//! End-to-end system driver (the EXPERIMENTS.md §E2E run).
+//!
+//! Run with:  cargo run --release --example serve_e2e [-- --requests N]
+//!
+//! Proves all three layers compose: loads the **real trained MicroCNN**
+//! and the XAI pipelines from the AOT artifacts (L2+L1, compiled HLO),
+//! serves a mixed batched workload through the Rust coordinator (L3),
+//! verifies the *numerics* of every response against the native
+//! oracles, and reports latency/throughput + batching efficiency.
+
+use xai_accel::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
+use xai_accel::data::{cifar, counters};
+use xai_accel::linalg::conv::circ_conv2;
+use xai_accel::prelude::*;
+use xai_accel::util::rng::Rng;
+use xai_accel::xai::shapley;
+
+fn main() -> xai_accel::error::Result<()> {
+    let args = xai_accel::cli::Args::from_env();
+    let requests = args.get_usize("requests", 96)?;
+    let executors = args.get_usize("executors", 2)?;
+
+    let mut config = CoordinatorConfig::default();
+    config.executors = executors;
+    println!("[e2e] starting coordinator ({executors} executors, PJRT CPU)...");
+    let coord = Coordinator::start(config)?;
+
+    let mut rng = Rng::new(2024);
+    let started = std::time::Instant::now();
+
+    // ---- build a mixed workload with known ground truth ----------------
+    enum Check {
+        Classify { label: usize },
+        Distill { k_true: Matrix },
+        Shapley { exact: Vec<f32> },
+        IntGrad { label: usize },
+    }
+    let mut pendings = Vec::new();
+    for i in 0..requests {
+        let (req, check) = match i % 4 {
+            0 => {
+                let s = cifar::sample_class(i % 4, &mut rng);
+                (
+                    Request::Classify {
+                        image: s.image.clone(),
+                    },
+                    Check::Classify { label: s.label },
+                )
+            }
+            1 => {
+                let x = Matrix::from_fn(16, 16, |_, _| 3.0 + rng.gauss_f32());
+                let mut k_true = Matrix::zeros(16, 16);
+                k_true.set(0, 0, 0.7);
+                k_true.set(1, 1, 0.3);
+                let y = circ_conv2(&x, &k_true);
+                (Request::Distill { x, y }, Check::Distill { k_true })
+            }
+            2 => {
+                let s = counters::sample(counters::ProgramClass::Spectre, &mut rng);
+                let benign = [0.15f32, 0.10, 0.50, 0.20, 0.40, 0.25];
+                let game = shapley::ValueTable::from_fn(6, |sub| {
+                    let mut f = benign;
+                    for j in 0..6 {
+                        if sub & (1 << j) != 0 {
+                            f[j] = s.features[j];
+                        }
+                    }
+                    counters::detector_score(&f)
+                });
+                let exact = shapley::shapley_exact(&game);
+                (
+                    Request::Shapley {
+                        n: 6,
+                        values: game.values.clone(),
+                        names: counters::FEATURES.iter().map(|s| s.to_string()).collect(),
+                    },
+                    Check::Shapley { exact },
+                )
+            }
+            _ => {
+                let s = cifar::sample_class(i % 4, &mut rng);
+                (
+                    Request::IntGrad {
+                        baseline: Matrix::zeros(16, 16),
+                        class: s.label,
+                        image: s.image.clone(),
+                    },
+                    Check::IntGrad { label: s.label },
+                )
+            }
+        };
+        pendings.push((coord.submit(req)?, check));
+    }
+
+    // ---- await + verify -------------------------------------------------
+    let mut ok = 0usize;
+    let mut verified = 0usize;
+    let total = pendings.len();
+    for (p, check) in pendings {
+        let resp = match p.wait() {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("[e2e] request failed: {e}");
+                continue;
+            }
+        };
+        ok += 1;
+        let good = match (resp, check) {
+            (Response::Logits(l), Check::Classify { label }) => {
+                let pred = l
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                pred == label
+            }
+            (Response::Distillation { kernel, .. }, Check::Distill { k_true }) => {
+                kernel.max_abs_diff(&k_true) < 0.05
+            }
+            (Response::Attribution(a), Check::Shapley { exact }) => a
+                .scores
+                .iter()
+                .zip(&exact)
+                .all(|(got, want)| (got - want).abs() < 1e-3),
+            (Response::Heatmap(h), Check::IntGrad { label }) => {
+                // IG must highlight the labeled quadrant above average
+                let (r0, c0) = cifar::quadrant_origin(label);
+                let mut quad = 0f32;
+                let mut all = 0f32;
+                for r in 0..16 {
+                    for c in 0..16 {
+                        let v = h.get(r, c).abs();
+                        all += v;
+                        if r >= r0 && r < r0 + 8 && c >= c0 && c < c0 + 8 {
+                            quad += v;
+                        }
+                    }
+                }
+                quad / all.max(1e-9) > 0.25 // quadrant is 25% of pixels
+            }
+            _ => false,
+        };
+        if good {
+            verified += 1;
+        }
+    }
+    let elapsed = started.elapsed().as_secs_f64();
+
+    println!("\n[e2e] served    : {ok}/{total} requests");
+    println!("[e2e] verified  : {verified}/{ok} responses numerically correct");
+    println!(
+        "[e2e] throughput: {:.1} req/s over {:.2}s",
+        total as f64 / elapsed,
+        elapsed
+    );
+    print!("{}", coord.metrics().report());
+    let mean_batch = coord.metrics().mean_batch_size();
+    coord.shutdown();
+
+    assert!(ok == total, "all requests must be served");
+    assert!(
+        verified as f64 >= 0.9 * ok as f64,
+        "≥90% of responses must verify against the oracles"
+    );
+    assert!(mean_batch > 1.5, "batching must actually batch");
+    println!("\n[e2e] PASS — three layers compose: Pallas kernels → JAX AOT → PJRT → coordinator");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Fig. 13: SHAP waterfall plots for Spectre / Meltdown / benign samples.
+//!
+//! Run with:  cargo run --release --example spectre_shap
+//!
+//! Reproduces the paper's three panels including the adversarial
+//! variants: (a) a Spectre program planting extra page faults, (b) a
+//! Meltdown program inserting no-profit branchy loops.  Both evasion
+//! attempts must fail — BMP (resp. INS) still carries the decision, as
+//! the paper argues in §IV-E.
+
+use xai_accel::data::counters::{self, ProgramClass};
+use xai_accel::prelude::*;
+use xai_accel::util::rng::Rng;
+use xai_accel::xai::shapley;
+
+/// Detector game: v(S) = score with the features outside S pinned to
+/// the benign profile (interventional SHAP with a benign background).
+fn game_for(sample: &[f32; counters::N_FEATURES]) -> shapley::ValueTable {
+    let benign = [0.15f32, 0.10, 0.50, 0.20, 0.40, 0.25];
+    shapley::ValueTable::from_fn(counters::N_FEATURES, |s| {
+        let mut f = benign;
+        for i in 0..counters::N_FEATURES {
+            if s & (1 << i) != 0 {
+                f[i] = sample[i];
+            }
+        }
+        counters::detector_score(&f)
+    })
+}
+
+fn panel(title: &str, class: ProgramClass, rng: &mut Rng) -> xai_accel::xai::Attribution {
+    let s = counters::sample(class, rng);
+    let score = counters::detector_score(&s.features);
+    let verdict = if counters::is_attack(&s.features) {
+        "ATTACK"
+    } else {
+        "benign"
+    };
+    println!("\n--- {title} ---");
+    println!(
+        "counters: {:?}",
+        s.features
+            .iter()
+            .zip(counters::FEATURES)
+            .map(|(v, n)| format!("{n}={v:.2}"))
+            .collect::<Vec<_>>()
+    );
+    println!("detector score {score:.3} -> {verdict}");
+    let mut eng = NativeEngine::new();
+    let attr = shapley::explain(&mut eng, &game_for(&s.features), &counters::FEATURES);
+    print!("{}", attr.waterfall(28));
+    // completeness: SHAP sums to score(sample) − score(benign profile)
+    let benign_score = counters::detector_score(&[0.15, 0.10, 0.50, 0.20, 0.40, 0.25]);
+    println!(
+        "sum(SHAP) = {:.3} = score − benign_score = {:.3}",
+        attr.total(),
+        score - benign_score
+    );
+    attr
+}
+
+fn main() {
+    let mut rng = Rng::new(5);
+
+    let a = panel(
+        "(a) Spectre + planted page faults (adversarial)",
+        ProgramClass::SpectreAdversarial,
+        &mut rng,
+    );
+    let b = panel(
+        "(b) Meltdown + redundant branch loops (adversarial)",
+        ProgramClass::MeltdownAdversarial,
+        &mut rng,
+    );
+    let c = panel("(c) benign program", ProgramClass::Benign, &mut rng);
+
+    // The paper's claims, asserted:
+    let bmp = 0; // feature order: BMP, PGF, INS, LLCM, BRC, LLCR
+    let ins = 2;
+    assert!(
+        a.scores[bmp] > 0.0,
+        "(a): BMP must still push toward ATTACK despite the PGF noise"
+    );
+    assert!(
+        b.scores[ins] < 0.0 || b.scores[bmp] > 0.0,
+        "(b): the detector survives the branchy-loop evasion"
+    );
+    assert!(
+        c.total() < a.total(),
+        "(c): benign total SHAP must sit below the attack panels"
+    );
+    println!("\n=> all three Fig. 13 claims hold on the synthetic distributions");
+}

@@ -1,0 +1,143 @@
+"""AOT compiler: lower every L2 entry point to HLO text artifacts.
+
+Run once via ``make artifacts``; the Rust coordinator loads the outputs
+through PJRT and Python never runs again.  Interchange is HLO **text**
+(not ``HloModuleProto.serialize()``): jax >= 0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``artifacts/``):
+
+* ``<name>.hlo.txt``   — one per model variant (see ENTRIES below)
+* ``manifest.txt``     — pipe-separated index the Rust runtime parses:
+                         ``name|file|in1,in2,...|out``  (shapes like 16x16)
+* ``train_loss.txt``   — MicroCNN loss curve (one float per step)
+* ``train_meta.txt``   — key=value: steps, final accuracy, param count
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is LOAD-BEARING: the default printer
+    # elides big literals as `{...}`, which the XLA text parser silently
+    # reads back as zeros — wiping the baked model weights and DFT
+    # matrices out of every artifact.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def shape_str(s) -> str:
+    return "x".join(str(d) for d in s.shape)
+
+
+def build_entries(params):
+    """(name, fn, example_args) for every artifact we ship.
+
+    Multiple shape variants per pipeline = one compiled executable per
+    model variant; the Rust batcher picks the variant matching its batch.
+    """
+    entries = []
+
+    # Model distillation (Eq. 5) at the serving sizes.
+    for n in (16, 32, 64):
+        entries.append((f"distill_{n}x{n}", model.distill_entry,
+                        (spec(n, n), spec(n, n))))
+
+    # Occlusion contribution factors (Eq. 6), 4x4 blocks over 16x16.
+    entries.append(("occlusion_16x16_b4",
+                    functools.partial(model.occlusion_entry, block=4),
+                    (spec(16, 16), spec(16, 16))))
+    entries.append(("occlusion_32x32_b8",
+                    functools.partial(model.occlusion_entry, block=8),
+                    (spec(32, 32), spec(32, 32))))
+
+    # Shapley structure-vector matvec (§III-B): n players, batch of games.
+    for n, b in ((6, 8), (8, 8), (10, 4)):
+        entries.append((f"shapley_n{n}_b{b}", model.shapley_entry,
+                        (spec(n, 1 << n), spec(1 << n, b))))
+
+    # MicroCNN forward at several batch sizes (serving variants).
+    for b in (1, 8, 32):
+        entries.append((f"cnn_fwd_b{b}",
+                        functools.partial(model.cnn_fwd_entry, params),
+                        (spec(b, model.IMG, model.IMG),)))
+
+    # Integrated gradients over the trained CNN (params baked in).
+    entries.append(("ig_cnn_s32",
+                    functools.partial(model.ig_entry, params, steps=32),
+                    (spec(model.IMG, model.IMG), spec(model.IMG, model.IMG),
+                     spec(model.NUM_CLASSES))))
+
+    # Vanilla gradient saliency (Fig. 14 baseline).
+    entries.append(("saliency_cnn",
+                    functools.partial(model.saliency_entry, params),
+                    (spec(model.IMG, model.IMG), spec(model.NUM_CLASSES))))
+
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    print(f"[aot] training MicroCNN for {args.train_steps} steps ...")
+    params, losses = model.train(steps=args.train_steps, seed=args.seed)
+    acc = model.accuracy(params)
+    n_params = sum(int(np.prod(p.shape)) for p in params)
+    print(f"[aot] final loss={losses[-1]:.4f} accuracy={acc:.3f} "
+          f"params={n_params}")
+
+    with open(os.path.join(args.out_dir, "train_loss.txt"), "w") as f:
+        f.write("\n".join(f"{l:.6f}" for l in losses) + "\n")
+    with open(os.path.join(args.out_dir, "train_meta.txt"), "w") as f:
+        f.write(f"steps={args.train_steps}\naccuracy={acc:.4f}\n"
+                f"params={n_params}\nfinal_loss={losses[-1]:.6f}\n")
+
+    manifest = []
+    for name, fn, example_args in build_entries(params):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        # Determine output shape by abstract evaluation.
+        out = jax.eval_shape(fn, *example_args)
+        out_s = ",".join(shape_str(o) for o in out)
+        in_s = ",".join(shape_str(s) for s in example_args)
+        manifest.append(f"{name}|{fname}|{in_s}|{out_s}")
+        print(f"[aot] {name}: in=[{in_s}] out=[{out_s}] "
+              f"({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] wrote {len(manifest)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Layer-1 Pallas kernels for TPU-accelerated explainable AI.
+
+The paper's insight is that model distillation, Shapley analysis, and
+integrated gradients all reduce to dense matrix computations that map
+onto the TPU MXU.  Each kernel here expresses one of those computations
+as a tiled Pallas kernel with an explicit HBM<->VMEM schedule
+(``BlockSpec``); :mod:`.ref` holds the pure-jnp oracles.
+
+All kernels run with ``interpret=True`` — real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.  Tile shapes are
+still chosen for the MXU (128x128 native tile); DESIGN.md
+§Hardware-Adaptation documents the VMEM budget per kernel.
+"""
+
+from .dft_matmul import (
+    complex_matmul_pallas,
+    dft2_pallas,
+    idft2_pallas,
+    matmul_pallas,
+)
+from .spectral_div import spectral_divide_pallas, distill_solve_pallas
+from .vandermonde import vandermonde_build_pallas
+from .ig_path import ig_trapezoid_pallas
+from .occlusion import occlusion_norms_pallas
+from .shapley_matvec import shapley_matvec_pallas
+
+__all__ = [
+    "matmul_pallas",
+    "complex_matmul_pallas",
+    "dft2_pallas",
+    "idft2_pallas",
+    "spectral_divide_pallas",
+    "distill_solve_pallas",
+    "vandermonde_build_pallas",
+    "ig_trapezoid_pallas",
+    "occlusion_norms_pallas",
+    "shapley_matvec_pallas",
+]

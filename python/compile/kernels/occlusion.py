@@ -1,0 +1,70 @@
+"""Occlusion-delta kernel — distillation contribution factors (Eq. 6).
+
+Given the distilled model's clean output Y and a batch of perturbed
+outputs Y'_b (input with feature block b zeroed, convolved with K), the
+contribution factor of block b is the Frobenius norm ||Y - Y'_b||_F.
+
+The kernel fuses subtraction, squaring, and the full-matrix reduction
+into one pass per batch element: each grid step accumulates the partial
+sum-of-squares of one (bm, bn) tile into a per-batch scalar accumulator.
+Scalar outputs use a (1, 1) block in SMEM-style layout.
+
+This is the "parallel computation of multiple inputs" pattern (§III-E):
+the batch dimension is embarrassingly parallel, so the L3 coordinator
+shards batches of perturbed outputs across workers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dft_matmul import TILE, _pad_to
+
+
+def _occlusion_kernel(y_ref, yp_ref, o_ref):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = y_ref[...] - yp_ref[0]
+    o_ref[...] += jnp.sum(d * d)[None, None]
+
+    @pl.when((i == pl.num_programs(1) - 1) & (j == pl.num_programs(2) - 1))
+    def _sqrt():
+        o_ref[...] = jnp.sqrt(o_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def occlusion_norms_pallas(y: jnp.ndarray, yps: jnp.ndarray,
+                           tile: int = TILE) -> jnp.ndarray:
+    """||Y - Y'_b||_F for every perturbed output in the batch.
+
+    ``y``: (M, N) clean output; ``yps``: (B, M, N) perturbed outputs.
+    Returns (B,) Frobenius norms.
+    """
+    b, m, n = yps.shape
+    assert y.shape == (m, n)
+    bm, bn = min(tile, m), min(tile, n)
+    yp2 = _pad_to(y.astype(jnp.float32), bm, bn)
+    pm, pn = yp2.shape[0] - m, yp2.shape[1] - n
+    ypsp = jnp.pad(yps.astype(jnp.float32), ((0, 0), (0, pm), (0, pn)))
+    gm, gn = yp2.shape[0] // bm, yp2.shape[1] // bn
+    out = pl.pallas_call(
+        _occlusion_kernel,
+        grid=(b, gm, gn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda bb, i, j: (i, j)),
+            pl.BlockSpec((1, bm, bn), lambda bb, i, j: (bb, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda bb, i, j: (bb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=True,
+    )(yp2, ypsp)
+    return out[:, 0]

@@ -1,0 +1,218 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+Each function here is the mathematical ground truth for one kernel in
+``kernels/``.  pytest (``python/tests/``) asserts ``assert_allclose``
+between the Pallas ``interpret=True`` execution and these references
+across a hypothesis-driven sweep of shapes and dtypes.
+
+The references intentionally use the *obvious* formulation (complex
+dtypes, ``jnp.fft``, ``jnp.linalg.solve``) while the kernels use the
+paper's MXU-friendly matrix formulation (real-valued matmul pairs,
+Vandermonde systems, trapezoid sums) — agreement between the two is the
+core correctness signal of the reproduction.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# DFT matrices (paper Eq. 10-14)
+# ---------------------------------------------------------------------------
+
+def dft_matrix(n: int) -> np.ndarray:
+    """Unitary DFT matrix W_n with W[k, m] = exp(-2pi*i*km/n)/sqrt(n)."""
+    k = np.arange(n)[:, None]
+    m = np.arange(n)[None, :]
+    return np.exp(-2j * np.pi * k * m / n) / np.sqrt(n)
+
+
+def idft_matrix(n: int) -> np.ndarray:
+    """Inverse of :func:`dft_matrix` (the conjugate transpose)."""
+    return dft_matrix(n).conj().T
+
+
+def dft2(x: jnp.ndarray) -> jnp.ndarray:
+    """Unitary 2-D DFT of a real/complex M x N matrix (paper Eq. 7)."""
+    return jnp.fft.fft2(x.astype(jnp.complex64), norm="ortho")
+
+
+def idft2(x: jnp.ndarray) -> jnp.ndarray:
+    """Unitary inverse 2-D DFT."""
+    return jnp.fft.ifft2(x.astype(jnp.complex64), norm="ortho")
+
+
+# ---------------------------------------------------------------------------
+# Complex matmul decomposed into real parts (what the MXU kernel computes)
+# ---------------------------------------------------------------------------
+
+def complex_matmul(ar, ai, br, bi):
+    """(ar + i*ai) @ (br + i*bi) as a (real, imag) pair of real matmuls."""
+    return ar @ br - ai @ bi, ar @ bi + ai @ br
+
+
+def dft2_via_matmul(x: jnp.ndarray) -> jnp.ndarray:
+    """2-D DFT as (W_M . x) . W_N — the paper's Eq. 14 formulation."""
+    m, n = x.shape
+    wm = jnp.asarray(dft_matrix(m), dtype=jnp.complex64)
+    wn = jnp.asarray(dft_matrix(n), dtype=jnp.complex64)
+    return (wm @ x.astype(jnp.complex64)) @ wn
+
+
+# ---------------------------------------------------------------------------
+# Spectral (Hadamard) division — distillation solve, paper Eq. 5
+# ---------------------------------------------------------------------------
+
+def spectral_divide(yr, yi, xr, xi, eps: float = 1e-6):
+    """Regularized element-wise complex division (Y o conj(X)) / (|X|^2 + eps).
+
+    This is the Wiener-regularized form of F(Y)/F(X): plain division
+    blows up where |F(X)| ~ 0, so both the reference and the kernel use
+    the conjugate/magnitude formulation with a small ridge ``eps``.
+    """
+    denom = xr * xr + xi * xi + eps
+    return (yr * xr + yi * xi) / denom, (yi * xr - yr * xi) / denom
+
+
+def distill_kernel(x: jnp.ndarray, y: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Solve X * K = Y for K via K = F^-1( F(Y) o conj(F(X)) / (|F(X)|^2+eps) ).
+
+    Returns the real part of K (inputs are real so K is real up to fp
+    noise).  This is the paper's Eq. 5 with Wiener regularization.
+
+    Normalization: the convolution theorem F(X*K) = F(X)∘F(K) holds for
+    the *unnormalized* DFT.  With unitary transforms the quotient
+    F_u(Y)/F_u(X) equals the unnormalized spectrum F(K), and applying
+    the unitary inverse to it yields sqrt(MN)·K — hence the final
+    1/sqrt(MN) factor.
+    """
+    m, n = x.shape
+    fx = dft2(x)
+    fy = dft2(y)
+    kr, ki = spectral_divide(fy.real, fy.imag, fx.real, fx.imag, eps)
+    k = idft2(kr + 1j * ki)
+    return k.real / jnp.sqrt(jnp.asarray(m * n, k.real.dtype))
+
+
+def circ_conv2(x: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Circular 2-D convolution X * K (the linear-shift-invariant model)."""
+    return jnp.fft.ifft2(
+        jnp.fft.fft2(x.astype(jnp.complex64))
+        * jnp.fft.fft2(k.astype(jnp.complex64))
+    ).real
+
+
+# ---------------------------------------------------------------------------
+# Occlusion contribution factors — paper Eq. 6
+# ---------------------------------------------------------------------------
+
+def occlusion_contributions(x: jnp.ndarray, k: jnp.ndarray,
+                            block: int) -> jnp.ndarray:
+    """contribution(b) = || Y - X'_b * K ||_F for each occluded block b.
+
+    ``x`` is M x N, blocks are ``block`` x ``block`` tiles in row-major
+    order; X'_b zeroes tile b.  Returns a vector of (M//block)*(N//block)
+    Frobenius-norm deltas (paper Eq. 6).
+    """
+    m, n = x.shape
+    y = circ_conv2(x, k)
+    rows, cols = m // block, n // block
+    out = []
+    for r in range(rows):
+        for c in range(cols):
+            xp = x.at[r * block:(r + 1) * block,
+                      c * block:(c + 1) * block].set(0.0)
+            yp = circ_conv2(xp, k)
+            out.append(jnp.sqrt(jnp.sum((y - yp) ** 2)))
+    return jnp.stack(out)
+
+
+# ---------------------------------------------------------------------------
+# Vandermonde interpolation — paper §III-C
+# ---------------------------------------------------------------------------
+
+def vandermonde(xs: jnp.ndarray) -> jnp.ndarray:
+    """Vandermonde matrix V[i, j] = xs[i]**j (square, n+1 points)."""
+    n = xs.shape[0]
+    return xs[:, None] ** jnp.arange(n, dtype=xs.dtype)[None, :]
+
+
+def vandermonde_solve(xs: jnp.ndarray, ys: jnp.ndarray) -> jnp.ndarray:
+    """Polynomial interpolation coefficients a with V.a = y."""
+    return jnp.linalg.solve(vandermonde(xs), ys)
+
+
+# ---------------------------------------------------------------------------
+# Integrated gradients — paper §II-D / §III-C
+# ---------------------------------------------------------------------------
+
+def ig_trapezoid(grads: jnp.ndarray, x: jnp.ndarray,
+                 baseline: jnp.ndarray) -> jnp.ndarray:
+    """IG_i = (x_i - x'_i) * trapezoid-average of dF/dx_i along the path.
+
+    ``grads`` has shape (steps+1, *x.shape): the gradient of F evaluated
+    at each interpolation point alpha_k = k/steps.  The trapezoidal rule
+    weights endpoints by 1/2.
+    """
+    steps = grads.shape[0] - 1
+    w = jnp.ones((steps + 1,), grads.dtype).at[0].set(0.5).at[-1].set(0.5)
+    w = w / steps
+    avg = jnp.tensordot(w, grads, axes=1)
+    return (x - baseline) * avg
+
+
+def ig_riemann_left(grads: jnp.ndarray, x: jnp.ndarray,
+                    baseline: jnp.ndarray) -> jnp.ndarray:
+    """Left-Riemann IG baseline (what naive implementations do)."""
+    avg = jnp.mean(grads[:-1], axis=0)
+    return (x - baseline) * avg
+
+
+# ---------------------------------------------------------------------------
+# Shapley structure-vector form — paper §III-B
+# ---------------------------------------------------------------------------
+
+def shapley_exact(values: np.ndarray) -> np.ndarray:
+    """Exact Shapley values from a dense value-function table.
+
+    ``values`` has length 2**n; entry ``s`` is v(S) where bit i of s
+    means feature i is present.  O(n * 2^n) — the reference for both the
+    matrix-form kernel and the Rust implementations.
+    """
+    n = int(np.log2(len(values)))
+    assert 1 << n == len(values)
+    phi = np.zeros(n)
+    fact = [math.factorial(i) for i in range(n + 1)]
+    for i in range(n):
+        for s in range(1 << n):
+            if s & (1 << i):
+                continue
+            size = bin(s).count("1")
+            w = fact[size] * fact[n - size - 1] / fact[n]
+            phi[i] += w * (values[s | (1 << i)] - values[s])
+    return phi
+
+
+def shapley_weight_matrix(n: int) -> np.ndarray:
+    """The n x 2^n matrix T with phi = T . v (structure-vector form).
+
+    Row i holds, for each subset index s, the signed Shapley kernel
+    weight: +w(|s|-1) if i in s (as part of v(S u {i})) and -w(|s|) if
+    i not in s.  phi = T.v turns Shapley computation into a single
+    matrix-vector product — the paper's TPU-friendly form (§III-B,
+    citing Wang et al. "Matrix expression of Shapley values").
+    """
+    fact = [math.factorial(i) for i in range(n + 1)]
+    t = np.zeros((n, 1 << n))
+    for i in range(n):
+        for s in range(1 << n):
+            size = bin(s).count("1")
+            if s & (1 << i):
+                t[i, s] += fact[size - 1] * fact[n - size] / fact[n]
+            else:
+                t[i, s] -= fact[size] * fact[n - size - 1] / fact[n]
+    return t

@@ -1,0 +1,65 @@
+"""Shapley structure-vector matvec kernel (§III-B).
+
+Following Wang et al. (matrix expression of Shapley values), the value
+function of an n-player game is a length-2^n structure vector v, and the
+Shapley values are a single matrix-vector product
+
+    phi = T v,     T in R^{n x 2^n}
+
+where T holds the signed Shapley-kernel weights (see
+ref.shapley_weight_matrix).  Batched over B games this becomes an
+(n x 2^n)(2^n x B) matmul — ideal MXU work, and the reason the paper's
+TPU Shapley numbers scale so well (Table IV).
+
+The kernel is a straight tiled matmul with the 2^n contraction dimension
+streamed through VMEM in 128-wide chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dft_matmul import TILE, _pad_to
+
+
+def _matvec_kernel(t_ref, v_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(t_ref[...], v_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def shapley_matvec_pallas(t: jnp.ndarray, v: jnp.ndarray,
+                          tile: int = TILE) -> jnp.ndarray:
+    """phi[:, b] = T @ v[:, b] for a batch of value-function columns.
+
+    ``t``: (n, 2^n) weight matrix; ``v``: (2^n, B) batched structure
+    vectors.  Returns (n, B) Shapley values.
+    """
+    n, s = t.shape
+    s2, bsz = v.shape
+    assert s == s2
+    bm, bk, bn = min(tile, n), min(tile, s), min(tile, bsz)
+    tp = _pad_to(t.astype(jnp.float32), bm, bk)
+    vp = _pad_to(v.astype(jnp.float32), bk, bn)
+    gm, gk = tp.shape[0] // bm, tp.shape[1] // bk
+    gn = vp.shape[1] // bn
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), jnp.float32),
+        interpret=True,
+    )(tp, vp)
+    return out[:n, :bsz]

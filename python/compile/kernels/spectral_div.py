@@ -1,0 +1,81 @@
+"""Spectral Hadamard-division kernel — the distillation solve (Eq. 5).
+
+Model distillation in the paper fits a linear-shift-invariant model
+``X * K = Y`` and solves it in the frequency domain:
+
+    K = F^-1( F(Y) / F(X) )
+
+The division is element-wise (Hadamard) over complex spectra.  We use
+the Wiener-regularized form (multiply by the conjugate, divide by the
+squared magnitude plus a ridge) because the plain quotient is unstable
+wherever |F(X)| ~ 0 — see kernels/ref.py:spectral_divide.
+
+VMEM budget: 4 input tiles + 2 output tiles of 128x128 f32 = 384 KiB.
+Element-wise work lands on the VPU (8x128 lanes); on real hardware this
+kernel is bandwidth-bound, so the BlockSpec streams all six planes in
+one pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .dft_matmul import TILE, _pad_to, dft2_pallas, idft2_pallas
+
+
+def _spectral_div_kernel(yr_ref, yi_ref, xr_ref, xi_ref, or_ref, oi_ref,
+                         *, eps: float):
+    yr, yi = yr_ref[...], yi_ref[...]
+    xr, xi = xr_ref[...], xi_ref[...]
+    denom = xr * xr + xi * xi + eps
+    or_ref[...] = (yr * xr + yi * xi) / denom
+    oi_ref[...] = (yi * xr - yr * xi) / denom
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "tile"))
+def spectral_divide_pallas(yr, yi, xr, xi, eps: float = 1e-6,
+                           tile: int = TILE):
+    """Element-wise regularized complex division of two spectra.
+
+    Returns (real, imag) of  (Y o conj(X)) / (|X|^2 + eps).
+    """
+    m, n = yr.shape
+    bm, bn = min(tile, m), min(tile, n)
+    planes = [_pad_to(v.astype(jnp.float32), bm, bn) for v in (yr, yi, xr, xi)]
+    gm, gn = planes[0].shape[0] // bm, planes[0].shape[1] // bn
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    shape = jax.ShapeDtypeStruct((gm * bm, gn * bn), jnp.float32)
+    orr, oii = pl.pallas_call(
+        functools.partial(_spectral_div_kernel, eps=eps),
+        grid=(gm, gn),
+        in_specs=[spec] * 4,
+        out_specs=[spec, spec],
+        out_shape=[shape, shape],
+        interpret=True,
+    )(*planes)
+    return orr[:m, :n], oii[:m, :n]
+
+
+def distill_solve_pallas(x: jnp.ndarray, y: jnp.ndarray,
+                         eps: float = 1e-6) -> jnp.ndarray:
+    """Full distillation solve K = F^-1(F(Y)/F(X)) on Pallas kernels.
+
+    Composes the DFT-as-matmul kernels (Eq. 14) with the spectral
+    division kernel (Eq. 5).  The padding subtlety: division must happen
+    at the *original* M x N spectrum (padding first would change the
+    DFT), so each stage un-pads before the next.
+
+    The final 1/sqrt(MN) factor reconciles the unitary DFT matrices with
+    the unnormalized convolution theorem — see ref.distill_kernel.
+    """
+    m, n = x.shape
+    fx_r, fx_i = dft2_pallas(x)
+    fy_r, fy_i = dft2_pallas(y)
+    kr, ki = spectral_divide_pallas(fy_r, fy_i, fx_r, fx_i, eps=eps)
+    out_r, _out_i = idft2_pallas(kr, ki)
+    return out_r / jnp.sqrt(jnp.asarray(m * n, out_r.dtype))

@@ -1,0 +1,226 @@
+"""Layer-2 JAX compute graphs: the XAI pipelines + the MicroCNN target.
+
+Everything here is *build-time* Python: ``aot.py`` lowers each entry
+point once to HLO text and the Rust coordinator executes the compiled
+artifacts — Python never appears on the request path.
+
+Contents:
+
+* **MicroCNN** — the small convolutional classifier that stands in for
+  the paper's VGG19/ResNet50 targets (those exist as cost-model specs in
+  ``rust/src/models/``; a real 100k-param CNN is what this testbed can
+  actually train and serve).  Trained in ``aot.py`` on the synthetic
+  blocky dataset; the trained weights are baked into the forward/IG
+  artifacts as HLO constants.
+* **XAI pipelines** — distillation solve (Eq. 5), occlusion
+  contributions (Eq. 6), Shapley structure-vector matvec (§III-B), and
+  integrated gradients over the MicroCNN (§III-C), all built on the
+  Pallas kernels in :mod:`compile.kernels`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import (
+    distill_solve_pallas,
+    ig_trapezoid_pallas,
+    occlusion_norms_pallas,
+    shapley_matvec_pallas,
+)
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Synthetic "blocky CIFAR" dataset
+# ---------------------------------------------------------------------------
+#
+# Class c lights up quadrant c (mean HI) against a dim background (mean
+# LO) with Gaussian noise.  The same distribution is generated on the
+# Rust side (rust/src/data/cifar.rs) for serving-time inputs; the two
+# sides share these constants, documented in DESIGN.md substitutions.
+
+IMG = 16          # image edge
+NUM_CLASSES = 4   # one per quadrant
+HI, LO, NOISE = 1.0, 0.2, 0.3
+
+
+def synth_batch(key: jax.Array, n: int):
+    """Sample n (image, label) pairs from the blocky distribution."""
+    kl, kn = jax.random.split(key)
+    labels = jax.random.randint(kl, (n,), 0, NUM_CLASSES)
+    h = IMG // 2
+    base = jnp.full((n, IMG, IMG), LO)
+    rows = (labels // 2) * h
+    cols = (labels % 2) * h
+    ii = jnp.arange(IMG)
+    row_mask = (ii[None, :, None] >= rows[:, None, None]) & (
+        ii[None, :, None] < rows[:, None, None] + h)
+    col_mask = (ii[None, None, :] >= cols[:, None, None]) & (
+        ii[None, None, :] < cols[:, None, None] + h)
+    base = jnp.where(row_mask & col_mask, HI, base)
+    noise = NOISE * jax.random.normal(kn, (n, IMG, IMG))
+    return base + noise, labels
+
+
+# ---------------------------------------------------------------------------
+# MicroCNN
+# ---------------------------------------------------------------------------
+
+class CnnParams(NamedTuple):
+    """Weights for the 2-conv MicroCNN (~5.5k parameters)."""
+    w1: jnp.ndarray   # (3, 3, 1, 8)
+    b1: jnp.ndarray   # (8,)
+    w2: jnp.ndarray   # (3, 3, 8, 16)
+    b2: jnp.ndarray   # (16,)
+    w3: jnp.ndarray   # (16, NUM_CLASSES)
+    b3: jnp.ndarray   # (NUM_CLASSES,)
+
+
+def init_params(key: jax.Array) -> CnnParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    he = lambda k, shape, fan: jax.random.normal(k, shape) * np.sqrt(2.0 / fan)
+    return CnnParams(
+        w1=he(k1, (3, 3, 1, 8), 9),
+        b1=jnp.zeros((8,)),
+        w2=he(k2, (3, 3, 8, 16), 72),
+        b2=jnp.zeros((16,)),
+        w3=he(k3, (16, NUM_CLASSES), 16),
+        b3=jnp.zeros((NUM_CLASSES,)),
+    )
+
+
+def cnn_forward(params: CnnParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits for a batch of (B, IMG, IMG) grayscale images."""
+    h = x[..., None]                                     # NHWC
+    conv = functools.partial(jax.lax.conv_general_dilated,
+                             window_strides=(1, 1), padding="SAME",
+                             dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jax.nn.relu(conv(h, params.w1) + params.b1)
+    # avg-pool 2x2.  NOT max-pool: its gradient lowers to an HLO
+    # `select-and-scatter`, which xla_extension 0.5.1's CPU runtime
+    # executes as zeros — silently killing the saliency/IG artifacts.
+    # Average pooling differentiates through plain reduce-window ops.
+    h = jax.lax.reduce_window(h, 0.0, jax.lax.add, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID") / 4.0
+    h = jax.nn.relu(conv(h, params.w2) + params.b2)
+    h = jnp.mean(h, axis=(1, 2))                          # global avg pool
+    return h @ params.w3 + params.b3
+
+
+def cnn_loss(params: CnnParams, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logits = cnn_forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def train_step(params: CnnParams, key: jax.Array, lr: float = 0.05):
+    x, y = synth_batch(key, 64)
+    loss, grads = jax.value_and_grad(cnn_loss)(params, x, y)
+    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return new, loss
+
+
+def train(steps: int = 300, seed: int = 0):
+    """Train MicroCNN on the synthetic stream; returns (params, losses)."""
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key)
+    losses = []
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        params, loss = train_step(params, sub)
+        losses.append(float(loss))
+    return params, losses
+
+
+def accuracy(params: CnnParams, n: int = 1024, seed: int = 99) -> float:
+    x, y = synth_batch(jax.random.PRNGKey(seed), n)
+    pred = jnp.argmax(cnn_forward(params, x), axis=1)
+    return float(jnp.mean((pred == y).astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# XAI pipeline entry points (AOT-lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+def distill_entry(x: jnp.ndarray, y: jnp.ndarray):
+    """Model distillation solve: X * K = Y  =>  K (paper Eq. 5)."""
+    return (distill_solve_pallas(x, y),)
+
+
+def occlusion_entry(x: jnp.ndarray, k: jnp.ndarray, block: int):
+    """Contribution factor per block tile (paper Eq. 6).
+
+    Convolution is linear, so Y - Y'_b = (X - X'_b) * K = (X ∘ m_b) * K
+    where m_b keeps only block b.  The whole batch of perturbed spectra
+    shares one F(K), and the norms reduce through the occlusion kernel.
+    """
+    m, n = x.shape
+    rows, cols = m // block, n // block
+    y = ref.circ_conv2(x, k)
+    masks = []
+    for r in range(rows):
+        for c in range(cols):
+            mask = jnp.zeros((m, n)).at[r * block:(r + 1) * block,
+                                        c * block:(c + 1) * block].set(1.0)
+            masks.append(mask)
+    masks = jnp.stack(masks)                      # (B, M, N)
+    perturbed = jax.vmap(lambda mb: ref.circ_conv2(x * (1.0 - mb), k))(masks)
+    contrib = occlusion_norms_pallas(y, perturbed)
+    return (contrib.reshape(rows, cols),)
+
+
+def shapley_entry(t: jnp.ndarray, v: jnp.ndarray):
+    """Batched Shapley values phi = T·v (paper §III-B)."""
+    return (shapley_matvec_pallas(t, v),)
+
+
+def ig_entry(params: CnnParams, x: jnp.ndarray, baseline: jnp.ndarray,
+             onehot: jnp.ndarray, steps: int):
+    """Integrated gradients of the MicroCNN class score (paper §III-C).
+
+    Evaluates grad_x of <onehot, logits(x)> at ``steps``+1 points along
+    the straight path and reduces with the trapezoid kernel.  ``params``
+    are baked in as constants at lowering time.
+    """
+    def score(img):
+        return jnp.sum(cnn_forward(params, img[None]) * onehot)
+
+    alphas = jnp.linspace(0.0, 1.0, steps + 1)
+    path = baseline[None] + alphas[:, None, None] * (x - baseline)[None]
+    grads = jax.vmap(jax.grad(score))(path)       # (S+1, IMG, IMG)
+    flat = grads.reshape(steps + 1, -1)
+    attr = ig_trapezoid_pallas(flat, x.reshape(-1), baseline.reshape(-1))
+    return (attr.reshape(x.shape),)
+
+
+def ig_batch_entry(params: CnnParams, xs: jnp.ndarray, baselines: jnp.ndarray,
+                   onehots: jnp.ndarray, steps: int):
+    """Batched IG: vmap of :func:`ig_entry` over B images.
+
+    One compiled graph amortizes dispatch across the batch and lets XLA
+    fuse the B×(steps+1) gradient evaluations — the §III-E "parallel
+    computation of multiple inputs" applied to IG serving.
+    """
+    def one(x, b, oh):
+        (attr,) = ig_entry(params, x, b, oh, steps)
+        return attr
+
+    return (jax.vmap(one)(xs, baselines, onehots),)
+
+
+def cnn_fwd_entry(params: CnnParams, x: jnp.ndarray):
+    """Plain batched classifier forward (serving path)."""
+    return (cnn_forward(params, x),)
+
+
+def saliency_entry(params: CnnParams, x: jnp.ndarray, onehot: jnp.ndarray):
+    """Vanilla gradient saliency — the Fig. 14(b) baseline."""
+    def score(img):
+        return jnp.sum(cnn_forward(params, img[None]) * onehot)
+    return (jax.grad(score)(x),)

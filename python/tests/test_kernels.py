@@ -1,0 +1,363 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Every Pallas kernel (interpret=True) is checked against its pure-jnp
+oracle in ``compile.kernels.ref`` with ``assert_allclose``.  Hypothesis
+sweeps shapes (including non-tile-multiple and degenerate sizes) and
+value distributions.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    complex_matmul_pallas,
+    dft2_pallas,
+    distill_solve_pallas,
+    idft2_pallas,
+    ig_trapezoid_pallas,
+    matmul_pallas,
+    occlusion_norms_pallas,
+    shapley_matvec_pallas,
+    spectral_divide_pallas,
+    vandermonde_build_pallas,
+)
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+HYP = settings(max_examples=12, deadline=None)
+
+dims = st.integers(min_value=1, max_value=96)
+small_dims = st.integers(min_value=2, max_value=48)
+
+
+def randn(*shape, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+class TestMatmul:
+    @HYP
+    @given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31))
+    def test_matches_numpy(self, m, k, n, seed):
+        a, b = randn(m, k, seed=seed), randn(k, n, seed=seed + 1)
+        got = np.asarray(matmul_pallas(jnp.asarray(a), jnp.asarray(b)))
+        assert_allclose(got, a @ b, rtol=3e-4, atol=3e-4)
+
+    def test_exact_tile_multiple(self):
+        a, b = randn(128, 256), randn(256, 128)
+        got = np.asarray(matmul_pallas(jnp.asarray(a), jnp.asarray(b)))
+        assert_allclose(got, a @ b, rtol=1e-3, atol=1e-3)
+
+    def test_single_element(self):
+        got = matmul_pallas(jnp.asarray([[3.0]]), jnp.asarray([[4.0]]))
+        assert_allclose(np.asarray(got), [[12.0]])
+
+    def test_identity(self):
+        a = randn(17, 17)
+        got = np.asarray(matmul_pallas(jnp.asarray(a), jnp.eye(17, dtype=np.float32)))
+        assert_allclose(got, a, rtol=1e-5, atol=1e-6)
+
+    def test_small_tile_override(self):
+        a, b = randn(20, 30), randn(30, 10)
+        got = np.asarray(matmul_pallas(jnp.asarray(a), jnp.asarray(b), tile=8))
+        assert_allclose(got, a @ b, rtol=3e-4, atol=3e-4)
+
+
+class TestComplexMatmul:
+    @HYP
+    @given(m=small_dims, k=small_dims, n=small_dims, seed=st.integers(0, 2**31))
+    def test_matches_complex(self, m, k, n, seed):
+        ar, ai = randn(m, k, seed=seed), randn(m, k, seed=seed + 1)
+        br, bi = randn(k, n, seed=seed + 2), randn(k, n, seed=seed + 3)
+        cr, ci = complex_matmul_pallas(*map(jnp.asarray, (ar, ai, br, bi)))
+        want = (ar + 1j * ai) @ (br + 1j * bi)
+        assert_allclose(np.asarray(cr), want.real, rtol=1e-3, atol=1e-3)
+        assert_allclose(np.asarray(ci), want.imag, rtol=1e-3, atol=1e-3)
+
+    def test_real_inputs_zero_imag(self):
+        ar, br = randn(9, 9), randn(9, 9)
+        z = np.zeros((9, 9), np.float32)
+        cr, ci = complex_matmul_pallas(*map(jnp.asarray, (ar, z, br, z)))
+        assert_allclose(np.asarray(cr), ar @ br, rtol=1e-4, atol=1e-4)
+        assert_allclose(np.asarray(ci), z, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 2-D DFT via matmul (Eq. 14)
+# ---------------------------------------------------------------------------
+
+class TestDft2:
+    @HYP
+    @given(m=small_dims, n=small_dims, seed=st.integers(0, 2**31))
+    def test_matches_fft2(self, m, n, seed):
+        x = randn(m, n, seed=seed)
+        fr, fi = dft2_pallas(jnp.asarray(x))
+        want = np.asarray(ref.dft2(jnp.asarray(x)))
+        assert_allclose(np.asarray(fr), want.real, atol=2e-4)
+        assert_allclose(np.asarray(fi), want.imag, atol=2e-4)
+
+    def test_roundtrip(self):
+        x = randn(32, 24)
+        fr, fi = dft2_pallas(jnp.asarray(x))
+        back_r, back_i = idft2_pallas(fr, fi)
+        assert_allclose(np.asarray(back_r), x, atol=2e-4)
+        assert_allclose(np.asarray(back_i), np.zeros_like(x), atol=2e-4)
+
+    def test_parseval(self):
+        # Unitary transform preserves energy — the invariant the paper's
+        # 1/sqrt(MN) normalization (Eq. 7) encodes.
+        x = randn(16, 16)
+        fr, fi = dft2_pallas(jnp.asarray(x))
+        e_time = float((x ** 2).sum())
+        e_freq = float((np.asarray(fr) ** 2 + np.asarray(fi) ** 2).sum())
+        assert_allclose(e_freq, e_time, rtol=1e-4)
+
+    def test_dc_component(self):
+        x = np.ones((8, 8), np.float32)
+        fr, fi = dft2_pallas(jnp.asarray(x))
+        assert_allclose(np.asarray(fr)[0, 0], 8.0, rtol=1e-5)  # sum/sqrt(64)
+        assert_allclose(np.asarray(fr)[1:, :], np.zeros((7, 8)), atol=1e-4)
+
+    def test_matches_matmul_formulation(self):
+        x = randn(12, 20)
+        fr, fi = dft2_pallas(jnp.asarray(x))
+        want = np.asarray(ref.dft2_via_matmul(jnp.asarray(x)))
+        assert_allclose(np.asarray(fr), want.real, atol=2e-4)
+        assert_allclose(np.asarray(fi), want.imag, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Spectral division + distillation solve (Eq. 5)
+# ---------------------------------------------------------------------------
+
+class TestSpectralDivide:
+    @HYP
+    @given(m=small_dims, n=small_dims, seed=st.integers(0, 2**31))
+    def test_matches_ref(self, m, n, seed):
+        yr, yi = randn(m, n, seed=seed), randn(m, n, seed=seed + 1)
+        xr, xi = randn(m, n, seed=seed + 2), randn(m, n, seed=seed + 3)
+        gr, gi = spectral_divide_pallas(*map(jnp.asarray, (yr, yi, xr, xi)))
+        wr, wi = ref.spectral_divide(yr, yi, xr, xi)
+        assert_allclose(np.asarray(gr), np.asarray(wr), rtol=1e-4, atol=1e-5)
+        assert_allclose(np.asarray(gi), np.asarray(wi), rtol=1e-4, atol=1e-5)
+
+    def test_division_by_self_is_one(self):
+        xr, xi = randn(8, 8) + 3.0, randn(8, 8)
+        gr, gi = spectral_divide_pallas(*map(jnp.asarray, (xr, xi, xr, xi)))
+        assert_allclose(np.asarray(gr), np.ones((8, 8)), rtol=1e-3)
+        assert_allclose(np.asarray(gi), np.zeros((8, 8)), atol=1e-4)
+
+    def test_regularization_bounds_output(self):
+        # Near-zero denominator must not produce inf/nan.
+        z = np.zeros((4, 4), np.float32)
+        y = np.ones((4, 4), np.float32)
+        gr, gi = spectral_divide_pallas(
+            jnp.asarray(y), jnp.asarray(z), jnp.asarray(z), jnp.asarray(z))
+        assert np.isfinite(np.asarray(gr)).all()
+        assert np.isfinite(np.asarray(gi)).all()
+
+
+class TestDistillSolve:
+    @HYP
+    @given(m=st.sampled_from([8, 16, 24, 32]), n=st.sampled_from([8, 16, 24]),
+           seed=st.integers(0, 2**31))
+    def test_matches_ref(self, m, n, seed):
+        x, y = randn(m, n, seed=seed), randn(m, n, seed=seed + 1)
+        got = np.asarray(distill_solve_pallas(jnp.asarray(x), jnp.asarray(y)))
+        want = np.asarray(ref.distill_kernel(jnp.asarray(x), jnp.asarray(y)))
+        assert_allclose(got, want, atol=2e-3)
+
+    def test_recovers_planted_kernel(self):
+        # Well-conditioned X (dominant DC + noise) => exact recovery of K.
+        rng = np.random.default_rng(7)
+        x = (rng.standard_normal((16, 16)) + 5.0).astype(np.float32)
+        k_true = np.zeros((16, 16), np.float32)
+        k_true[0, 0], k_true[0, 1], k_true[1, 0] = 0.6, 0.3, 0.1
+        y = np.asarray(ref.circ_conv2(jnp.asarray(x), jnp.asarray(k_true)))
+        k_est = np.asarray(distill_solve_pallas(jnp.asarray(x), jnp.asarray(y)))
+        assert_allclose(k_est, k_true, atol=5e-3)
+
+    def test_identity_kernel(self):
+        x = randn(12, 12) + 4.0
+        k = np.asarray(distill_solve_pallas(jnp.asarray(x), jnp.asarray(x)))
+        want = np.zeros((12, 12), np.float32)
+        want[0, 0] = 1.0
+        assert_allclose(k, want, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Vandermonde (§III-C)
+# ---------------------------------------------------------------------------
+
+class TestVandermonde:
+    @HYP
+    @given(n=st.integers(2, 24), seed=st.integers(0, 2**31))
+    def test_matches_ref(self, n, seed):
+        rng = np.random.default_rng(seed)
+        xs = rng.uniform(-2.0, 2.0, n).astype(np.float32)
+        got = np.asarray(vandermonde_build_pallas(jnp.asarray(xs)))
+        want = np.asarray(ref.vandermonde(jnp.asarray(xs)))
+        assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+    def test_zero_base(self):
+        got = np.asarray(vandermonde_build_pallas(jnp.asarray([0.0, 2.0], dtype=jnp.float32)))
+        assert_allclose(got, [[1.0, 0.0], [1.0, 2.0]])
+
+    def test_negative_base_signs(self):
+        got = np.asarray(vandermonde_build_pallas(
+            jnp.asarray([-2.0], dtype=jnp.float32), n=4))
+        assert_allclose(got, [[1.0, -2.0, 4.0, -8.0]], rtol=1e-5)
+
+    def test_rectangular(self):
+        xs = np.linspace(0.1, 1.0, 10).astype(np.float32)
+        got = np.asarray(vandermonde_build_pallas(jnp.asarray(xs), n=5))
+        want = xs[:, None] ** np.arange(5)[None, :]
+        assert_allclose(got, want, rtol=1e-4)
+
+    def test_interpolation_end_to_end(self):
+        # Build V with the kernel, solve in jnp, check it interpolates.
+        coeff = np.array([1.0, -0.5, 0.25, 2.0], np.float32)
+        xs = np.linspace(-1, 1, 4).astype(np.float32)
+        ys = (xs[:, None] ** np.arange(4)[None, :]) @ coeff
+        v = vandermonde_build_pallas(jnp.asarray(xs))
+        a = np.asarray(jnp.linalg.solve(v, jnp.asarray(ys)))
+        assert_allclose(a, coeff, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Integrated gradients (§II-D)
+# ---------------------------------------------------------------------------
+
+class TestIgTrapezoid:
+    @HYP
+    @given(s=st.integers(2, 64), d=st.integers(1, 160),
+           seed=st.integers(0, 2**31))
+    def test_matches_ref(self, s, d, seed):
+        g = randn(s + 1, d, seed=seed)
+        x, b = randn(d, seed=seed + 1), randn(d, seed=seed + 2)
+        got = np.asarray(ig_trapezoid_pallas(*map(jnp.asarray, (g, x, b))))
+        want = np.asarray(ref.ig_trapezoid(*map(jnp.asarray, (g, x, b))))
+        assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_constant_gradient_exact(self):
+        # For constant dF/dx = c the integral is exact: IG = (x-b) * c.
+        d = 33
+        g = np.full((9, d), 2.5, np.float32)
+        x = randn(d, seed=5)
+        b = np.zeros(d, np.float32)
+        got = np.asarray(ig_trapezoid_pallas(*map(jnp.asarray, (g, x, b))))
+        assert_allclose(got, 2.5 * x, rtol=1e-4)
+
+    def test_completeness_axiom_linear_model(self):
+        # F(x) = w.x  =>  sum(IG) = F(x) - F(baseline).  (§II-D axiom 1)
+        d, s = 21, 16
+        w = randn(d, seed=11)
+        x, b = randn(d, seed=12), randn(d, seed=13)
+        g = np.tile(w, (s + 1, 1))
+        ig = np.asarray(ig_trapezoid_pallas(*map(jnp.asarray, (g, x, b))))
+        assert_allclose(ig.sum(), float(w @ x - w @ b), rtol=1e-3)
+
+    def test_zero_delta_zero_attribution(self):
+        d = 10
+        g = randn(5, d, seed=3)
+        x = randn(d, seed=4)
+        ig = np.asarray(ig_trapezoid_pallas(
+            jnp.asarray(g), jnp.asarray(x), jnp.asarray(x)))
+        assert_allclose(ig, np.zeros(d), atol=1e-6)
+
+    def test_trapezoid_beats_riemann_on_quadratic(self):
+        # F(x) = x^2 along 1-D path from 0 to 1: dF/dx = 2*alpha.
+        s = 8
+        alphas = np.linspace(0, 1, s + 1, dtype=np.float32)
+        g = (2 * alphas)[:, None]
+        x = np.array([1.0], np.float32)
+        b = np.array([0.0], np.float32)
+        trap = float(np.asarray(ig_trapezoid_pallas(
+            jnp.asarray(g), jnp.asarray(x), jnp.asarray(b)))[0])
+        left = float(np.asarray(ref.ig_riemann_left(
+            jnp.asarray(g), jnp.asarray(x), jnp.asarray(b)))[0])
+        assert abs(trap - 1.0) < abs(left - 1.0)
+        assert_allclose(trap, 1.0, rtol=1e-4)  # trapezoid exact for linear grad
+
+
+# ---------------------------------------------------------------------------
+# Occlusion norms (Eq. 6)
+# ---------------------------------------------------------------------------
+
+class TestOcclusionNorms:
+    @HYP
+    @given(b=st.integers(1, 8), m=small_dims, n=small_dims,
+           seed=st.integers(0, 2**31))
+    def test_matches_numpy(self, b, m, n, seed):
+        y = randn(m, n, seed=seed)
+        yps = randn(b, m, n, seed=seed + 1)
+        got = np.asarray(occlusion_norms_pallas(jnp.asarray(y), jnp.asarray(yps)))
+        want = np.sqrt(((y[None] - yps) ** 2).sum(axis=(1, 2)))
+        assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_identical_output_zero_norm(self):
+        y = randn(16, 16, seed=2)
+        got = np.asarray(occlusion_norms_pallas(
+            jnp.asarray(y), jnp.asarray(y[None])))
+        assert_allclose(got, [0.0], atol=1e-5)
+
+    def test_ordering_matches_perturbation_size(self):
+        y = np.zeros((8, 8), np.float32)
+        yps = np.stack([np.full((8, 8), v, np.float32) for v in (0.1, 1.0, 3.0)])
+        got = np.asarray(occlusion_norms_pallas(jnp.asarray(y), jnp.asarray(yps)))
+        assert got[0] < got[1] < got[2]
+
+
+# ---------------------------------------------------------------------------
+# Shapley matvec (§III-B)
+# ---------------------------------------------------------------------------
+
+class TestShapleyMatvec:
+    @HYP
+    @given(n=st.integers(2, 8), bsz=st.integers(1, 6),
+           seed=st.integers(0, 2**31))
+    def test_matches_exact(self, n, bsz, seed):
+        rng = np.random.default_rng(seed)
+        t = ref.shapley_weight_matrix(n).astype(np.float32)
+        v = rng.standard_normal((1 << n, bsz)).astype(np.float32)
+        phi = np.asarray(shapley_matvec_pallas(jnp.asarray(t), jnp.asarray(v)))
+        for col in range(bsz):
+            assert_allclose(phi[:, col], ref.shapley_exact(v[:, col]),
+                            rtol=1e-3, atol=1e-4)
+
+    def test_efficiency_axiom(self):
+        # sum(phi) = v(N) - v(empty): the Shapley efficiency property.
+        n = 6
+        rng = np.random.default_rng(9)
+        t = ref.shapley_weight_matrix(n).astype(np.float32)
+        v = rng.standard_normal((1 << n, 1)).astype(np.float32)
+        phi = np.asarray(shapley_matvec_pallas(jnp.asarray(t), jnp.asarray(v)))
+        assert_allclose(phi.sum(), v[-1, 0] - v[0, 0], rtol=1e-3, atol=1e-4)
+
+    def test_dummy_player_gets_zero(self):
+        # A feature that never changes v(S) must get phi = 0 (sensitivity).
+        n = 4
+        v = np.zeros((1 << n, 1), np.float32)
+        for s in range(1 << n):
+            # value depends only on players 0..2; player 3 is a dummy.
+            v[s, 0] = bin(s & 0b0111).count("1") ** 1.5
+        t = ref.shapley_weight_matrix(n).astype(np.float32)
+        phi = np.asarray(shapley_matvec_pallas(jnp.asarray(t), jnp.asarray(v)))
+        assert_allclose(phi[3, 0], 0.0, atol=1e-5)
+
+    def test_symmetry_axiom(self):
+        # Symmetric players receive equal attribution.
+        n = 3
+        v = np.zeros((1 << n, 1), np.float32)
+        for s in range(1 << n):
+            v[s, 0] = float(bin(s).count("1"))  # fully symmetric game
+        t = ref.shapley_weight_matrix(n).astype(np.float32)
+        phi = np.asarray(shapley_matvec_pallas(jnp.asarray(t), jnp.asarray(v)))
+        assert_allclose(phi[:, 0], np.full(n, 1.0), rtol=1e-4)

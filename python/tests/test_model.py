@@ -1,0 +1,143 @@
+"""L2 graph tests: MicroCNN shapes/training + XAI pipeline entry points."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    # Same schedule as aot.py: reaches ~1.0 accuracy on the quadrant task.
+    p, losses = model.train(steps=300, seed=0)
+    assert losses[-1] < losses[0], "loss must decrease"
+    return p
+
+
+class TestSynthData:
+    def test_shapes_and_labels(self):
+        x, y = model.synth_batch(jax.random.PRNGKey(0), 32)
+        assert x.shape == (32, model.IMG, model.IMG)
+        assert y.shape == (32,)
+        assert int(y.min()) >= 0 and int(y.max()) < model.NUM_CLASSES
+
+    def test_quadrant_structure(self):
+        # The labeled quadrant must be brighter than the others on average.
+        x, y = model.synth_batch(jax.random.PRNGKey(1), 256)
+        h = model.IMG // 2
+        for c in range(model.NUM_CLASSES):
+            sel = np.asarray(x)[np.asarray(y) == c]
+            if len(sel) == 0:
+                continue
+            r0, c0 = (c // 2) * h, (c % 2) * h
+            quad = sel[:, r0:r0 + h, c0:c0 + h].mean()
+            rest = sel.mean()
+            assert quad > rest + 0.2
+
+    def test_deterministic(self):
+        a, _ = model.synth_batch(jax.random.PRNGKey(7), 4)
+        b, _ = model.synth_batch(jax.random.PRNGKey(7), 4)
+        assert_allclose(np.asarray(a), np.asarray(b))
+
+
+class TestMicroCnn:
+    def test_forward_shape(self, params):
+        x, _ = model.synth_batch(jax.random.PRNGKey(2), 8)
+        logits = model.cnn_forward(params, x)
+        assert logits.shape == (8, model.NUM_CLASSES)
+
+    def test_learns_the_task(self, params):
+        assert model.accuracy(params, n=512) > 0.9
+
+    def test_loss_is_finite_and_positive(self, params):
+        x, y = model.synth_batch(jax.random.PRNGKey(3), 16)
+        loss = float(model.cnn_loss(params, x, y))
+        assert np.isfinite(loss) and loss >= 0
+
+    def test_param_count_is_small(self):
+        p = model.init_params(jax.random.PRNGKey(0))
+        n = sum(int(np.prod(w.shape)) for w in p)
+        assert n < 10_000  # "micro" must stay micro
+
+
+class TestEntryPoints:
+    def test_distill_entry_matches_ref(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+        y = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+        (k,) = model.distill_entry(x, y)
+        want = ref.distill_kernel(x, y)
+        assert_allclose(np.asarray(k), np.asarray(want), atol=2e-3)
+
+    def test_occlusion_entry_finds_planted_block(self):
+        # Energy concentrated in one block => that block dominates Eq. 6.
+        x = jnp.zeros((16, 16), jnp.float32).at[4:8, 8:12].set(3.0)
+        k = jnp.zeros((16, 16), jnp.float32).at[0, 0].set(1.0)  # identity
+        (contrib,) = model.occlusion_entry(x, k, block=4)
+        assert contrib.shape == (4, 4)
+        flat = np.asarray(contrib).ravel()
+        # planted block is row 1, col 2 of the 4x4 block grid
+        assert flat.argmax() == 1 * 4 + 2
+
+    def test_shapley_entry_efficiency(self):
+        n = 6
+        rng = np.random.default_rng(5)
+        t = jnp.asarray(ref.shapley_weight_matrix(n), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1 << n, 3)), jnp.float32)
+        (phi,) = model.shapley_entry(t, v)
+        got = np.asarray(phi).sum(axis=0)
+        want = np.asarray(v)[-1] - np.asarray(v)[0]
+        assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_ig_entry_completeness(self, params):
+        # Completeness: sum(IG) ~ F(x) - F(baseline) for the class score.
+        x, y = model.synth_batch(jax.random.PRNGKey(11), 1)
+        img = x[0]
+        baseline = jnp.zeros_like(img)
+        onehot = jax.nn.one_hot(y[0], model.NUM_CLASSES)
+        (attr,) = model.ig_entry(params, img, baseline, onehot, steps=128)
+        fx = float(jnp.sum(model.cnn_forward(params, img[None]) * onehot))
+        fb = float(jnp.sum(model.cnn_forward(params, baseline[None]) * onehot))
+        assert abs(float(attr.sum()) - (fx - fb)) < 0.05 * max(1.0, abs(fx - fb))
+
+    def test_ig_highlights_label_quadrant(self, params):
+        x, y = model.synth_batch(jax.random.PRNGKey(13), 1)
+        img, label = x[0], int(y[0])
+        onehot = jax.nn.one_hot(label, model.NUM_CLASSES)
+        (attr,) = model.ig_entry(params, img, jnp.zeros_like(img), onehot,
+                                 steps=64)
+        a = np.abs(np.asarray(attr))
+        h = model.IMG // 2
+        r0, c0 = (label // 2) * h, (label % 2) * h
+        quad = a[r0:r0 + h, c0:c0 + h].mean()
+        assert quad > a.mean()
+
+    def test_saliency_entry_shape(self, params):
+        x, y = model.synth_batch(jax.random.PRNGKey(17), 1)
+        onehot = jax.nn.one_hot(y[0], model.NUM_CLASSES)
+        (g,) = model.saliency_entry(params, x[0], onehot)
+        assert g.shape == (model.IMG, model.IMG)
+        assert np.isfinite(np.asarray(g)).all()
+
+    def test_ig_batch_entry_matches_single(self, params):
+        # The batched serving variant must agree with per-image IG.
+        x, y = model.synth_batch(jax.random.PRNGKey(23), 3)
+        baselines = jnp.zeros_like(x)
+        onehots = jax.nn.one_hot(y, model.NUM_CLASSES)
+        (batched,) = model.ig_batch_entry(params, x, baselines, onehots,
+                                          steps=16)
+        for b in range(3):
+            (single,) = model.ig_entry(params, x[b], baselines[b],
+                                       onehots[b], steps=16)
+            assert_allclose(np.asarray(batched[b]), np.asarray(single),
+                            rtol=1e-4, atol=1e-5)
+
+    def test_cnn_fwd_entry_matches_forward(self, params):
+        x, _ = model.synth_batch(jax.random.PRNGKey(19), 4)
+        (logits,) = model.cnn_fwd_entry(params, x)
+        assert_allclose(np.asarray(logits),
+                        np.asarray(model.cnn_forward(params, x)), rtol=1e-5)

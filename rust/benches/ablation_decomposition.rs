@@ -1,0 +1,60 @@
+//! Ablation — data decomposition (Algorithm 1): speedup vs core count.
+//!
+//! Replays the distillation trace on the TPU model with p = 1..128
+//! cores, showing near-linear scaling until the cross_replica_sum
+//! merge traffic bites (§III-D/E).  Also measures *real* threaded
+//! row-sharded matmul on this host as a physical sanity check.
+
+use std::time::Instant;
+use xai_accel::hwsim::device::Device;
+use xai_accel::hwsim::tpu::TpuSim;
+use xai_accel::linalg::block;
+use xai_accel::linalg::matrix::Matrix;
+use xai_accel::util::rng::Rng;
+use xai_accel::util::table::{fmt_time, Table};
+use xai_accel::xai::workloads;
+
+fn main() {
+    // simulated: TPU cores on the 1024² distillation trace
+    let trace = workloads::distillation_interpretation_trace(1024, 256, 1);
+    let mut tpu = TpuSim::default();
+    tpu.cores = 128;
+    let t1 = tpu.replay_with_units(&trace, 1).time_s;
+
+    let mut table = Table::new("ablation: decomposition on simulated TPU (1024² distillation)")
+        .header(&["cores p", "time", "speedup", "efficiency"]);
+    for p in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        let t = tpu.replay_with_units(&trace, p).time_s;
+        table.row(&[
+            format!("{p}"),
+            fmt_time(t),
+            format!("{:.1}x", t1 / t),
+            format!("{:.0}%", 100.0 * t1 / t / p as f64),
+        ]);
+    }
+    table.print();
+
+    // physical: threaded row-sharded matmul on this machine
+    let mut rng = Rng::new(0);
+    let a = Matrix::random(512, 512, &mut rng);
+    let b = Matrix::random(512, 512, &mut rng);
+    let mut table = Table::new("physical check: threaded matmul_parallel on this host (512²)")
+        .header(&["threads", "time", "speedup"]);
+    let base = {
+        let t0 = Instant::now();
+        let _ = block::matmul_parallel(&a, &b, 1);
+        t0.elapsed().as_secs_f64()
+    };
+    for p in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let _ = block::matmul_parallel(&a, &b, p);
+        let dt = t0.elapsed().as_secs_f64();
+        table.row(&[
+            format!("{p}"),
+            fmt_time(dt),
+            format!("{:.1}x", base / dt),
+        ]);
+    }
+    table.print();
+    println!("paper shape: near-linear until merge traffic dominates");
+}

@@ -1,0 +1,68 @@
+//! Fig. 9 — relative performance/Watt (GM and WM; total vs incremental).
+//!
+//! Uses model-distillation trials (the paper's Fig. 9 caption) across
+//! problem sizes, then reports the six bar groups: GPU/CPU, TPU/CPU,
+//! TPU/GPU under total-perf/Watt and incremental-perf/Watt, each as
+//! geometric mean and flop-weighted arithmetic mean.
+//!
+//! Paper shape: total GPU/CPU ≈ 1.9x GM / 2.4x WM; total TPU/CPU ≈ 16x
+//! GM / 33x WM; incremental TPU/CPU ≈ 39x GM / 69x WM; incremental
+//! TPU/GPU ≈ 18.6x GM / 31x WM.
+
+use xai_accel::hwsim::energy::{relative_efficiency_gm, relative_efficiency_wm, TrialEnergy};
+use xai_accel::hwsim::{self, DeviceKind};
+use xai_accel::util::rng::Rng;
+use xai_accel::util::table::Table;
+use xai_accel::xai::workloads::{self, Schedule};
+
+fn main() {
+    let trials = 60;
+    let mut rng = Rng::new(99);
+
+    let mut dev_trials: Vec<Vec<TrialEnergy>> = vec![Vec::new(); 3];
+    for _ in 0..trials {
+        // distillation workloads spanning small -> large problems;
+        // each device runs its best schedule for the SAME logical task,
+        // so efficiency is compared as tasks/Joule (see hwsim::energy).
+        let n = [48usize, 64, 96, 128, 160][rng.below(5) as usize];
+        let block = (n / 4).max(1);
+        let fft =
+            workloads::distillation_interpretation_trace_sched(n, block, 10, Schedule::FftForm);
+        let mm = workloads::distillation_interpretation_trace_sched(
+            n,
+            block,
+            10,
+            Schedule::MatmulForm,
+        );
+        for (i, kind) in DeviceKind::all().iter().enumerate() {
+            let trace = if *kind == DeviceKind::Cpu { &fft } else { &mm };
+            let report = hwsim::device_for(*kind).replay(trace);
+            dev_trials[i].push(TrialEnergy {
+                weight: mm.total_flops() as f64, // task size as weight
+                report,
+            });
+        }
+    }
+    let (cpu, gpu, tpu) = (&dev_trials[0], &dev_trials[1], &dev_trials[2]);
+
+    let mut table = Table::new("Fig. 9: relative performance/Watt (model distillation)")
+        .header(&["comparison", "accounting", "GM", "WM"]);
+    let mut csv = String::from("comparison,accounting,gm,wm\n");
+    for (name, a, b) in [("GPU/CPU", gpu, cpu), ("TPU/CPU", tpu, cpu), ("TPU/GPU", tpu, gpu)] {
+        for (acct, incremental) in [("total", false), ("incremental", true)] {
+            let gm = relative_efficiency_gm(a, b, incremental);
+            let wm = relative_efficiency_wm(a, b, incremental);
+            table.row(&[
+                name.into(),
+                acct.into(),
+                format!("{gm:.1}x"),
+                format!("{wm:.1}x"),
+            ]);
+            csv.push_str(&format!("{name},{acct},{gm:.3},{wm:.3}\n"));
+        }
+    }
+    table.print();
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/fig9.csv", csv).ok();
+    println!("paper shape: TPU dominates both baselines; incremental > total; WM > GM");
+}

@@ -1,0 +1,69 @@
+//! Table II — accuracy and classification (train/test) time per device.
+//!
+//! Replays 10-epoch training + testing op traces for VGG19 (CIFAR-100
+//! scale) and ResNet50 (MIRAI trace scale) on the three device models.
+//! Absolute seconds differ from the paper's testbed; the claims that
+//! must hold: huge accelerator speedups over CPU, with TPU ahead of
+//! GPU on the large ResNet50 workload (paper: 44.5x/CPU, 4.13x/GPU).
+
+use xai_accel::hwsim::{self, DeviceKind};
+use xai_accel::models::{cost, Benchmark};
+use xai_accel::util::table::{fmt_speedup, Table};
+
+fn main() {
+    let epochs = 10;
+    let samples = 512; // tiny-corpus scale (paper: per-10-epoch averages)
+    let batch = 64;
+
+    let mut table = Table::new("Table II: accuracy and classification time (simulated devices)")
+        .header(&[
+            "benchmark", "device", "accuracy(%)", "train(s)", "test(s)",
+            "speedup/CPU", "speedup/GPU",
+        ]);
+
+    let mut csv = String::from("benchmark,device,accuracy,train_s,test_s\n");
+    for bench in [Benchmark::Vgg19, Benchmark::ResNet50] {
+        let spec = bench.spec();
+        let train = cost::training_trace(&spec, epochs, samples, batch);
+        let test = cost::testing_trace(&spec, samples, batch);
+        let mut rows = Vec::new();
+        for kind in DeviceKind::all() {
+            let dev = hwsim::device_for(kind);
+            let tr = dev.replay(&train);
+            let te = dev.replay(&test);
+            // accuracy: device-independent convergence + the small boost
+            // the paper attributes to higher-precision-but-slower runs
+            let boost = match kind {
+                DeviceKind::Cpu => 0.0,
+                DeviceKind::Gpu => 0.0,
+                DeviceKind::Tpu => 0.005,
+            };
+            let acc = cost::simulated_accuracy(&spec, epochs, boost) * 100.0;
+            rows.push((kind, acc, tr.time_s, te.time_s));
+        }
+        let cpu_total = rows[0].2 + rows[0].3;
+        let gpu_total = rows[1].2 + rows[1].3;
+        for (kind, acc, tr, te) in &rows {
+            let total = tr + te;
+            table.row(&[
+                spec.name.into(),
+                kind.name().into(),
+                format!("{acc:.2}"),
+                format!("{tr:.2}"),
+                format!("{te:.2}"),
+                fmt_speedup(cpu_total / total),
+                fmt_speedup(gpu_total / total),
+            ]);
+            csv.push_str(&format!(
+                "{},{},{acc:.2},{tr:.4},{te:.4}\n",
+                spec.name,
+                kind.name()
+            ));
+        }
+    }
+    table.print();
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/table2.csv", csv).ok();
+    println!("paper shape check: TPU/CPU speedup should be >> 1 (paper: 44.5x on ResNet50)");
+    println!("wrote bench_out/table2.csv");
+}

@@ -1,0 +1,58 @@
+//! Table III — outcome-interpretation time, Model Distillation.
+//!
+//! 10 I/O pairs per benchmark (the paper's unit), full pipeline:
+//! spectral solve (Eq. 5) + block-occlusion contributions (Eq. 6).
+//! Paper's row shape: TPU 36.2x/CPU + 1.9x/GPU on VGG19, 39.5x/CPU +
+//! 4.78x/GPU on ResNet50 — CPU ≫ GPU ≫ TPU ordering with larger
+//! margins on the larger model.
+
+use xai_accel::hwsim::{self, DeviceKind};
+use xai_accel::models::Benchmark;
+use xai_accel::util::table::{fmt_speedup, Table};
+use xai_accel::xai::workloads;
+
+fn main() {
+    let pairs = 10;
+    let mut table = Table::new("Table III: interpretation time (s), Model Distillation")
+        .header(&["model", "CPU", "GPU", "TPU", "Impro./CPU", "Impro./GPU"]);
+    let mut csv = String::from("model,cpu_s,gpu_s,tpu_s\n");
+
+    for bench in [Benchmark::Vgg19, Benchmark::ResNet50] {
+        let spec = bench.spec();
+        let n = workloads::xai_matrix_dim(&spec);
+        // best schedule per device: CPU runs its native FFT form, the
+        // accelerators run the paper's matmul form (Eq. 14).
+        let fft = workloads::distillation_interpretation_trace_sched(
+            n,
+            (n / 4).max(1),
+            pairs,
+            workloads::Schedule::FftForm,
+        );
+        let mm = workloads::distillation_interpretation_trace_sched(
+            n,
+            (n / 4).max(1),
+            pairs,
+            workloads::Schedule::MatmulForm,
+        );
+        let t: Vec<f64> = DeviceKind::all()
+            .iter()
+            .map(|&k| {
+                let trace = if k == DeviceKind::Cpu { &fft } else { &mm };
+                hwsim::device_for(k).replay(trace).time_s
+            })
+            .collect();
+        table.row(&[
+            spec.name.into(),
+            format!("{:.3}", t[0]),
+            format!("{:.3}", t[1]),
+            format!("{:.4}", t[2]),
+            fmt_speedup(t[0] / t[2]),
+            fmt_speedup(t[1] / t[2]),
+        ]);
+        csv.push_str(&format!("{},{},{},{}\n", spec.name, t[0], t[1], t[2]));
+    }
+    table.print();
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/table3.csv", csv).ok();
+    println!("paper shape: TPU fastest on both rows; bigger model → bigger TPU margin");
+}

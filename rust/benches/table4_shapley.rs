@@ -1,0 +1,45 @@
+//! Table IV — outcome-interpretation time, Shapley Values.
+//!
+//! 10 games per benchmark in structure-vector form (§III-B): value
+//! tables built by model evaluation, then φ = T·v as one batched
+//! matmul.  Paper shape: TPU 16x/CPU + 3x/GPU on VGG19; smaller
+//! absolute times on ResNet50 (fewer features in the malware detector).
+
+use xai_accel::hwsim::{self, DeviceKind};
+use xai_accel::models::Benchmark;
+use xai_accel::util::table::{fmt_speedup, Table};
+use xai_accel::xai::workloads;
+
+fn main() {
+    let games = 10;
+    let mut table = Table::new("Table IV: interpretation time (s), Shapley Values")
+        .header(&["model", "CPU", "GPU", "TPU", "Impro./CPU", "Impro./GPU"]);
+    let mut csv = String::from("model,cpu_s,gpu_s,tpu_s\n");
+
+    // (model, players): the image classifier explains 16 coarse
+    // super-pixel features; the malware detector uses the 6 HPCs.
+    for (bench, players) in [(Benchmark::Vgg19, 16usize), (Benchmark::ResNet50, 6)] {
+        let spec = bench.spec();
+        // value function evaluated through the distilled surrogate
+        // (~1% of a full forward), as §III-A feeds §III-B
+        let trace =
+            workloads::shapley_interpretation_trace(players, games, spec.total_flops() / 100);
+        let t: Vec<f64> = DeviceKind::all()
+            .iter()
+            .map(|&k| hwsim::device_for(k).replay(&trace).time_s)
+            .collect();
+        table.row(&[
+            format!("{} (n={players})", spec.name),
+            format!("{:.3}", t[0]),
+            format!("{:.3}", t[1]),
+            format!("{:.4}", t[2]),
+            fmt_speedup(t[0] / t[2]),
+            fmt_speedup(t[1] / t[2]),
+        ]);
+        csv.push_str(&format!("{},{},{},{}\n", spec.name, t[0], t[1], t[2]));
+    }
+    table.print();
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/table4.csv", csv).ok();
+    println!("paper shape: VGG19 row much slower than ResNet50 row (2^16 vs 2^6 table)");
+}

@@ -1,0 +1,41 @@
+//! Table V — outcome-interpretation time, Integrated Gradients.
+//!
+//! 10 inputs per benchmark: path gradients (trapezoid, §III-C) +
+//! Vandermonde interpolation solve.  Paper shape: TPU 25.7x/CPU +
+//! 3.8x/GPU on VGG19; 10.8x/CPU + 2x/GPU on ResNet50, with IG the
+//! cheapest of the three XAI methods end-to-end.
+
+use xai_accel::hwsim::{self, DeviceKind};
+use xai_accel::models::Benchmark;
+use xai_accel::util::table::{fmt_speedup, Table};
+use xai_accel::xai::workloads;
+
+fn main() {
+    let inputs = 10;
+    let steps = 32;
+    let mut table = Table::new("Table V: interpretation time (s), Integrated Gradients")
+        .header(&["model", "CPU", "GPU", "TPU", "Impro./CPU", "Impro./GPU"]);
+    let mut csv = String::from("model,cpu_s,gpu_s,tpu_s\n");
+
+    for bench in [Benchmark::Vgg19, Benchmark::ResNet50] {
+        let spec = bench.spec();
+        let trace = workloads::ig_interpretation_trace(&spec, steps, inputs);
+        let t: Vec<f64> = DeviceKind::all()
+            .iter()
+            .map(|&k| hwsim::device_for(k).replay(&trace).time_s)
+            .collect();
+        table.row(&[
+            spec.name.into(),
+            format!("{:.3}", t[0]),
+            format!("{:.3}", t[1]),
+            format!("{:.4}", t[2]),
+            fmt_speedup(t[0] / t[2]),
+            fmt_speedup(t[1] / t[2]),
+        ]);
+        csv.push_str(&format!("{},{},{},{}\n", spec.name, t[0], t[1], t[2]));
+    }
+    table.print();
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/table5.csv", csv).ok();
+    println!("paper shape: TPU fastest; IG cheaper than distillation end-to-end");
+}

@@ -1,0 +1,134 @@
+//! Mini benchmark harness (offline build: no criterion).
+//!
+//! `cargo bench` targets use [`BenchRunner`]: warmup, timed iterations,
+//! mean/p50/p99 reporting, and the table printers that regenerate the
+//! paper's tables/figures row-for-row.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+/// Warmup-then-measure bench runner.
+#[derive(Debug, Clone)]
+pub struct BenchRunner {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop adding iterations once this much time is spent.
+    pub budget_s: f64,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            budget_s: 2.0,
+        }
+    }
+}
+
+impl BenchRunner {
+    /// Fast settings for CI-ish runs.
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 30,
+            budget_s: 0.5,
+        }
+    }
+
+    /// Time `f` and return stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.min_iters);
+        let started = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < self.min_iters
+                || started.elapsed().as_secs_f64() < self.budget_s)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: stats::mean(&samples),
+            p50_s: stats::percentile(&samples, 50.0),
+            p99_s: stats::percentile(&samples, 99.0),
+            min_s: stats::min(&samples),
+        }
+    }
+}
+
+/// Shared CLI convention for bench binaries: `--quick` shrinks budgets.
+pub fn runner_from_args() -> BenchRunner {
+    if std::env::args().any(|a| a == "--quick") {
+        BenchRunner::quick()
+    } else {
+        BenchRunner::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = BenchRunner::quick().run("noop", || {
+            std::hint::black_box(42);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let runner = BenchRunner {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 1000,
+            budget_s: 0.05,
+        };
+        let r = runner.run("sleepy", || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        });
+        assert!(r.iters < 1000);
+    }
+
+    #[test]
+    fn throughput() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.5,
+            p50_s: 0.5,
+            p99_s: 0.5,
+            min_s: 0.5,
+        };
+        assert!((r.throughput(10.0) - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,125 @@
+//! Hand-rolled CLI argument parsing (offline build: no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and usage rendering.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token NOT the binary).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{name}: {e}"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{name}: {e}"))),
+        }
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("serve --verbose --executors 4");
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize("executors", 1).unwrap(), 4);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--dir=artifacts --n=16");
+        assert_eq!(a.get("dir"), Some("artifacts"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 16);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = parse("--quick --trials 5");
+        assert!(a.flag("quick"));
+        assert_eq!(a.get_usize("trials", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+        assert_eq!(a.get_f64("eps", 1e-6).unwrap(), 1e-6);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("--n abc");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Minimal TOML-subset configuration (offline build: no serde/toml).
+//!
+//! Supported syntax: `[section]` headers, `key = value` pairs with
+//! string / integer / float / boolean values, `#` comments.  That is
+//! enough for the launcher's config files (see `examples/serve_e2e.rs`
+//! and the `serve` subcommand).
+
+use crate::coordinator::{CoordinatorConfig};
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// A parsed config: section → key → raw value string.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut sections: HashMap<String, HashMap<String, String>> = HashMap::new();
+        let mut current = String::new();
+        sections.entry(current.clone()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Config(format!(
+                        "line {}: unterminated section header",
+                        lineno + 1
+                    )));
+                }
+                current = line[1..line.len() - 1].trim().to_string();
+                sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let value = value.trim().trim_matches('"').to_string();
+            sections
+                .get_mut(&current)
+                .unwrap()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(Config { sections })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| Error::Config(format!("{section}.{key}: {e}"))),
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| Error::Config(format!("{section}.{key}: {e}"))),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some("true") => Ok(Some(true)),
+            Some("false") => Ok(Some(false)),
+            Some(v) => Err(Error::Config(format!(
+                "{section}.{key}: expected true/false, got '{v}'"
+            ))),
+        }
+    }
+
+    /// Build a [`CoordinatorConfig`] from the `[coordinator]` section,
+    /// with defaults for anything unspecified.
+    pub fn coordinator(&self) -> Result<CoordinatorConfig> {
+        let mut c = CoordinatorConfig::default();
+        if let Some(dir) = self.get("coordinator", "artifact_dir") {
+            c.artifact_dir = PathBuf::from(dir);
+        }
+        if let Some(n) = self.get_usize("coordinator", "executors")? {
+            if n == 0 {
+                return Err(Error::Config("executors must be > 0".into()));
+            }
+            c.executors = n;
+        }
+        if let Some(n) = self.get_usize("coordinator", "queue_capacity")? {
+            c.queue_capacity = n;
+        }
+        if let Some(ms) = self.get_f64("coordinator", "max_wait_ms")? {
+            c.policy.max_wait = std::time::Duration::from_secs_f64(ms / 1e3);
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+[coordinator]
+artifact_dir = "artifacts"
+executors = 3
+queue_capacity = 128
+max_wait_ms = 1.5
+
+[bench]
+trials = 100
+verbose = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("coordinator", "artifact_dir"), Some("artifacts"));
+        assert_eq!(c.get_usize("bench", "trials").unwrap(), Some(100));
+        assert_eq!(c.get_bool("bench", "verbose").unwrap(), Some(true));
+        assert_eq!(
+            c.get_f64("coordinator", "max_wait_ms").unwrap(),
+            Some(1.5)
+        );
+    }
+
+    #[test]
+    fn coordinator_config() {
+        let c = Config::parse(SAMPLE).unwrap().coordinator().unwrap();
+        assert_eq!(c.executors, 3);
+        assert_eq!(c.queue_capacity, 128);
+        assert_eq!(c.policy.max_wait, std::time::Duration::from_micros(1500));
+    }
+
+    #[test]
+    fn missing_keys_default() {
+        let c = Config::parse("").unwrap().coordinator().unwrap();
+        assert_eq!(c.executors, CoordinatorConfig::default().executors);
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("no_equals_here").is_err());
+        let c = Config::parse("[a]\nx = notanumber").unwrap();
+        assert!(c.get_usize("a", "x").is_err());
+    }
+
+    #[test]
+    fn zero_executors_rejected() {
+        let c = Config::parse("[coordinator]\nexecutors = 0").unwrap();
+        assert!(c.coordinator().is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Dynamic batcher — the paper's "parallel computation of multiple
+//! inputs" (§III-E) as a serving-system component.
+//!
+//! Groups same-kind requests into batches, flushing on whichever comes
+//! first: the kind's maximum batch size (matched to the compiled
+//! artifact variants) or a deadline (`max_wait`).  Mixed-kind traffic
+//! is split into per-kind batches in arrival order.
+
+use crate::coordinator::request::{Envelope, RequestKind};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// A batch ready for an executor.
+#[derive(Debug)]
+pub struct Batch {
+    pub kind: RequestKind,
+    pub envelopes: Vec<Envelope>,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Per-kind maximum batch size.  Shapley packs 8 games into the
+    /// `shapley_n*_b8` executable; classification packs 32 images into
+    /// `cnn_fwd_b32`; per-request pipelines (distill/IG) still benefit
+    /// from amortizing dispatch across the batch loop.
+    pub max_batch: HashMap<RequestKind, usize>,
+    /// Longest a request may wait for companions.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        let mut max_batch = HashMap::new();
+        max_batch.insert(RequestKind::Classify, 32);
+        max_batch.insert(RequestKind::Shapley, 8);
+        max_batch.insert(RequestKind::Distill, 4);
+        max_batch.insert(RequestKind::IntGrad, 4);
+        max_batch.insert(RequestKind::Saliency, 8);
+        Self {
+            max_batch,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+impl BatchPolicy {
+    pub fn max_for(&self, kind: RequestKind) -> usize {
+        *self.max_batch.get(&kind).unwrap_or(&1)
+    }
+}
+
+/// Accumulates envelopes and emits batches according to the policy.
+#[derive(Debug)]
+pub struct BatchAssembler {
+    policy: BatchPolicy,
+    pending: HashMap<RequestKind, Vec<Envelope>>,
+    oldest: HashMap<RequestKind, Instant>,
+}
+
+impl BatchAssembler {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            pending: HashMap::new(),
+            oldest: HashMap::new(),
+        }
+    }
+
+    /// Add an envelope; returns a full batch if the size trigger fired.
+    pub fn offer(&mut self, env: Envelope) -> Option<Batch> {
+        let kind = env.request.kind();
+        let slot = self.pending.entry(kind).or_default();
+        if slot.is_empty() {
+            self.oldest.insert(kind, Instant::now());
+        }
+        slot.push(env);
+        if slot.len() >= self.policy.max_for(kind) {
+            return self.take(kind);
+        }
+        None
+    }
+
+    /// Flush any kind whose oldest member exceeded the deadline.
+    pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch> {
+        let expired: Vec<RequestKind> = self
+            .oldest
+            .iter()
+            .filter(|(k, t)| {
+                now.duration_since(**t) >= self.policy.max_wait
+                    && !self.pending.get(*k).map_or(true, |v| v.is_empty())
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        expired.into_iter().filter_map(|k| self.take(k)).collect()
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let kinds: Vec<RequestKind> = self
+            .pending
+            .iter()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(k, _)| *k)
+            .collect();
+        kinds.into_iter().filter_map(|k| self.take(k)).collect()
+    }
+
+    fn take(&mut self, kind: RequestKind) -> Option<Batch> {
+        let envelopes = self.pending.remove(&kind)?;
+        self.oldest.remove(&kind);
+        if envelopes.is_empty() {
+            return None;
+        }
+        Some(Batch { kind, envelopes })
+    }
+
+    /// Next deadline at which `flush_expired` could release work.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.oldest.values().min().map(|t| *t + self.policy.max_wait)
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.values().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Request;
+    use crate::linalg::matrix::Matrix;
+    use std::sync::mpsc;
+
+    fn env(id: u64, req: Request) -> Envelope {
+        let (tx, _rx) = mpsc::channel();
+        Envelope {
+            id,
+            request: req,
+            reply: tx,
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    fn classify(id: u64) -> Envelope {
+        env(
+            id,
+            Request::Classify {
+                image: Matrix::zeros(2, 2),
+            },
+        )
+    }
+
+    fn shapley(id: u64) -> Envelope {
+        env(
+            id,
+            Request::Shapley {
+                n: 3,
+                values: vec![0.0; 8],
+                names: vec!["a".into(), "b".into(), "c".into()],
+            },
+        )
+    }
+
+    fn policy(classify_max: usize) -> BatchPolicy {
+        let mut p = BatchPolicy::default();
+        p.max_batch.insert(RequestKind::Classify, classify_max);
+        p
+    }
+
+    #[test]
+    fn size_trigger_fires() {
+        let mut a = BatchAssembler::new(policy(3));
+        assert!(a.offer(classify(1)).is_none());
+        assert!(a.offer(classify(2)).is_none());
+        let b = a.offer(classify(3)).expect("batch at size 3");
+        assert_eq!(b.envelopes.len(), 3);
+        assert_eq!(b.kind, RequestKind::Classify);
+        assert_eq!(a.pending_count(), 0);
+    }
+
+    #[test]
+    fn kinds_do_not_mix() {
+        let mut a = BatchAssembler::new(BatchPolicy::default());
+        a.offer(classify(1));
+        a.offer(shapley(2));
+        a.offer(classify(3));
+        let batches = a.flush_all();
+        assert_eq!(batches.len(), 2);
+        for b in &batches {
+            assert!(b
+                .envelopes
+                .iter()
+                .all(|e| e.request.kind() == b.kind));
+        }
+    }
+
+    #[test]
+    fn deadline_trigger_fires() {
+        let mut p = BatchPolicy::default();
+        p.max_wait = Duration::from_millis(0);
+        let mut a = BatchAssembler::new(p);
+        a.offer(classify(1));
+        let batches = a.flush_expired(Instant::now() + Duration::from_millis(1));
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].envelopes.len(), 1);
+    }
+
+    #[test]
+    fn not_expired_not_flushed() {
+        let mut p = BatchPolicy::default();
+        p.max_wait = Duration::from_secs(60);
+        let mut a = BatchAssembler::new(p);
+        a.offer(classify(1));
+        assert!(a.flush_expired(Instant::now()).is_empty());
+        assert_eq!(a.pending_count(), 1);
+    }
+
+    #[test]
+    fn arrival_order_preserved() {
+        let mut a = BatchAssembler::new(policy(10));
+        for i in 0..5 {
+            a.offer(classify(i));
+        }
+        let b = a.flush_all().pop().unwrap();
+        let ids: Vec<u64> = b.envelopes.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut a = BatchAssembler::new(BatchPolicy::default());
+        assert!(a.next_deadline().is_none());
+        a.offer(classify(1));
+        assert!(a.next_deadline().is_some());
+    }
+}

@@ -1,0 +1,201 @@
+//! Algorithm 1 — data decomposition of the 2-D Fourier transform —
+//! as a *real* executable component (not just a cost model).
+//!
+//! The paper's Algorithm 1: split the M×N input's rows across p cores,
+//! each core 1-D-transforms its rows; merge; split the columns of the
+//! intermediate across p cores; transform; merge.  Here the "cores" are
+//! OS threads and the 1-D transforms are the matmul-form `W·x` slices,
+//! so the component is bit-identical to [`linalg::dft::dft2_matmul`]
+//! while exercising the split/execute/merge machinery the coordinator
+//! relies on.
+
+use crate::linalg::complex::C32;
+use crate::linalg::dft;
+use crate::linalg::matrix::CMatrix;
+
+/// Row-range assignment for one worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Split `total` items over `p` workers as evenly as possible
+/// (Algorithm 1's "Split M/p rows from x").
+pub fn plan_splits(total: usize, p: usize) -> Vec<Assignment> {
+    assert!(p > 0);
+    let p = p.min(total.max(1));
+    let base = total / p;
+    let extra = total % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for i in 0..p {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            continue;
+        }
+        out.push(Assignment { start, len });
+        start += len;
+    }
+    out
+}
+
+/// Stage 1 of Algorithm 1 on one worker: transform a band of rows.
+/// Computes `W_M[rows, :] · x` — the worker only needs its band of the
+/// DFT matrix and the full input (read-only; no inter-core exchange).
+fn transform_row_band(wm: &CMatrix, x: &CMatrix, a: Assignment) -> CMatrix {
+    let mut band = CMatrix::zeros(a.len, x.cols);
+    for (r_out, r) in (a.start..a.start + a.len).enumerate() {
+        for c in 0..x.cols {
+            let mut acc = C32::ZERO;
+            for k in 0..x.rows {
+                acc += wm.get(r, k) * x.get(k, c);
+            }
+            band.set(r_out, c, acc);
+        }
+    }
+    band
+}
+
+/// Stage 2 on one worker: transform a band of columns of X':
+/// `X'[:, cols] · W_N[:, cols block]` — produces the output columns.
+fn transform_col_band(xp: &CMatrix, wn: &CMatrix, a: Assignment) -> CMatrix {
+    let mut band = CMatrix::zeros(xp.rows, a.len);
+    for r in 0..xp.rows {
+        for (c_out, c) in (a.start..a.start + a.len).enumerate() {
+            let mut acc = C32::ZERO;
+            for k in 0..xp.cols {
+                acc += xp.get(r, k) * wn.get(k, c);
+            }
+            band.set(r, c_out, acc);
+        }
+    }
+    band
+}
+
+fn merge_row_bands(bands: Vec<CMatrix>, cols: usize) -> CMatrix {
+    let rows: usize = bands.iter().map(|b| b.rows).sum();
+    let mut out = CMatrix::zeros(rows, cols);
+    let mut r0 = 0;
+    for b in bands {
+        for r in 0..b.rows {
+            for c in 0..b.cols {
+                out.set(r0 + r, c, b.get(r, c));
+            }
+        }
+        r0 += b.rows;
+    }
+    out
+}
+
+fn merge_col_bands(bands: Vec<CMatrix>, rows: usize) -> CMatrix {
+    let cols: usize = bands.iter().map(|b| b.cols).sum();
+    let mut out = CMatrix::zeros(rows, cols);
+    let mut c0 = 0;
+    for b in bands {
+        for r in 0..b.rows {
+            for c in 0..b.cols {
+                out.set(r, c0 + c, b.get(r, c));
+            }
+        }
+        c0 += b.cols;
+    }
+    out
+}
+
+/// Algorithm 1, threaded: 2-D unitary DFT of `x` over `p` workers.
+pub fn dft2_decomposed(x: &CMatrix, p: usize) -> CMatrix {
+    let (m, n) = (x.rows, x.cols);
+    let wm = dft::dft_matrix(m);
+    let wn = dft::dft_matrix(n);
+
+    // Stage 1: rows split across workers, executed in parallel.
+    let row_plan = plan_splits(m, p);
+    let row_bands: Vec<CMatrix> = std::thread::scope(|scope| {
+        let handles: Vec<_> = row_plan
+            .iter()
+            .map(|&a| {
+                let wm = &wm;
+                scope.spawn(move || transform_row_band(wm, x, a))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let xp = merge_row_bands(row_bands, n);
+
+    // Stage 2: columns split across workers.
+    let col_plan = plan_splits(n, p);
+    let col_bands: Vec<CMatrix> = std::thread::scope(|scope| {
+        let xp = &xp;
+        let handles: Vec<_> = col_plan
+            .iter()
+            .map(|&a| {
+                let wn = &wn;
+                scope.spawn(move || transform_col_band(xp, wn, a))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    merge_col_bands(col_bands, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::fft;
+    use crate::linalg::matrix::Matrix;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn splits_cover_exactly() {
+        check("splits partition the range", 30, |rng: &mut Rng| {
+            let total = rng.int_range(1, 100) as usize;
+            let p = rng.int_range(1, 16) as usize;
+            let plan = plan_splits(total, p);
+            // contiguous, disjoint, covering
+            let mut expect = 0;
+            for a in &plan {
+                assert_eq!(a.start, expect);
+                assert!(a.len > 0);
+                expect += a.len;
+            }
+            assert_eq!(expect, total);
+            // balanced within 1
+            let min = plan.iter().map(|a| a.len).min().unwrap();
+            let max = plan.iter().map(|a| a.len).max().unwrap();
+            assert!(max - min <= 1);
+        });
+    }
+
+    #[test]
+    fn more_workers_than_rows_is_fine() {
+        let plan = plan_splits(3, 8);
+        assert_eq!(plan.len(), 3);
+    }
+
+    #[test]
+    fn decomposed_equals_fft() {
+        check("Algorithm 1 == fft2", 10, |rng: &mut Rng| {
+            let m = rng.int_range(2, 24) as usize;
+            let n = rng.int_range(2, 24) as usize;
+            let p = rng.int_range(1, 6) as usize;
+            let x = CMatrix::from_real(&Matrix::random(m, n, rng));
+            let via_alg1 = dft2_decomposed(&x, p);
+            let via_fft = fft::fft2(&x);
+            assert!(
+                via_alg1.max_abs_diff(&via_fft) < 1e-3,
+                "mismatch at {m}x{n} p={p}"
+            );
+        });
+    }
+
+    #[test]
+    fn single_worker_matches_many() {
+        let mut rng = Rng::new(0);
+        let x = CMatrix::from_real(&Matrix::random(16, 12, &mut rng));
+        let one = dft2_decomposed(&x, 1);
+        let eight = dft2_decomposed(&x, 8);
+        assert!(one.max_abs_diff(&eight) < 1e-4);
+    }
+}

@@ -1,0 +1,189 @@
+//! Serving metrics: counters + latency summaries per request kind.
+
+use crate::coordinator::request::RequestKind;
+use crate::util::stats;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Process-wide serving metrics (shared via `Arc`).
+#[derive(Default)]
+pub struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    /// per-kind latency samples (seconds)
+    latencies: Mutex<HashMap<RequestKind, Vec<f64>>>,
+    /// per-kind queue-wait samples (seconds)
+    queue_waits: Mutex<HashMap<RequestKind, Vec<f64>>>,
+}
+
+/// A rendered latency summary.
+#[derive(Debug, Clone)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_complete(&self, kind: RequestKind, latency: Duration, queue_wait: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latencies
+            .lock()
+            .unwrap()
+            .entry(kind)
+            .or_default()
+            .push(latency.as_secs_f64());
+        self.queue_waits
+            .lock()
+            .unwrap()
+            .entry(kind)
+            .or_default()
+            .push(queue_wait.as_secs_f64());
+    }
+
+    pub fn record_failure(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests
+            .fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    /// Mean requests per executed batch — the batching efficiency the
+    /// paper's §III-E parallel-inputs activity buys.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn latency_summary(&self, kind: RequestKind) -> Option<LatencySummary> {
+        let map = self.latencies.lock().unwrap();
+        let xs = map.get(&kind)?;
+        if xs.is_empty() {
+            return None;
+        }
+        Some(LatencySummary {
+            count: xs.len(),
+            mean_s: stats::mean(xs),
+            p50_s: stats::percentile(xs, 50.0),
+            p99_s: stats::percentile(xs, 99.0),
+            max_s: stats::max(xs),
+        })
+    }
+
+    pub fn mean_queue_wait(&self, kind: RequestKind) -> Option<f64> {
+        let map = self.queue_waits.lock().unwrap();
+        map.get(&kind).map(|xs| stats::mean(xs))
+    }
+
+    /// Render a metrics report for all kinds with data.
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "requests: submitted={} completed={} failed={} | mean batch={:.2}\n",
+            self.submitted(),
+            self.completed(),
+            self.failed(),
+            self.mean_batch_size()
+        );
+        for kind in RequestKind::all() {
+            if let Some(s) = self.latency_summary(kind) {
+                out.push_str(&format!(
+                    "  {:<9} n={:<5} mean={:.2}ms p50={:.2}ms p99={:.2}ms max={:.2}ms\n",
+                    kind.name(),
+                    s.count,
+                    s.mean_s * 1e3,
+                    s.p50_s * 1e3,
+                    s.p99_s * 1e3,
+                    s.max_s * 1e3,
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_latency() {
+        let m = Metrics::new();
+        m.record_submit();
+        m.record_submit();
+        m.record_complete(
+            RequestKind::Classify,
+            Duration::from_millis(10),
+            Duration::from_millis(2),
+        );
+        m.record_complete(
+            RequestKind::Classify,
+            Duration::from_millis(30),
+            Duration::from_millis(2),
+        );
+        assert_eq!(m.submitted(), 2);
+        assert_eq!(m.completed(), 2);
+        let s = m.latency_summary(RequestKind::Classify).unwrap();
+        assert_eq!(s.count, 2);
+        assert!((s.mean_s - 0.020).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_efficiency() {
+        let m = Metrics::new();
+        m.record_batch(8);
+        m.record_batch(4);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_summary_is_none() {
+        let m = Metrics::new();
+        assert!(m.latency_summary(RequestKind::Shapley).is_none());
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::new();
+        m.record_submit();
+        m.record_complete(
+            RequestKind::Distill,
+            Duration::from_millis(5),
+            Duration::ZERO,
+        );
+        let r = m.report();
+        assert!(r.contains("distill"));
+    }
+}

@@ -1,0 +1,37 @@
+//! The L3 coordinator: a batched XAI serving engine.
+//!
+//! Architecture (vLLM-router-like, std::thread based — this offline
+//! build has no tokio):
+//!
+//! ```text
+//!  submit() ──▶ [bounded ingress queue]          (backpressure)
+//!                     │
+//!               batcher thread                   (dynamic batching:
+//!                     │                           group by request
+//!               [work queue]                      kind, flush on size
+//!                /    |    \                      or deadline)
+//!         executor  executor  executor           (each owns its own
+//!          thread    thread    thread             PJRT registry — a
+//!                \    |    /                      "core" in the
+//!              per-request reply                  paper's Algorithm 1)
+//! ```
+//!
+//! The paper's two system activities map directly: **data
+//! decomposition** = the per-core executor pool (each PJRT registry is
+//! an independent core replica), **parallel computation of multiple
+//! inputs** = the dynamic batcher packing compatible requests into one
+//! compiled executable call (e.g. 8 Shapley games into the `(2ⁿ×8)`
+//! structure-vector matmul).
+
+pub mod batcher;
+pub mod decomposition;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod router;
+pub mod service;
+pub mod worker;
+
+pub use metrics::Metrics;
+pub use request::{Request, RequestKind, Response};
+pub use service::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,256 @@
+//! Bounded MPMC queue with blocking push (backpressure) and close
+//! semantics, built on Mutex + Condvar (no crossbeam-channel offline).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded blocking queue; cloning shares the same channel.
+pub struct BoundedQueue<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+/// Why an operation failed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum QueueError {
+    Closed,
+    Full,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(State {
+                    items: VecDeque::new(),
+                    closed: false,
+                }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                capacity,
+            }),
+        }
+    }
+
+    /// Blocking push: waits while full (backpressure), errs when closed.
+    pub fn push(&self, item: T) -> Result<(), QueueError> {
+        let mut state = self.inner.queue.lock().unwrap();
+        loop {
+            if state.closed {
+                return Err(QueueError::Closed);
+            }
+            if state.items.len() < self.inner.capacity {
+                state.items.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            state = self.inner.not_full.wait(state).unwrap();
+        }
+    }
+
+    /// Non-blocking push.
+    pub fn try_push(&self, item: T) -> Result<(), (T, QueueError)> {
+        let mut state = self.inner.queue.lock().unwrap();
+        if state.closed {
+            return Err((item, QueueError::Closed));
+        }
+        if state.items.len() >= self.inner.capacity {
+            return Err((item, QueueError::Full));
+        }
+        state.items.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; returns None when closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut state = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = state.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if state.closed {
+                return None;
+            }
+            state = self.inner.not_empty.wait(state).unwrap();
+        }
+    }
+
+    /// Pop with a deadline; None on timeout or closed-and-drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let mut state = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = state.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if state.closed {
+                return None;
+            }
+            let (s, res) = self.inner.not_empty.wait_timeout(state, timeout).unwrap();
+            state = s;
+            if res.timed_out() {
+                return state.items.pop_front();
+            }
+        }
+    }
+
+    /// Drain up to `max` items without blocking.
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut state = self.inner.queue.lock().unwrap();
+        let n = state.items.len().min(max);
+        let drained: Vec<T> = state.items.drain(..n).collect();
+        if !drained.is_empty() {
+            self.inner.not_full.notify_all();
+        }
+        drained
+    }
+
+    pub fn close(&self) {
+        let mut state = self.inner.queue.lock().unwrap();
+        state.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.queue.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn try_push_full() {
+        let q = BoundedQueue::new(1);
+        q.push(1).unwrap();
+        let err = q.try_push(2).unwrap_err();
+        assert_eq!(err.1, QueueError::Full);
+    }
+
+    #[test]
+    fn close_unblocks_poppers() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(4);
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn push_blocks_until_pop() {
+        let q = BoundedQueue::new(1);
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(2));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(1)); // frees space
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn push_after_close_fails() {
+        let q = BoundedQueue::new(2);
+        q.close();
+        assert_eq!(q.push(1), Err(QueueError::Closed));
+    }
+
+    #[test]
+    fn drain_respects_max() {
+        let q = BoundedQueue::new(10);
+        for i in 0..8 {
+            q.push(i).unwrap();
+        }
+        let d = q.drain_up_to(3);
+        assert_eq!(d, vec![0, 1, 2]);
+        assert_eq!(q.len(), 5);
+    }
+
+    #[test]
+    fn pop_timeout_times_out() {
+        let q: BoundedQueue<i32> = BoundedQueue::new(2);
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(Duration::from_millis(30)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn mpmc_stress() {
+        let q = BoundedQueue::new(8);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    for i in 0..100 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap().len()).sum();
+        assert_eq!(total, 400);
+    }
+}

@@ -1,0 +1,121 @@
+//! Request / response types for the serving API.
+
+use crate::linalg::matrix::Matrix;
+use crate::xai::attribution::Attribution;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A unique, monotonically increasing request id.
+pub type RequestId = u64;
+
+/// What a client can ask the coordinator for.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Classify an image through the AOT MicroCNN forward.
+    Classify { image: Matrix },
+    /// Model-distillation explanation of an (input, output) pair
+    /// (Eq. 5 solve + Eq. 6 block contributions).
+    Distill { x: Matrix, y: Matrix },
+    /// Shapley values of an n-player game given its 2ⁿ value table.
+    Shapley {
+        n: usize,
+        values: Vec<f32>,
+        names: Vec<String>,
+    },
+    /// Integrated-gradients heatmap for an image and target class.
+    IntGrad {
+        image: Matrix,
+        baseline: Matrix,
+        class: usize,
+    },
+    /// Vanilla gradient saliency (Fig. 14 baseline).
+    Saliency { image: Matrix, class: usize },
+}
+
+/// Batching key: requests of the same kind can share an executable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RequestKind {
+    Classify,
+    Distill,
+    Shapley,
+    IntGrad,
+    Saliency,
+}
+
+impl Request {
+    pub fn kind(&self) -> RequestKind {
+        match self {
+            Request::Classify { .. } => RequestKind::Classify,
+            Request::Distill { .. } => RequestKind::Distill,
+            Request::Shapley { .. } => RequestKind::Shapley,
+            Request::IntGrad { .. } => RequestKind::IntGrad,
+            Request::Saliency { .. } => RequestKind::Saliency,
+        }
+    }
+}
+
+impl RequestKind {
+    pub fn all() -> [RequestKind; 5] {
+        [
+            RequestKind::Classify,
+            RequestKind::Distill,
+            RequestKind::Shapley,
+            RequestKind::IntGrad,
+            RequestKind::Saliency,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestKind::Classify => "classify",
+            RequestKind::Distill => "distill",
+            RequestKind::Shapley => "shapley",
+            RequestKind::IntGrad => "intgrad",
+            RequestKind::Saliency => "saliency",
+        }
+    }
+}
+
+/// Successful response payloads.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Logits(Vec<f32>),
+    /// Distillation: the fitted kernel + block contributions.
+    Distillation {
+        kernel: Matrix,
+        contributions: Matrix,
+    },
+    Attribution(Attribution),
+    Heatmap(Matrix),
+}
+
+/// A request in flight: payload + reply channel + timing.
+pub struct Envelope {
+    pub id: RequestId,
+    pub request: Request,
+    pub reply: mpsc::Sender<crate::error::Result<Response>>,
+    pub enqueued_at: Instant,
+}
+
+impl std::fmt::Debug for Envelope {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Envelope")
+            .field("id", &self.id)
+            .field("kind", &self.request.kind())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_are_stable() {
+        let r = Request::Classify {
+            image: Matrix::zeros(2, 2),
+        };
+        assert_eq!(r.kind(), RequestKind::Classify);
+        assert_eq!(RequestKind::all().len(), 5);
+    }
+}

@@ -1,0 +1,328 @@
+//! Request router: maps a batch onto compiled artifact variants and
+//! executes it.
+//!
+//! Variant selection implements "one compiled executable per model
+//! variant": classification picks the smallest `cnn_fwd_b{1,8,32}` that
+//! fits the batch (padding the remainder), Shapley packs games into the
+//! `shapley_n{n}_b{b}` structure-vector matmul, distillation routes on
+//! input size to `distill_{n}x{n}` + `occlusion_{n}x{n}_b*`.
+
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::request::{Request, Response};
+use crate::error::{Error, Result};
+use crate::linalg::matrix::Matrix;
+use crate::runtime::ArtifactRegistry;
+use crate::xai::attribution::Attribution;
+use crate::xai::shapley;
+
+/// Batch sizes compiled for the CNN forward (ascending).
+pub const CNN_BATCH_VARIANTS: [usize; 3] = [1, 8, 32];
+/// (players, batch) pairs compiled for Shapley.
+pub const SHAPLEY_VARIANTS: [(usize, usize); 3] = [(6, 8), (8, 8), (10, 4)];
+/// Square sizes compiled for distillation.
+pub const DISTILL_SIZES: [usize; 3] = [16, 32, 64];
+
+/// Pick the smallest compiled CNN batch ≥ `n` (or the largest if the
+/// batch must be split).
+pub fn pick_cnn_variant(n: usize) -> usize {
+    for v in CNN_BATCH_VARIANTS {
+        if v >= n {
+            return v;
+        }
+    }
+    *CNN_BATCH_VARIANTS.last().unwrap()
+}
+
+/// Execute one batch against the registry, producing one response per
+/// envelope (order preserved).
+pub fn execute_batch(reg: &ArtifactRegistry, batch: &Batch) -> Vec<Result<Response>> {
+    match batch.kind {
+        crate::coordinator::request::RequestKind::Classify => classify_batch(reg, batch),
+        crate::coordinator::request::RequestKind::Shapley => shapley_batch(reg, batch),
+        _ => batch
+            .envelopes
+            .iter()
+            .map(|env| execute_single(reg, &env.request))
+            .collect(),
+    }
+}
+
+/// Classification: pack images into the best-fitting forward variant.
+fn classify_batch(reg: &ArtifactRegistry, batch: &Batch) -> Vec<Result<Response>> {
+    let images: Vec<&Matrix> = batch
+        .envelopes
+        .iter()
+        .map(|e| match &e.request {
+            Request::Classify { image } => image,
+            _ => unreachable!("mixed batch"),
+        })
+        .collect();
+    let mut out: Vec<Result<Response>> = Vec::with_capacity(images.len());
+    let mut idx = 0;
+    while idx < images.len() {
+        let remaining = images.len() - idx;
+        let bsz = pick_cnn_variant(remaining);
+        let take = remaining.min(bsz);
+        let chunk = &images[idx..idx + take];
+        match run_cnn_chunk(reg, chunk, bsz) {
+            Ok(mut logits) => out.append(&mut logits.drain(..).map(Ok).collect()),
+            Err(e) => {
+                for _ in 0..take {
+                    out.push(Err(Error::Coordinator(format!("cnn batch failed: {e}"))));
+                }
+            }
+        }
+        idx += take;
+    }
+    out
+}
+
+fn run_cnn_chunk(
+    reg: &ArtifactRegistry,
+    chunk: &[&Matrix],
+    bsz: usize,
+) -> Result<Vec<Response>> {
+    let exe = reg.get(&crate::runtime::client::cnn_fwd_variant(bsz))?;
+    let img = exe.spec.inputs[0].0[1]; // B×IMG×IMG
+    let classes = exe.spec.outputs[0].0[1];
+    let mut flat = vec![0f32; bsz * img * img];
+    for (b, m) in chunk.iter().enumerate() {
+        if m.rows != img || m.cols != img {
+            return Err(Error::Shape {
+                expected: format!("{img}x{img}"),
+                got: format!("{}x{}", m.rows, m.cols),
+            });
+        }
+        flat[b * img * img..(b + 1) * img * img].copy_from_slice(&m.data);
+    }
+    let outputs = exe.run(&[flat])?;
+    let logits = &outputs[0];
+    Ok((0..chunk.len())
+        .map(|b| Response::Logits(logits[b * classes..(b + 1) * classes].to_vec()))
+        .collect())
+}
+
+/// Shapley: group by player count and pack into structure-vector
+/// matmul executables; sizes without a compiled variant fall back to
+/// the native matrix form (same math, CPU execution).
+fn shapley_batch(reg: &ArtifactRegistry, batch: &Batch) -> Vec<Result<Response>> {
+    batch
+        .envelopes
+        .chunk_by(|a, b| shapley_n(&a.request) == shapley_n(&b.request))
+        .flat_map(|group| {
+            let n = shapley_n(&group[0].request);
+            shapley_group(reg, n, group)
+        })
+        .collect()
+}
+
+fn shapley_n(r: &Request) -> usize {
+    match r {
+        Request::Shapley { n, .. } => *n,
+        _ => unreachable!("mixed batch"),
+    }
+}
+
+fn shapley_group(
+    reg: &ArtifactRegistry,
+    n: usize,
+    group: &[crate::coordinator::request::Envelope],
+) -> Vec<Result<Response>> {
+    let variant = SHAPLEY_VARIANTS.iter().find(|(vn, _)| *vn == n);
+    let games: Vec<(&Vec<f32>, &Vec<String>)> = group
+        .iter()
+        .map(|e| match &e.request {
+            Request::Shapley { values, names, .. } => (values, names),
+            _ => unreachable!(),
+        })
+        .collect();
+    // validate table sizes up front
+    for (values, _) in &games {
+        if values.len() != 1 << n {
+            return group
+                .iter()
+                .map(|_| {
+                    Err(Error::Shape {
+                        expected: format!("2^{n} values"),
+                        got: format!("{}", values.len()),
+                    })
+                })
+                .collect();
+        }
+    }
+    match variant {
+        Some(&(_, bcap)) => {
+            let mut out = Vec::with_capacity(games.len());
+            for chunk in games.chunks(bcap) {
+                match run_shapley_chunk(reg, n, bcap, chunk) {
+                    Ok(mut r) => out.append(&mut r.drain(..).map(Ok).collect()),
+                    Err(e) => {
+                        for _ in chunk {
+                            out.push(Err(Error::Coordinator(format!(
+                                "shapley batch failed: {e}"
+                            ))));
+                        }
+                    }
+                }
+            }
+            out
+        }
+        None => {
+            // native fallback: same structure-vector math on the host
+            games
+                .iter()
+                .map(|(values, names)| {
+                    let game = shapley::ValueTable::new(n, (*values).clone());
+                    let mut eng = crate::trace::NativeEngine::new();
+                    let phi =
+                        shapley::shapley_matrix_form(&mut eng, std::slice::from_ref(&game));
+                    Ok(Response::Attribution(Attribution::new(
+                        (*names).clone(),
+                        (0..n).map(|i| phi.get(i, 0)).collect(),
+                    )))
+                })
+                .collect()
+        }
+    }
+}
+
+fn run_shapley_chunk(
+    reg: &ArtifactRegistry,
+    n: usize,
+    bcap: usize,
+    chunk: &[(&Vec<f32>, &Vec<String>)],
+) -> Result<Vec<Response>> {
+    let exe = reg.get(&crate::runtime::client::shapley_variant(n, bcap))?;
+    let t = shapley::weight_matrix(n);
+    // v matrix: 2^n rows × bcap cols, zero-padded beyond the chunk
+    let rows = 1usize << n;
+    let mut v = vec![0f32; rows * bcap];
+    for (b, (values, _)) in chunk.iter().enumerate() {
+        for (s, &val) in values.iter().enumerate() {
+            v[s * bcap + b] = val;
+        }
+    }
+    let outputs = exe.run(&[t.data.clone(), v])?;
+    let phi = &outputs[0]; // n×bcap row-major
+    Ok(chunk
+        .iter()
+        .enumerate()
+        .map(|(b, (_, names))| {
+            Response::Attribution(Attribution::new(
+                (*names).clone(),
+                (0..n).map(|i| phi[i * bcap + b]).collect(),
+            ))
+        })
+        .collect())
+}
+
+/// Per-request pipelines (distillation, IG, saliency).
+pub fn execute_single(reg: &ArtifactRegistry, req: &Request) -> Result<Response> {
+    match req {
+        Request::Distill { x, y } => distill_single(reg, x, y),
+        Request::IntGrad {
+            image,
+            baseline,
+            class,
+        } => {
+            let exe = reg.get("ig_cnn_s32")?;
+            let onehot = onehot(*class, 4)?;
+            let out = exe.run(&[image.data.clone(), baseline.data.clone(), onehot])?;
+            Ok(Response::Heatmap(Matrix::from_vec(
+                image.rows,
+                image.cols,
+                out[0].clone(),
+            )))
+        }
+        Request::Saliency { image, class } => {
+            let exe = reg.get("saliency_cnn")?;
+            let onehot = onehot(*class, 4)?;
+            let out = exe.run(&[image.data.clone(), onehot])?;
+            Ok(Response::Heatmap(Matrix::from_vec(
+                image.rows,
+                image.cols,
+                out[0].clone(),
+            )))
+        }
+        Request::Classify { image } => {
+            run_cnn_chunk(reg, &[image], 1).map(|mut v| v.remove(0))
+        }
+        Request::Shapley { .. } => Err(Error::Coordinator(
+            "shapley must go through the batch path".into(),
+        )),
+    }
+}
+
+fn distill_single(reg: &ArtifactRegistry, x: &Matrix, y: &Matrix) -> Result<Response> {
+    let n = x.rows;
+    if x.cols != n || y.rows != n || y.cols != n {
+        return Err(Error::Shape {
+            expected: "square x/y of equal size".into(),
+            got: format!("x {}x{}, y {}x{}", x.rows, x.cols, y.rows, y.cols),
+        });
+    }
+    if !DISTILL_SIZES.contains(&n) {
+        return Err(Error::Shape {
+            expected: format!("one of {DISTILL_SIZES:?}"),
+            got: format!("{n}"),
+        });
+    }
+    let solve = reg.get(&crate::runtime::client::distill_variant(n))?;
+    let k = solve.run(&[x.data.clone(), y.data.clone()])?.remove(0);
+    let kernel = Matrix::from_vec(n, n, k);
+    // contribution factors via the occlusion artifact when compiled
+    let occl_name = match n {
+        16 => Some("occlusion_16x16_b4"),
+        32 => Some("occlusion_32x32_b8"),
+        _ => None,
+    };
+    let contributions = match occl_name {
+        Some(name) => {
+            let exe = reg.get(name)?;
+            let out = exe.run(&[x.data.clone(), kernel.data.clone()])?.remove(0);
+            let g = exe.spec.outputs[0].0[0];
+            Matrix::from_vec(g, out.len() / g, out)
+        }
+        None => {
+            // native fallback for sizes without a compiled occlusion
+            let mut eng = crate::trace::NativeEngine::new();
+            crate::xai::distillation::contribution_factors(&mut eng, x, &kernel, n / 8)
+        }
+    };
+    Ok(Response::Distillation {
+        kernel,
+        contributions,
+    })
+}
+
+fn onehot(class: usize, n: usize) -> Result<Vec<f32>> {
+    if class >= n {
+        return Err(Error::Shape {
+            expected: format!("class < {n}"),
+            got: format!("{class}"),
+        });
+    }
+    let mut v = vec![0f32; n];
+    v[class] = 1.0;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_selection() {
+        assert_eq!(pick_cnn_variant(1), 1);
+        assert_eq!(pick_cnn_variant(2), 8);
+        assert_eq!(pick_cnn_variant(8), 8);
+        assert_eq!(pick_cnn_variant(9), 32);
+        assert_eq!(pick_cnn_variant(33), 32); // split into multiple runs
+    }
+
+    #[test]
+    fn onehot_validates() {
+        assert_eq!(onehot(2, 4).unwrap(), vec![0.0, 0.0, 1.0, 0.0]);
+        assert!(onehot(4, 4).is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! The [`Coordinator`]: public serving API wiring ingress → batcher →
+//! executors.
+
+use crate::coordinator::batcher::{Batch, BatchAssembler, BatchPolicy};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::queue::BoundedQueue;
+use crate::coordinator::request::{Envelope, Request, Response};
+use crate::error::{Error, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Coordinator construction knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Where `manifest.txt` and the HLO artifacts live.
+    pub artifact_dir: PathBuf,
+    /// Executor threads (each compiles its own PJRT registry).
+    pub executors: usize,
+    /// Ingress queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Work queue capacity (batches in flight).
+    pub work_capacity: usize,
+    /// Batching policy.
+    pub policy: BatchPolicy,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            artifact_dir: PathBuf::from("artifacts"),
+            executors: 2,
+            queue_capacity: 256,
+            work_capacity: 64,
+            policy: BatchPolicy::default(),
+        }
+    }
+}
+
+/// Handle for an in-flight request.
+pub struct Pending {
+    pub id: u64,
+    rx: mpsc::Receiver<Result<Response>>,
+}
+
+impl Pending {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Coordinator("worker dropped the request".into()))?
+    }
+
+    /// Wait with a timeout.
+    pub fn wait_timeout(self, d: Duration) -> Result<Response> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(Error::Coordinator("request timed out".into()))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Coordinator("worker dropped the request".into()))
+            }
+        }
+    }
+}
+
+/// The serving engine.  Construct with [`Coordinator::start`], submit
+/// requests, then [`Coordinator::shutdown`].
+pub struct Coordinator {
+    ingress: BoundedQueue<Envelope>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    batcher: Option<JoinHandle<()>>,
+    executors: Vec<JoinHandle<()>>,
+    work: BoundedQueue<Batch>,
+}
+
+impl Coordinator {
+    /// Start the pipeline: spawns the batcher and `executors` workers,
+    /// and blocks until at least one worker has compiled its registry
+    /// (so the first submit doesn't race startup failure).
+    pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
+        let ingress: BoundedQueue<Envelope> = BoundedQueue::new(config.queue_capacity);
+        let work: BoundedQueue<Batch> = BoundedQueue::new(config.work_capacity);
+        let metrics = Arc::new(Metrics::new());
+
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let executors = crate::coordinator::worker::spawn_executors(
+            config.executors,
+            config.artifact_dir.clone(),
+            work.clone(),
+            metrics.clone(),
+            ready_tx,
+        );
+        // wait for the first registry (compile errors surface here)
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("no executor came up".into()))??;
+
+        let batcher = {
+            let ingress = ingress.clone();
+            let work = work.clone();
+            let policy = config.policy.clone();
+            std::thread::Builder::new()
+                .name("xai-batcher".into())
+                .spawn(move || batcher_loop(ingress, work, policy))
+                .expect("spawn batcher")
+        };
+
+        Ok(Coordinator {
+            ingress,
+            metrics,
+            next_id: AtomicU64::new(1),
+            batcher: Some(batcher),
+            executors,
+            work,
+        })
+    }
+
+    /// Submit a request; blocks if the ingress queue is full
+    /// (backpressure).  Returns a handle to await the response.
+    pub fn submit(&self, request: Request) -> Result<Pending> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let env = Envelope {
+            id,
+            request,
+            reply: tx,
+            enqueued_at: Instant::now(),
+        };
+        self.metrics.record_submit();
+        self.ingress
+            .push(env)
+            .map_err(|_| Error::Coordinator("coordinator is shut down".into()))?;
+        Ok(Pending { id, rx })
+    }
+
+    /// Submit and wait (convenience).
+    pub fn call(&self, request: Request) -> Result<Response> {
+        self.submit(request)?.wait()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) {
+        self.ingress.close();
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        self.work.close();
+        for h in self.executors.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.ingress.close();
+        self.work.close();
+    }
+}
+
+/// Batcher thread: drain ingress, assemble, flush on size or deadline.
+fn batcher_loop(
+    ingress: BoundedQueue<Envelope>,
+    work: BoundedQueue<Batch>,
+    policy: BatchPolicy,
+) {
+    let max_wait = policy.max_wait;
+    let mut assembler = BatchAssembler::new(policy);
+    loop {
+        // Wait bounded by the earliest pending deadline.
+        let timeout = assembler
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(max_wait.max(Duration::from_millis(10)));
+        match ingress.pop_timeout(timeout) {
+            Some(env) => {
+                if let Some(batch) = assembler.offer(env) {
+                    if work.push(batch).is_err() {
+                        break;
+                    }
+                }
+                // opportunistically drain whatever else arrived
+                for env in ingress.drain_up_to(64) {
+                    if let Some(batch) = assembler.offer(env) {
+                        if work.push(batch).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }
+            None => {
+                if ingress.is_closed() && ingress.is_empty() {
+                    break;
+                }
+            }
+        }
+        for batch in assembler.flush_expired(Instant::now()) {
+            if work.push(batch).is_err() {
+                return;
+            }
+        }
+    }
+    // shutdown: flush the tail
+    for batch in assembler.flush_all() {
+        if work.push(batch).is_err() {
+            return;
+        }
+    }
+    work.close();
+}

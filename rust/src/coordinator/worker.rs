@@ -1,0 +1,88 @@
+//! Executor workers: each owns a full PJRT registry (its "core").
+//!
+//! `PjRtClient` is not `Send`, so registries cannot be shared; instead
+//! every worker thread compiles its own copy of the artifacts at
+//! startup.  This mirrors the paper's Algorithm 1 topology: `p`
+//! independent cores, each executing sub-tasks "without requiring any
+//! data exchange between cores", with results merged by the reply
+//! channels.
+
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::queue::BoundedQueue;
+use crate::coordinator::router;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Spawn `count` executor threads consuming from `work`.
+///
+/// Returns the join handles; workers exit when the queue closes.
+/// Worker 0 signals readiness (registry compiled) through `ready`.
+pub fn spawn_executors(
+    count: usize,
+    artifact_dir: PathBuf,
+    work: BoundedQueue<Batch>,
+    metrics: Arc<Metrics>,
+    ready: std::sync::mpsc::Sender<crate::error::Result<()>>,
+) -> Vec<JoinHandle<()>> {
+    (0..count)
+        .map(|i| {
+            let work = work.clone();
+            let metrics = metrics.clone();
+            let dir = artifact_dir.clone();
+            let ready = ready.clone();
+            std::thread::Builder::new()
+                .name(format!("xai-executor-{i}"))
+                .spawn(move || executor_loop(i, &dir, work, metrics, ready))
+                .expect("spawn executor")
+        })
+        .collect()
+}
+
+fn executor_loop(
+    id: usize,
+    dir: &std::path::Path,
+    work: BoundedQueue<Batch>,
+    metrics: Arc<Metrics>,
+    ready: std::sync::mpsc::Sender<crate::error::Result<()>>,
+) {
+    // Each worker compiles its own registry (own PJRT client).
+    let registry = match crate::runtime::ArtifactRegistry::load(dir) {
+        Ok(r) => {
+            let _ = ready.send(Ok(()));
+            r
+        }
+        Err(e) => {
+            log::error!("executor {id}: failed to load artifacts: {e}");
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    log::info!(
+        "executor {id}: ready with {} executables on {}",
+        registry.len(),
+        registry.platform()
+    );
+    while let Some(batch) = work.pop() {
+        let n = batch.envelopes.len();
+        metrics.record_batch(n);
+        let started = Instant::now();
+        let results = router::execute_batch(&registry, &batch);
+        debug_assert_eq!(results.len(), n);
+        for (env, result) in batch.envelopes.into_iter().zip(results) {
+            let ok = result.is_ok();
+            let latency = env.enqueued_at.elapsed();
+            let queue_wait = latency.saturating_sub(started.elapsed());
+            if ok {
+                metrics.record_complete(env.request.kind(), latency, queue_wait);
+            } else {
+                metrics.record_failure();
+            }
+            // a dropped receiver just means the client went away
+            let _ = env.reply.send(result);
+        }
+    }
+    log::info!("executor {id}: shutting down");
+}

@@ -1,0 +1,133 @@
+//! Blocky synthetic images — the CIFAR-100 stand-in (Fig. 11, Fig. 14).
+//!
+//! Mirrors `python/compile/model.py::synth_batch`: class `c` lights up
+//! quadrant `c` (mean [`HI`]) against a dim background (mean [`LO`])
+//! with Gaussian noise [`NOISE`].  The MicroCNN artifacts are trained
+//! on exactly this distribution, so images sampled here classify
+//! correctly through the AOT forward executable.
+
+use crate::linalg::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Image edge — matches `model.IMG` in Python.
+pub const IMG: usize = 16;
+/// Classes — one per quadrant, matches `model.NUM_CLASSES`.
+pub const NUM_CLASSES: usize = 4;
+pub const HI: f32 = 1.0;
+pub const LO: f32 = 0.2;
+pub const NOISE: f32 = 0.3;
+
+/// A labeled image.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub image: Matrix,
+    pub label: usize,
+}
+
+/// Top-left row/col of the quadrant associated with `label`.
+pub fn quadrant_origin(label: usize) -> (usize, usize) {
+    let h = IMG / 2;
+    ((label / 2) * h, (label % 2) * h)
+}
+
+/// Sample one image of the given class.
+pub fn sample_class(label: usize, rng: &mut Rng) -> Sample {
+    assert!(label < NUM_CLASSES);
+    let (r0, c0) = quadrant_origin(label);
+    let h = IMG / 2;
+    let image = Matrix::from_fn(IMG, IMG, |r, c| {
+        let base = if r >= r0 && r < r0 + h && c >= c0 && c < c0 + h {
+            HI
+        } else {
+            LO
+        };
+        base + NOISE * rng.gauss_f32()
+    });
+    Sample { image, label }
+}
+
+/// Sample a batch with uniformly random labels.
+pub fn sample_batch(n: usize, rng: &mut Rng) -> Vec<Sample> {
+    (0..n)
+        .map(|_| sample_class(rng.below(NUM_CLASSES as u64) as usize, rng))
+        .collect()
+}
+
+/// The deterministic "cat-like" demo image for Fig. 11: a class-0
+/// quadrant image with a secondary bright feature (the "ear") in the
+/// mid-upper block, noise-free for reproducible figures.
+pub fn demo_image() -> Sample {
+    let mut image = Matrix::from_fn(IMG, IMG, |_, _| LO);
+    // face: central 6×6 patch
+    for r in 5..11 {
+        for c in 5..11 {
+            image.set(r, c, HI);
+        }
+    }
+    // ear: mid-up 3×3 patch
+    for r in 1..4 {
+        for c in 6..9 {
+            image.set(r, c, 0.8);
+        }
+    }
+    Sample { image, label: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadrant_is_brighter() {
+        let mut rng = Rng::new(0);
+        for label in 0..NUM_CLASSES {
+            let mut quad_sum = 0.0f32;
+            let mut rest_sum = 0.0f32;
+            let trials = 32;
+            for _ in 0..trials {
+                let s = sample_class(label, &mut rng);
+                let (r0, c0) = quadrant_origin(label);
+                let h = IMG / 2;
+                for r in 0..IMG {
+                    for c in 0..IMG {
+                        if r >= r0 && r < r0 + h && c >= c0 && c < c0 + h {
+                            quad_sum += s.image.get(r, c);
+                        } else {
+                            rest_sum += s.image.get(r, c);
+                        }
+                    }
+                }
+            }
+            let quad_mean = quad_sum / (trials * 64) as f32;
+            let rest_mean = rest_sum / (trials * 192) as f32;
+            assert!(
+                quad_mean > rest_mean + 0.5,
+                "label {label}: {quad_mean} vs {rest_mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_covers_all_classes() {
+        let mut rng = Rng::new(1);
+        let batch = sample_batch(200, &mut rng);
+        for c in 0..NUM_CLASSES {
+            assert!(batch.iter().any(|s| s.label == c));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = sample_class(2, &mut Rng::new(7)).image;
+        let b = sample_class(2, &mut Rng::new(7)).image;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn demo_image_structure() {
+        let s = demo_image();
+        assert_eq!(s.image.get(7, 7), HI); // face center
+        assert_eq!(s.image.get(2, 7), 0.8); // ear
+        assert_eq!(s.image.get(15, 0), LO); // background
+    }
+}

@@ -1,0 +1,133 @@
+//! Synthetic MIRAI-style malware trace tables (Fig. 12).
+//!
+//! The paper's detector consumes register-trace tables: each row a
+//! register, each column a clock cycle of hex values, with one column
+//! corresponding to the `ATTACK_VECTOR` assignment that distillation
+//! must surface as the dominant feature.  We generate tables with a
+//! planted attack column: registers are correlated noise except at the
+//! attack cycle, where a coordinated multi-register signature appears
+//! (mode flag written, bot state fan-out) — checkable ground truth.
+
+use crate::linalg::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Registers traced (rows). Matches the Fig. 12 snapshot scale.
+pub const REGISTERS: usize = 16;
+/// Clock cycles captured (cols).
+pub const CYCLES: usize = 16;
+
+/// A trace table with its planted ground truth.
+#[derive(Debug, Clone)]
+pub struct TraceTable {
+    /// Register values normalized to [0, 1] (hex / 0xFF).
+    pub table: Matrix,
+    /// The planted ATTACK_VECTOR clock-cycle column (None for benign).
+    pub attack_cycle: Option<usize>,
+}
+
+/// Benign trace: smooth correlated register activity.
+pub fn benign_trace(rng: &mut Rng) -> TraceTable {
+    let mut table = Matrix::zeros(REGISTERS, CYCLES);
+    for r in 0..REGISTERS {
+        let mut v = rng.uniform() as f32;
+        for c in 0..CYCLES {
+            // slow random walk per register (clamped)
+            v = (v + 0.1 * rng.gauss_f32()).clamp(0.0, 1.0);
+            table.set(r, c, v * 0.5 + 0.1);
+        }
+    }
+    TraceTable {
+        table,
+        attack_cycle: None,
+    }
+}
+
+/// Malware trace: benign background + a coordinated write burst at the
+/// planted attack cycle (the ATTACK_VECTOR assignment fan-out).
+pub fn malware_trace(attack_cycle: usize, rng: &mut Rng) -> TraceTable {
+    assert!(attack_cycle < CYCLES);
+    let mut t = benign_trace(rng);
+    for r in 0..REGISTERS {
+        // most registers spike coherently at the attack cycle
+        if rng.uniform() < 0.75 {
+            t.table.set(r, attack_cycle, 0.9 + 0.1 * rng.uniform() as f32);
+        }
+    }
+    t.attack_cycle = Some(attack_cycle);
+    t
+}
+
+/// A labeled corpus of traces for detector-style experiments.
+pub fn corpus(n: usize, rng: &mut Rng) -> Vec<(TraceTable, bool)> {
+    (0..n)
+        .map(|_| {
+            if rng.uniform() < 0.5 {
+                let cyc = rng.below(CYCLES as u64) as usize;
+                (malware_trace(cyc, rng), true)
+            } else {
+                (benign_trace(rng), false)
+            }
+        })
+        .collect()
+}
+
+/// Column-energy heuristic: cycles ranked by deviation from the table
+/// mean (a cheap detector the distillation explanation is checked
+/// against in tests).
+pub fn column_energies(t: &TraceTable) -> Vec<f32> {
+    let mean: f32 =
+        t.table.data.iter().sum::<f32>() / (t.table.rows * t.table.cols) as f32;
+    (0..t.table.cols)
+        .map(|c| {
+            (0..t.table.rows)
+                .map(|r| {
+                    let d = t.table.get(r, c) - mean;
+                    d * d
+                })
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn malware_attack_column_has_peak_energy() {
+        let mut rng = Rng::new(0);
+        for _ in 0..20 {
+            let cyc = rng.below(CYCLES as u64) as usize;
+            let t = malware_trace(cyc, &mut rng);
+            let e = column_energies(&t);
+            let argmax = e
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(argmax, cyc, "energies {e:?}");
+        }
+    }
+
+    #[test]
+    fn benign_has_no_ground_truth() {
+        let mut rng = Rng::new(1);
+        assert!(benign_trace(&mut rng).attack_cycle.is_none());
+    }
+
+    #[test]
+    fn values_are_normalized() {
+        let mut rng = Rng::new(2);
+        let t = malware_trace(5, &mut rng);
+        assert!(t.table.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn corpus_is_balancedish() {
+        let mut rng = Rng::new(3);
+        let c = corpus(200, &mut rng);
+        let malware = c.iter().filter(|(_, m)| *m).count();
+        assert!(malware > 60 && malware < 140);
+    }
+}

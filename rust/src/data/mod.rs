@@ -1,0 +1,12 @@
+//! Synthetic workload generators (DESIGN.md substitutions).
+//!
+//! The paper's datasets — CIFAR-100, MIRAI execution traces, and
+//! Spectre/Meltdown hardware-performance-counter captures — are not
+//! available here.  Each generator below produces a distribution that
+//! exercises the *same code path* with **checkable ground truth**: the
+//! planted structure (quadrant, attack column, counter signature) is
+//! known, so tests can assert the XAI pipelines actually recover it.
+
+pub mod cifar;
+pub mod counters;
+pub mod mirai;

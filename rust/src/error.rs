@@ -1,0 +1,42 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for runtime, coordinator, and configuration failures.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// PJRT / XLA failures surfaced from the `xla` crate.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Artifact manifest missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Shape mismatch between a request and the compiled executable.
+    #[error("shape mismatch: expected {expected}, got {got}")]
+    Shape { expected: String, got: String },
+
+    /// Coordinator queue closed or over capacity.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Configuration file / CLI errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Numerical failure (singular system, non-finite values).
+    #[error("numeric error: {0}")]
+    Numeric(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,136 @@
+//! CPU baseline model — the paper's "traditional execution in software".
+//!
+//! Modeled on the testbed's Intel i7 @3.7 GHz: a handful of wide OoO
+//! cores with AVX2.  No dispatch overhead (it *is* the host), decent
+//! FFT performance (branchy code is what CPUs are for), but matrix
+//! throughput three orders of magnitude below a systolic array.
+
+use crate::hwsim::device::{Device, OpCost};
+use crate::hwsim::DeviceKind;
+use crate::trace::Op;
+
+#[derive(Debug, Clone)]
+pub struct CpuSim {
+    /// Sustained dense-matmul throughput **per core** (FLOP/s).  AVX2
+    /// FMA at ~3.7 GHz sustains ~7.5 GFLOP/s of GEMM per core; the
+    /// chip total is `matrix_flops × cores`.
+    pub matrix_flops: f64,
+    /// Per-core throughput on branchy/irregular code (FFT butterflies,
+    /// scalar loops): ~1.2 GFLOP/s.
+    pub scalar_flops: f64,
+    /// Main-memory bandwidth (B/s): dual-channel DDR4 ≈ 40 GB/s.
+    pub mem_bw: f64,
+    /// Per-op dispatch cost (s) — a function call, essentially free.
+    pub dispatch_s: f64,
+    /// Package power under load (W).
+    pub busy_w: f64,
+    /// Idle package power (W).
+    pub idle_w: f64,
+    /// Cores available for the data-decomposition schedule.
+    pub cores: usize,
+}
+
+impl Default for CpuSim {
+    fn default() -> Self {
+        Self {
+            matrix_flops: 7.5e9,
+            scalar_flops: 1.2e9,
+            mem_bw: 40.0e9,
+            dispatch_s: 100e-9,
+            busy_w: 65.0,
+            idle_w: 20.0,
+            cores: 8,
+        }
+    }
+}
+
+impl CpuSim {
+    fn throughput_for(&self, op: &Op) -> f64 {
+        if op.is_matrix_op() {
+            self.matrix_flops
+        } else {
+            self.scalar_flops
+        }
+    }
+}
+
+impl Device for CpuSim {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::Cpu
+    }
+
+    fn op_cost(&self, op: &Op, units: usize) -> OpCost {
+        let units = units.min(self.cores).max(1) as f64;
+        let compute = op.flops() as f64 / (self.throughput_for(op) * units);
+        let memory = op.bytes() as f64 / self.mem_bw; // bw is shared
+        OpCost {
+            overhead_s: self.dispatch_s,
+            busy_s: compute.max(memory),
+        }
+    }
+
+    fn busy_power_w(&self) -> f64 {
+        self.busy_w
+    }
+
+    fn idle_power_w(&self) -> f64 {
+        self.idle_w
+    }
+
+    fn host_power_w(&self) -> f64 {
+        0.0 // the CPU is the host
+    }
+
+    fn max_units(&self) -> usize {
+        self.cores
+    }
+
+    fn merge_cost_s(&self, op: &Op, units: usize) -> f64 {
+        // shared-memory merge: one extra pass over the output bytes
+        // plus a synchronization barrier.
+        let barrier = 2e-6 * (units as f64).log2().max(1.0);
+        op.output_bytes() as f64 / (3.0 * self.mem_bw) + barrier
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_time_reasonable() {
+        // 1024³ matmul = 2.1 GFLOP at 60 GFLOP/s (8 cores) ≈ 36 ms
+        let cpu = CpuSim::default();
+        let c = cpu.op_cost(
+            &Op::Matmul {
+                m: 1024,
+                k: 1024,
+                n: 1024,
+            },
+            8,
+        );
+        assert!(c.busy_s > 1e-3 && c.busy_s < 0.5, "{}", c.busy_s);
+    }
+
+    #[test]
+    fn cpu_prefers_fft_schedule_over_matmul_dft() {
+        // The reason the CPU baseline uses radix-2 FFT: the matmul-form
+        // DFT (Eq. 14) costs O(n³) flops vs O(n² log n), and a CPU has
+        // no systolic array to make the extra flops free.
+        let cpu = CpuSim::default();
+        let fft = cpu.op_cost(&Op::Fft2 { m: 256, n: 256 }, 8);
+        let dft = cpu.op_cost(&Op::Dft2Matmul { m: 256, n: 256 }, 8);
+        assert!(fft.busy_s < dft.busy_s, "{} vs {}", fft.busy_s, dft.busy_s);
+    }
+
+    #[test]
+    fn more_units_is_faster() {
+        let cpu = CpuSim::default();
+        let op = Op::Matmul {
+            m: 512,
+            k: 512,
+            n: 512,
+        };
+        assert!(cpu.op_cost(&op, 8).busy_s < cpu.op_cost(&op, 1).busy_s);
+    }
+}

@@ -1,0 +1,174 @@
+//! The [`Device`] trait and trace replay.
+
+use crate::hwsim::DeviceKind;
+use crate::trace::{Op, OpTrace};
+
+/// Per-op simulated cost.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpCost {
+    /// Fixed dispatch/launch overhead (s).
+    pub overhead_s: f64,
+    /// Compute + memory time (s).
+    pub busy_s: f64,
+}
+
+impl OpCost {
+    pub fn total(&self) -> f64 {
+        self.overhead_s + self.busy_s
+    }
+}
+
+/// Replay summary for one trace on one device.
+#[derive(Debug, Clone, Default)]
+pub struct CostReport {
+    /// End-to-end simulated wall time (s).
+    pub time_s: f64,
+    /// Time lost to dispatch overheads (s).
+    pub overhead_s: f64,
+    /// Device-only ("incremental") energy (J).
+    pub energy_j: f64,
+    /// Device + host-CPU ("total") energy (J).
+    pub energy_total_j: f64,
+    /// Total floating-point work replayed.
+    pub flops: u64,
+    /// Average device power over the replay (W).
+    pub avg_power_w: f64,
+}
+
+impl CostReport {
+    /// Work per incremental joule — the paper's "incremental perf/Watt".
+    pub fn perf_per_watt_incremental(&self) -> f64 {
+        self.flops as f64 / self.energy_j.max(1e-12)
+    }
+
+    /// Work per total joule (host included) — "total perf/Watt".
+    pub fn perf_per_watt_total(&self) -> f64 {
+        self.flops as f64 / self.energy_total_j.max(1e-12)
+    }
+}
+
+/// An analytical accelerator model.
+pub trait Device: Send + Sync {
+    fn kind(&self) -> DeviceKind;
+
+    /// Simulated cost of one op executed on `units` cooperating cores
+    /// (data decomposition, Algorithm 1).  `units = 1` is the
+    /// undistributed schedule.
+    fn op_cost(&self, op: &Op, units: usize) -> OpCost;
+
+    /// Dynamic power while computing (W).
+    fn busy_power_w(&self) -> f64;
+
+    /// Static/idle power while dispatching or stalled (W).
+    fn idle_power_w(&self) -> f64;
+
+    /// Host-CPU power attributed in "total" energy accounting (W).
+    /// Zero for the CPU device itself (it *is* the host).
+    fn host_power_w(&self) -> f64;
+
+    /// Number of parallel units available for data decomposition.
+    fn max_units(&self) -> usize;
+
+    /// Communication cost of re-assembling a decomposed op across
+    /// `units` cores (the `tf.cross_replica_sum` of §III-E).
+    fn merge_cost_s(&self, op: &Op, units: usize) -> f64;
+
+    /// Replay a full trace on `units` cores.
+    fn replay_with_units(&self, trace: &OpTrace, units: usize) -> CostReport {
+        let mut time = 0.0f64;
+        let mut overhead = 0.0f64;
+        let mut busy = 0.0f64;
+        for op in &trace.ops {
+            let c = self.op_cost(op, units);
+            let merge = if units > 1 {
+                self.merge_cost_s(op, units)
+            } else {
+                0.0
+            };
+            time += c.total() + merge;
+            overhead += c.overhead_s + merge;
+            busy += c.busy_s;
+        }
+        let energy = self.busy_power_w() * busy + self.idle_power_w() * overhead;
+        let energy_total = energy + self.host_power_w() * time;
+        CostReport {
+            time_s: time,
+            overhead_s: overhead,
+            energy_j: energy,
+            energy_total_j: energy_total,
+            flops: trace.total_flops(),
+            avg_power_w: if time > 0.0 { energy / time } else { 0.0 },
+        }
+    }
+
+    /// Replay on the device's full complement of cores.
+    fn replay(&self, trace: &OpTrace) -> CostReport {
+        self.replay_with_units(trace, self.max_units())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::{cpu::CpuSim, gpu::GpuSim, tpu::TpuSim};
+
+    fn big_matmul_trace() -> OpTrace {
+        let mut t = OpTrace::new();
+        for _ in 0..4 {
+            t.push(Op::Matmul {
+                m: 1024,
+                k: 1024,
+                n: 1024,
+            });
+        }
+        t
+    }
+
+    fn tiny_trace() -> OpTrace {
+        let mut t = OpTrace::new();
+        for _ in 0..64 {
+            t.push(Op::Elementwise { elems: 64 });
+        }
+        t
+    }
+
+    #[test]
+    fn tpu_beats_gpu_beats_cpu_on_large_matmul() {
+        let cpu = CpuSim::default().replay(&big_matmul_trace());
+        let gpu = GpuSim::default().replay(&big_matmul_trace());
+        let tpu = TpuSim::default().replay(&big_matmul_trace());
+        assert!(tpu.time_s < gpu.time_s, "tpu {} gpu {}", tpu.time_s, gpu.time_s);
+        assert!(gpu.time_s < cpu.time_s, "gpu {} cpu {}", gpu.time_s, cpu.time_s);
+    }
+
+    #[test]
+    fn gpu_loses_to_cpu_on_tiny_tasks() {
+        // Paper §IV-C: "for some special tasks, GPU can even cause more
+        // energy consumption than CPU ... for tiny-scale problems".
+        let cpu = CpuSim::default().replay(&tiny_trace());
+        let gpu = GpuSim::default().replay(&tiny_trace());
+        assert!(
+            gpu.time_s > cpu.time_s,
+            "gpu {} should exceed cpu {} on tiny ops",
+            gpu.time_s,
+            cpu.time_s
+        );
+        assert!(gpu.energy_j > cpu.energy_j);
+    }
+
+    #[test]
+    fn decomposition_helps_tpu() {
+        let tpu = TpuSim::default();
+        let t = big_matmul_trace();
+        let single = tpu.replay_with_units(&t, 1);
+        let multi = tpu.replay_with_units(&t, 8);
+        assert!(multi.time_s < single.time_s);
+    }
+
+    #[test]
+    fn energy_total_includes_host() {
+        let gpu = GpuSim::default();
+        let r = gpu.replay(&big_matmul_trace());
+        assert!(r.energy_total_j > r.energy_j);
+    }
+}

@@ -1,0 +1,149 @@
+//! Energy accounting and the perf/Watt analyses of Figs. 8–9.
+//!
+//! The paper reports two normalizations (§IV-C, after Jouppi et al.):
+//!  * **total** performance/Watt — includes host-CPU power;
+//!  * **incremental** performance/Watt — accelerator power only.
+//! and summarizes across workloads with geometric (GM) and weighted
+//! arithmetic (WM) means.  This module computes all four from replay
+//! reports, plus the per-trial power series behind Fig. 8.
+
+use crate::hwsim::device::CostReport;
+use crate::util::stats;
+
+/// One workload's replay on one device, tagged with its work size.
+#[derive(Debug, Clone)]
+pub struct TrialEnergy {
+    pub report: CostReport,
+    /// Weight for WM (the paper weights by workload size; we use flops).
+    pub weight: f64,
+}
+
+/// perf/Watt of a trial under the chosen accounting.
+fn ppw(r: &CostReport, incremental: bool) -> f64 {
+    if incremental {
+        r.perf_per_watt_incremental()
+    } else {
+        r.perf_per_watt_total()
+    }
+}
+
+/// Relative performance/Watt of `dev` over `base`, GM across trials.
+pub fn relative_ppw_gm(dev: &[TrialEnergy], base: &[TrialEnergy], incremental: bool) -> f64 {
+    assert_eq!(dev.len(), base.len());
+    let ratios: Vec<f64> = dev
+        .iter()
+        .zip(base)
+        .map(|(d, b)| ppw(&d.report, incremental) / ppw(&b.report, incremental))
+        .collect();
+    stats::geometric_mean(&ratios)
+}
+
+/// Relative performance/Watt, weighted arithmetic mean across trials.
+pub fn relative_ppw_wm(dev: &[TrialEnergy], base: &[TrialEnergy], incremental: bool) -> f64 {
+    assert_eq!(dev.len(), base.len());
+    let ratios: Vec<f64> = dev
+        .iter()
+        .zip(base)
+        .map(|(d, b)| ppw(&d.report, incremental) / ppw(&b.report, incremental))
+        .collect();
+    let weights: Vec<f64> = dev.iter().map(|t| t.weight).collect();
+    stats::weighted_mean(&ratios, &weights)
+}
+
+/// Energy-ratio efficiency for *matched workloads*: when two devices
+/// execute the same logical task under different schedules (CPU runs
+/// the FFT form, TPU the matmul form), flops/Watt is not comparable —
+/// tasks/Joule is.  Relative efficiency of `dev` over `base` is then
+/// simply base_energy / dev_energy per trial.
+fn energy_of(r: &CostReport, incremental: bool) -> f64 {
+    if incremental {
+        r.energy_j
+    } else {
+        r.energy_total_j
+    }
+}
+
+/// GM of per-trial energy ratios (matched workloads).
+pub fn relative_efficiency_gm(dev: &[TrialEnergy], base: &[TrialEnergy], incremental: bool) -> f64 {
+    assert_eq!(dev.len(), base.len());
+    let ratios: Vec<f64> = dev
+        .iter()
+        .zip(base)
+        .map(|(d, b)| energy_of(&b.report, incremental) / energy_of(&d.report, incremental))
+        .collect();
+    stats::geometric_mean(&ratios)
+}
+
+/// Weighted AM of per-trial energy ratios (matched workloads).
+pub fn relative_efficiency_wm(dev: &[TrialEnergy], base: &[TrialEnergy], incremental: bool) -> f64 {
+    assert_eq!(dev.len(), base.len());
+    let ratios: Vec<f64> = dev
+        .iter()
+        .zip(base)
+        .map(|(d, b)| energy_of(&b.report, incremental) / energy_of(&d.report, incremental))
+        .collect();
+    let weights: Vec<f64> = dev.iter().map(|t| t.weight).collect();
+    stats::weighted_mean(&ratios, &weights)
+}
+
+/// Average power draw (kW) per trial — the Fig. 8 series.
+pub fn power_series_kw(trials: &[TrialEnergy]) -> Vec<f64> {
+    trials
+        .iter()
+        .map(|t| (t.report.energy_j / t.report.time_s.max(1e-12)) / 1000.0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trial(flops: u64, energy: f64, total: f64, time: f64) -> TrialEnergy {
+        TrialEnergy {
+            report: CostReport {
+                time_s: time,
+                overhead_s: 0.0,
+                energy_j: energy,
+                energy_total_j: total,
+                flops,
+                avg_power_w: energy / time,
+            },
+            weight: flops as f64,
+        }
+    }
+
+    #[test]
+    fn gm_of_constant_ratio() {
+        let dev = vec![trial(100, 1.0, 2.0, 1.0), trial(100, 1.0, 2.0, 1.0)];
+        let base = vec![trial(100, 10.0, 11.0, 1.0), trial(100, 10.0, 11.0, 1.0)];
+        // incremental: dev does 100 flops/J, base 10 flops/J => 10x
+        assert!((relative_ppw_gm(&dev, &base, true) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_vs_incremental_differ() {
+        let dev = vec![trial(100, 1.0, 5.0, 1.0)];
+        let base = vec![trial(100, 10.0, 10.0, 1.0)];
+        let inc = relative_ppw_gm(&dev, &base, true);
+        let tot = relative_ppw_gm(&dev, &base, false);
+        assert!(inc > tot, "incremental should look better: {inc} vs {tot}");
+    }
+
+    #[test]
+    fn wm_weights_big_workloads() {
+        let mut dev = vec![trial(100, 1.0, 2.0, 1.0), trial(10_000, 1.0, 2.0, 1.0)];
+        let base = vec![trial(100, 2.0, 3.0, 1.0), trial(10_000, 50.0, 60.0, 1.0)];
+        dev[0].weight = 100.0;
+        dev[1].weight = 10_000.0;
+        let wm = relative_ppw_wm(&dev, &base, true);
+        // big workload ratio = (10000/1)/(10000/50) = 50; small = 2
+        assert!(wm > 40.0, "wm {wm} should be pulled toward 50");
+    }
+
+    #[test]
+    fn power_series_units() {
+        let trials = vec![trial(100, 500.0, 600.0, 2.0)];
+        let kw = power_series_kw(&trials);
+        assert!((kw[0] - 0.25).abs() < 1e-9); // 250 W = 0.25 kW
+    }
+}

@@ -1,0 +1,71 @@
+//! Analytical hardware performance + energy simulators.
+//!
+//! This is the substitution (DESIGN.md) for the paper's testbed — an
+//! Intel i7 host, an RTX 2080 Ti, and a Cloud TPUv2 — none of which
+//! exist in this environment.  Each device model replays an [`OpTrace`]
+//! (the matrix-op stream recorded from the real algorithm execution)
+//! under a first-order cost model:
+//!
+//! ```text
+//! time(op)   = dispatch_overhead
+//!            + flops / (peak_flops · utilization(op, shape))
+//!            + bytes / bandwidth                (whichever dominates)
+//! energy(op) = busy_power · compute_time + idle_power · overhead_time
+//! ```
+//!
+//! Utilization is where the architecture shows through: the TPU model
+//! runs matrix ops on a 256×256 systolic array ([`systolic`]) whose
+//! efficiency collapses on small tiles (fill/drain) and soars on large
+//! ones; the GPU model pays kernel-launch + allocation overhead per op
+//! and a divergence penalty on branchy FFT schedules; the CPU model is
+//! overhead-free but has three orders of magnitude less matrix
+//! throughput.  These are exactly the effects behind the paper's
+//! Tables II–V and Figures 8–10.
+
+pub mod cpu;
+pub mod device;
+pub mod energy;
+pub mod gpu;
+pub mod quantization;
+pub mod roofline;
+pub mod systolic;
+pub mod tpu;
+
+pub use device::{CostReport, Device};
+
+/// The three accelerator configurations of the paper's §IV-A.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+    Tpu,
+}
+
+impl DeviceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::Cpu => "CPU",
+            DeviceKind::Gpu => "GPU",
+            DeviceKind::Tpu => "TPU",
+        }
+    }
+
+    pub fn all() -> [DeviceKind; 3] {
+        [DeviceKind::Cpu, DeviceKind::Gpu, DeviceKind::Tpu]
+    }
+}
+
+impl std::fmt::Display for DeviceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Construct the default simulator for a device kind.
+pub fn device_for(kind: DeviceKind) -> Box<dyn Device> {
+    match kind {
+        DeviceKind::Cpu => Box::new(cpu::CpuSim::default()),
+        DeviceKind::Gpu => Box::new(gpu::GpuSim::default()),
+        DeviceKind::Tpu => Box::new(tpu::TpuSim::default()),
+    }
+}

@@ -1,0 +1,121 @@
+//! int8 quantization — the TPU's energy lever (§II-A, §IV-C).
+//!
+//! "Quantization ... uses 8-bit integers to approximate 16-bit or
+//! 32-bit floating-point numbers."  We implement symmetric per-tensor
+//! affine quantization with the error model the energy tables assume,
+//! plus the per-MAC energy constants (Horowitz, ISSCC'14 scaling) that
+//! justify the paper's perf/Watt margins.
+
+use crate::linalg::matrix::Matrix;
+
+/// Energy per operation in picojoules (45 nm-era constants, scaled).
+pub mod energy_pj {
+    /// 8-bit integer multiply-accumulate.
+    pub const INT8_MAC: f64 = 0.23;
+    /// fp32 multiply-accumulate.
+    pub const FP32_MAC: f64 = 4.6;
+    /// fp32 -> int8 ratio: the "~20x" quantization win on MAC energy.
+    pub fn ratio() -> f64 {
+        FP32_MAC / INT8_MAC
+    }
+}
+
+/// Symmetric int8 quantization of a tensor.
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    pub data: Vec<i8>,
+    pub scale: f32,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Quantize with per-tensor symmetric scaling to int8.
+pub fn quantize(m: &Matrix) -> Quantized {
+    let max_abs = m.data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 1.0 };
+    Quantized {
+        data: m
+            .data
+            .iter()
+            .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+            .collect(),
+        scale,
+        rows: m.rows,
+        cols: m.cols,
+    }
+}
+
+/// Dequantize back to f32.
+pub fn dequantize(q: &Quantized) -> Matrix {
+    Matrix::from_vec(
+        q.rows,
+        q.cols,
+        q.data.iter().map(|&v| v as f32 * q.scale).collect(),
+    )
+}
+
+/// int8 matmul with int32 accumulation, rescaled to f32 — the MXU path.
+pub fn matmul_int8(a: &Quantized, b: &Quantized) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    let s = a.scale * b.scale;
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc: i32 = 0;
+            for kk in 0..k {
+                acc += a.data[i * k + kk] as i32 * b.data[kk * n + j] as i32;
+            }
+            out.data[i * n + j] = acc as f32 * s;
+        }
+    }
+    out
+}
+
+/// Max relative error of the quantized matmul vs the fp32 product.
+pub fn quantized_matmul_error(a: &Matrix, b: &Matrix) -> f32 {
+    let exact = a.matmul(b);
+    let approx = matmul_int8(&quantize(a), &quantize(b));
+    let denom = exact.frobenius_norm().max(1e-12);
+    exact.sub(&approx).frobenius_norm() / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        check("|dequant(quant(x)) - x| <= scale/2", 20, |rng: &mut Rng| {
+            let m = Matrix::random(8, 8, rng);
+            let q = quantize(&m);
+            let back = dequantize(&q);
+            let bound = q.scale * 0.5 + 1e-6;
+            assert!(m.max_abs_diff(&back) <= bound);
+        });
+    }
+
+    #[test]
+    fn zero_matrix_quantizes_cleanly() {
+        let z = Matrix::zeros(4, 4);
+        let q = quantize(&z);
+        assert!(dequantize(&q).max_abs_diff(&z) == 0.0);
+    }
+
+    #[test]
+    fn int8_matmul_close_to_fp32() {
+        check("relative error < 5%", 15, |rng: &mut Rng| {
+            let a = Matrix::random(16, 16, rng);
+            let b = Matrix::random(16, 16, rng);
+            let err = quantized_matmul_error(&a, &b);
+            assert!(err < 0.05, "error {err}");
+        });
+    }
+
+    #[test]
+    fn energy_ratio_is_order_of_magnitude() {
+        assert!(energy_pj::ratio() > 10.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Systolic-array timing model for the TPU MXU (§II-A).
+//!
+//! The MXU is a 256×256 weight-stationary systolic array: weights load
+//! top-down, activations stream left-right, and each cell does one MAC
+//! per cycle.  A matmul (m×k)·(k×n) tiles into ⌈m/256⌉·⌈n/256⌉ output
+//! tiles; each tile costs `k` streaming cycles plus the array
+//! fill/drain latency of ~2·256 cycles.  Edge tiles waste lanes, which
+//! is why small matrices see terrible MXU utilization — the fig-10
+//! crossover in one formula.
+
+/// Parameters of a systolic matrix unit.
+#[derive(Debug, Clone, Copy)]
+pub struct SystolicArray {
+    /// Array edge (cells per side). TPUv2 MXU: 256.
+    pub size: usize,
+    /// Clock frequency (Hz). TPUv2: ~700 MHz.
+    pub clock_hz: f64,
+    /// Number of MXUs ganged per core.
+    pub arrays: usize,
+}
+
+impl Default for SystolicArray {
+    fn default() -> Self {
+        Self {
+            size: 256,
+            clock_hz: 700e6,
+            arrays: 1,
+        }
+    }
+}
+
+impl SystolicArray {
+    /// Peak MACs per second across all arrays.
+    pub fn peak_macs_per_sec(&self) -> f64 {
+        (self.size * self.size * self.arrays) as f64 * self.clock_hz
+    }
+
+    /// Cycles to compute an (m×k)·(k×n) matmul on one array.
+    pub fn matmul_cycles(&self, m: usize, k: usize, n: usize) -> u64 {
+        let s = self.size;
+        let tiles_m = m.div_ceil(s) as u64;
+        let tiles_n = n.div_ceil(s) as u64;
+        // per output tile: fill (s) + stream (k) + drain (s) cycles
+        let per_tile = (k as u64) + 2 * s as u64;
+        tiles_m * tiles_n * per_tile
+    }
+
+    /// Seconds for the matmul, tiles distributed over the ganged arrays.
+    pub fn matmul_time(&self, m: usize, k: usize, n: usize) -> f64 {
+        let cycles = self.matmul_cycles(m, k, n);
+        let per_array = cycles.div_ceil(self.arrays as u64);
+        per_array as f64 / self.clock_hz
+    }
+
+    /// Fraction of peak MACs actually used: useful_macs / (cells·cycles).
+    pub fn utilization(&self, m: usize, k: usize, n: usize) -> f64 {
+        let useful = (m as u64) * (k as u64) * (n as u64);
+        let cells = (self.size * self.size) as u64;
+        let spent = cells * self.matmul_cycles(m, k, n);
+        useful as f64 / spent as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_improves_with_size() {
+        let a = SystolicArray::default();
+        let small = a.utilization(32, 32, 32);
+        let medium = a.utilization(256, 256, 256);
+        let large = a.utilization(2048, 2048, 2048);
+        assert!(small < medium, "{small} < {medium}");
+        assert!(medium < large, "{medium} < {large}");
+        assert!(large > 0.5, "large matmul should approach peak: {large}");
+    }
+
+    #[test]
+    fn tiny_matmul_is_fill_drain_dominated() {
+        let a = SystolicArray::default();
+        // 8x8x8: 512 useful MACs vs 256·256 cells · 520 cycles
+        assert!(a.utilization(8, 8, 8) < 1e-4);
+    }
+
+    #[test]
+    fn cycles_scale_with_tiles() {
+        let a = SystolicArray::default();
+        let one = a.matmul_cycles(256, 256, 256);
+        let four = a.matmul_cycles(512, 256, 512);
+        assert_eq!(four, 4 * one);
+    }
+
+    #[test]
+    fn ganged_arrays_divide_time() {
+        let one = SystolicArray {
+            arrays: 1,
+            ..Default::default()
+        };
+        let two = SystolicArray {
+            arrays: 2,
+            ..Default::default()
+        };
+        let t1 = one.matmul_time(1024, 1024, 1024);
+        let t2 = two.matmul_time(1024, 1024, 1024);
+        assert!((t1 / t2 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn peak_rate() {
+        let a = SystolicArray::default();
+        // 65,536 MACs/cycle — the figure the paper quotes (§II-A).
+        assert_eq!((a.size * a.size) as u64, 65_536);
+        assert!(a.peak_macs_per_sec() > 4e13);
+    }
+}

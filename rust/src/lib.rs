@@ -1,0 +1,60 @@
+//! # xai-accel — hardware acceleration of explainable AI
+//!
+//! A reproduction of Pan & Mishra, *"Hardware Acceleration of Explainable
+//! Artificial Intelligence"* (2023), built as a three-layer stack:
+//!
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`): the paper's
+//!   matrix-form XAI hot spots (DFT-as-matmul, spectral division,
+//!   Vandermonde, IG trapezoid, Shapley matvec) tiled for the TPU MXU.
+//! * **Layer 2** — JAX graphs (`python/compile/model.py`): the XAI
+//!   pipelines + the MicroCNN target model, AOT-lowered once to
+//!   `artifacts/*.hlo.txt`.
+//! * **Layer 3** — this crate: a Rust coordinator that loads the compiled
+//!   artifacts through PJRT ([`runtime`]), serves batched explanation
+//!   requests ([`coordinator`]), and hosts every substrate the paper's
+//!   evaluation needs — a dense linear-algebra library ([`linalg`]), the
+//!   three XAI algorithms with their unaccelerated baselines ([`xai`]),
+//!   analytical CPU/GPU/TPU performance + energy simulators ([`hwsim`]),
+//!   layer-level specs of VGG16/VGG19/ResNet50 ([`models`]), and synthetic
+//!   workload generators ([`data`]).
+//!
+//! Python runs only at build time (`make artifacts`); the serving binary
+//! is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use xai_accel::prelude::*;
+//!
+//! // Distill a linear surrogate of a model from one I/O pair (Eq. 5)
+//! let x = Matrix::from_fn(16, 16, |r, c| (r + c) as f32 * 0.1 + 1.0);
+//! let k0 = Matrix::identity_kernel(16, 16);
+//! let y = linalg::conv::circ_conv2(&x, &k0);
+//! let mut eng = NativeEngine::new();
+//! let k = xai::distillation::distill_fft(&mut eng, &x, &y, 1e-6);
+//! let contrib = xai::distillation::contribution_factors(&mut eng, &x, &k, 4);
+//! println!("block contributions: {contrib:?}");
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod hwsim;
+pub mod linalg;
+pub mod models;
+pub mod runtime;
+pub mod trace;
+pub mod util;
+pub mod xai;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::error::{Error, Result};
+    pub use crate::hwsim::{self, device::Device, DeviceKind};
+    pub use crate::linalg::{self, complex::C32, matrix::Matrix};
+    pub use crate::trace::{NativeEngine, Op, OpTrace};
+    pub use crate::xai;
+}

@@ -1,0 +1,180 @@
+//! Block-partitioned matmul — the "parallel computation" primitive.
+//!
+//! §III-E: "block matrix multiplication is applied — original matrices
+//! are partitioned into small blocks; by performing multiplication
+//! between blocks and merging afterwards, we achieve the same level of
+//! parallel computing efficiency."  The coordinator shards these block
+//! tasks across its worker pool; this module provides the partition /
+//! multiply / merge algebra plus a threaded driver used by benches.
+
+use crate::linalg::matrix::Matrix;
+
+/// A partition of an (M, N) matrix into tiles of at most (bm, bn).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockPlan {
+    pub rows: usize,
+    pub cols: usize,
+    pub bm: usize,
+    pub bn: usize,
+}
+
+impl BlockPlan {
+    pub fn new(rows: usize, cols: usize, bm: usize, bn: usize) -> Self {
+        assert!(bm > 0 && bn > 0);
+        Self { rows, cols, bm, bn }
+    }
+
+    /// Number of tile rows / cols.
+    pub fn grid(&self) -> (usize, usize) {
+        (self.rows.div_ceil(self.bm), self.cols.div_ceil(self.bn))
+    }
+
+    /// Tile extent at grid position (i, j) — edge tiles may be smaller.
+    pub fn tile_extent(&self, i: usize, j: usize) -> (usize, usize) {
+        let h = self.bm.min(self.rows - i * self.bm);
+        let w = self.bn.min(self.cols - j * self.bn);
+        (h, w)
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        let (gr, gc) = self.grid();
+        gr * gc
+    }
+}
+
+/// Extract tile (i, j) of `m` under `plan`.
+pub fn extract_tile(m: &Matrix, plan: &BlockPlan, i: usize, j: usize) -> Matrix {
+    let (h, w) = plan.tile_extent(i, j);
+    let (r0, c0) = (i * plan.bm, j * plan.bn);
+    Matrix::from_fn(h, w, |r, c| m.get(r0 + r, c0 + c))
+}
+
+/// Blocked sequential matmul: identical result to `Matrix::matmul` but
+/// computed tile-by-tile — the schedule the hardware simulators cost.
+pub fn matmul_blocked(a: &Matrix, b: &Matrix, tile: usize) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    for i0 in (0..m).step_by(tile) {
+        for k0 in (0..k).step_by(tile) {
+            for j0 in (0..n).step_by(tile) {
+                let imax = (i0 + tile).min(m);
+                let kmax = (k0 + tile).min(k);
+                let jmax = (j0 + tile).min(n);
+                for i in i0..imax {
+                    for kk in k0..kmax {
+                        let av = a.get(i, kk);
+                        if av == 0.0 {
+                            continue;
+                        }
+                        for j in j0..jmax {
+                            let v = out.get(i, j) + av * b.get(kk, j);
+                            out.set(i, j, v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Threaded row-sharded matmul: splits A's rows over `threads` workers
+/// (Algorithm 1's decomposition applied to matmul), merges with vstack.
+pub fn matmul_parallel(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    assert!(threads > 0);
+    if threads == 1 || a.rows < threads {
+        return a.matmul(b);
+    }
+    let chunk = a.rows.div_ceil(threads);
+    let blocks: Vec<Matrix> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let r0 = t * chunk;
+            if r0 >= a.rows {
+                break;
+            }
+            let nrows = chunk.min(a.rows - r0);
+            let a_ref = &a;
+            let b_ref = &b;
+            handles.push(scope.spawn(move || a_ref.row_slice(r0, nrows).matmul(b_ref)));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    Matrix::vstack(&blocks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn plan_grid_and_extents() {
+        let p = BlockPlan::new(10, 7, 4, 4);
+        assert_eq!(p.grid(), (3, 2));
+        assert_eq!(p.tile_extent(0, 0), (4, 4));
+        assert_eq!(p.tile_extent(2, 1), (2, 3)); // ragged edge
+        assert_eq!(p.num_tiles(), 6);
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        check("blocked == naive", 15, |rng: &mut Rng| {
+            let m = rng.int_range(1, 20) as usize;
+            let k = rng.int_range(1, 20) as usize;
+            let n = rng.int_range(1, 20) as usize;
+            let tile = rng.int_range(1, 8) as usize;
+            let a = Matrix::random(m, k, rng);
+            let b = Matrix::random(k, n, rng);
+            let want = a.matmul(&b);
+            let got = matmul_blocked(&a, &b, tile);
+            assert!(got.max_abs_diff(&want) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn parallel_matches_naive() {
+        check("parallel == naive", 10, |rng: &mut Rng| {
+            let m = rng.int_range(1, 40) as usize;
+            let k = rng.int_range(1, 16) as usize;
+            let n = rng.int_range(1, 16) as usize;
+            let threads = rng.int_range(1, 8) as usize;
+            let a = Matrix::random(m, k, rng);
+            let b = Matrix::random(k, n, rng);
+            let want = a.matmul(&b);
+            let got = matmul_parallel(&a, &b, threads);
+            assert!(got.max_abs_diff(&want) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn tiles_reassemble() {
+        let mut rng = Rng::new(0);
+        let m = Matrix::random(9, 6, &mut rng);
+        let plan = BlockPlan::new(9, 6, 4, 3);
+        let (gr, gc) = plan.grid();
+        // reassemble row-band by row-band
+        let mut bands = Vec::new();
+        for i in 0..gr {
+            let tiles: Vec<Matrix> = (0..gc).map(|j| extract_tile(&m, &plan, i, j)).collect();
+            // horizontal concat of this band
+            let h = tiles[0].rows;
+            let w: usize = tiles.iter().map(|t| t.cols).sum();
+            let mut band = Matrix::zeros(h, w);
+            let mut c0 = 0;
+            for t in &tiles {
+                for r in 0..t.rows {
+                    for c in 0..t.cols {
+                        band.set(r, c0 + c, t.get(r, c));
+                    }
+                }
+                c0 += t.cols;
+            }
+            bands.push(band);
+        }
+        assert_eq!(Matrix::vstack(&bands), m);
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal `f32` complex number (no `num-complex` in the offline set).
+
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// Complex number with `f32` parts.
+#[derive(Copy, Clone, Debug, Default, PartialEq)]
+pub struct C32 {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl C32 {
+    pub const ZERO: C32 = C32 { re: 0.0, im: 0.0 };
+    pub const ONE: C32 = C32 { re: 1.0, im: 0.0 };
+    pub const I: C32 = C32 { re: 0.0, im: 1.0 };
+
+    #[inline]
+    pub fn new(re: f32, im: f32) -> Self {
+        Self { re, im }
+    }
+
+    /// e^{i theta}
+    #[inline]
+    pub fn cis(theta: f32) -> Self {
+        let (s, c) = theta.sin_cos();
+        Self { re: c, im: s }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Self::new(self.re, -self.im)
+    }
+
+    #[inline]
+    pub fn norm_sqr(self) -> f32 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f32 {
+        self.norm_sqr().sqrt()
+    }
+
+    #[inline]
+    pub fn scale(self, s: f32) -> Self {
+        Self::new(self.re * s, self.im * s)
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+}
+
+impl From<f32> for C32 {
+    fn from(re: f32) -> Self {
+        Self::new(re, 0.0)
+    }
+}
+
+impl Add for C32 {
+    type Output = C32;
+    #[inline]
+    fn add(self, o: C32) -> C32 {
+        C32::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl AddAssign for C32 {
+    #[inline]
+    fn add_assign(&mut self, o: C32) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl Sub for C32 {
+    type Output = C32;
+    #[inline]
+    fn sub(self, o: C32) -> C32 {
+        C32::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for C32 {
+    type Output = C32;
+    #[inline]
+    fn mul(self, o: C32) -> C32 {
+        C32::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Div for C32 {
+    type Output = C32;
+    #[inline]
+    fn div(self, o: C32) -> C32 {
+        let d = o.norm_sqr();
+        C32::new(
+            (self.re * o.re + self.im * o.im) / d,
+            (self.im * o.re - self.re * o.im) / d,
+        )
+    }
+}
+
+impl Neg for C32 {
+    type Output = C32;
+    #[inline]
+    fn neg(self) -> C32 {
+        C32::new(-self.re, -self.im)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: C32, b: C32) -> bool {
+        (a - b).abs() < 1e-5
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = C32::new(1.0, 2.0);
+        let b = C32::new(3.0, -1.0);
+        assert_eq!(a + b, C32::new(4.0, 1.0));
+        assert_eq!(a - b, C32::new(-2.0, 3.0));
+        assert_eq!(a * b, C32::new(5.0, 5.0)); // (1+2i)(3-i) = 3-i+6i+2 = 5+5i
+    }
+
+    #[test]
+    fn division_inverts_multiplication() {
+        let a = C32::new(2.5, -1.5);
+        let b = C32::new(0.5, 3.0);
+        assert!(close((a * b) / b, a));
+    }
+
+    #[test]
+    fn cis_unit_circle() {
+        let z = C32::cis(std::f32::consts::FRAC_PI_2);
+        assert!(close(z, C32::I));
+        assert!((C32::cis(1.234).abs() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conj_norm() {
+        let a = C32::new(3.0, 4.0);
+        assert_eq!(a.norm_sqr(), 25.0);
+        assert_eq!(a.abs(), 5.0);
+        assert_eq!((a * a.conj()).re, 25.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Circular 2-D convolution — the distilled model's forward pass.
+//!
+//! The paper's distilled model is `Y = X * K` with `*` circular
+//! convolution (Eq. 3), chosen exactly because the convolution theorem
+//! turns the fit into a spectral division (Eq. 4–5).
+
+use crate::linalg::complex::C32;
+use crate::linalg::fft;
+use crate::linalg::matrix::{CMatrix, Matrix};
+
+/// Circular convolution via the FFT (unnormalized convolution theorem).
+pub fn circ_conv2(x: &Matrix, k: &Matrix) -> Matrix {
+    assert_eq!((x.rows, x.cols), (k.rows, k.cols));
+    let (m, n) = (x.rows, x.cols);
+    let fx = fft::fft2(&CMatrix::from_real(x));
+    let fk = fft::fft2(&CMatrix::from_real(k));
+    // Unitary transforms: F(x*k) = sqrt(MN) · F_u(x)∘F_u(k)
+    let scale = ((m * n) as f32).sqrt();
+    let prod = fx.hadamard(&fk).scale(scale);
+    fft::ifft2(&prod).real()
+}
+
+/// Direct O((MN)²) circular convolution — oracle for the FFT path.
+pub fn circ_conv2_direct(x: &Matrix, k: &Matrix) -> Matrix {
+    assert_eq!((x.rows, x.cols), (k.rows, k.cols));
+    let (m, n) = (x.rows, x.cols);
+    Matrix::from_fn(m, n, |r, c| {
+        let mut acc = 0.0f32;
+        for i in 0..m {
+            for j in 0..n {
+                let xr = (r + m - i) % m;
+                let xc = (c + n - j) % n;
+                acc += x.get(xr, xc) * k.get(i, j);
+            }
+        }
+        acc
+    })
+}
+
+/// Regularized spectral division: (Y ∘ conj(X)) / (|X|² + eps).
+///
+/// The Wiener-regularized Hadamard quotient at the heart of Eq. 5; both
+/// the Pallas kernel and the Rust baseline use this exact formula.
+pub fn spectral_divide(fy: &CMatrix, fx: &CMatrix, eps: f32) -> CMatrix {
+    assert_eq!((fy.rows, fy.cols), (fx.rows, fx.cols));
+    CMatrix {
+        rows: fy.rows,
+        cols: fy.cols,
+        data: fy
+            .data
+            .iter()
+            .zip(&fx.data)
+            .map(|(&y, &x)| {
+                let denom = x.norm_sqr() + eps;
+                C32::new(
+                    (y.re * x.re + y.im * x.im) / denom,
+                    (y.im * x.re - y.re * x.im) / denom,
+                )
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fft_conv_matches_direct() {
+        let mut rng = Rng::new(0);
+        for (m, n) in [(4usize, 4usize), (8, 8), (6, 10)] {
+            let x = Matrix::random(m, n, &mut rng);
+            let k = Matrix::random(m, n, &mut rng);
+            let fast = circ_conv2(&x, &k);
+            let slow = circ_conv2_direct(&x, &k);
+            assert!(fast.max_abs_diff(&slow) < 1e-3, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn identity_kernel_is_identity() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::random(8, 8, &mut rng);
+        let k = Matrix::identity_kernel(8, 8);
+        assert!(circ_conv2(&x, &k).max_abs_diff(&x) < 1e-4);
+    }
+
+    #[test]
+    fn convolution_commutes() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::random(8, 8, &mut rng);
+        let k = Matrix::random(8, 8, &mut rng);
+        let xy = circ_conv2(&x, &k);
+        let yx = circ_conv2(&k, &x);
+        assert!(xy.max_abs_diff(&yx) < 1e-3);
+    }
+
+    #[test]
+    fn shift_kernel_shifts() {
+        let x = Matrix::from_fn(4, 4, |r, c| (r * 4 + c) as f32);
+        // kernel with 1 at (0,1) shifts columns right by 1 (circularly)
+        let mut k = Matrix::zeros(4, 4);
+        k.set(0, 1, 1.0);
+        let y = circ_conv2(&x, &k);
+        for r in 0..4 {
+            for c in 0..4 {
+                let expect = x.get(r, (c + 4 - 1) % 4);
+                assert!((y.get(r, c) - expect).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_divide_is_inverse_of_hadamard() {
+        let mut rng = Rng::new(3);
+        let fx = CMatrix::from_fn(6, 6, |_, _| {
+            C32::new(rng.gauss_f32() + 3.0, rng.gauss_f32())
+        });
+        let fk = CMatrix::from_fn(6, 6, |_, _| C32::new(rng.gauss_f32(), rng.gauss_f32()));
+        let fy = fx.hadamard(&fk);
+        let rec = spectral_divide(&fy, &fx, 1e-9);
+        assert!(rec.max_abs_diff(&fk) < 1e-3);
+    }
+}

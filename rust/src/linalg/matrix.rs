@@ -1,0 +1,405 @@
+//! Row-major dense matrices over `f32` and [`C32`].
+
+use crate::linalg::complex::C32;
+use crate::util::rng::Rng;
+
+/// Dense row-major `f32` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Self::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    /// The delta kernel for circular convolution: K[0,0]=1 — convolving
+    /// with it is the identity map (used widely in tests and examples).
+    pub fn identity_kernel(rows: usize, cols: usize) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        m.data[0] = 1.0;
+        m
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Self {
+            rows,
+            cols,
+            data: rng.gauss_vec(rows * cols),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
+    }
+
+    /// Naive triple-loop matmul (ikj order for cache locality).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|r| {
+                self.row(r)
+                    .iter()
+                    .zip(v)
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+            })
+            .collect()
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        )
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        )
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().map(|a| a * s).collect(),
+        )
+    }
+
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a * b)
+                .collect(),
+        )
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|a| a * a).sum::<f32>().sqrt()
+    }
+
+    /// Largest element-wise |a−b|.  NaN anywhere yields +∞ rather than
+    /// being silently dropped by `f32::max` — a NaN-poisoned result
+    /// must never pass a closeness assertion.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, |m, d| if d.is_nan() { f32::INFINITY } else { m.max(d) })
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|a| a.is_finite())
+    }
+
+    /// Zero out a rectangular block (the occlusion operation of Eq. 6).
+    pub fn occlude_block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Matrix {
+        let mut m = self.clone();
+        for r in r0..(r0 + h).min(self.rows) {
+            for c in c0..(c0 + w).min(self.cols) {
+                m.data[r * self.cols + c] = 0.0;
+            }
+        }
+        m
+    }
+
+    /// Extract rows [r0, r0+n) as a new matrix (decomposition split).
+    pub fn row_slice(&self, r0: usize, n: usize) -> Matrix {
+        assert!(r0 + n <= self.rows);
+        Matrix::from_vec(
+            n,
+            self.cols,
+            self.data[r0 * self.cols..(r0 + n) * self.cols].to_vec(),
+        )
+    }
+
+    /// Stack row-blocks back together (decomposition merge).
+    pub fn vstack(blocks: &[Matrix]) -> Matrix {
+        assert!(!blocks.is_empty());
+        let cols = blocks[0].cols;
+        assert!(blocks.iter().all(|b| b.cols == cols));
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for b in blocks {
+            data.extend_from_slice(&b.data);
+        }
+        Matrix::from_vec(rows, cols, data)
+    }
+}
+
+/// Dense row-major complex matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<C32>,
+}
+
+impl CMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![C32::ZERO; rows * cols],
+        }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> C32) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    pub fn from_real(m: &Matrix) -> Self {
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&x| C32::from(x)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> C32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: C32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn real(&self) -> Matrix {
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().map(|z| z.re).collect(),
+        )
+    }
+
+    pub fn imag(&self) -> Matrix {
+        Matrix::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().map(|z| z.im).collect(),
+        )
+    }
+
+    pub fn matmul(&self, other: &CMatrix) -> CMatrix {
+        assert_eq!(self.cols, other.rows);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = CMatrix::zeros(m, n);
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn hadamard(&self, other: &CMatrix) -> CMatrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        CMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| a * b)
+                .collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> CMatrix {
+        CMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|z| z.scale(s)).collect(),
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &CMatrix) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::random(7, 7, &mut rng);
+        let i = Matrix::identity(7);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-6);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::random(5, 9, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matmul_associative() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::random(4, 5, &mut rng);
+        let b = Matrix::random(5, 6, &mut rng);
+        let c = Matrix::random(6, 3, &mut rng);
+        let ab_c = a.matmul(&b).matmul(&c);
+        let a_bc = a.matmul(&b.matmul(&c));
+        assert!(ab_c.max_abs_diff(&a_bc) < 1e-3);
+    }
+
+    #[test]
+    fn vstack_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::random(10, 4, &mut rng);
+        let top = a.row_slice(0, 6);
+        let bot = a.row_slice(6, 4);
+        assert_eq!(Matrix::vstack(&[top, bot]), a);
+    }
+
+    #[test]
+    fn occlusion_zeroes_block() {
+        let a = Matrix::from_fn(4, 4, |_, _| 1.0);
+        let o = a.occlude_block(1, 1, 2, 2);
+        assert_eq!(o.get(1, 1), 0.0);
+        assert_eq!(o.get(2, 2), 0.0);
+        assert_eq!(o.get(0, 0), 1.0);
+        assert_eq!(o.get(3, 3), 1.0);
+    }
+
+    #[test]
+    fn cmatrix_matmul_matches_real_when_imag_zero() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::random(6, 6, &mut rng);
+        let b = Matrix::random(6, 6, &mut rng);
+        let ca = CMatrix::from_real(&a);
+        let cb = CMatrix::from_real(&b);
+        let prod = ca.matmul(&cb);
+        assert!(prod.real().max_abs_diff(&a.matmul(&b)) < 1e-4);
+        assert!(prod.imag().frobenius_norm() < 1e-5);
+    }
+
+    #[test]
+    fn max_abs_diff_flags_nan() {
+        let a = Matrix::from_vec(1, 2, vec![f32::NAN, 1.0]);
+        let b = Matrix::from_vec(1, 2, vec![0.0, 1.0]);
+        assert_eq!(a.max_abs_diff(&b), f32::INFINITY);
+    }
+
+    #[test]
+    fn frobenius() {
+        let a = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert_eq!(a.frobenius_norm(), 5.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Dense linear-algebra substrate.
+//!
+//! This is both (a) the *CPU baseline* the paper compares against and
+//! (b) the native reference the runtime artifacts are validated with.
+//! Everything is row-major `f32` (matching the PJRT literals) with
+//! complex arithmetic carried by [`complex::C32`].
+//!
+//! The paper's central trick — Eq. 14, a 2-D DFT as two matmuls — lives
+//! in [`dft`]; a classic radix-2 FFT lives in [`fft`] as the
+//! asymptotically-optimal CPU comparator.
+
+pub mod block;
+pub mod complex;
+pub mod conv;
+pub mod dft;
+pub mod fft;
+pub mod matrix;
+pub mod solve;
+pub mod vandermonde;

@@ -1,0 +1,173 @@
+//! Dense linear solvers: LU with partial pivoting, plus helpers.
+//!
+//! Used by the Vandermonde interpolation path (§III-C) and as the
+//! general "solve it on the accelerator" primitive the paper leans on
+//! for both the Shapley system and the IG interpolation.
+
+use crate::error::{Error, Result};
+use crate::linalg::matrix::Matrix;
+
+/// LU factorization with partial pivoting: PA = LU packed in-place.
+#[derive(Debug, Clone)]
+pub struct Lu {
+    lu: Matrix,
+    piv: Vec<usize>,
+    /// +1 / -1 parity of the permutation (for the determinant).
+    parity: f32,
+}
+
+impl Lu {
+    /// Factor a square matrix; fails on (numerically) singular input.
+    pub fn factor(a: &Matrix) -> Result<Lu> {
+        assert_eq!(a.rows, a.cols, "LU requires a square matrix");
+        let n = a.rows;
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut parity = 1.0f32;
+        for col in 0..n {
+            // pivot search
+            let mut pmax = lu.get(col, col).abs();
+            let mut prow = col;
+            for r in (col + 1)..n {
+                let v = lu.get(r, col).abs();
+                if v > pmax {
+                    pmax = v;
+                    prow = r;
+                }
+            }
+            if pmax < 1e-12 {
+                return Err(Error::Numeric(format!(
+                    "singular matrix at column {col} (pivot {pmax:.3e})"
+                )));
+            }
+            if prow != col {
+                for c in 0..n {
+                    let tmp = lu.get(col, c);
+                    lu.set(col, c, lu.get(prow, c));
+                    lu.set(prow, c, tmp);
+                }
+                piv.swap(col, prow);
+                parity = -parity;
+            }
+            let pivot = lu.get(col, col);
+            for r in (col + 1)..n {
+                let factor = lu.get(r, col) / pivot;
+                lu.set(r, col, factor);
+                for c in (col + 1)..n {
+                    let v = lu.get(r, c) - factor * lu.get(col, c);
+                    lu.set(r, c, v);
+                }
+            }
+        }
+        Ok(Lu { lu, piv, parity })
+    }
+
+    /// Solve A x = b for one right-hand side.
+    pub fn solve(&self, b: &[f32]) -> Vec<f32> {
+        let n = self.lu.rows;
+        assert_eq!(b.len(), n);
+        // apply permutation
+        let mut x: Vec<f32> = self.piv.iter().map(|&p| b[p]).collect();
+        // forward substitution (L has unit diagonal)
+        for r in 1..n {
+            for c in 0..r {
+                x[r] -= self.lu.get(r, c) * x[c];
+            }
+        }
+        // back substitution
+        for r in (0..n).rev() {
+            for c in (r + 1)..n {
+                x[r] -= self.lu.get(r, c) * x[c];
+            }
+            x[r] /= self.lu.get(r, r);
+        }
+        x
+    }
+
+    /// Determinant from the U diagonal and permutation parity.
+    pub fn det(&self) -> f32 {
+        let mut d = self.parity;
+        for i in 0..self.lu.rows {
+            d *= self.lu.get(i, i);
+        }
+        d
+    }
+}
+
+/// One-shot convenience: solve A x = b.
+pub fn solve(a: &Matrix, b: &[f32]) -> Result<Vec<f32>> {
+    Ok(Lu::factor(a)?.solve(b))
+}
+
+/// Solve A X = B with B given column-wise; returns X column-wise.
+pub fn solve_multi(a: &Matrix, bs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    let lu = Lu::factor(a)?;
+    Ok(bs.iter().map(|b| lu.solve(b)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_known_system() {
+        // [2 1; 1 3] x = [3; 5]  =>  x = [4/5, 7/5]
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 3.0]);
+        let x = solve(&a, &[3.0, 5.0]).unwrap();
+        assert!((x[0] - 0.8).abs() < 1e-5);
+        assert!((x[1] - 1.4).abs() < 1e-5);
+    }
+
+    #[test]
+    fn identity_solve_is_noop() {
+        let a = Matrix::identity(5);
+        let b = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(solve(&a, &b).unwrap(), b);
+    }
+
+    #[test]
+    fn residual_is_small_random_systems() {
+        check("Ax=b residual", 25, |rng: &mut Rng| {
+            let n = rng.int_range(2, 12) as usize;
+            // diagonally dominant => well conditioned
+            let mut a = Matrix::random(n, n, rng);
+            for i in 0..n {
+                let v = a.get(i, i) + 2.0 * n as f32;
+                a.set(i, i, v);
+            }
+            let b: Vec<f32> = rng.gauss_vec(n);
+            let x = solve(&a, &b).unwrap();
+            let ax = a.matvec(&x);
+            for (l, r) in ax.iter().zip(&b) {
+                assert!((l - r).abs() < 1e-2, "residual too large");
+            }
+        });
+    }
+
+    #[test]
+    fn singular_is_rejected() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(solve(&a, &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn det_of_permutation() {
+        // swap matrix has det -1
+        let a = Matrix::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let lu = Lu::factor(&a).unwrap();
+        assert!((lu.det() + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn det_multiplicative() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::random(4, 4, &mut rng);
+        let b = Matrix::random(4, 4, &mut rng);
+        let da = Lu::factor(&a).map(|l| l.det()).unwrap_or(0.0);
+        let db = Lu::factor(&b).map(|l| l.det()).unwrap_or(0.0);
+        let dab = Lu::factor(&a.matmul(&b)).map(|l| l.det()).unwrap_or(0.0);
+        assert!((da * db - dab).abs() < 1e-2 * dab.abs().max(1.0));
+    }
+}

@@ -1,0 +1,130 @@
+//! Vandermonde interpolation (paper §III-C).
+//!
+//! The IG acceleration fits a polynomial through sampled values of F
+//! along the integration path; the interpolation system `V a = y` has
+//! Vandermonde structure.  We provide the dense build + LU solve (the
+//! paper's "solve the system on TPU") and the O(n²) Björck–Pereyra
+//! algorithm as the numerically superior CPU baseline.
+
+use crate::error::Result;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::solve;
+
+/// Build the (possibly rectangular) Vandermonde matrix V[i,j] = x_i^j.
+pub fn vandermonde(xs: &[f32], ncols: usize) -> Matrix {
+    Matrix::from_fn(xs.len(), ncols, |r, c| xs[r].powi(c as i32))
+}
+
+/// Interpolating polynomial coefficients via dense LU (TPU-style path).
+pub fn solve_lu(xs: &[f32], ys: &[f32]) -> Result<Vec<f32>> {
+    assert_eq!(xs.len(), ys.len());
+    let v = vandermonde(xs, xs.len());
+    solve::solve(&v, ys)
+}
+
+/// Björck–Pereyra: O(n²) Vandermonde solve exploiting structure.
+///
+/// Reference: Björck & Pereyra, "Solution of Vandermonde systems of
+/// equations", Math. Comp. 24 (1970).  Requires distinct nodes.
+pub fn solve_bjorck_pereyra(xs: &[f32], ys: &[f32]) -> Vec<f32> {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    let mut a: Vec<f64> = ys.iter().map(|&y| y as f64).collect();
+    let x: Vec<f64> = xs.iter().map(|&v| v as f64).collect();
+    // Newton divided differences
+    for k in 0..n {
+        for i in (k + 1..n).rev() {
+            a[i] = (a[i] - a[i - 1]) / (x[i] - x[i - k - 1]);
+        }
+    }
+    // Convert Newton form to monomial coefficients
+    for k in (0..n.saturating_sub(1)).rev() {
+        for i in k..n - 1 {
+            a[i] = a[i] - x[k] * a[i + 1];
+        }
+    }
+    a.into_iter().map(|v| v as f32).collect()
+}
+
+/// Evaluate a polynomial (monomial coefficients, ascending) by Horner.
+pub fn polyval(coeffs: &[f32], x: f32) -> f32 {
+    coeffs.iter().rev().fold(0.0, |acc, &c| acc * x + c)
+}
+
+/// Integrate a polynomial over [a, b] analytically.
+pub fn polyint(coeffs: &[f32], a: f32, b: f32) -> f32 {
+    let mut acc = 0.0f64;
+    for (j, &c) in coeffs.iter().enumerate() {
+        let p = (j + 1) as f64;
+        acc += c as f64 / p * ((b as f64).powf(p) - (a as f64).powf(p));
+    }
+    acc as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn vandermonde_shape_and_values() {
+        let v = vandermonde(&[2.0, 3.0], 3);
+        assert_eq!(v.data, vec![1.0, 2.0, 4.0, 1.0, 3.0, 9.0]);
+    }
+
+    #[test]
+    fn lu_interpolates_exactly() {
+        // y = 1 - x + 2x²
+        let xs = [0.0f32, 1.0, 2.0];
+        let ys: Vec<f32> = xs.iter().map(|&x| 1.0 - x + 2.0 * x * x).collect();
+        let a = solve_lu(&xs, &ys).unwrap();
+        assert!((a[0] - 1.0).abs() < 1e-4);
+        assert!((a[1] + 1.0).abs() < 1e-4);
+        assert!((a[2] - 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn bjorck_pereyra_matches_lu() {
+        check("BP == LU on random nodes", 20, |rng: &mut Rng| {
+            let n = rng.int_range(2, 7) as usize;
+            // distinct nodes kept in [0, 2.2]: larger spreads make the
+            // f32 Vandermonde LU ill-conditioned and the comparison
+            // meaningless (BP stays accurate — that's its point).
+            let xs: Vec<f32> = (0..n)
+                .map(|i| i as f32 * 0.35 + rng.uniform() as f32 * 0.2)
+                .collect();
+            let ys: Vec<f32> = rng.gauss_vec(n);
+            let lu = solve_lu(&xs, &ys).unwrap();
+            let bp = solve_bjorck_pereyra(&xs, &ys);
+            let scale = bp.iter().fold(1.0f32, |a, &v| a.max(v.abs()));
+            for (a, b) in lu.iter().zip(&bp) {
+                assert!((a - b).abs() < 5e-2 * scale, "lu={a} bp={b}");
+            }
+        });
+    }
+
+    #[test]
+    fn interpolant_passes_through_nodes() {
+        check("P(x_i) = y_i", 20, |rng: &mut Rng| {
+            let n = rng.int_range(2, 7) as usize;
+            let xs: Vec<f32> = (0..n).map(|i| i as f32 * 0.7 - 1.0).collect();
+            let ys: Vec<f32> = rng.gauss_vec(n);
+            let a = solve_bjorck_pereyra(&xs, &ys);
+            for (x, y) in xs.iter().zip(&ys) {
+                assert!((polyval(&a, *x) - y).abs() < 1e-2);
+            }
+        });
+    }
+
+    #[test]
+    fn polyint_quadratic() {
+        // ∫₀¹ (1 + 2x + 3x²) dx = 1 + 1 + 1 = 3
+        assert!((polyint(&[1.0, 2.0, 3.0], 0.0, 1.0) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn polyval_horner() {
+        assert_eq!(polyval(&[1.0, -2.0, 1.0], 3.0), 4.0); // (x-1)² at 3
+    }
+}

@@ -1,0 +1,282 @@
+//! `xai-accel` — the launcher.
+//!
+//! ```text
+//! xai-accel info                      # artifact + device-model summary
+//! xai-accel serve   [--executors N] [--requests R] [--config FILE]
+//! xai-accel explain [--method distill|shapley|ig] [--seed S]
+//! xai-accel simulate [--devices cpu,gpu,tpu] [--size N]
+//! ```
+//!
+//! `serve` drives the full coordinator on synthetic traffic; `explain`
+//! runs one explanation end-to-end and prints it; `simulate` replays an
+//! XAI op trace on the hardware models.
+
+use std::path::PathBuf;
+use xai_accel::cli::Args;
+use xai_accel::coordinator::{Coordinator, CoordinatorConfig, Request};
+use xai_accel::data::{cifar, counters};
+use xai_accel::error::Result;
+use xai_accel::hwsim::{self, DeviceKind};
+use xai_accel::linalg::conv::circ_conv2;
+use xai_accel::linalg::matrix::Matrix;
+use xai_accel::prelude::NativeEngine;
+use xai_accel::util::rng::Rng;
+use xai_accel::util::table::{fmt_time, Table};
+use xai_accel::xai;
+
+const USAGE: &str = "usage: xai-accel <info|serve|explain|simulate> [options]
+  info                              artifact and device-model summary
+  serve    --executors N --requests R --artifact-dir DIR [--config FILE]
+  explain  --method distill|shapley|ig [--seed S] [--artifact-dir DIR]
+  simulate --size N [--devices cpu,gpu,tpu]";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand() {
+        Some("info") => run_info(&args),
+        Some("serve") => run_serve(&args),
+        Some("explain") => run_explain(&args),
+        Some("simulate") => run_simulate(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifact-dir", "artifacts"))
+}
+
+fn run_info(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args);
+    match xai_accel::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            let mut t = Table::new(format!("artifacts in {}", dir.display()))
+                .header(&["name", "inputs", "outputs"]);
+            for a in &m.artifacts {
+                let ins: Vec<String> = a.inputs.iter().map(|s| s.to_string()).collect();
+                let outs: Vec<String> = a.outputs.iter().map(|s| s.to_string()).collect();
+                t.row(&[a.name.clone(), ins.join(", "), outs.join(", ")]);
+            }
+            t.print();
+        }
+        Err(e) => println!("(no artifacts: {e})"),
+    }
+    let mut t = Table::new("device models").header(&["device", "busy W", "idle W", "units"]);
+    for kind in DeviceKind::all() {
+        let d = hwsim::device_for(kind);
+        t.row(&[
+            kind.name().into(),
+            format!("{:.0}", d.busy_power_w()),
+            format!("{:.0}", d.idle_power_w()),
+            format!("{}", d.max_units()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn run_serve(args: &Args) -> Result<()> {
+    let mut config = match args.get("config") {
+        Some(path) => xai_accel::config::Config::load(std::path::Path::new(path))?
+            .coordinator()?,
+        None => CoordinatorConfig::default(),
+    };
+    config.artifact_dir = artifact_dir(args);
+    config.executors = args.get_usize("executors", config.executors)?;
+    let requests = args.get_usize("requests", 64)?;
+
+    println!(
+        "starting coordinator: {} executors, artifacts at {}",
+        config.executors,
+        config.artifact_dir.display()
+    );
+    let coord = Coordinator::start(config)?;
+    let mut rng = Rng::new(42);
+    let started = std::time::Instant::now();
+    let mut pendings = Vec::new();
+    for i in 0..requests {
+        let req = synth_request(i, &mut rng);
+        pendings.push(coord.submit(req)?);
+    }
+    let mut ok = 0;
+    for p in pendings {
+        if p.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let elapsed = started.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{requests} requests in {} ({:.1} req/s)",
+        fmt_time(elapsed),
+        requests as f64 / elapsed
+    );
+    print!("{}", coord.metrics().report());
+    coord.shutdown();
+    Ok(())
+}
+
+/// Mixed synthetic traffic matching the example workloads.
+fn synth_request(i: usize, rng: &mut Rng) -> Request {
+    match i % 4 {
+        0 => Request::Classify {
+            image: cifar::sample_class(i % cifar::NUM_CLASSES, rng).image,
+        },
+        1 => {
+            let x = Matrix::from_fn(16, 16, |_, _| 3.0 + rng.gauss_f32());
+            let y = circ_conv2(&x, &Matrix::identity_kernel(16, 16));
+            Request::Distill { x, y }
+        }
+        2 => {
+            let s = counters::sample(counters::ProgramClass::Spectre, rng);
+            let game = spectre_game(&s);
+            Request::Shapley {
+                n: counters::N_FEATURES,
+                values: game,
+                names: counters::FEATURES.iter().map(|s| s.to_string()).collect(),
+            }
+        }
+        _ => {
+            let img = cifar::sample_class(i % cifar::NUM_CLASSES, rng).image;
+            Request::IntGrad {
+                baseline: Matrix::zeros(img.rows, img.cols),
+                class: i % cifar::NUM_CLASSES,
+                image: img,
+            }
+        }
+    }
+}
+
+/// Value table for the detector game: v(S) = score with features
+/// outside S neutralized to the benign mean.
+fn spectre_game(sample: &counters::CounterSample) -> Vec<f32> {
+    let benign = [0.15f32, 0.10, 0.50, 0.20, 0.40, 0.25];
+    (0..1usize << counters::N_FEATURES)
+        .map(|s| {
+            let mut f = benign;
+            for i in 0..counters::N_FEATURES {
+                if s & (1 << i) != 0 {
+                    f[i] = sample.features[i];
+                }
+            }
+            counters::detector_score(&f)
+        })
+        .collect()
+}
+
+fn run_explain(args: &Args) -> Result<()> {
+    let seed = args.get_usize("seed", 7)? as u64;
+    let mut rng = Rng::new(seed);
+    match args.get_or("method", "distill") {
+        "distill" => {
+            let x = Matrix::from_fn(16, 16, |_, _| 3.0 + rng.gauss_f32());
+            let y = circ_conv2(&x, &Matrix::identity_kernel(16, 16));
+            let mut eng = NativeEngine::new();
+            let (k, attr) = xai::distillation::explain(&mut eng, &x, &y, 4, 1e-6);
+            println!("distilled kernel K[0,0] = {:.4} (expect ~1.0)", k.get(0, 0));
+            println!("top block: {}", attr.names[attr.top_feature()]);
+            println!("{}", attr.waterfall(30));
+        }
+        "shapley" => {
+            let s = counters::sample(counters::ProgramClass::Spectre, &mut rng);
+            let game = xai::shapley::ValueTable::new(
+                counters::N_FEATURES,
+                spectre_game(&s),
+            );
+            let mut eng = NativeEngine::new();
+            let attr = xai::shapley::explain(&mut eng, &game, &counters::FEATURES);
+            println!("SHAP for a Spectre sample (score {:.3}):", counters::detector_score(&s.features));
+            println!("{}", attr.waterfall(30));
+        }
+        "ig" => {
+            let dir = artifact_dir(args);
+            let reg = xai_accel::runtime::ArtifactRegistry::load_subset(
+                &dir,
+                &["ig_cnn_s32", "cnn_fwd_b1"],
+            )?;
+            let sample = cifar::sample_class(2, &mut rng);
+            let exe = reg.get("ig_cnn_s32")?;
+            let onehot = {
+                let mut v = vec![0f32; 4];
+                v[sample.label] = 1.0;
+                v
+            };
+            let baseline = vec![0f32; 256];
+            let out = exe.run(&[sample.image.data.clone(), baseline, onehot])?;
+            let heat = Matrix::from_vec(16, 16, out[0].clone());
+            println!("IG heatmap for a class-{} image:", sample.label);
+            print_heatmap(&heat);
+        }
+        other => {
+            eprintln!("unknown method '{other}'");
+        }
+    }
+    Ok(())
+}
+
+fn print_heatmap(m: &Matrix) {
+    let maxabs = m.data.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-9);
+    const LEVELS: [char; 5] = [' ', '.', '+', '*', '#'];
+    for r in 0..m.rows {
+        let line: String = (0..m.cols)
+            .map(|c| {
+                let t = (m.get(r, c).abs() / maxabs * (LEVELS.len() - 1) as f32).round();
+                LEVELS[(t as usize).min(LEVELS.len() - 1)]
+            })
+            .collect();
+        println!("  {line}");
+    }
+}
+
+fn run_simulate(args: &Args) -> Result<()> {
+    let n = args.get_usize("size", 256)?;
+    let devices: Vec<DeviceKind> = args
+        .get_or("devices", "cpu,gpu,tpu")
+        .split(',')
+        .filter_map(|d| match d.trim() {
+            "cpu" => Some(DeviceKind::Cpu),
+            "gpu" => Some(DeviceKind::Gpu),
+            "tpu" => Some(DeviceKind::Tpu),
+            _ => None,
+        })
+        .collect();
+
+    // Record the distillation pipeline's op trace at this size.
+    let mut rng = Rng::new(0);
+    let x = Matrix::from_fn(n.min(64), n.min(64), |_, _| 2.0 + rng.gauss_f32());
+    let y = circ_conv2(&x, &Matrix::identity_kernel(x.rows, x.cols));
+    let mut eng = NativeEngine::new();
+    xai::distillation::distill_fft(&mut eng, &x, &y, 1e-6);
+    let mut trace = eng.take_trace();
+    // scale trace to the requested size analytically
+    if n > 64 {
+        trace.clear();
+        trace.push(xai_accel::trace::Op::Dft2Matmul { m: n, n });
+        trace.push(xai_accel::trace::Op::Dft2Matmul { m: n, n });
+        trace.push(xai_accel::trace::Op::HadamardDiv { m: n, n });
+        trace.push(xai_accel::trace::Op::Dft2Matmul { m: n, n });
+    }
+
+    let mut t = Table::new(format!("distillation solve at {n}x{n}"))
+        .header(&["device", "time", "energy (J)", "perf/W vs CPU"]);
+    let cpu_report = hwsim::device_for(DeviceKind::Cpu).replay(&trace);
+    for kind in devices {
+        let r = hwsim::device_for(kind).replay(&trace);
+        t.row(&[
+            kind.name().into(),
+            fmt_time(r.time_s),
+            format!("{:.3}", r.energy_j),
+            format!(
+                "{:.1}x",
+                r.perf_per_watt_incremental() / cpu_report.perf_per_watt_incremental()
+            ),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

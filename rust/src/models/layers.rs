@@ -1,0 +1,147 @@
+//! Layer-level model descriptions with FLOP / parameter accounting.
+
+/// One layer of a convolutional classifier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LayerSpec {
+    /// 2-D convolution: `out = conv(in)` on an H×W feature map.
+    Conv {
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+    },
+    /// Fully connected.
+    Dense { cin: usize, cout: usize },
+    /// Max/avg pooling (no params; counted as elementwise work).
+    Pool { h: usize, w: usize, c: usize, k: usize },
+    /// Batch norm / activation over an H×W×C tensor.
+    Elementwise { h: usize, w: usize, c: usize },
+}
+
+impl LayerSpec {
+    /// Multiply-add FLOPs for one forward pass (2 flops per MAC).
+    pub fn flops(&self) -> u64 {
+        match *self {
+            LayerSpec::Conv {
+                h,
+                w,
+                cin,
+                cout,
+                k,
+                stride,
+            } => {
+                let oh = h / stride;
+                let ow = w / stride;
+                2 * (oh * ow * cout * cin * k * k) as u64
+            }
+            LayerSpec::Dense { cin, cout } => 2 * (cin * cout) as u64,
+            LayerSpec::Pool { h, w, c, k } => (h * w * c * k * k / 4) as u64,
+            LayerSpec::Elementwise { h, w, c } => (h * w * c) as u64,
+        }
+    }
+
+    /// Trainable parameters.
+    pub fn params(&self) -> u64 {
+        match *self {
+            LayerSpec::Conv {
+                cin, cout, k, ..
+            } => (cin * cout * k * k + cout) as u64,
+            LayerSpec::Dense { cin, cout } => (cin * cout + cout) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Output activation elements.
+    pub fn activations(&self) -> u64 {
+        match *self {
+            LayerSpec::Conv {
+                h, w, cout, stride, ..
+            } => ((h / stride) * (w / stride) * cout) as u64,
+            LayerSpec::Dense { cout, .. } => cout as u64,
+            LayerSpec::Pool { h, w, c, k } => ((h / k) * (w / k) * c) as u64,
+            LayerSpec::Elementwise { h, w, c } => (h * w * c) as u64,
+        }
+    }
+}
+
+/// A whole model as an ordered layer stack.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub layers: Vec<LayerSpec>,
+    /// Input feature dimension seen by the XAI algorithms (e.g. the
+    /// image edge for distillation's X matrix).
+    pub input_dim: usize,
+}
+
+impl ModelSpec {
+    pub fn total_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.flops()).sum()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Backward pass ≈ 2× forward (grad w.r.t. weights + activations).
+    pub fn backward_flops(&self) -> u64 {
+        2 * self.total_flops()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l, LayerSpec::Conv { .. } | LayerSpec::Dense { .. }))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_flops() {
+        // 3x3 conv, 8->16 ch, 32x32, stride 1: 2·32·32·16·8·9
+        let l = LayerSpec::Conv {
+            h: 32,
+            w: 32,
+            cin: 8,
+            cout: 16,
+            k: 3,
+            stride: 1,
+        };
+        assert_eq!(l.flops(), 2 * 32 * 32 * 16 * 8 * 9);
+        assert_eq!(l.params(), 8 * 16 * 9 + 16);
+    }
+
+    #[test]
+    fn dense_params() {
+        let l = LayerSpec::Dense { cin: 512, cout: 10 };
+        assert_eq!(l.params(), 512 * 10 + 10);
+        assert_eq!(l.flops(), 2 * 512 * 10);
+    }
+
+    #[test]
+    fn stride_halves_output() {
+        let s1 = LayerSpec::Conv {
+            h: 32,
+            w: 32,
+            cin: 4,
+            cout: 4,
+            k: 3,
+            stride: 1,
+        };
+        let s2 = LayerSpec::Conv {
+            h: 32,
+            w: 32,
+            cin: 4,
+            cout: 4,
+            k: 3,
+            stride: 2,
+        };
+        assert_eq!(s1.flops(), 4 * s2.flops());
+    }
+}

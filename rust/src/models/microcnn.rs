@@ -1,0 +1,65 @@
+//! The MicroCNN — the model we actually train, serve, and explain.
+//!
+//! Mirrors `python/compile/model.py` exactly: conv3×3(1→8) + maxpool2 +
+//! conv3×3(8→16) + GAP + dense(16→4) on 16×16 grayscale.  The spec here
+//! exists for cost parity with the big benchmark models; the *weights*
+//! live inside the AOT artifacts.
+
+use crate::models::layers::{LayerSpec, ModelSpec};
+
+/// Image edge — must match `model.IMG` on the Python side.
+pub const IMG: usize = 16;
+/// Class count — must match `model.NUM_CLASSES`.
+pub const NUM_CLASSES: usize = 4;
+
+pub fn microcnn() -> ModelSpec {
+    ModelSpec {
+        name: "MicroCNN",
+        layers: vec![
+            LayerSpec::Conv {
+                h: IMG,
+                w: IMG,
+                cin: 1,
+                cout: 8,
+                k: 3,
+                stride: 1,
+            },
+            LayerSpec::Pool {
+                h: IMG,
+                w: IMG,
+                c: 8,
+                k: 2,
+            },
+            LayerSpec::Conv {
+                h: IMG / 2,
+                w: IMG / 2,
+                cin: 8,
+                cout: 16,
+                k: 3,
+                stride: 1,
+            },
+            LayerSpec::Dense {
+                cin: 16,
+                cout: NUM_CLASSES,
+            },
+        ],
+        input_dim: IMG,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_python() {
+        // python aot.py reports params=1316:
+        // w1 3·3·1·8 + 8 = 80; w2 3·3·8·16 + 16 = 1168; w3 16·4 + 4 = 68
+        assert_eq!(microcnn().total_params(), 1316);
+    }
+
+    #[test]
+    fn is_micro() {
+        assert!(microcnn().total_flops() < 2_000_000);
+    }
+}

@@ -1,0 +1,47 @@
+//! Target-model specifications.
+//!
+//! The paper evaluates on VGG19 (CIFAR-100) and ResNet50 (MIRAI), with
+//! VGG16 appearing in Fig. 8.  Training those here is out of scope
+//! (DESIGN.md substitutions): what the evaluation actually needs is
+//! their *cost structure* — per-layer FLOPs, parameter counts, and
+//! activation sizes — which drive the simulated training/testing times
+//! of Table II and the model-evaluation terms inside Shapley/IG traces.
+//! The MicroCNN (the model we really train, serve, and explain through
+//! the AOT artifacts) is also described here for cost parity.
+
+pub mod cost;
+pub mod layers;
+pub mod microcnn;
+pub mod resnet;
+pub mod vgg;
+
+pub use layers::{LayerSpec, ModelSpec};
+
+/// The benchmark models of the paper's §IV-A.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Benchmark {
+    Vgg19,
+    Vgg16,
+    ResNet50,
+    MicroCnn,
+}
+
+impl Benchmark {
+    pub fn spec(&self) -> ModelSpec {
+        match self {
+            Benchmark::Vgg19 => vgg::vgg19(),
+            Benchmark::Vgg16 => vgg::vgg16(),
+            Benchmark::ResNet50 => resnet::resnet50(),
+            Benchmark::MicroCnn => microcnn::microcnn(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Benchmark::Vgg19 => "VGG19",
+            Benchmark::Vgg16 => "VGG16",
+            Benchmark::ResNet50 => "ResNet50",
+            Benchmark::MicroCnn => "MicroCNN",
+        }
+    }
+}

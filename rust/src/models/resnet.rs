@@ -1,0 +1,114 @@
+//! ResNet-50 layer stack (He et al.) at the paper's malware-trace input
+//! resolution.  The MIRAI detector consumes 64×64 trace images (each
+//! row a register, each column a clock cycle — see Fig. 12), so the
+//! stack is instantiated at 64×64 rather than ImageNet's 224×224.
+
+use crate::models::layers::{LayerSpec, ModelSpec};
+
+fn conv(h: usize, cin: usize, cout: usize, k: usize, stride: usize) -> LayerSpec {
+    LayerSpec::Conv {
+        h,
+        w: h,
+        cin,
+        cout,
+        k,
+        stride,
+    }
+}
+
+/// A bottleneck block: 1×1 reduce, 3×3, 1×1 expand (+ shortcut conv on
+/// the first block of each stage).
+fn bottleneck(
+    layers: &mut Vec<LayerSpec>,
+    h: usize,
+    cin: usize,
+    cmid: usize,
+    stride: usize,
+    with_shortcut: bool,
+) {
+    let cout = 4 * cmid;
+    layers.push(conv(h, cin, cmid, 1, 1));
+    layers.push(conv(h, cmid, cmid, 3, stride));
+    layers.push(conv(h / stride, cmid, cout, 1, 1));
+    if with_shortcut {
+        layers.push(conv(h, cin, cout, 1, stride));
+    }
+    layers.push(LayerSpec::Elementwise {
+        h: h / stride,
+        w: h / stride,
+        c: cout,
+    });
+}
+
+/// ResNet-50: conv1 + [3, 4, 6, 3] bottleneck stages + FC.
+pub fn resnet50() -> ModelSpec {
+    let mut layers = Vec::new();
+    // stem: 7×7/2 conv + pool on the 64×64 trace image
+    layers.push(conv(64, 3, 64, 7, 2));
+    layers.push(LayerSpec::Pool {
+        h: 32,
+        w: 32,
+        c: 64,
+        k: 2,
+    });
+    // stage 1 (x3): 16×16 ... (input 16 after stem+pool)
+    let mut h = 16;
+    bottleneck(&mut layers, h, 64, 64, 1, true);
+    for _ in 0..2 {
+        bottleneck(&mut layers, h, 256, 64, 1, false);
+    }
+    // stage 2 (x4)
+    bottleneck(&mut layers, h, 256, 128, 2, true);
+    h /= 2;
+    for _ in 0..3 {
+        bottleneck(&mut layers, h, 512, 128, 1, false);
+    }
+    // stage 3 (x6)
+    bottleneck(&mut layers, h, 512, 256, 2, true);
+    h /= 2;
+    for _ in 0..5 {
+        bottleneck(&mut layers, h, 1024, 256, 1, false);
+    }
+    // stage 4 (x3)
+    bottleneck(&mut layers, h, 1024, 512, 2, true);
+    h /= 2;
+    for _ in 0..2 {
+        bottleneck(&mut layers, h, 2048, 512, 1, false);
+    }
+    let _ = h;
+    // head: global pool + binary malware classifier
+    layers.push(LayerSpec::Dense {
+        cin: 2048,
+        cout: 2,
+    });
+    ModelSpec {
+        name: "ResNet50",
+        layers,
+        input_dim: 64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_50ish_weight_layers() {
+        // 1 stem + 3·3+4·3+6·3+3·3 bottleneck convs + 4 shortcuts + 1 fc
+        let d = resnet50().depth();
+        assert!(d >= 50 && d <= 58, "depth {d}");
+    }
+
+    #[test]
+    fn param_count_near_25m() {
+        let p = resnet50().total_params();
+        // conv params are resolution-independent; FC is tiny here.
+        assert!(p > 20_000_000 && p < 30_000_000, "{p}");
+    }
+
+    #[test]
+    fn more_nodes_than_1000() {
+        // paper: "ResNet50 ... consisting of >1000 nodes"
+        assert!(resnet50().layers.len() > 50);
+    }
+}

@@ -1,0 +1,119 @@
+//! VGG16 / VGG19 layer stacks (Simonyan & Zisserman), at CIFAR input
+//! resolution (32×32) as the paper trains them on CIFAR-100.
+
+use crate::models::layers::{LayerSpec, ModelSpec};
+
+fn conv(h: usize, cin: usize, cout: usize) -> LayerSpec {
+    LayerSpec::Conv {
+        h,
+        w: h,
+        cin,
+        cout,
+        k: 3,
+        stride: 1,
+    }
+}
+
+fn pool(h: usize, c: usize) -> LayerSpec {
+    LayerSpec::Pool { h, w: h, c, k: 2 }
+}
+
+/// VGG-19: 16 conv + 3 FC.
+pub fn vgg19() -> ModelSpec {
+    let mut layers = Vec::new();
+    // block 1: 2×conv64 @32
+    layers.push(conv(32, 3, 64));
+    layers.push(conv(32, 64, 64));
+    layers.push(pool(32, 64));
+    // block 2: 2×conv128 @16
+    layers.push(conv(16, 64, 128));
+    layers.push(conv(16, 128, 128));
+    layers.push(pool(16, 128));
+    // block 3: 4×conv256 @8
+    layers.push(conv(8, 128, 256));
+    for _ in 0..3 {
+        layers.push(conv(8, 256, 256));
+    }
+    layers.push(pool(8, 256));
+    // block 4: 4×conv512 @4
+    layers.push(conv(4, 256, 512));
+    for _ in 0..3 {
+        layers.push(conv(4, 512, 512));
+    }
+    layers.push(pool(4, 512));
+    // block 5: 4×conv512 @2
+    for _ in 0..4 {
+        layers.push(conv(2, 512, 512));
+    }
+    layers.push(pool(2, 512));
+    // classifier
+    layers.push(LayerSpec::Dense { cin: 512, cout: 4096 });
+    layers.push(LayerSpec::Dense { cin: 4096, cout: 4096 });
+    layers.push(LayerSpec::Dense { cin: 4096, cout: 100 });
+    ModelSpec {
+        name: "VGG19",
+        layers,
+        input_dim: 32,
+    }
+}
+
+/// VGG-16: 13 conv + 3 FC (the Fig. 8 comparator, "138M params" at
+/// ImageNet scale; CIFAR-resolution here).
+pub fn vgg16() -> ModelSpec {
+    let mut layers = Vec::new();
+    layers.push(conv(32, 3, 64));
+    layers.push(conv(32, 64, 64));
+    layers.push(pool(32, 64));
+    layers.push(conv(16, 64, 128));
+    layers.push(conv(16, 128, 128));
+    layers.push(pool(16, 128));
+    layers.push(conv(8, 128, 256));
+    layers.push(conv(8, 256, 256));
+    layers.push(conv(8, 256, 256));
+    layers.push(pool(8, 256));
+    layers.push(conv(4, 256, 512));
+    layers.push(conv(4, 512, 512));
+    layers.push(conv(4, 512, 512));
+    layers.push(pool(4, 512));
+    layers.push(conv(2, 512, 512));
+    layers.push(conv(2, 512, 512));
+    layers.push(conv(2, 512, 512));
+    layers.push(pool(2, 512));
+    layers.push(LayerSpec::Dense { cin: 512, cout: 4096 });
+    layers.push(LayerSpec::Dense { cin: 4096, cout: 4096 });
+    layers.push(LayerSpec::Dense { cin: 4096, cout: 100 });
+    ModelSpec {
+        name: "VGG16",
+        layers,
+        input_dim: 32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg19_depth() {
+        assert_eq!(vgg19().depth(), 19); // 16 conv + 3 fc
+    }
+
+    #[test]
+    fn vgg16_depth() {
+        assert_eq!(vgg16().depth(), 16);
+    }
+
+    #[test]
+    fn vgg19_heavier_than_vgg16() {
+        assert!(vgg19().total_flops() > vgg16().total_flops());
+        assert!(vgg19().total_params() > vgg16().total_params());
+    }
+
+    #[test]
+    fn param_counts_plausible() {
+        // CIFAR-resolution VGG19: conv params identical to ImageNet
+        // (20M), FC shrinks; total must land in the 20M–45M window.
+        let p = vgg19().total_params();
+        assert!(p > 20_000_000 && p < 60_000_000, "{p}");
+    }
+}

@@ -1,0 +1,164 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.txt` is written by `aot.py`, one artifact per
+//! line, pipe-separated (this offline build has no serde/JSON):
+//!
+//! ```text
+//! name|file.hlo.txt|in1,in2,...|out1,out2,...
+//! ```
+//!
+//! with shapes like `16x16` or `8x256` (f32 everywhere by convention).
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// A tensor shape (f32 dims).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn parse(s: &str) -> Result<Shape> {
+        let dims: std::result::Result<Vec<usize>, _> =
+            s.split('x').map(|d| d.trim().parse::<usize>()).collect();
+        dims.map(Shape)
+            .map_err(|e| Error::Artifact(format!("bad shape '{s}': {e}")))
+    }
+
+    pub fn elements(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.0.iter().map(|&d| d as i64).collect()
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let strs: Vec<String> = self.0.iter().map(|d| d.to_string()).collect();
+        f.write_str(&strs.join("x"))
+    }
+}
+
+/// One artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<Shape>,
+    pub outputs: Vec<Shape>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse `manifest.txt` in `dir`; artifact paths resolve against it.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 4 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: expected 4 '|' fields, got {}",
+                    lineno + 1,
+                    parts.len()
+                )));
+            }
+            let inputs = parts[2]
+                .split(',')
+                .map(Shape::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = parts[3]
+                .split(',')
+                .map(Shape::parse)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                name: parts[0].to_string(),
+                path: dir.join(parts[1]),
+                inputs,
+                outputs,
+            });
+        }
+        if artifacts.is_empty() {
+            return Err(Error::Artifact("manifest is empty".into()));
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+distill_16x16|distill_16x16.hlo.txt|16x16,16x16|16x16
+shapley_n6_b8|shapley_n6_b8.hlo.txt|6x64,64x8|6x8
+cnn_fwd_b1|cnn_fwd_b1.hlo.txt|1x16x16|1x4
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let d = m.get("distill_16x16").unwrap();
+        assert_eq!(d.inputs.len(), 2);
+        assert_eq!(d.inputs[0], Shape(vec![16, 16]));
+        assert_eq!(d.outputs[0].elements(), 256);
+        assert_eq!(d.path, Path::new("/tmp/a/distill_16x16.hlo.txt"));
+    }
+
+    #[test]
+    fn shape_parse_and_display() {
+        let s = Shape::parse("8x256").unwrap();
+        assert_eq!(s.0, vec![8, 256]);
+        assert_eq!(s.to_string(), "8x256");
+        assert_eq!(s.dims_i64(), vec![8i64, 256]);
+    }
+
+    #[test]
+    fn three_dim_shape() {
+        let s = Shape::parse("32x16x16").unwrap();
+        assert_eq!(s.elements(), 8192);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("just|three|fields", Path::new("/")).is_err());
+        assert!(Shape::parse("4xZ").is_err());
+        assert!(Manifest::parse("", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let text = format!("# header\n\n{SAMPLE}");
+        let m = Manifest::parse(&text, Path::new("/")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute on the hot
+//! path.
+//!
+//! The interchange format is HLO **text** (see `python/compile/aot.py`):
+//! `HloModuleProto::from_text_file` reassigns instruction ids, which is
+//! what makes jax ≥ 0.5 output loadable by xla_extension 0.5.1.
+//! Executables are compiled once per model variant at startup and owned
+//! by an [`ArtifactRegistry`]; the coordinator calls [`Executable::run`]
+//! from worker threads.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{ArtifactRegistry, Executable};
+pub use manifest::{ArtifactSpec, Manifest, Shape};

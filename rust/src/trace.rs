@@ -1,0 +1,429 @@
+//! Operation traces: the bridge between algorithms and device models.
+//!
+//! The paper's claim is architectural: once an XAI algorithm is
+//! *transformed into matrix computations* (§III-A/B/C), any matrix
+//! accelerator runs it well.  We make that transformation explicit: the
+//! XAI pipelines execute through a [`NativeEngine`] that both computes
+//! the result **and records every primitive matrix operation** as an
+//! [`Op`].  The hardware simulators ([`crate::hwsim`]) then replay the
+//! recorded [`OpTrace`] under CPU / GPU / TPU cost models to produce
+//! the paper's tables — same algorithm, same op stream, different
+//! silicon.
+
+use crate::linalg::conv;
+use crate::linalg::dft;
+use crate::linalg::fft;
+use crate::linalg::matrix::{CMatrix, Matrix};
+use crate::linalg::solve::Lu;
+use crate::linalg::vandermonde;
+
+/// One primitive matrix operation with its problem size.
+///
+/// FLOP/byte counts follow the usual dense-kernel conventions; complex
+/// ops count 4 real multiplies + 4 adds per complex MAC.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    /// Real matmul (m×k)·(k×n).
+    Matmul { m: usize, k: usize, n: usize },
+    /// Complex matmul decomposed into 4 real matmuls + 2 adds.
+    CMatmul { m: usize, k: usize, n: usize },
+    /// 2-D DFT of an m×n matrix *in matmul form* (Eq. 14): two complex
+    /// matmuls (m×m)·(m×n) and (m×n)·(n×n).
+    Dft2Matmul { m: usize, n: usize },
+    /// 2-D FFT (radix-2 butterfly form) — the CPU-native schedule.
+    Fft2 { m: usize, n: usize },
+    /// Element-wise complex Hadamard division over m×n.
+    HadamardDiv { m: usize, n: usize },
+    /// Element-wise map over `elems` scalars (add/sub/scale...).
+    Elementwise { elems: usize },
+    /// Reduction over `elems` scalars (norms, sums).
+    Reduce { elems: usize },
+    /// Dense LU factor + solve of an n×n system with `rhs` right sides.
+    LuSolve { n: usize, rhs: usize },
+    /// Vandermonde build m×n (transcendental per element).
+    VandermondeBuild { m: usize, n: usize },
+    /// Gradient backprop through the target model, `count` times.
+    /// Modeled as `flops_per_grad` dense FLOPs each (model-dependent).
+    ModelGrad { count: usize, flops_per_grad: u64 },
+    /// Forward pass through the target model, `count` times.
+    ModelForward { count: usize, flops_per_fwd: u64 },
+}
+
+impl Op {
+    /// Floating-point operations for this op.
+    pub fn flops(&self) -> u64 {
+        match *self {
+            Op::Matmul { m, k, n } => 2 * (m * k * n) as u64,
+            // 4 real matmuls + 2 adds over the output
+            Op::CMatmul { m, k, n } => 8 * (m * k * n) as u64 + 2 * (m * n) as u64,
+            Op::Dft2Matmul { m, n } => {
+                Op::CMatmul { m, k: m, n }.flops() + Op::CMatmul { m, k: n, n }.flops()
+            }
+            // 2-D FFT: MN log2(MN) butterflies, ~10 flops each (complex)
+            Op::Fft2 { m, n } => {
+                let mn = (m * n) as u64;
+                let log = (64 - mn.leading_zeros().max(1)) as u64;
+                10 * mn * log
+            }
+            // conj-multiply (6) + |x|² (3) + 2 divides (2) per element
+            Op::HadamardDiv { m, n } => 11 * (m * n) as u64,
+            Op::Elementwise { elems } => elems as u64,
+            Op::Reduce { elems } => elems as u64,
+            // LU ~ 2/3 n³ + 2 n² per rhs
+            Op::LuSolve { n, rhs } => {
+                (2 * n * n * n) as u64 / 3 + (2 * n * n * rhs) as u64
+            }
+            // pow via exp/log ~ 20 flops per element
+            Op::VandermondeBuild { m, n } => 20 * (m * n) as u64,
+            Op::ModelGrad { count, flops_per_grad } => count as u64 * flops_per_grad,
+            Op::ModelForward { count, flops_per_fwd } => count as u64 * flops_per_fwd,
+        }
+    }
+
+    /// Bytes moved to/from main memory (f32 operands, ideal reuse).
+    pub fn bytes(&self) -> u64 {
+        let f = 4u64; // f32
+        match *self {
+            Op::Matmul { m, k, n } => f * (m * k + k * n + m * n) as u64,
+            Op::CMatmul { m, k, n } => 2 * f * (m * k + k * n + m * n) as u64,
+            Op::Dft2Matmul { m, n } => {
+                Op::CMatmul { m, k: m, n }.bytes() + Op::CMatmul { m, k: n, n }.bytes()
+            }
+            Op::Fft2 { m, n } => 2 * 2 * f * (m * n) as u64, // read+write complex
+            Op::HadamardDiv { m, n } => 6 * f * (m * n) as u64,
+            Op::Elementwise { elems } => 2 * f * elems as u64,
+            Op::Reduce { elems } => f * elems as u64,
+            Op::LuSolve { n, rhs } => f * (n * n + 2 * n * rhs) as u64,
+            Op::VandermondeBuild { m, n } => f * (m + m * n) as u64,
+            Op::ModelGrad { count, flops_per_grad } => count as u64 * flops_per_grad / 2,
+            Op::ModelForward { count, flops_per_fwd } => count as u64 * flops_per_fwd / 2,
+        }
+    }
+
+    /// Bytes of the op's *output* only — what a decomposed execution
+    /// must merge across cores (`tf.cross_replica_sum` payload).
+    pub fn output_bytes(&self) -> u64 {
+        let f = 4u64;
+        match *self {
+            Op::Matmul { m, n, .. } => f * (m * n) as u64,
+            Op::CMatmul { m, n, .. } => 2 * f * (m * n) as u64,
+            Op::Dft2Matmul { m, n } => 2 * f * (m * n) as u64,
+            Op::Fft2 { m, n } => 2 * f * (m * n) as u64,
+            Op::HadamardDiv { m, n } => 2 * f * (m * n) as u64,
+            Op::Elementwise { elems } => f * elems as u64,
+            Op::Reduce { .. } => f,
+            Op::LuSolve { n, rhs } => f * (n * rhs) as u64,
+            Op::VandermondeBuild { m, n } => f * (m * n) as u64,
+            Op::ModelGrad { count, flops_per_grad } => {
+                f * count as u64 * (flops_per_grad as f64).sqrt() as u64
+            }
+            Op::ModelForward { count, .. } => f * count as u64,
+        }
+    }
+
+    /// Is this op dominated by dense matmul work (MXU-eligible)?
+    pub fn is_matrix_op(&self) -> bool {
+        matches!(
+            self,
+            Op::Matmul { .. }
+                | Op::CMatmul { .. }
+                | Op::Dft2Matmul { .. }
+                | Op::LuSolve { .. }
+                | Op::ModelGrad { .. }
+                | Op::ModelForward { .. }
+        )
+    }
+}
+
+/// A recorded sequence of primitive ops.
+#[derive(Debug, Clone, Default)]
+pub struct OpTrace {
+    pub ops: Vec<Op>,
+}
+
+impl OpTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, op: Op) {
+        self.ops.push(op);
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.ops.iter().map(|o| o.flops()).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.bytes()).sum()
+    }
+
+    /// Arithmetic intensity (flops per byte) — roofline x-axis.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.total_flops() as f64 / self.total_bytes().max(1) as f64
+    }
+
+    /// Fraction of flops in MXU-eligible matrix ops.
+    pub fn matrix_fraction(&self) -> f64 {
+        let mm: u64 = self
+            .ops
+            .iter()
+            .filter(|o| o.is_matrix_op())
+            .map(|o| o.flops())
+            .sum();
+        mm as f64 / self.total_flops().max(1) as f64
+    }
+
+    pub fn clear(&mut self) {
+        self.ops.clear();
+    }
+
+    pub fn extend(&mut self, other: &OpTrace) {
+        self.ops.extend_from_slice(&other.ops);
+    }
+}
+
+/// Executes linear-algebra primitives natively while recording the op
+/// stream.  The `use_matmul_dft` switch selects between the TPU-form
+/// DFT (Eq. 14, two complex matmuls) and the CPU-form radix-2 FFT — the
+/// results are identical; only the recorded ops (and thus simulated
+/// device cost) differ.
+#[derive(Debug, Default)]
+pub struct NativeEngine {
+    pub trace: OpTrace,
+    pub use_matmul_dft: bool,
+}
+
+impl NativeEngine {
+    /// Engine in TPU form (matmul DFT): the paper's transformed algorithm.
+    pub fn new() -> Self {
+        Self {
+            trace: OpTrace::new(),
+            use_matmul_dft: true,
+        }
+    }
+
+    /// Engine in CPU-baseline form (radix-2 FFT schedule).
+    pub fn new_fft_baseline() -> Self {
+        Self {
+            trace: OpTrace::new(),
+            use_matmul_dft: false,
+        }
+    }
+
+    pub fn take_trace(&mut self) -> OpTrace {
+        std::mem::take(&mut self.trace)
+    }
+
+    // ---- primitives -----------------------------------------------------
+
+    pub fn matmul(&mut self, a: &Matrix, b: &Matrix) -> Matrix {
+        self.trace.push(Op::Matmul {
+            m: a.rows,
+            k: a.cols,
+            n: b.cols,
+        });
+        a.matmul(b)
+    }
+
+    pub fn cmatmul(&mut self, a: &CMatrix, b: &CMatrix) -> CMatrix {
+        self.trace.push(Op::CMatmul {
+            m: a.rows,
+            k: a.cols,
+            n: b.cols,
+        });
+        a.matmul(b)
+    }
+
+    /// 2-D unitary DFT under the engine's selected schedule.
+    pub fn dft2(&mut self, x: &CMatrix) -> CMatrix {
+        if self.use_matmul_dft {
+            self.trace.push(Op::Dft2Matmul {
+                m: x.rows,
+                n: x.cols,
+            });
+            dft::dft2_matmul(x)
+        } else {
+            self.trace.push(Op::Fft2 {
+                m: x.rows,
+                n: x.cols,
+            });
+            fft::fft2(x)
+        }
+    }
+
+    /// 2-D unitary inverse DFT under the engine's selected schedule.
+    pub fn idft2(&mut self, x: &CMatrix) -> CMatrix {
+        if self.use_matmul_dft {
+            self.trace.push(Op::Dft2Matmul {
+                m: x.rows,
+                n: x.cols,
+            });
+            dft::idft2_matmul(x)
+        } else {
+            self.trace.push(Op::Fft2 {
+                m: x.rows,
+                n: x.cols,
+            });
+            fft::ifft2(x)
+        }
+    }
+
+    pub fn spectral_divide(&mut self, fy: &CMatrix, fx: &CMatrix, eps: f32) -> CMatrix {
+        self.trace.push(Op::HadamardDiv {
+            m: fy.rows,
+            n: fy.cols,
+        });
+        conv::spectral_divide(fy, fx, eps)
+    }
+
+    pub fn hadamard(&mut self, a: &CMatrix, b: &CMatrix) -> CMatrix {
+        self.trace.push(Op::Elementwise {
+            elems: 2 * a.rows * a.cols,
+        });
+        a.hadamard(b)
+    }
+
+    pub fn sub(&mut self, a: &Matrix, b: &Matrix) -> Matrix {
+        self.trace.push(Op::Elementwise {
+            elems: a.rows * a.cols,
+        });
+        a.sub(b)
+    }
+
+    pub fn frobenius_norm(&mut self, a: &Matrix) -> f32 {
+        self.trace.push(Op::Reduce {
+            elems: a.rows * a.cols,
+        });
+        a.frobenius_norm()
+    }
+
+    pub fn lu_solve(&mut self, a: &Matrix, b: &[f32]) -> crate::error::Result<Vec<f32>> {
+        self.trace.push(Op::LuSolve { n: a.rows, rhs: 1 });
+        Ok(Lu::factor(a)?.solve(b))
+    }
+
+    pub fn vandermonde(&mut self, xs: &[f32], ncols: usize) -> Matrix {
+        self.trace.push(Op::VandermondeBuild {
+            m: xs.len(),
+            n: ncols,
+        });
+        vandermonde::vandermonde(xs, ncols)
+    }
+
+    /// Record external model evaluations (forward/gradient) that the
+    /// XAI pipeline triggers; the compute itself happens in the model.
+    pub fn record_model_forward(&mut self, count: usize, flops_per_fwd: u64) {
+        self.trace.push(Op::ModelForward {
+            count,
+            flops_per_fwd,
+        });
+    }
+
+    pub fn record_model_grad(&mut self, count: usize, flops_per_grad: u64) {
+        self.trace.push(Op::ModelGrad {
+            count,
+            flops_per_grad,
+        });
+    }
+
+    /// Complex scale helper (records element-wise work).
+    pub fn cscale(&mut self, a: &CMatrix, s: f32) -> CMatrix {
+        self.trace.push(Op::Elementwise {
+            elems: 2 * a.rows * a.cols,
+        });
+        a.scale(s)
+    }
+}
+
+/// Convenience: a complex matrix from a real one (no op recorded —
+/// this is a view change, not compute).
+pub fn to_complex(x: &Matrix) -> CMatrix {
+    CMatrix::from_real(x)
+}
+
+/// Convenience: real part extraction.
+pub fn to_real(x: &CMatrix) -> Matrix {
+    x.real()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn flops_matmul() {
+        let op = Op::Matmul { m: 2, k: 3, n: 4 };
+        assert_eq!(op.flops(), 48);
+    }
+
+    #[test]
+    fn cmatmul_is_4x_matmul_plus_adds() {
+        let mm = Op::Matmul { m: 8, k: 8, n: 8 }.flops();
+        let cm = Op::CMatmul { m: 8, k: 8, n: 8 }.flops();
+        assert_eq!(cm, 4 * mm + 2 * 64);
+    }
+
+    #[test]
+    fn dft2_matmul_form_costs_more_flops_than_fft() {
+        // The whole point of the paper: matmul-form has MORE flops but
+        // maps onto the MXU; FFT has fewer flops but is serial/branchy.
+        let m = Op::Dft2Matmul { m: 256, n: 256 }.flops();
+        let f = Op::Fft2 { m: 256, n: 256 }.flops();
+        assert!(m > f, "matmul {m} vs fft {f}");
+    }
+
+    #[test]
+    fn engine_records_and_computes() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::random(4, 4, &mut rng);
+        let b = Matrix::random(4, 4, &mut rng);
+        let mut eng = NativeEngine::new();
+        let c = eng.matmul(&a, &b);
+        assert!(c.max_abs_diff(&a.matmul(&b)) < 1e-6);
+        assert_eq!(eng.trace.ops.len(), 1);
+        assert_eq!(eng.trace.total_flops(), 2 * 64);
+    }
+
+    #[test]
+    fn dft_schedules_agree_numerically() {
+        let mut rng = Rng::new(1);
+        let x = CMatrix::from_real(&Matrix::random(16, 16, &mut rng));
+        let mut tpu = NativeEngine::new();
+        let mut cpu = NativeEngine::new_fft_baseline();
+        let a = tpu.dft2(&x);
+        let b = cpu.dft2(&x);
+        assert!(a.max_abs_diff(&b) < 1e-3);
+        // ...but the recorded ops differ
+        assert!(matches!(tpu.trace.ops[0], Op::Dft2Matmul { .. }));
+        assert!(matches!(cpu.trace.ops[0], Op::Fft2 { .. }));
+    }
+
+    #[test]
+    fn matrix_fraction() {
+        let mut t = OpTrace::new();
+        t.push(Op::Matmul { m: 64, k: 64, n: 64 });
+        t.push(Op::Elementwise { elems: 10 });
+        assert!(t.matrix_fraction() > 0.99);
+    }
+
+    #[test]
+    fn arithmetic_intensity_grows_with_size() {
+        let small = {
+            let mut t = OpTrace::new();
+            t.push(Op::Matmul { m: 8, k: 8, n: 8 });
+            t.arithmetic_intensity()
+        };
+        let large = {
+            let mut t = OpTrace::new();
+            t.push(Op::Matmul {
+                m: 512,
+                k: 512,
+                n: 512,
+            });
+            t.arithmetic_intensity()
+        };
+        assert!(large > small);
+    }
+}

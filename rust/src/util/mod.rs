@@ -1,0 +1,10 @@
+//! Small shared utilities: deterministic PRNG, statistics, table
+//! rendering, and a mini property-testing harness.
+//!
+//! This offline build has no `rand`/`proptest`/`criterion`, so the crate
+//! carries its own minimal, dependency-free equivalents.
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

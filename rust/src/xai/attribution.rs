@@ -1,0 +1,120 @@
+//! Shared attribution types and axioms checks.
+
+/// A feature-attribution result: one score per input feature (or block).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Attribution {
+    /// Feature names (or synthesized "f0", "f1" ... when unnamed).
+    pub names: Vec<String>,
+    /// One contribution score per feature; sign is meaningful for
+    /// Shapley/IG, magnitude-only for occlusion contributions.
+    pub scores: Vec<f32>,
+}
+
+impl Attribution {
+    pub fn new(names: Vec<String>, scores: Vec<f32>) -> Self {
+        assert_eq!(names.len(), scores.len());
+        Self { names, scores }
+    }
+
+    pub fn unnamed(scores: Vec<f32>) -> Self {
+        let names = (0..scores.len()).map(|i| format!("f{i}")).collect();
+        Self { names, scores }
+    }
+
+    pub fn len(&self) -> usize {
+        self.scores.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scores.is_empty()
+    }
+
+    /// Index of the most influential feature by |score|.
+    pub fn top_feature(&self) -> usize {
+        self.scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .map(|(i, _)| i)
+            .expect("empty attribution")
+    }
+
+    /// Features ranked by |score| descending.
+    pub fn ranking(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.scores.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.scores[b]
+                .abs()
+                .partial_cmp(&self.scores[a].abs())
+                .unwrap()
+        });
+        idx
+    }
+
+    /// Sum of signed scores (completeness-axiom LHS).
+    pub fn total(&self) -> f32 {
+        self.scores.iter().sum()
+    }
+
+    /// Completeness check: sum of attributions ≈ f(x) − f(baseline)
+    /// within `tol` (§II-D axiom 1).
+    pub fn satisfies_completeness(&self, fx: f32, fbaseline: f32, tol: f32) -> bool {
+        (self.total() - (fx - fbaseline)).abs() <= tol
+    }
+
+    /// Render a waterfall-style text plot (Fig. 13).
+    pub fn waterfall(&self, width: usize) -> String {
+        let maxabs = self
+            .scores
+            .iter()
+            .fold(0.0f32, |a, &s| a.max(s.abs()))
+            .max(1e-12);
+        let mut out = String::new();
+        for i in self.ranking() {
+            let s = self.scores[i];
+            let bar = ((s.abs() / maxabs) * width as f32).round() as usize;
+            let glyph = if s >= 0.0 { "+" } else { "-" };
+            out.push_str(&format!(
+                "{:>6}  {s:+.4}  {}\n",
+                self.names[i],
+                glyph.repeat(bar.max(1))
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_feature_by_magnitude() {
+        let a = Attribution::unnamed(vec![0.1, -0.9, 0.5]);
+        assert_eq!(a.top_feature(), 1);
+    }
+
+    #[test]
+    fn ranking_descends() {
+        let a = Attribution::unnamed(vec![0.1, -0.9, 0.5]);
+        assert_eq!(a.ranking(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn completeness() {
+        let a = Attribution::unnamed(vec![0.6, 0.4]);
+        assert!(a.satisfies_completeness(2.0, 1.0, 1e-6));
+        assert!(!a.satisfies_completeness(5.0, 1.0, 1e-6));
+    }
+
+    #[test]
+    fn waterfall_contains_names() {
+        let a = Attribution::new(
+            vec!["BMP".into(), "PGF".into()],
+            vec![0.8, -0.3],
+        );
+        let w = a.waterfall(20);
+        assert!(w.contains("BMP"));
+        assert!(w.contains("PGF"));
+    }
+}

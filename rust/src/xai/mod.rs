@@ -1,0 +1,56 @@
+//! The explainable-AI algorithm library — the paper's §III.
+//!
+//! Each of the three algorithms ships in two forms:
+//!
+//! * the **transformed** (matrix) form the paper maps onto accelerators:
+//!   FFT-deconvolution distillation (Eq. 5), structure-vector Shapley
+//!   (§III-B), trapezoid + Vandermonde integrated gradients (§III-C);
+//! * the **baseline** form the paper's CPU column runs: iterative
+//!   gradient-descent distillation, exact subset-enumeration Shapley,
+//!   and naive Riemann-sum IG.
+//!
+//! All transformed forms execute through a [`NativeEngine`] so their op
+//! stream can be replayed on the [`crate::hwsim`] device models — that
+//! replay *is* Tables III–V.
+
+pub mod attribution;
+pub mod distillation;
+pub mod integrated_gradients;
+pub mod quantized;
+pub mod saliency;
+pub mod shapley;
+pub mod workloads;
+
+pub use attribution::Attribution;
+
+/// The three XAI algorithms of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum XaiMethod {
+    ModelDistillation,
+    ShapleyValues,
+    IntegratedGradients,
+}
+
+impl XaiMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            XaiMethod::ModelDistillation => "Model Distillation",
+            XaiMethod::ShapleyValues => "Shapley Values",
+            XaiMethod::IntegratedGradients => "Integrated Gradients",
+        }
+    }
+
+    pub fn all() -> [XaiMethod; 3] {
+        [
+            XaiMethod::ModelDistillation,
+            XaiMethod::ShapleyValues,
+            XaiMethod::IntegratedGradients,
+        ]
+    }
+}
+
+impl std::fmt::Display for XaiMethod {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}

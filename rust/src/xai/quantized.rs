@@ -1,0 +1,171 @@
+//! int8-quantized XAI paths — the TPU's "quantification" story (§II-A,
+//! §IV-C) executed for real.
+//!
+//! The paper credits much of the TPU's perf/Watt margin to 8-bit
+//! integer arithmetic.  This module runs the structure-vector Shapley
+//! matvec and the distillation occlusion sweep through
+//! [`hwsim::quantization`]'s int8 matmul and quantifies the accuracy
+//! the paper implicitly claims survives quantization ("as long as 8
+//! bits can meet the accuracy requirements").
+
+use crate::hwsim::quantization::{self, Quantized};
+use crate::linalg::matrix::Matrix;
+use crate::xai::shapley::{self, ValueTable};
+
+/// Shapley values through the int8 MXU path: quantize T and the value
+/// columns, int8-matmul with int32 accumulation, rescale.
+pub fn shapley_int8(games: &[ValueTable]) -> Matrix {
+    assert!(!games.is_empty());
+    let n = games[0].n;
+    let t = shapley::weight_matrix(n);
+    let v = Matrix::from_fn(1 << n, games.len(), |s, b| games[b].values[s]);
+    quantization::matmul_int8(&quantization::quantize(&t), &quantization::quantize(&v))
+}
+
+/// Worst-case Shapley error introduced by int8 quantization, relative
+/// to the exact fp32 values, across a batch of games.
+pub fn shapley_int8_error(games: &[ValueTable]) -> f32 {
+    let q = shapley_int8(games);
+    let mut err = 0f32;
+    let mut scale = 0f32;
+    for (b, g) in games.iter().enumerate() {
+        let exact = shapley::shapley_exact(g);
+        for (i, &e) in exact.iter().enumerate() {
+            err = err.max((q.get(i, b) - e).abs());
+            scale = scale.max(e.abs());
+        }
+    }
+    err / scale.max(1e-12)
+}
+
+/// Does the int8 path preserve the feature *ranking* (what an analyst
+/// actually reads off a waterfall plot)?  Returns the fraction of games
+/// whose top feature survives quantization.
+pub fn shapley_int8_top1_agreement(games: &[ValueTable]) -> f64 {
+    let q = shapley_int8(games);
+    let n = games[0].n;
+    let mut agree = 0usize;
+    for (b, g) in games.iter().enumerate() {
+        let exact = shapley::shapley_exact(g);
+        let top_exact = exact
+            .iter()
+            .enumerate()
+            .max_by(|a, c| a.1.abs().partial_cmp(&c.1.abs()).unwrap())
+            .unwrap()
+            .0;
+        let top_q = (0..n)
+            .max_by(|&a, &c| {
+                q.get(a, b)
+                    .abs()
+                    .partial_cmp(&q.get(c, b).abs())
+                    .unwrap()
+            })
+            .unwrap();
+        agree += usize::from(top_exact == top_q);
+    }
+    agree as f64 / games.len() as f64
+}
+
+/// Occlusion contribution factors with the convolution output computed
+/// through int8 matmuls (the distilled model quantized for deployment).
+pub fn contribution_factors_int8(x: &Matrix, k_spatial: &Quantized, block: usize) -> Matrix {
+    let (m, n) = (x.rows, x.cols);
+    assert!(m % block == 0 && n % block == 0);
+    // dense convolution as an explicit matrix: rows index output pixels,
+    // cols index input pixels (circulant structure) — int8-friendly.
+    let kd = quantization::dequantize(k_spatial);
+    let conv_mat = Matrix::from_fn(m * n, m * n, |o, i| {
+        let (or_, oc) = (o / n, o % n);
+        let (ir, ic) = (i / n, i % n);
+        kd.get((or_ + m - ir) % m, (oc + n - ic) % n)
+    });
+    let qconv = quantization::quantize(&conv_mat);
+    let rows = m / block;
+    let cols = n / block;
+    let mut out = Matrix::zeros(rows, cols);
+    for br in 0..rows {
+        for bc in 0..cols {
+            let masked = Matrix::from_fn(m * n, 1, |i, _| {
+                let (r, c) = (i / n, i % n);
+                if r / block == br && c / block == bc {
+                    x.get(r, c)
+                } else {
+                    0.0
+                }
+            });
+            let delta = quantization::matmul_int8(&qconv, &quantization::quantize(&masked));
+            out.set(br, bc, delta.frobenius_norm());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::quantization::quantize;
+    use crate::util::rng::Rng;
+
+    fn games(n: usize, count: usize, rng: &mut Rng) -> Vec<ValueTable> {
+        (0..count)
+            .map(|_| ValueTable::new(n, rng.gauss_vec(1 << n)))
+            .collect()
+    }
+
+    #[test]
+    fn int8_shapley_error_is_small() {
+        let mut rng = Rng::new(0);
+        let gs = games(8, 6, &mut rng);
+        let err = shapley_int8_error(&gs);
+        assert!(err < 0.08, "relative error {err}");
+    }
+
+    #[test]
+    fn int8_preserves_top_feature_mostly() {
+        let mut rng = Rng::new(1);
+        let gs = games(6, 50, &mut rng);
+        let agree = shapley_int8_top1_agreement(&gs);
+        assert!(agree >= 0.9, "top-1 agreement {agree}");
+    }
+
+    #[test]
+    fn int8_occlusion_finds_planted_block() {
+        let mut x = Matrix::zeros(8, 8);
+        for r in 4..8 {
+            for c in 0..4 {
+                x.set(r, c, 2.5);
+            }
+        }
+        let k = Matrix::identity_kernel(8, 8);
+        let contrib = contribution_factors_int8(&x, &quantize(&k), 4);
+        // planted block = block (1, 0) in the 2x2 grid
+        let mut best = (0, 0);
+        let mut bestv = f32::MIN;
+        for r in 0..2 {
+            for c in 0..2 {
+                if contrib.get(r, c) > bestv {
+                    bestv = contrib.get(r, c);
+                    best = (r, c);
+                }
+            }
+        }
+        assert_eq!(best, (1, 0));
+    }
+
+    #[test]
+    fn int8_matches_fp32_contribution_ordering() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::from_fn(8, 8, |_, _| 2.0 + rng.gauss_f32());
+        let k = Matrix::identity_kernel(8, 8);
+        let q = contribution_factors_int8(&x, &quantize(&k), 4);
+        let mut eng = crate::trace::NativeEngine::new();
+        let f = crate::xai::distillation::contribution_factors(&mut eng, &x, &k, 4);
+        // rankings must agree
+        let rank = |m: &Matrix| {
+            let mut idx: Vec<usize> = (0..m.data.len()).collect();
+            idx.sort_by(|&a, &b| m.data[b].partial_cmp(&m.data[a]).unwrap());
+            idx
+        };
+        assert_eq!(rank(&q)[0], rank(&f)[0], "top block must survive int8");
+    }
+}

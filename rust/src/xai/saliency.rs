@@ -1,0 +1,57 @@
+//! Vanilla gradient saliency (Simonyan et al.) — the Fig. 14(b)
+//! comparator and the degenerate case of model distillation the paper
+//! notes in §II-B ("if we choose linear regression ... the entire model
+//! distillation process degenerates to the Saliency Map method").
+
+use crate::xai::attribution::Attribution;
+use crate::xai::integrated_gradients::GradientProvider;
+
+/// |∂F/∂x| at the input — no path integration.
+pub fn saliency<G: GradientProvider>(model: &G, x: &[f32]) -> Attribution {
+    let g = model.gradient(x);
+    Attribution::unnamed(g.iter().map(|v| v.abs()).collect())
+}
+
+/// Signed input-times-gradient variant (a cheap IG proxy).
+pub fn input_x_gradient<G: GradientProvider>(model: &G, x: &[f32]) -> Attribution {
+    let g = model.gradient(x);
+    Attribution::unnamed(g.iter().zip(x).map(|(gi, xi)| gi * xi).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Linear {
+        w: Vec<f32>,
+    }
+    impl GradientProvider for Linear {
+        fn value(&self, x: &[f32]) -> f32 {
+            x.iter().zip(&self.w).map(|(a, b)| a * b).sum()
+        }
+        fn gradient(&self, _x: &[f32]) -> Vec<f32> {
+            self.w.clone()
+        }
+    }
+
+    #[test]
+    fn saliency_of_linear_is_weight_magnitude() {
+        let m = Linear {
+            w: vec![2.0, -3.0, 0.5],
+        };
+        let a = saliency(&m, &[1.0, 1.0, 1.0]);
+        assert_eq!(a.scores, vec![2.0, 3.0, 0.5]);
+        assert_eq!(a.top_feature(), 1);
+    }
+
+    #[test]
+    fn ixg_recovers_contribution_for_linear() {
+        // For linear models, input×gradient == exact attribution.
+        let m = Linear {
+            w: vec![1.0, 2.0],
+        };
+        let a = input_x_gradient(&m, &[3.0, -1.0]);
+        assert_eq!(a.scores, vec![3.0, -2.0]);
+        assert!((a.total() - m.value(&[3.0, -1.0])).abs() < 1e-6);
+    }
+}

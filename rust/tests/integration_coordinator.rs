@@ -1,0 +1,225 @@
+//! Integration: the full coordinator pipeline under mixed live traffic,
+//! failure injection, and shutdown.  Requires `make artifacts`.
+
+use std::path::Path;
+use xai_accel::coordinator::{
+    batcher::BatchPolicy, Coordinator, CoordinatorConfig, Request, RequestKind, Response,
+};
+use xai_accel::data::cifar;
+use xai_accel::linalg::conv::circ_conv2;
+use xai_accel::linalg::matrix::Matrix;
+use xai_accel::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    if Path::new("artifacts/manifest.txt").exists() {
+        true
+    } else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
+        false
+    }
+}
+
+fn start(executors: usize) -> Coordinator {
+    let mut config = CoordinatorConfig::default();
+    config.executors = executors;
+    Coordinator::start(config).expect("coordinator start")
+}
+
+#[test]
+fn classify_roundtrip() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = start(1);
+    let mut rng = Rng::new(0);
+    let s = cifar::sample_class(3, &mut rng);
+    match coord.call(Request::Classify { image: s.image }).unwrap() {
+        Response::Logits(l) => {
+            assert_eq!(l.len(), 4);
+            let pred = l
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(pred, 3);
+        }
+        other => panic!("unexpected response {other:?}"),
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn distill_roundtrip_recovers_kernel() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = start(1);
+    let mut rng = Rng::new(1);
+    let x = Matrix::from_fn(16, 16, |_, _| 4.0 + rng.gauss_f32());
+    let mut k_true = Matrix::zeros(16, 16);
+    k_true.set(0, 0, 1.0);
+    let y = circ_conv2(&x, &k_true);
+    match coord.call(Request::Distill { x, y }).unwrap() {
+        Response::Distillation {
+            kernel,
+            contributions,
+        } => {
+            assert!(kernel.max_abs_diff(&k_true) < 0.02);
+            assert_eq!((contributions.rows, contributions.cols), (4, 4));
+        }
+        other => panic!("unexpected response {other:?}"),
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn invalid_requests_error_without_crashing_the_pipeline() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = start(1);
+    // wrong image shape
+    let bad = coord
+        .call(Request::Classify {
+            image: Matrix::zeros(7, 9),
+        });
+    assert!(bad.is_err());
+    // wrong shapley table length
+    let bad = coord.call(Request::Shapley {
+        n: 6,
+        values: vec![0.0; 10],
+        names: (0..6).map(|i| format!("f{i}")).collect(),
+    });
+    assert!(bad.is_err());
+    // unsupported distill size
+    let bad = coord.call(Request::Distill {
+        x: Matrix::zeros(20, 20),
+        y: Matrix::zeros(20, 20),
+    });
+    assert!(bad.is_err());
+    // out-of-range class
+    let bad = coord.call(Request::IntGrad {
+        image: Matrix::zeros(16, 16),
+        baseline: Matrix::zeros(16, 16),
+        class: 99,
+    });
+    assert!(bad.is_err());
+
+    // ...and the pipeline still serves good requests afterwards
+    let mut rng = Rng::new(2);
+    let s = cifar::sample_class(0, &mut rng);
+    assert!(coord.call(Request::Classify { image: s.image }).is_ok());
+    coord.shutdown();
+}
+
+#[test]
+fn batching_packs_classify_requests() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut config = CoordinatorConfig::default();
+    config.executors = 1;
+    let mut policy = BatchPolicy::default();
+    policy.max_wait = std::time::Duration::from_millis(20);
+    config.policy = policy;
+    let coord = Coordinator::start(config).unwrap();
+    let mut rng = Rng::new(3);
+    let pendings: Vec<_> = (0..32)
+        .map(|i| {
+            coord
+                .submit(Request::Classify {
+                    image: cifar::sample_class(i % 4, &mut rng).image,
+                })
+                .unwrap()
+        })
+        .collect();
+    for p in pendings {
+        p.wait().unwrap();
+    }
+    let mbs = coord.metrics().mean_batch_size();
+    assert!(mbs > 2.0, "mean batch size {mbs} — batching inactive");
+    coord.shutdown();
+}
+
+#[test]
+fn two_executors_serve_concurrently() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = start(2);
+    let mut rng = Rng::new(4);
+    let pendings: Vec<_> = (0..48)
+        .map(|i| {
+            coord
+                .submit(Request::Saliency {
+                    image: cifar::sample_class(i % 4, &mut rng).image,
+                    class: i % 4,
+                })
+                .unwrap()
+        })
+        .collect();
+    let mut ok = 0;
+    for p in pendings {
+        if matches!(p.wait(), Ok(Response::Heatmap(h)) if h.is_finite()) {
+            ok += 1;
+        }
+    }
+    assert_eq!(ok, 48);
+    assert_eq!(coord.metrics().completed(), 48);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_rejects_new_requests() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = start(1);
+    let mut rng = Rng::new(5);
+    let img = cifar::sample_class(0, &mut rng).image;
+    coord.call(Request::Classify { image: img.clone() }).unwrap();
+    coord.shutdown();
+    // A second coordinator still starts cleanly after the first's death
+    // (no leaked global state).
+    let coord2 = start(1);
+    assert!(coord2.call(Request::Classify { image: img }).is_ok());
+    coord2.shutdown();
+}
+
+#[test]
+fn mixed_traffic_order_independent_correctness() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = start(2);
+    let mut rng = Rng::new(6);
+    // interleave kinds; every response must match its request kind
+    let mut pendings = Vec::new();
+    for i in 0..40 {
+        let req = match i % 3 {
+            0 => Request::Classify {
+                image: cifar::sample_class(i % 4, &mut rng).image,
+            },
+            1 => Request::Saliency {
+                image: cifar::sample_class(i % 4, &mut rng).image,
+                class: i % 4,
+            },
+            _ => Request::Shapley {
+                n: 6,
+                values: rng.gauss_vec(64),
+                names: (0..6).map(|j| format!("f{j}")).collect(),
+            },
+        };
+        pendings.push((i, coord.submit(req).unwrap()));
+    }
+    for (i, p) in pendings {
+        let resp = p.wait().unwrap();
+        match i % 3 {
+            0 => assert!(matches!(resp, Response::Logits(_))),
+            1 => assert!(matches!(resp, Response::Heatmap(_))),
+            _ => assert!(matches!(resp, Response::Attribution(_))),
+        }
+    }
+    coord.shutdown();
+}

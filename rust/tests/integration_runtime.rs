@@ -1,0 +1,221 @@
+//! Integration: AOT artifacts executed through PJRT must agree with the
+//! native Rust oracles — the cross-layer correctness contract.
+//!
+//! Requires `make artifacts`.  Tests no-op (with a loud message) when
+//! the artifacts are missing so `cargo test` still works in a fresh
+//! checkout.
+
+use std::path::Path;
+use xai_accel::linalg::conv::circ_conv2;
+use xai_accel::linalg::matrix::Matrix;
+use xai_accel::runtime::ArtifactRegistry;
+use xai_accel::trace::NativeEngine;
+use xai_accel::util::rng::Rng;
+use xai_accel::xai::{distillation, shapley};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_compiles_everything() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(dir).expect("compile all artifacts");
+    assert!(reg.len() >= 13, "expected ≥13 artifacts, got {}", reg.len());
+    assert_eq!(reg.platform(), "cpu");
+    for name in [
+        "distill_16x16",
+        "occlusion_16x16_b4",
+        "shapley_n6_b8",
+        "cnn_fwd_b1",
+        "ig_cnn_s32",
+        "saliency_cnn",
+    ] {
+        assert!(reg.get(name).is_ok(), "missing {name}");
+    }
+}
+
+#[test]
+fn distill_artifact_matches_native_solver() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load_subset(dir, &["distill_16x16"]).unwrap();
+    let exe = reg.get("distill_16x16").unwrap();
+    let mut rng = Rng::new(42);
+    for _ in 0..5 {
+        let x = Matrix::from_fn(16, 16, |_, _| 3.0 + rng.gauss_f32());
+        let y = Matrix::from_fn(16, 16, |_, _| rng.gauss_f32());
+        let out = exe.run(&[x.data.clone(), y.data.clone()]).unwrap();
+        let k_aot = Matrix::from_vec(16, 16, out[0].clone());
+        let mut eng = NativeEngine::new();
+        let k_native = distillation::distill_fft(&mut eng, &x, &y, 1e-6);
+        assert!(
+            k_aot.max_abs_diff(&k_native) < 2e-3,
+            "AOT vs native disagreement: {}",
+            k_aot.max_abs_diff(&k_native)
+        );
+    }
+}
+
+#[test]
+fn distill_artifact_recovers_planted_kernel() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load_subset(dir, &["distill_16x16"]).unwrap();
+    let exe = reg.get("distill_16x16").unwrap();
+    let mut rng = Rng::new(1);
+    let x = Matrix::from_fn(16, 16, |_, _| 4.0 + rng.gauss_f32());
+    let mut k_true = Matrix::zeros(16, 16);
+    k_true.set(0, 0, 0.5);
+    k_true.set(2, 3, 0.25);
+    let y = circ_conv2(&x, &k_true);
+    let out = exe.run(&[x.data.clone(), y.data.clone()]).unwrap();
+    let k = Matrix::from_vec(16, 16, out[0].clone());
+    assert!(k.max_abs_diff(&k_true) < 0.02, "{}", k.max_abs_diff(&k_true));
+}
+
+#[test]
+fn shapley_artifact_matches_exact_enumeration() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load_subset(dir, &["shapley_n6_b8"]).unwrap();
+    let exe = reg.get("shapley_n6_b8").unwrap();
+    let mut rng = Rng::new(7);
+    let games: Vec<shapley::ValueTable> = (0..8)
+        .map(|_| shapley::ValueTable::new(6, rng.gauss_vec(64)))
+        .collect();
+    let t = shapley::weight_matrix(6);
+    let mut v = vec![0f32; 64 * 8];
+    for (b, g) in games.iter().enumerate() {
+        for (s, &val) in g.values.iter().enumerate() {
+            v[s * 8 + b] = val;
+        }
+    }
+    let out = exe.run(&[t.data.clone(), v]).unwrap();
+    for (b, g) in games.iter().enumerate() {
+        let exact = shapley::shapley_exact(g);
+        for i in 0..6 {
+            let got = out[0][i * 8 + b];
+            assert!(
+                (got - exact[i]).abs() < 1e-3,
+                "game {b} phi_{i}: {got} vs {}",
+                exact[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn cnn_artifact_classifies_synthetic_data() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load_subset(dir, &["cnn_fwd_b32"]).unwrap();
+    let exe = reg.get("cnn_fwd_b32").unwrap();
+    let mut rng = Rng::new(9);
+    let batch = xai_accel::data::cifar::sample_batch(32, &mut rng);
+    let mut flat = vec![0f32; 32 * 256];
+    for (b, s) in batch.iter().enumerate() {
+        flat[b * 256..(b + 1) * 256].copy_from_slice(&s.image.data);
+    }
+    let out = exe.run(&[flat]).unwrap();
+    let mut correct = 0;
+    for (b, s) in batch.iter().enumerate() {
+        let logits = &out[0][b * 4..(b + 1) * 4];
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == s.label {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 28, "accuracy {correct}/32 below 87%");
+}
+
+#[test]
+fn ig_artifact_satisfies_completeness() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load_subset(dir, &["ig_cnn_s32", "cnn_fwd_b1"]).unwrap();
+    let ig = reg.get("ig_cnn_s32").unwrap();
+    let fwd = reg.get("cnn_fwd_b1").unwrap();
+    let mut rng = Rng::new(11);
+    let s = xai_accel::data::cifar::sample_class(2, &mut rng);
+    let onehot = vec![0f32, 0.0, 1.0, 0.0];
+    let baseline = vec![0f32; 256];
+
+    let attr = ig
+        .run(&[s.image.data.clone(), baseline.clone(), onehot.clone()])
+        .unwrap();
+    let total: f32 = attr[0].iter().sum();
+
+    let fx = fwd.run(&[s.image.data.clone()]).unwrap()[0][2];
+    let fb = fwd.run(&[baseline]).unwrap()[0][2];
+    let expect = fx - fb;
+    // 32 trapezoid steps: completeness within a few percent
+    assert!(
+        (total - expect).abs() < 0.05 * expect.abs().max(1.0),
+        "sum(IG)={total} vs F(x)-F(x')={expect}"
+    );
+}
+
+#[test]
+fn saliency_and_ig_heatmaps_are_nonzero_and_finite() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load_subset(dir, &["saliency_cnn", "ig_cnn_s32"]).unwrap();
+    let mut rng = Rng::new(13);
+    let s = xai_accel::data::cifar::sample_class(0, &mut rng);
+    let onehot = vec![1f32, 0.0, 0.0, 0.0];
+    let g = reg
+        .get("saliency_cnn")
+        .unwrap()
+        .run(&[s.image.data.clone(), onehot.clone()])
+        .unwrap();
+    let ig = reg
+        .get("ig_cnn_s32")
+        .unwrap()
+        .run(&[s.image.data.clone(), vec![0f32; 256], onehot])
+        .unwrap();
+    for (name, v) in [("saliency", &g[0]), ("ig", &ig[0])] {
+        let sum: f32 = v.iter().map(|x| x.abs()).sum();
+        assert!(sum > 1e-3, "{name} map is all zeros (constant-elision bug?)");
+        assert!(v.iter().all(|x| x.is_finite()), "{name} has non-finite values");
+    }
+}
+
+#[test]
+fn executable_rejects_wrong_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load_subset(dir, &["distill_16x16"]).unwrap();
+    let exe = reg.get("distill_16x16").unwrap();
+    // wrong arity
+    assert!(exe.run(&[vec![0.0; 256]]).is_err());
+    // wrong element count
+    assert!(exe.run(&[vec![0.0; 100], vec![0.0; 256]]).is_err());
+}
+
+#[test]
+fn occlusion_artifact_finds_planted_block() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load_subset(dir, &["occlusion_16x16_b4"]).unwrap();
+    let exe = reg.get("occlusion_16x16_b4").unwrap();
+    let mut x = Matrix::zeros(16, 16);
+    for r in 8..12 {
+        for c in 4..8 {
+            x.set(r, c, 3.0);
+        }
+    }
+    let k = Matrix::identity_kernel(16, 16);
+    let out = exe.run(&[x.data.clone(), k.data.clone()]).unwrap();
+    let contrib = &out[0]; // 4x4 row-major
+    let argmax = contrib
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(argmax, 2 * 4 + 1, "contributions {contrib:?}");
+}

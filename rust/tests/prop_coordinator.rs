@@ -1,0 +1,193 @@
+//! Property tests on coordinator invariants (no artifacts needed):
+//! batching conservation/ordering, queue FIFO + drain semantics, and
+//! decomposition-plan algebra under random interleavings.
+
+use std::sync::mpsc;
+use std::time::Instant;
+use xai_accel::coordinator::batcher::{BatchAssembler, BatchPolicy};
+use xai_accel::coordinator::decomposition::plan_splits;
+use xai_accel::coordinator::queue::BoundedQueue;
+use xai_accel::coordinator::request::{Envelope, Request, RequestKind};
+use xai_accel::linalg::matrix::Matrix;
+use xai_accel::util::prop::check;
+use xai_accel::util::rng::Rng;
+
+fn random_request(rng: &mut Rng) -> Request {
+    match rng.below(5) {
+        0 => Request::Classify {
+            image: Matrix::zeros(16, 16),
+        },
+        1 => Request::Distill {
+            x: Matrix::zeros(16, 16),
+            y: Matrix::zeros(16, 16),
+        },
+        2 => Request::Shapley {
+            n: 6,
+            values: vec![0.0; 64],
+            names: (0..6).map(|i| format!("f{i}")).collect(),
+        },
+        3 => Request::IntGrad {
+            image: Matrix::zeros(16, 16),
+            baseline: Matrix::zeros(16, 16),
+            class: 0,
+        },
+        _ => Request::Saliency {
+            image: Matrix::zeros(16, 16),
+            class: 1,
+        },
+    }
+}
+
+fn envelope(id: u64, req: Request) -> Envelope {
+    let (tx, _rx) = mpsc::channel();
+    // keep the receiver alive is unnecessary for these structural tests
+    Envelope {
+        id,
+        request: req,
+        reply: tx,
+        enqueued_at: Instant::now(),
+    }
+}
+
+#[test]
+fn batching_conserves_every_request_exactly_once() {
+    check("no request lost or duplicated", 30, |rng: &mut Rng| {
+        let mut assembler = BatchAssembler::new(BatchPolicy::default());
+        let n = rng.int_range(1, 200) as u64;
+        let mut emitted: Vec<u64> = Vec::new();
+        for id in 0..n {
+            if let Some(batch) = assembler.offer(envelope(id, random_request(rng))) {
+                emitted.extend(batch.envelopes.iter().map(|e| e.id));
+            }
+        }
+        for batch in assembler.flush_all() {
+            emitted.extend(batch.envelopes.iter().map(|e| e.id));
+        }
+        emitted.sort();
+        assert_eq!(emitted, (0..n).collect::<Vec<_>>());
+        assert_eq!(assembler.pending_count(), 0);
+    });
+}
+
+#[test]
+fn batches_never_exceed_policy_and_never_mix_kinds() {
+    check("batch size + purity", 30, |rng: &mut Rng| {
+        let policy = BatchPolicy::default();
+        let mut assembler = BatchAssembler::new(policy.clone());
+        let n = rng.int_range(1, 300) as u64;
+        let mut verify = |batch: xai_accel::coordinator::batcher::Batch| {
+            assert!(batch.envelopes.len() <= policy.max_for(batch.kind));
+            assert!(!batch.envelopes.is_empty());
+            assert!(batch
+                .envelopes
+                .iter()
+                .all(|e| e.request.kind() == batch.kind));
+        };
+        for id in 0..n {
+            if let Some(b) = assembler.offer(envelope(id, random_request(rng))) {
+                verify(b);
+            }
+        }
+        for b in assembler.flush_all() {
+            verify(b);
+        }
+    });
+}
+
+#[test]
+fn per_kind_arrival_order_is_preserved() {
+    check("FIFO within a kind", 20, |rng: &mut Rng| {
+        let mut assembler = BatchAssembler::new(BatchPolicy::default());
+        let n = rng.int_range(1, 150) as u64;
+        let mut seen: std::collections::HashMap<RequestKind, u64> =
+            std::collections::HashMap::new();
+        let mut verify = |batch: xai_accel::coordinator::batcher::Batch| {
+            let last = seen.entry(batch.kind).or_insert(0);
+            for e in &batch.envelopes {
+                assert!(e.id >= *last, "kind {:?} reordered", batch.kind);
+                *last = e.id;
+            }
+        };
+        for id in 0..n {
+            if let Some(b) = assembler.offer(envelope(id, random_request(rng))) {
+                verify(b);
+            }
+        }
+        for b in assembler.flush_all() {
+            verify(b);
+        }
+    });
+}
+
+#[test]
+fn queue_conserves_items_under_concurrency() {
+    check("MPMC conservation", 8, |rng: &mut Rng| {
+        let producers = rng.int_range(1, 4) as usize;
+        let per = rng.int_range(1, 60) as usize;
+        let q: BoundedQueue<usize> = BoundedQueue::new(4);
+        let handles: Vec<_> = (0..producers)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        q.push(p * 10_000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut got = consumer.join().unwrap();
+        got.sort();
+        let mut want: Vec<usize> = (0..producers)
+            .flat_map(|p| (0..per).map(move |i| p * 10_000 + i))
+            .collect();
+        want.sort();
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn queue_drain_plus_pop_sees_everything() {
+    check("drain + pop conservation", 20, |rng: &mut Rng| {
+        let q: BoundedQueue<u64> = BoundedQueue::new(128);
+        let n = rng.int_range(0, 100) as u64;
+        for i in 0..n {
+            q.push(i).unwrap();
+        }
+        let k = rng.int_range(0, 120) as usize;
+        let mut got = q.drain_up_to(k);
+        q.close();
+        while let Some(v) = q.pop() {
+            got.push(v);
+        }
+        assert_eq!(got, (0..n).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn split_plans_compose_with_matrix_vstack() {
+    check("plan_splits slices reassemble", 20, |rng: &mut Rng| {
+        let rows = rng.int_range(1, 64) as usize;
+        let cols = rng.int_range(1, 16) as usize;
+        let p = rng.int_range(1, 12) as usize;
+        let m = Matrix::random(rows, cols, rng);
+        let bands: Vec<Matrix> = plan_splits(rows, p)
+            .iter()
+            .map(|a| m.row_slice(a.start, a.len))
+            .collect();
+        assert_eq!(Matrix::vstack(&bands), m);
+    });
+}
