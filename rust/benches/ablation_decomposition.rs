@@ -9,7 +9,8 @@ use std::time::Instant;
 use xai_accel::hwsim::device::Device;
 use xai_accel::hwsim::tpu::TpuSim;
 use xai_accel::linalg::block;
-use xai_accel::linalg::matrix::Matrix;
+use xai_accel::linalg::fft;
+use xai_accel::linalg::matrix::{CMatrix, Matrix};
 use xai_accel::util::rng::Rng;
 use xai_accel::util::table::{fmt_time, Table};
 use xai_accel::xai::workloads;
@@ -53,6 +54,30 @@ fn main() {
             format!("{p}"),
             fmt_time(dt),
             format!("{:.1}x", base / dt),
+        ]);
+    }
+    table.print();
+
+    // physical: the planned FFT's row/column sharding is the same
+    // Algorithm-1 decomposition applied to the 2-D transform
+    let x = CMatrix::from_real(&Matrix::random(512, 512, &mut rng));
+    let plan = fft::plan2(512, 512);
+    let mut table = Table::new("physical check: planned fft2 sharding on this host (512²)")
+        .header(&["threads", "time", "speedup"]);
+    let mut fft_base = 0.0;
+    for p in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        for _ in 0..5 {
+            std::hint::black_box(plan.fft2(&x, p));
+        }
+        let dt = t0.elapsed().as_secs_f64() / 5.0;
+        if p == 1 {
+            fft_base = dt; // the p=1 row doubles as the baseline
+        }
+        table.row(&[
+            format!("{p}"),
+            fmt_time(dt),
+            format!("{:.1}x", fft_base / dt),
         ]);
     }
     table.print();

@@ -80,8 +80,10 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Start the pipeline: spawns the batcher and `executors` workers,
-    /// and blocks until at least one worker has compiled its registry
-    /// (so the first submit doesn't race startup failure).
+    /// and blocks until the sentinel worker (worker 0) has compiled its
+    /// registry, so the first submit doesn't race startup failure and a
+    /// sentinel compile error cannot be masked by a faster sibling (see
+    /// `worker::await_readiness`).
     pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
         let ingress: BoundedQueue<Envelope> = BoundedQueue::new(config.queue_capacity);
         let work: BoundedQueue<Batch> = BoundedQueue::new(config.work_capacity);
@@ -95,10 +97,8 @@ impl Coordinator {
             metrics.clone(),
             ready_tx,
         );
-        // wait for the first registry (compile errors surface here)
-        ready_rx
-            .recv()
-            .map_err(|_| Error::Coordinator("no executor came up".into()))??;
+        // wait for worker 0's registry (compile errors surface here)
+        crate::coordinator::worker::await_readiness(&ready_rx)?;
 
         let batcher = {
             let ingress = ingress.clone();

@@ -6,26 +6,42 @@
 //! independent cores, each executing sub-tasks "without requiring any
 //! data exchange between cores", with results merged by the reply
 //! channels.
+//!
+//! # Readiness contract
+//!
+//! Every worker reports its startup outcome on the `ready` channel as
+//! `(worker_id, result)` and then drops its sender.  **Worker 0 is the
+//! readiness sentinel**: [`await_readiness`] returns worker 0's result
+//! and nothing else — another worker's `Ok` arriving first can no
+//! longer mask a worker-0 artifact-load failure (the bug in the
+//! previous single-message protocol, where `Coordinator::start` gated
+//! on whichever worker happened to report first).  Non-sentinel
+//! failures are logged; they surface operationally as reduced
+//! throughput, not as a startup error.
 
 use crate::coordinator::batcher::Batch;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::queue::BoundedQueue;
 use crate::coordinator::router;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+/// Startup report of one worker: `(worker_id, load result)`.
+pub type ReadySignal = (usize, crate::error::Result<()>);
+
 /// Spawn `count` executor threads consuming from `work`.
 ///
-/// Returns the join handles; workers exit when the queue closes.
-/// Worker 0 signals readiness (registry compiled) through `ready`.
+/// Returns the join handles; workers exit when the queue closes.  Each
+/// worker sends exactly one [`ReadySignal`] and drops its sender, so
+/// the channel disconnects once every worker has reported.
 pub fn spawn_executors(
     count: usize,
     artifact_dir: PathBuf,
     work: BoundedQueue<Batch>,
     metrics: Arc<Metrics>,
-    ready: std::sync::mpsc::Sender<crate::error::Result<()>>,
+    ready: mpsc::Sender<ReadySignal>,
 ) -> Vec<JoinHandle<()>> {
     (0..count)
         .map(|i| {
@@ -41,30 +57,45 @@ pub fn spawn_executors(
         .collect()
 }
 
+/// Block until the sentinel (worker 0) has reported, and return its
+/// result.  Reports from other workers are drained and — on failure —
+/// logged, never returned.  If the channel disconnects before worker 0
+/// reports (e.g. it panicked before sending), that is a startup error.
+pub fn await_readiness(ready: &mpsc::Receiver<ReadySignal>) -> crate::error::Result<()> {
+    for (id, result) in ready.iter() {
+        if id == 0 {
+            return result;
+        }
+        if let Err(e) = result {
+            eprintln!("xai-executor-{id}: startup failed (non-sentinel): {e}");
+        }
+    }
+    Err(crate::error::Error::Coordinator(
+        "no executor came up: readiness channel closed before worker 0 reported".into(),
+    ))
+}
+
 fn executor_loop(
     id: usize,
     dir: &std::path::Path,
     work: BoundedQueue<Batch>,
     metrics: Arc<Metrics>,
-    ready: std::sync::mpsc::Sender<crate::error::Result<()>>,
+    ready: mpsc::Sender<ReadySignal>,
 ) {
-    // Each worker compiles its own registry (own PJRT client).
+    // Each worker compiles its own registry (own PJRT client), reports
+    // the outcome once, and releases the readiness channel.
     let registry = match crate::runtime::ArtifactRegistry::load(dir) {
         Ok(r) => {
-            let _ = ready.send(Ok(()));
+            let _ = ready.send((id, Ok(())));
+            drop(ready);
             r
         }
         Err(e) => {
-            log::error!("executor {id}: failed to load artifacts: {e}");
-            let _ = ready.send(Err(e));
+            eprintln!("executor {id}: failed to load artifacts: {e}");
+            let _ = ready.send((id, Err(e)));
             return;
         }
     };
-    log::info!(
-        "executor {id}: ready with {} executables on {}",
-        registry.len(),
-        registry.platform()
-    );
     while let Some(batch) = work.pop() {
         let n = batch.envelopes.len();
         metrics.record_batch(n);
@@ -84,5 +115,44 @@ fn executor_loop(
             let _ = env.reply.send(result);
         }
     }
-    log::info!("executor {id}: shutting down");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    #[test]
+    fn sentinel_failure_not_masked_by_earlier_ok() {
+        // Worker 1 comes up first and reports Ok; worker 0 then fails.
+        // The old protocol returned the first message (Ok) — the gate
+        // must key on worker 0 specifically.
+        let (tx, rx) = mpsc::channel();
+        tx.send((1, Ok(()))).unwrap();
+        tx.send((0, Err(Error::Artifact("bad manifest".into()))))
+            .unwrap();
+        drop(tx);
+        assert!(await_readiness(&rx).is_err());
+    }
+
+    #[test]
+    fn sentinel_ok_before_other_failure() {
+        // Reverse order: worker 0 is healthy, a later worker fails —
+        // startup succeeds (degraded capacity is an operational issue).
+        let (tx, rx) = mpsc::channel();
+        tx.send((0, Ok(()))).unwrap();
+        tx.send((2, Err(Error::Artifact("bad manifest".into()))))
+            .unwrap();
+        drop(tx);
+        assert!(await_readiness(&rx).is_ok());
+    }
+
+    #[test]
+    fn disconnect_before_sentinel_is_an_error() {
+        let (tx, rx) = mpsc::channel::<ReadySignal>();
+        tx.send((1, Ok(()))).unwrap();
+        drop(tx);
+        let err = await_readiness(&rx).unwrap_err();
+        assert!(err.to_string().contains("worker 0"), "{err}");
+    }
 }

@@ -1,36 +1,68 @@
 //! Crate-wide error type.
+//!
+//! `Display`/`Error` are implemented by hand: this offline build
+//! carries zero external dependencies (no `thiserror`), and the
+//! message strings below are part of the public surface tests rely on,
+//! so they are kept verbatim.
 
-use thiserror::Error;
+use std::fmt;
+
+// The PJRT bindings are stubbed offline; see `runtime::pjrt_stub`.
+use crate::runtime::pjrt_stub as xla;
 
 /// Unified error for runtime, coordinator, and configuration failures.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    /// PJRT / XLA failures surfaced from the `xla` crate.
-    #[error("xla runtime error: {0}")]
+    /// PJRT / XLA failures surfaced from the `xla` bindings.
     Xla(String),
 
     /// Artifact manifest missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Shape mismatch between a request and the compiled executable.
-    #[error("shape mismatch: expected {expected}, got {got}")]
     Shape { expected: String, got: String },
 
     /// Coordinator queue closed or over capacity.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Configuration file / CLI errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Numerical failure (singular system, non-finite values).
-    #[error("numeric error: {0}")]
     Numeric(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Shape { expected, got } => {
+                write!(f, "shape mismatch: expected {expected}, got {got}")
+            }
+            Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Numeric(msg) => write!(f, "numeric error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

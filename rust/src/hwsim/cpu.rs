@@ -114,12 +114,23 @@ mod tests {
 
     #[test]
     fn cpu_prefers_fft_schedule_over_matmul_dft() {
-        // The reason the CPU baseline uses radix-2 FFT: the matmul-form
-        // DFT (Eq. 14) costs O(n³) flops vs O(n² log n), and a CPU has
-        // no systolic array to make the extra flops free.
+        // The reason the CPU baseline uses the planned FFT: the
+        // matmul-form DFT (Eq. 14) costs O(n³) flops vs O(n² log n),
+        // and a CPU has no systolic array to make the extra flops free.
         let cpu = CpuSim::default();
         let fft = cpu.op_cost(&Op::Fft2 { m: 256, n: 256 }, 8);
         let dft = cpu.op_cost(&Op::Dft2Matmul { m: 256, n: 256 }, 8);
+        assert!(fft.busy_s < dft.busy_s, "{} vs {}", fft.busy_s, dft.busy_s);
+    }
+
+    #[test]
+    fn fft_schedule_wins_even_off_pow2_at_scale() {
+        // 1000 is not a power of two: the planned engine pads each line
+        // to 2048 and runs three FFTs there (Bluestein), yet O(n log n)
+        // still beats the O(n³) matmul form at serving sizes.
+        let cpu = CpuSim::default();
+        let fft = cpu.op_cost(&Op::Fft2 { m: 1000, n: 1000 }, 8);
+        let dft = cpu.op_cost(&Op::Dft2Matmul { m: 1000, n: 1000 }, 8);
         assert!(fft.busy_s < dft.busy_s, "{} vs {}", fft.busy_s, dft.busy_s);
     }
 

@@ -12,11 +12,15 @@
 //! * **Layer 3** — this crate: a Rust coordinator that loads the compiled
 //!   artifacts through PJRT ([`runtime`]), serves batched explanation
 //!   requests ([`coordinator`]), and hosts every substrate the paper's
-//!   evaluation needs — a dense linear-algebra library ([`linalg`]), the
-//!   three XAI algorithms with their unaccelerated baselines ([`xai`]),
-//!   analytical CPU/GPU/TPU performance + energy simulators ([`hwsim`]),
-//!   layer-level specs of VGG16/VGG19/ResNet50 ([`models`]), and synthetic
-//!   workload generators ([`data`]).
+//!   evaluation needs — a dense linear-algebra library ([`linalg`]) built
+//!   around a plan-based batched FFT engine (`linalg::fft`: cached
+//!   [`linalg::fft::FftPlan`]/[`linalg::fft::Fft2Plan`] with f64-derived
+//!   twiddle tables, Bluestein for arbitrary lengths, a real-input fast
+//!   path, and scoped-thread row/column sharding), the three XAI
+//!   algorithms with their unaccelerated baselines ([`xai`]), analytical
+//!   CPU/GPU/TPU performance + energy simulators ([`hwsim`]), layer-level
+//!   specs of VGG16/VGG19/ResNet50 ([`models`]), and synthetic workload
+//!   generators ([`data`]).
 //!
 //! Python runs only at build time (`make artifacts`); the serving binary
 //! is self-contained.
@@ -54,6 +58,7 @@ pub mod xai;
 pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::hwsim::{self, device::Device, DeviceKind};
+    pub use crate::linalg::fft::{Fft2Plan, FftPlan};
     pub use crate::linalg::{self, complex::C32, matrix::Matrix};
     pub use crate::trace::{NativeEngine, Op, OpTrace};
     pub use crate::xai;

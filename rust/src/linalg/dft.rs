@@ -9,11 +9,15 @@ use crate::linalg::complex::C32;
 use crate::linalg::matrix::{CMatrix, Matrix};
 
 /// Unitary DFT matrix: W[k, m] = e^{-2πi·km/n} / sqrt(n).
+///
+/// Angles are evaluated in `f64` and rounded once — the same precision
+/// convention as the `linalg::fft` plan tables, so the two schedules
+/// agree to f32 rounding rather than diverging at large `n`.
 pub fn dft_matrix(n: usize) -> CMatrix {
     let s = 1.0 / (n as f32).sqrt();
     CMatrix::from_fn(n, n, |k, m| {
-        let ang = -2.0 * std::f32::consts::PI * ((k * m) % n) as f32 / n as f32;
-        C32::cis(ang).scale(s)
+        let ang = -2.0 * std::f64::consts::PI * ((k * m) % n) as f64 / n as f64;
+        C32::new(ang.cos() as f32, ang.sin() as f32).scale(s)
     })
 }
 
@@ -21,8 +25,8 @@ pub fn dft_matrix(n: usize) -> CMatrix {
 pub fn idft_matrix(n: usize) -> CMatrix {
     let s = 1.0 / (n as f32).sqrt();
     CMatrix::from_fn(n, n, |k, m| {
-        let ang = 2.0 * std::f32::consts::PI * ((k * m) % n) as f32 / n as f32;
-        C32::cis(ang).scale(s)
+        let ang = 2.0 * std::f64::consts::PI * ((k * m) % n) as f64 / n as f64;
+        C32::new(ang.cos() as f32, ang.sin() as f32).scale(s)
     })
 }
 

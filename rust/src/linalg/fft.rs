@@ -1,5 +1,25 @@
-//! Fast Fourier transform: iterative radix-2 Cooley-Tukey plus a direct
-//! O(n²) DFT fallback for non-power-of-two lengths.
+//! Plan-based fast Fourier transforms — the serving hot path.
+//!
+//! Every explanation request (distillation, saliency, the spectral
+//! surrogate behind Shapley games) funnels through the 2-D transform,
+//! so this module is built around reusable, cached *plans* rather than
+//! ad-hoc per-call recomputation:
+//!
+//! * [`FftPlan`] — per-length state: twiddle tables evaluated in `f64`
+//!   and rounded once to [`C32`] (no multiplicative-recurrence drift),
+//!   a precomputed bit-reversal permutation, and — for non-power-of-two
+//!   lengths — Bluestein chirp tables so every length runs in
+//!   O(n log n) instead of degrading to the direct O(n²) DFT.
+//! * [`Fft2Plan`] — batched 2-D transform over [`CMatrix`] storage:
+//!   in-place contiguous row passes, strided column passes through a
+//!   reused line buffer (no per-row/per-column heap allocation in the
+//!   inner loops), a real-input fast path ([`Fft2Plan::rfft2`]) that
+//!   packs two real rows into one complex transform, and row/column
+//!   sharding across threads with `std::thread::scope` — the same
+//!   pattern as `linalg::block::matmul_parallel`.
+//! * A process-wide plan cache ([`plan`] / [`plan2`]) so repeated
+//!   requests at one shape (the serving common case) pay plan
+//!   construction once.
 //!
 //! Unitary normalization throughout (1/sqrt(n) per transform) to match
 //! the paper's Eq. 7 and the Pallas kernels.  This is the *CPU
@@ -7,124 +27,525 @@
 //! against which the matmul-form TPU path (Eq. 14) is compared.
 
 use crate::linalg::complex::C32;
-use crate::linalg::matrix::CMatrix;
+use crate::linalg::matrix::{CMatrix, Matrix};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
-/// In-place unitary FFT of a power-of-two-length buffer.
-pub fn fft_pow2(buf: &mut [C32]) {
-    let n = buf.len();
-    assert!(n.is_power_of_two(), "fft_pow2 requires power-of-two length");
-    fft_raw(buf, false);
-    let s = 1.0 / (n as f32).sqrt();
-    for z in buf.iter_mut() {
-        *z = z.scale(s);
-    }
+// ---------------------------------------------------------------------------
+// 1-D plans
+// ---------------------------------------------------------------------------
+
+/// Cached per-length transform state.  Construction is the only
+/// expensive step; [`FftPlan::process`] is allocation-free when handed
+/// a scratch buffer of [`FftPlan::scratch_len`] elements.
+pub struct FftPlan {
+    n: usize,
+    kind: PlanKind,
 }
 
-/// In-place unitary inverse FFT of a power-of-two-length buffer.
-pub fn ifft_pow2(buf: &mut [C32]) {
-    let n = buf.len();
-    assert!(n.is_power_of_two());
-    fft_raw(buf, true);
-    let s = 1.0 / (n as f32).sqrt();
-    for z in buf.iter_mut() {
-        *z = z.scale(s);
-    }
+enum PlanKind {
+    /// Iterative radix-2 Cooley-Tukey.  `tw[k] = e^{-2πik/n}` for
+    /// k < n/2 (forward sign; the inverse conjugates on the fly);
+    /// stage `len` reads `tw[k · n/len]`.
+    Pow2 { bitrev: Vec<u32>, tw: Vec<C32> },
+    /// Bluestein chirp-z: any length as three power-of-two FFTs of
+    /// length `m = next_pow2(2n − 1)`.  `chirp[k] = e^{-iπk²/n}` and
+    /// `fb` is the precomputed forward FFT of the extended conjugate
+    /// chirp, so each call costs two pow-2 transforms plus O(m)
+    /// pointwise work.
+    Bluestein {
+        m: usize,
+        chirp: Vec<C32>,
+        fb: Vec<C32>,
+        inner: Box<FftPlan>,
+    },
 }
 
-/// Unnormalized iterative radix-2 Cooley-Tukey.
-fn fft_raw(buf: &mut [C32], inverse: bool) {
-    let n = buf.len();
-    if n <= 1 {
-        return;
+impl FftPlan {
+    /// Build a plan for length-`n` transforms.  All trigonometry is
+    /// evaluated in `f64` and rounded once, so twiddle error stays at
+    /// one ULP even for the last entries of long tables.
+    pub fn new(n: usize) -> FftPlan {
+        let kind = if n.is_power_of_two() || n <= 1 {
+            let mut bitrev = vec![0u32; n];
+            for i in 1..n {
+                let odd = if i & 1 == 1 { (n >> 1) as u32 } else { 0 };
+                bitrev[i] = (bitrev[i >> 1] >> 1) | odd;
+            }
+            let mut tw = Vec::with_capacity(n / 2);
+            for k in 0..n / 2 {
+                let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+                tw.push(C32::new(ang.cos() as f32, ang.sin() as f32));
+            }
+            PlanKind::Pow2 { bitrev, tw }
+        } else {
+            let m = bluestein_padded_len(n);
+            let inner = Box::new(FftPlan::new(m));
+            let two_n = 2 * n as u64;
+            let mut chirp = Vec::with_capacity(n);
+            for k in 0..n as u64 {
+                let ang = -std::f64::consts::PI * ((k * k) % two_n) as f64 / n as f64;
+                chirp.push(C32::new(ang.cos() as f32, ang.sin() as f32));
+            }
+            let mut fb = vec![C32::ZERO; m];
+            fb[0] = C32::ONE;
+            for j in 1..n {
+                let c = chirp[j].conj();
+                fb[j] = c;
+                fb[m - j] = c;
+            }
+            inner.process(&mut fb, false, &mut []);
+            PlanKind::Bluestein {
+                m,
+                chirp,
+                fb,
+                inner,
+            }
+        };
+        FftPlan { n, kind }
     }
-    // bit-reversal permutation
-    let mut j = 0usize;
-    for i in 1..n {
-        let mut bit = n >> 1;
-        while j & bit != 0 {
-            j ^= bit;
-            bit >>= 1;
+
+    /// Transform length this plan serves.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Scratch elements [`FftPlan::process`] needs (0 for powers of
+    /// two; the padded convolution length for Bluestein).
+    pub fn scratch_len(&self) -> usize {
+        match &self.kind {
+            PlanKind::Pow2 { .. } => 0,
+            PlanKind::Bluestein { m, .. } => *m,
         }
-        j |= bit;
+    }
+
+    /// In-place **unnormalized** DFT (sign −1 forward, +1 inverse; the
+    /// inverse is *not* divided by n — callers apply their own
+    /// normalization, the unitary wrappers use 1/sqrt(n)).
+    pub fn process(&self, buf: &mut [C32], inverse: bool, scratch: &mut [C32]) {
+        assert_eq!(buf.len(), self.n, "buffer length != plan length");
+        if self.n <= 1 {
+            return;
+        }
+        match &self.kind {
+            PlanKind::Pow2 { bitrev, tw } => process_pow2(bitrev, tw, buf, inverse),
+            PlanKind::Bluestein {
+                m,
+                chirp,
+                fb,
+                inner,
+            } => {
+                let n = self.n;
+                assert!(
+                    scratch.len() >= *m,
+                    "bluestein scratch: need {m}, got {}",
+                    scratch.len()
+                );
+                if inverse {
+                    for z in buf.iter_mut() {
+                        *z = z.conj();
+                    }
+                }
+                let a = &mut scratch[..*m];
+                for ((dst, &x), &c) in a[..n].iter_mut().zip(buf.iter()).zip(chirp.iter()) {
+                    *dst = x * c;
+                }
+                a[n..].fill(C32::ZERO);
+                inner.process(a, false, &mut []);
+                for (z, &b) in a.iter_mut().zip(fb.iter()) {
+                    *z = *z * b;
+                }
+                inner.process(a, true, &mut []);
+                let inv_m = 1.0 / *m as f32;
+                for ((dst, &src), &c) in buf.iter_mut().zip(a[..n].iter()).zip(chirp.iter()) {
+                    let v = (src * c).scale(inv_m);
+                    *dst = if inverse { v.conj() } else { v };
+                }
+            }
+        }
+    }
+
+    /// Unitary forward transform (allocates Bluestein scratch; hot
+    /// paths should use [`FftPlan::process`] with a reused buffer).
+    pub fn forward_unitary(&self, buf: &mut [C32]) {
+        let mut scratch = vec![C32::ZERO; self.scratch_len()];
+        self.process(buf, false, &mut scratch);
+        unitary_scale(buf, self.n);
+    }
+
+    /// Unitary inverse transform.
+    pub fn inverse_unitary(&self, buf: &mut [C32]) {
+        let mut scratch = vec![C32::ZERO; self.scratch_len()];
+        self.process(buf, true, &mut scratch);
+        unitary_scale(buf, self.n);
+    }
+}
+
+/// Padded power-of-two convolution length Bluestein uses for a
+/// non-power-of-two transform of length `n`.  Exported so cost models
+/// (`trace::Op::Fft2`) stay tied to the schedule the engine actually
+/// runs.
+pub fn bluestein_padded_len(n: usize) -> usize {
+    (2 * n - 1).next_power_of_two()
+}
+
+fn unitary_scale(buf: &mut [C32], n: usize) {
+    if n > 1 {
+        let s = 1.0 / (n as f32).sqrt();
+        for z in buf.iter_mut() {
+            *z = z.scale(s);
+        }
+    }
+}
+
+fn process_pow2(bitrev: &[u32], tw: &[C32], buf: &mut [C32], inverse: bool) {
+    let n = buf.len();
+    for (i, &j) in bitrev.iter().enumerate() {
+        let j = j as usize;
         if i < j {
             buf.swap(i, j);
         }
     }
-    let sign = if inverse { 1.0 } else { -1.0 };
     let mut len = 2;
     while len <= n {
-        let ang = sign * 2.0 * std::f32::consts::PI / len as f32;
-        let wlen = C32::cis(ang);
-        for start in (0..n).step_by(len) {
-            let mut w = C32::ONE;
-            for k in 0..len / 2 {
+        let stride = n / len;
+        let half = len / 2;
+        let mut start = 0;
+        while start < n {
+            for k in 0..half {
+                let t = tw[k * stride];
+                let w = if inverse { t.conj() } else { t };
                 let u = buf[start + k];
-                let v = buf[start + k + len / 2] * w;
+                let v = buf[start + k + half] * w;
                 buf[start + k] = u + v;
-                buf[start + k + len / 2] = u - v;
-                w = w * wlen;
+                buf[start + k + half] = u - v;
             }
+            start += len;
         }
         len <<= 1;
     }
 }
 
-/// Unitary DFT of arbitrary length (direct O(n²) when not a power of 2).
-pub fn dft_any(input: &[C32], inverse: bool) -> Vec<C32> {
-    let n = input.len();
-    if n.is_power_of_two() {
-        let mut buf = input.to_vec();
-        if inverse {
-            ifft_pow2(&mut buf);
-        } else {
-            fft_pow2(&mut buf);
-        }
-        return buf;
-    }
-    let sign = if inverse { 1.0 } else { -1.0 };
-    let s = 1.0 / (n as f32).sqrt();
-    (0..n)
-        .map(|k| {
-            let mut acc = C32::ZERO;
-            for (m, &x) in input.iter().enumerate() {
-                let ang = sign * 2.0 * std::f32::consts::PI * (k * m % n) as f32 / n as f32;
-                acc += x * C32::cis(ang);
-            }
-            acc.scale(s)
-        })
-        .collect()
+// ---------------------------------------------------------------------------
+// 2-D plans
+// ---------------------------------------------------------------------------
+
+/// Batched 2-D transform plan: a row plan (length = `cols`) plus a
+/// column plan (length = `rows`), shared through the global cache so a
+/// square plan holds one table set, not two.
+pub struct Fft2Plan {
+    pub rows: usize,
+    pub cols: usize,
+    row_plan: Arc<FftPlan>,
+    col_plan: Arc<FftPlan>,
 }
 
-/// Unitary 2-D FFT: rows then columns (paper §III-D two-stage schedule).
+impl Fft2Plan {
+    pub fn new(rows: usize, cols: usize) -> Fft2Plan {
+        Fft2Plan {
+            rows,
+            cols,
+            row_plan: plan(cols),
+            col_plan: plan(rows),
+        }
+    }
+
+    /// In-place unitary 2-D transform: contiguous row pass, then
+    /// strided column pass, then one 1/sqrt(MN) scale pass.  `threads`
+    /// shards rows (stage 1) and columns (stage 2) across scoped
+    /// worker threads; results are identical for every thread count.
+    pub fn process(&self, x: &mut CMatrix, inverse: bool, threads: usize) {
+        assert_eq!(
+            (x.rows, x.cols),
+            (self.rows, self.cols),
+            "matrix shape != plan shape"
+        );
+        let (m, n) = (self.rows, self.cols);
+        if m == 0 || n == 0 {
+            return;
+        }
+        let threads = threads.max(1);
+        self.row_pass(&mut x.data, inverse, threads);
+        self.col_pass(&mut x.data, inverse, threads);
+        unitary_scale(&mut x.data, m * n);
+    }
+
+    /// Unitary 2-D FFT into a fresh matrix.
+    pub fn fft2(&self, x: &CMatrix, threads: usize) -> CMatrix {
+        let mut out = x.clone();
+        self.process(&mut out, false, threads);
+        out
+    }
+
+    /// Unitary inverse 2-D FFT into a fresh matrix.
+    pub fn ifft2(&self, x: &CMatrix, threads: usize) -> CMatrix {
+        let mut out = x.clone();
+        self.process(&mut out, true, threads);
+        out
+    }
+
+    /// Real-input fast path: forward unitary 2-D FFT of a real matrix.
+    ///
+    /// The row stage packs two real rows per complex transform
+    /// (`z = a + ib`, then `A[k] = (Z[k] + conj(Z[−k]))/2`,
+    /// `B[k] = −i(Z[k] − conj(Z[−k]))/2`), halving stage-1 work; the
+    /// column stage is the ordinary complex pass.
+    pub fn rfft2(&self, x: &Matrix, threads: usize) -> CMatrix {
+        assert_eq!(
+            (x.rows, x.cols),
+            (self.rows, self.cols),
+            "matrix shape != plan shape"
+        );
+        let (m, n) = (self.rows, self.cols);
+        let mut out = CMatrix::zeros(m, n);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        let threads = threads.max(1);
+        let pairs = m / 2;
+        {
+            let (body, tail) = out.data.split_at_mut(pairs * 2 * n);
+            let xdata = &x.data[..];
+            let row_plan = &*self.row_plan;
+            if threads <= 1 || pairs < 2 * threads {
+                run_row_pairs(row_plan, body, xdata, 0, n);
+            } else {
+                let chunk_pairs = pairs.div_ceil(threads);
+                std::thread::scope(|scope| {
+                    for (t, band) in body.chunks_mut(chunk_pairs * 2 * n).enumerate() {
+                        let r0 = t * chunk_pairs * 2;
+                        scope.spawn(move || run_row_pairs(row_plan, band, xdata, r0, n));
+                    }
+                });
+            }
+            if m % 2 == 1 {
+                let r = m - 1;
+                let row = &mut tail[..n];
+                for (j, slot) in row.iter_mut().enumerate() {
+                    *slot = C32::from(xdata[r * n + j]);
+                }
+                let mut scratch = vec![C32::ZERO; row_plan.scratch_len()];
+                row_plan.process(row, false, &mut scratch);
+            }
+        }
+        self.col_pass(&mut out.data, false, threads);
+        unitary_scale(&mut out.data, m * n);
+        out
+    }
+
+    /// Stage 1: every row is a contiguous slice — transform in place,
+    /// sharding row bands across threads with `chunks_mut`.
+    fn row_pass(&self, data: &mut [C32], inverse: bool, threads: usize) {
+        let (m, n) = (self.rows, self.cols);
+        let row_plan = &*self.row_plan;
+        if threads <= 1 || m < 2 * threads {
+            run_rows(row_plan, data, n, inverse);
+            return;
+        }
+        let band_rows = m.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for band in data.chunks_mut(band_rows * n) {
+                scope.spawn(move || run_rows(row_plan, band, n, inverse));
+            }
+        });
+    }
+
+    /// Stage 2: strided column pass.  Single-threaded it runs fully in
+    /// place through one reused line buffer; threaded, each worker
+    /// gathers and transforms a disjoint column shard into its own
+    /// contiguous block (reading the matrix through a shared borrow),
+    /// and the shards are scattered back after the scope joins.
+    fn col_pass(&self, data: &mut [C32], inverse: bool, threads: usize) {
+        let (m, n) = (self.rows, self.cols);
+        let col_plan = &*self.col_plan;
+        if threads <= 1 || n < 2 * threads || m < 2 {
+            let mut line = vec![C32::ZERO; m];
+            let mut scratch = vec![C32::ZERO; col_plan.scratch_len()];
+            for c in 0..n {
+                for (r, slot) in line.iter_mut().enumerate() {
+                    *slot = data[r * n + c];
+                }
+                col_plan.process(&mut line, inverse, &mut scratch);
+                for (r, &v) in line.iter().enumerate() {
+                    data[r * n + c] = v;
+                }
+            }
+            return;
+        }
+        let shard = n.div_ceil(threads);
+        let shards: Vec<(usize, Vec<C32>)> = std::thread::scope(|scope| {
+            let shared = &*data;
+            let mut handles = Vec::new();
+            let mut c0 = 0;
+            while c0 < n {
+                let w = shard.min(n - c0);
+                handles.push(scope.spawn(move || {
+                    let mut block = vec![C32::ZERO; m * w];
+                    let mut scratch = vec![C32::ZERO; col_plan.scratch_len()];
+                    for (j, line) in block.chunks_mut(m).enumerate() {
+                        for (r, slot) in line.iter_mut().enumerate() {
+                            *slot = shared[r * n + c0 + j];
+                        }
+                        col_plan.process(line, inverse, &mut scratch);
+                    }
+                    (c0, block)
+                }));
+                c0 += w;
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (c0, block) in shards {
+            for (j, line) in block.chunks(m).enumerate() {
+                for (r, &v) in line.iter().enumerate() {
+                    data[r * n + c0 + j] = v;
+                }
+            }
+        }
+    }
+}
+
+fn run_rows(plan: &FftPlan, band: &mut [C32], line_len: usize, inverse: bool) {
+    let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+    for row in band.chunks_mut(line_len) {
+        plan.process(row, inverse, &mut scratch);
+    }
+}
+
+/// Row stage of [`Fft2Plan::rfft2`] over a band of row *pairs*: pack
+/// real rows `r0+2p` / `r0+2p+1` into one complex line, transform, and
+/// unpack the two spectra by Hermitian symmetry.
+fn run_row_pairs(plan: &FftPlan, band: &mut [C32], xdata: &[f32], r0: usize, n: usize) {
+    let mut z = vec![C32::ZERO; n];
+    let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+    for (p, row_pair) in band.chunks_mut(2 * n).enumerate() {
+        let r = r0 + 2 * p;
+        for (j, zj) in z.iter_mut().enumerate() {
+            *zj = C32::new(xdata[r * n + j], xdata[(r + 1) * n + j]);
+        }
+        plan.process(&mut z, false, &mut scratch);
+        let (top, bot) = row_pair.split_at_mut(n);
+        for (k, (t, b)) in top.iter_mut().zip(bot.iter_mut()).enumerate() {
+            let zk = z[k];
+            let zc = z[(n - k) % n].conj();
+            *t = (zk + zc).scale(0.5);
+            let d = zk - zc;
+            *b = C32::new(d.im * 0.5, -d.re * 0.5);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan cache
+// ---------------------------------------------------------------------------
+
+fn plan_cache() -> &'static Mutex<HashMap<usize, Arc<FftPlan>>> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn plan2_cache() -> &'static Mutex<HashMap<(usize, usize), Arc<Fft2Plan>>> {
+    static CACHE: OnceLock<Mutex<HashMap<(usize, usize), Arc<Fft2Plan>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Shared 1-D plan for length `n` (built once per process per length).
+pub fn plan(n: usize) -> Arc<FftPlan> {
+    if let Some(p) = plan_cache().lock().unwrap().get(&n) {
+        return p.clone();
+    }
+    // Built outside the lock: Bluestein construction recursively needs
+    // the padded power-of-two plan, and a lost race only costs one
+    // redundant build.
+    let built = Arc::new(FftPlan::new(n));
+    plan_cache()
+        .lock()
+        .unwrap()
+        .entry(n)
+        .or_insert(built)
+        .clone()
+}
+
+/// Shared 2-D plan for `rows × cols` matrices.
+pub fn plan2(rows: usize, cols: usize) -> Arc<Fft2Plan> {
+    if let Some(p) = plan2_cache().lock().unwrap().get(&(rows, cols)) {
+        return p.clone();
+    }
+    let built = Arc::new(Fft2Plan::new(rows, cols));
+    plan2_cache()
+        .lock()
+        .unwrap()
+        .entry((rows, cols))
+        .or_insert(built)
+        .clone()
+}
+
+/// Worker-thread count for a transform of `rows × cols`: 1 below the
+/// threading break-even point, else the host parallelism (capped — the
+/// coordinator's executors want cores too).
+pub fn recommended_threads(rows: usize, cols: usize) -> usize {
+    if rows * cols < 32 * 1024 {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+// ---------------------------------------------------------------------------
+// Back-compatible entry points
+// ---------------------------------------------------------------------------
+
+/// In-place unitary FFT of a power-of-two-length buffer.
+pub fn fft_pow2(buf: &mut [C32]) {
+    assert!(
+        buf.len().is_power_of_two(),
+        "fft_pow2 requires power-of-two length"
+    );
+    plan(buf.len()).forward_unitary(buf);
+}
+
+/// In-place unitary inverse FFT of a power-of-two-length buffer.
+pub fn ifft_pow2(buf: &mut [C32]) {
+    assert!(buf.len().is_power_of_two());
+    plan(buf.len()).inverse_unitary(buf);
+}
+
+/// Unitary DFT of arbitrary length — O(n log n) for every `n` (radix-2
+/// when possible, Bluestein otherwise).
+pub fn dft_any(input: &[C32], inverse: bool) -> Vec<C32> {
+    let n = input.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let p = plan(n);
+    let mut buf = input.to_vec();
+    if inverse {
+        p.inverse_unitary(&mut buf);
+    } else {
+        p.forward_unitary(&mut buf);
+    }
+    buf
+}
+
+/// Unitary 2-D FFT: rows then columns (paper §III-D two-stage
+/// schedule), through the shared plan cache with automatic threading.
 pub fn fft2(x: &CMatrix) -> CMatrix {
-    transform2(x, false)
+    plan2(x.rows, x.cols).fft2(x, recommended_threads(x.rows, x.cols))
 }
 
 /// Unitary inverse 2-D FFT.
 pub fn ifft2(x: &CMatrix) -> CMatrix {
-    transform2(x, true)
+    plan2(x.rows, x.cols).ifft2(x, recommended_threads(x.rows, x.cols))
 }
 
-fn transform2(x: &CMatrix, inverse: bool) -> CMatrix {
-    let (m, n) = (x.rows, x.cols);
-    let mut out = CMatrix::zeros(m, n);
-    // Stage 1: rows.
-    for r in 0..m {
-        let row: Vec<C32> = (0..n).map(|c| x.get(r, c)).collect();
-        let t = dft_any(&row, inverse);
-        for c in 0..n {
-            out.set(r, c, t[c]);
-        }
-    }
-    // Stage 2: columns.
-    for c in 0..n {
-        let col: Vec<C32> = (0..m).map(|r| out.get(r, c)).collect();
-        let t = dft_any(&col, inverse);
-        for r in 0..m {
-            out.set(r, c, t[r]);
-        }
-    }
-    out
+/// Unitary 2-D FFT of a real matrix (the packed-pair fast path).
+pub fn rfft2(x: &Matrix) -> CMatrix {
+    plan2(x.rows, x.cols).rfft2(x, recommended_threads(x.rows, x.cols))
 }
 
 #[cfg(test)]
@@ -132,6 +553,45 @@ mod tests {
     use super::*;
     use crate::linalg::matrix::Matrix;
     use crate::util::rng::Rng;
+
+    /// Direct DFT with `f64` angle *and* accumulation — the oracle the
+    /// planned transforms are validated against.
+    fn dft_oracle_f64(input: &[C32], inverse: bool) -> Vec<C32> {
+        let n = input.len();
+        let sign = if inverse { 1.0f64 } else { -1.0 };
+        let s = 1.0 / (n as f64).sqrt();
+        let tw: Vec<(f64, f64)> = (0..n)
+            .map(|k| {
+                let ang = sign * 2.0 * std::f64::consts::PI * k as f64 / n as f64;
+                (ang.cos(), ang.sin())
+            })
+            .collect();
+        (0..n)
+            .map(|k| {
+                let (mut re, mut im) = (0.0f64, 0.0f64);
+                for (j, &x) in input.iter().enumerate() {
+                    let (c, si) = tw[(k * j) % n];
+                    re += x.re as f64 * c - x.im as f64 * si;
+                    im += x.re as f64 * si + x.im as f64 * c;
+                }
+                C32::new((re * s) as f32, (im * s) as f32)
+            })
+            .collect()
+    }
+
+    fn random_signal(n: usize, seed: u64) -> Vec<C32> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| C32::new(rng.gauss_f32(), rng.gauss_f32()))
+            .collect()
+    }
+
+    fn max_err(a: &[C32], b: &[C32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
 
     #[test]
     fn fft_of_impulse_is_flat() {
@@ -146,56 +606,75 @@ mod tests {
 
     #[test]
     fn roundtrip_pow2() {
-        let mut rng = Rng::new(0);
-        let orig: Vec<C32> = (0..64)
-            .map(|_| C32::new(rng.gauss_f32(), rng.gauss_f32()))
-            .collect();
+        let orig = random_signal(64, 0);
         let mut buf = orig.clone();
         fft_pow2(&mut buf);
         ifft_pow2(&mut buf);
-        for (a, b) in orig.iter().zip(&buf) {
-            assert!((*a - *b).abs() < 1e-4);
-        }
+        assert!(max_err(&orig, &buf) < 1e-4);
     }
 
     #[test]
-    fn dft_any_matches_fft_on_pow2() {
-        let mut rng = Rng::new(1);
-        let input: Vec<C32> = (0..16)
-            .map(|_| C32::new(rng.gauss_f32(), rng.gauss_f32()))
-            .collect();
-        let direct = {
-            // force the direct path via a manual computation at n=16
-            let n = input.len();
-            let s = 1.0 / (n as f32).sqrt();
-            (0..n)
-                .map(|k| {
-                    let mut acc = C32::ZERO;
-                    for (m, &x) in input.iter().enumerate() {
-                        let ang = -2.0 * std::f32::consts::PI * (k * m) as f32 / n as f32;
-                        acc += x * C32::cis(ang);
-                    }
-                    acc.scale(s)
-                })
-                .collect::<Vec<_>>()
-        };
+    fn dft_any_matches_oracle_on_pow2() {
+        let input = random_signal(16, 1);
+        let direct = dft_oracle_f64(&input, false);
         let fast = dft_any(&input, false);
-        for (a, b) in direct.iter().zip(&fast) {
-            assert!((*a - *b).abs() < 1e-4);
-        }
+        assert!(max_err(&direct, &fast) < 1e-4);
     }
 
     #[test]
     fn roundtrip_non_pow2() {
-        let mut rng = Rng::new(2);
-        let orig: Vec<C32> = (0..12)
-            .map(|_| C32::new(rng.gauss_f32(), rng.gauss_f32()))
-            .collect();
+        let orig = random_signal(12, 2);
         let f = dft_any(&orig, false);
         let back = dft_any(&f, true);
-        for (a, b) in orig.iter().zip(&back) {
-            assert!((*a - *b).abs() < 1e-4);
+        assert!(max_err(&orig, &back) < 1e-4);
+    }
+
+    #[test]
+    fn bluestein_matches_oracle_across_lengths() {
+        // odd, prime, highly-composite, and ImageNet-edge lengths
+        for (i, &n) in [3usize, 5, 7, 12, 13, 17, 100, 224].iter().enumerate() {
+            let input = random_signal(n, 10 + i as u64);
+            for inverse in [false, true] {
+                let fast = dft_any(&input, inverse);
+                let direct = dft_oracle_f64(&input, inverse);
+                assert!(
+                    max_err(&direct, &fast) < 1e-3,
+                    "n={n} inverse={inverse}: err {}",
+                    max_err(&direct, &fast)
+                );
+            }
         }
+    }
+
+    #[test]
+    fn twiddle_accuracy_regression_n4096() {
+        // The seed's f32 multiplicative twiddle recurrence drifted at
+        // long butterfly runs; the tabulated f64 twiddles must track
+        // the f64 direct oracle and round-trip at n = 4096.
+        let orig = random_signal(4096, 3);
+        let fwd = dft_any(&orig, false);
+        let oracle = dft_oracle_f64(&orig, false);
+        assert!(
+            max_err(&fwd, &oracle) < 1e-3,
+            "forward err {}",
+            max_err(&fwd, &oracle)
+        );
+        let back = dft_any(&fwd, true);
+        assert!(
+            max_err(&orig, &back) < 1e-3,
+            "roundtrip err {}",
+            max_err(&orig, &back)
+        );
+    }
+
+    #[test]
+    fn plan_cache_shares_plans() {
+        let a = plan(64);
+        let b = plan(64);
+        assert!(Arc::ptr_eq(&a, &b));
+        let p2a = plan2(16, 64);
+        let p2b = plan2(16, 64);
+        assert!(Arc::ptr_eq(&p2a, &p2b));
     }
 
     #[test]
@@ -217,6 +696,14 @@ mod tests {
     }
 
     #[test]
+    fn fft2_roundtrip_non_pow2() {
+        let mut rng = Rng::new(7);
+        let x = CMatrix::from_real(&Matrix::random(15, 9, &mut rng));
+        let back = ifft2(&fft2(&x));
+        assert!(back.max_abs_diff(&x) < 1e-4);
+    }
+
+    #[test]
     fn linearity() {
         let mut rng = Rng::new(5);
         let a = CMatrix::from_real(&Matrix::random(8, 8, &mut rng));
@@ -227,5 +714,50 @@ mod tests {
         let fb = fft2(&b);
         let rhs = CMatrix::from_fn(8, 8, |r, c| fa.get(r, c) + fb.get(r, c));
         assert!(lhs.max_abs_diff(&rhs) < 1e-4);
+    }
+
+    #[test]
+    fn thread_counts_agree() {
+        let mut rng = Rng::new(6);
+        for (m, n) in [(32usize, 32usize), (17, 24), (33, 9)] {
+            let x = CMatrix::from_real(&Matrix::random(m, n, &mut rng));
+            let p = Fft2Plan::new(m, n);
+            let one = p.fft2(&x, 1);
+            for threads in [2, 4] {
+                let t = p.fft2(&x, threads);
+                assert!(
+                    one.max_abs_diff(&t) < 1e-6,
+                    "threads={threads} diverged at {m}x{n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rfft2_matches_complex_fft2() {
+        let mut rng = Rng::new(8);
+        for (m, n) in [(8usize, 8usize), (9, 7), (12, 20), (5, 16), (1, 8)] {
+            let x = Matrix::random(m, n, &mut rng);
+            let p = Fft2Plan::new(m, n);
+            for threads in [1usize, 4] {
+                let real_path = p.rfft2(&x, threads);
+                let complex_path = p.fft2(&CMatrix::from_real(&x), 1);
+                assert!(
+                    real_path.max_abs_diff(&complex_path) < 1e-4,
+                    "{m}x{n} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn in_place_process_roundtrip() {
+        let mut rng = Rng::new(9);
+        let orig = CMatrix::from_real(&Matrix::random(12, 10, &mut rng));
+        let p = Fft2Plan::new(12, 10);
+        let mut x = orig.clone();
+        p.process(&mut x, false, 2);
+        p.process(&mut x, true, 2);
+        assert!(x.max_abs_diff(&orig) < 1e-4);
     }
 }

@@ -6,8 +6,10 @@
 //! complex arithmetic carried by [`complex::C32`].
 //!
 //! The paper's central trick — Eq. 14, a 2-D DFT as two matmuls — lives
-//! in [`dft`]; a classic radix-2 FFT lives in [`fft`] as the
-//! asymptotically-optimal CPU comparator.
+//! in [`dft`]; the plan-based FFT engine (cached twiddle/bit-reversal
+//! tables, Bluestein off powers of two, threaded batched 2-D
+//! transforms) lives in [`fft`] as the asymptotically-optimal CPU
+//! comparator.
 
 pub mod block;
 pub mod complex;

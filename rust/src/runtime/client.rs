@@ -2,6 +2,10 @@
 
 use crate::error::{Error, Result};
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
+// Offline build: the `xla` PJRT bindings are replaced by an
+// API-compatible stub (see `runtime::pjrt_stub`); swap this alias back
+// to the external crate to restore real execution.
+use crate::runtime::pjrt_stub as xla;
 use std::collections::HashMap;
 use std::path::Path;
 

@@ -10,6 +10,7 @@
 
 pub mod client;
 pub mod manifest;
+pub mod pjrt_stub;
 
 pub use client::{ArtifactRegistry, Executable};
 pub use manifest::{ArtifactSpec, Manifest, Shape};

@@ -1,0 +1,147 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! This build environment has no crates.io access and no
+//! `libxla_extension`, so the real `xla` crate cannot be linked.  This
+//! module mirrors the exact API surface `runtime::client` uses; every
+//! entry point that would touch PJRT fails fast with a descriptive
+//! error, which the coordinator already handles (artifact-load failures
+//! surface through the worker readiness channel).  The native Rust
+//! oracles — `linalg`, `xai`, `hwsim` — are unaffected.
+//!
+//! To re-enable the real runtime: add the `xla` dependency to
+//! `Cargo.toml` and point the `use ... as xla` aliases in
+//! `runtime::client` and `error` back at the external crate.  No other
+//! code changes are needed — call sites compile against this stub and
+//! the real bindings identically.
+
+use std::fmt;
+
+/// Error carrying the reason PJRT is unavailable (or, with the real
+/// bindings, the XLA status message).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT runtime unavailable: built without the `xla` crate (offline image); \
+         native Rust execution paths remain fully functional"
+            .into(),
+    ))
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub): construction is the single failure point, so
+/// registry loading errors out before any artifact is touched.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".into()
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_unavailable() {
+        let err = match PjRtClient::cpu() {
+            Ok(_) => panic!("stub must not construct"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("PJRT runtime unavailable"));
+    }
+
+    #[test]
+    fn registry_load_surfaces_stub_error() {
+        // End-to-end through the crate error type: the registry fails
+        // at client construction with a descriptive message.
+        let loaded = crate::runtime::ArtifactRegistry::load(std::path::Path::new(
+            "definitely-missing-dir",
+        ));
+        let err = match loaded {
+            Ok(_) => panic!("load must fail offline"),
+            Err(e) => e,
+        };
+        let msg = err.to_string();
+        // Either the manifest read fails first (missing dir) or the
+        // stub client does — both are acceptable offline outcomes.
+        assert!(
+            msg.contains("PJRT runtime unavailable") || msg.contains("artifact"),
+            "{msg}"
+        );
+    }
+}

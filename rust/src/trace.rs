@@ -30,7 +30,8 @@ pub enum Op {
     /// 2-D DFT of an m×n matrix *in matmul form* (Eq. 14): two complex
     /// matmuls (m×m)·(m×n) and (m×n)·(n×n).
     Dft2Matmul { m: usize, n: usize },
-    /// 2-D FFT (radix-2 butterfly form) — the CPU-native schedule.
+    /// 2-D FFT (planned butterfly form: radix-2, Bluestein-padded off
+    /// powers of two) — the CPU-native schedule.
     Fft2 { m: usize, n: usize },
     /// Element-wise complex Hadamard division over m×n.
     HadamardDiv { m: usize, n: usize },
@@ -59,12 +60,10 @@ impl Op {
             Op::Dft2Matmul { m, n } => {
                 Op::CMatmul { m, k: m, n }.flops() + Op::CMatmul { m, k: n, n }.flops()
             }
-            // 2-D FFT: MN log2(MN) butterflies, ~10 flops each (complex)
-            Op::Fft2 { m, n } => {
-                let mn = (m * n) as u64;
-                let log = (64 - mn.leading_zeros().max(1)) as u64;
-                10 * mn * log
-            }
+            // 2-D FFT: a length-n pass over every row plus a length-m
+            // pass over every column, costed per line by the planned
+            // engine's actual schedule (see `fft_line_flops`).
+            Op::Fft2 { m, n } => m as u64 * fft_line_flops(n) + n as u64 * fft_line_flops(m),
             // conj-multiply (6) + |x|² (3) + 2 divides (2) per element
             Op::HadamardDiv { m, n } => 11 * (m * n) as u64,
             Op::Elementwise { elems } => elems as u64,
@@ -135,6 +134,26 @@ impl Op {
     }
 }
 
+/// Flops of one planned 1-D FFT line of length `n`, mirroring
+/// `linalg::fft::FftPlan`: radix-2 costs ~5·n·log2(n) real flops; a
+/// non-power-of-two length runs Bluestein — two radix-2 FFTs at the
+/// padded length `next_pow2(2n − 1)` per call (the chirp spectrum is
+/// precomputed in the plan) plus the pointwise chirp and spectrum
+/// products.
+fn fft_line_flops(n: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    if n.is_power_of_two() {
+        let log = n.trailing_zeros() as u64;
+        5 * n as u64 * log
+    } else {
+        let m = fft::bluestein_padded_len(n) as u64;
+        let log = m.trailing_zeros() as u64;
+        2 * 5 * m * log + 8 * m + 12 * n as u64
+    }
+}
+
 /// A recorded sequence of primitive ops.
 #[derive(Debug, Clone, Default)]
 pub struct OpTrace {
@@ -185,9 +204,10 @@ impl OpTrace {
 
 /// Executes linear-algebra primitives natively while recording the op
 /// stream.  The `use_matmul_dft` switch selects between the TPU-form
-/// DFT (Eq. 14, two complex matmuls) and the CPU-form radix-2 FFT — the
-/// results are identical; only the recorded ops (and thus simulated
-/// device cost) differ.
+/// DFT (Eq. 14, two complex matmuls) and the CPU-form planned FFT
+/// (`linalg::fft`, cached radix-2/Bluestein plans) — the results are
+/// identical; only the recorded ops (and thus simulated device cost)
+/// differ.
 #[derive(Debug, Default)]
 pub struct NativeEngine {
     pub trace: OpTrace,
@@ -203,7 +223,7 @@ impl NativeEngine {
         }
     }
 
-    /// Engine in CPU-baseline form (radix-2 FFT schedule).
+    /// Engine in CPU-baseline form (planned-FFT schedule).
     pub fn new_fft_baseline() -> Self {
         Self {
             trace: OpTrace::new(),
@@ -372,6 +392,19 @@ mod tests {
         let m = Op::Dft2Matmul { m: 256, n: 256 }.flops();
         let f = Op::Fft2 { m: 256, n: 256 }.flops();
         assert!(m > f, "matmul {m} vs fft {f}");
+    }
+
+    #[test]
+    fn fft2_flops_model_bluestein_padding() {
+        // 224 is smaller than 256 but not a power of two: the planned
+        // engine pads each line to 512 and runs two FFTs there, so
+        // the costed flops must exceed the 256 radix-2 schedule...
+        let blu = Op::Fft2 { m: 224, n: 224 }.flops();
+        let pow2 = Op::Fft2 { m: 256, n: 256 }.flops();
+        assert!(blu > pow2, "bluestein {blu} vs radix-2 {pow2}");
+        // ...while staying far below the O(n³) matmul form.
+        let mm = Op::Dft2Matmul { m: 224, n: 224 }.flops();
+        assert!(blu * 4 < mm, "bluestein {blu} vs matmul {mm}");
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //!
 //! * [`distill_fft`] — the paper's transformed form: one spectral
 //!   division, `K = F⁻¹(F(Y)/F(X))` (Eq. 5), executed through a
-//!   [`NativeEngine`] so its op stream replays on the device models;
+//!   [`NativeEngine`] so its op stream replays on the device models
+//!   (in FFT-baseline mode the transforms run on the cached
+//!   `linalg::fft` plans, so serving the same shape twice pays plan
+//!   construction once);
 //! * [`distill_gradient_descent`] — the "numerous iterations of
 //!   time-consuming computations" baseline (§I) the paper is beating:
 //!   iterative least-squares on the convolution weights.

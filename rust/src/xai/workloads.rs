@@ -13,8 +13,10 @@ use crate::trace::{Op, OpTrace};
 
 /// Which DFT schedule a trace encodes.  Accelerators run the paper's
 /// matmul form (Eq. 14, MXU-friendly); the CPU baseline runs its best
-/// native algorithm, the radix-2 FFT.  Comparing best-on-each-device is
-/// the honest version of the paper's CPU column.
+/// native algorithm, the planned FFT (`linalg::fft`: radix-2 with
+/// Bluestein padding off powers of two, so O(n log n) holds at every
+/// size the models emit).  Comparing best-on-each-device is the honest
+/// version of the paper's CPU column.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Schedule {
     MatmulForm,

@@ -1,0 +1,133 @@
+//! Property tests for the plan-based FFT engine: the planned transforms
+//! must agree with the two independent oracles — the matmul-form DFT
+//! (Eq. 14, a different algorithm entirely) and the direct O((MN)²)
+//! circular convolution — across mixed sizes (powers of two, odd,
+//! prime, and the 224 ImageNet edge) and thread counts {1, 2, 4}, and
+//! must conserve energy (Parseval) at 256×256.
+
+use xai_accel::linalg::conv::{circ_conv2, circ_conv2_direct};
+use xai_accel::linalg::dft;
+use xai_accel::linalg::fft;
+use xai_accel::linalg::matrix::{CMatrix, Matrix};
+use xai_accel::util::prop::check_cases;
+use xai_accel::util::rng::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+#[test]
+fn planned_fft2_matches_matmul_dft_across_sizes_and_threads() {
+    let mut rng = Rng::new(100);
+    let cases: Vec<(usize, usize)> = vec![(8, 8), (9, 7), (13, 13), (12, 20), (17, 5), (16, 32)];
+    check_cases("planned fft2 == matmul DFT", &cases, |&(m, n)| {
+        let x = CMatrix::from_real(&Matrix::random(m, n, &mut rng));
+        let oracle = dft::dft2_matmul(&x);
+        let plan = fft::plan2(m, n);
+        for threads in THREADS {
+            let fast = plan.fft2(&x, threads);
+            assert!(
+                fast.max_abs_diff(&oracle) < 1e-3,
+                "{m}x{n} threads={threads}: {}",
+                fast.max_abs_diff(&oracle)
+            );
+        }
+    });
+}
+
+#[test]
+fn planned_ifft2_matches_matmul_idft() {
+    let mut rng = Rng::new(101);
+    let cases: Vec<(usize, usize)> = vec![(8, 8), (9, 7), (15, 4), (7, 13)];
+    check_cases("planned ifft2 == matmul IDFT", &cases, |&(m, n)| {
+        let x = CMatrix::from_real(&Matrix::random(m, n, &mut rng));
+        let oracle = dft::idft2_matmul(&x);
+        let plan = fft::plan2(m, n);
+        for threads in THREADS {
+            let fast = plan.ifft2(&x, threads);
+            assert!(
+                fast.max_abs_diff(&oracle) < 1e-3,
+                "{m}x{n} threads={threads}"
+            );
+        }
+    });
+}
+
+#[test]
+fn planned_fft2_matches_matmul_dft_at_224() {
+    // The VGG/ResNet input edge: 224 = 2^5·7 exercises Bluestein at
+    // padded length 512 in both dimensions, under every thread count.
+    let mut rng = Rng::new(102);
+    let x = CMatrix::from_real(&Matrix::random(224, 224, &mut rng));
+    let oracle = dft::dft2_matmul(&x);
+    let plan = fft::plan2(224, 224);
+    for threads in THREADS {
+        let fast = plan.fft2(&x, threads);
+        assert!(
+            fast.max_abs_diff(&oracle) < 5e-3,
+            "224x224 threads={threads}: {}",
+            fast.max_abs_diff(&oracle)
+        );
+    }
+}
+
+#[test]
+fn rfft2_matches_complex_path_across_sizes_and_threads() {
+    let mut rng = Rng::new(103);
+    let cases: Vec<(usize, usize)> = vec![(8, 8), (9, 7), (13, 16), (5, 5), (224, 12)];
+    check_cases("rfft2 == fft2∘from_real", &cases, |&(m, n)| {
+        let x = Matrix::random(m, n, &mut rng);
+        let plan = fft::plan2(m, n);
+        let oracle = plan.fft2(&CMatrix::from_real(&x), 1);
+        for threads in THREADS {
+            let fast = plan.rfft2(&x, threads);
+            assert!(
+                fast.max_abs_diff(&oracle) < 1e-4,
+                "{m}x{n} threads={threads}"
+            );
+        }
+    });
+}
+
+#[test]
+fn planned_convolution_matches_direct_oracle() {
+    let mut rng = Rng::new(104);
+    let cases: Vec<(usize, usize)> = vec![(4, 4), (6, 10), (7, 7), (9, 5), (16, 16), (13, 8)];
+    check_cases("planned conv == direct conv", &cases, |&(m, n)| {
+        let x = Matrix::random(m, n, &mut rng);
+        let k = Matrix::random(m, n, &mut rng);
+        let slow = circ_conv2_direct(&x, &k);
+        // public path (auto threads)
+        let fast = circ_conv2(&x, &k);
+        assert!(fast.max_abs_diff(&slow) < 1e-3, "{m}x{n}: public path");
+        // explicit thread counts through the plan API
+        let plan = fft::plan2(m, n);
+        let scale = ((m * n) as f32).sqrt();
+        for threads in THREADS {
+            let mut fx = plan.rfft2(&x, threads);
+            let fk = plan.rfft2(&k, threads);
+            for (a, &b) in fx.data.iter_mut().zip(&fk.data) {
+                *a = (*a * b).scale(scale);
+            }
+            plan.process(&mut fx, true, threads);
+            assert!(
+                fx.real().max_abs_diff(&slow) < 1e-3,
+                "{m}x{n} threads={threads}"
+            );
+        }
+    });
+}
+
+#[test]
+fn parseval_at_256() {
+    let mut rng = Rng::new(105);
+    let x = Matrix::random(256, 256, &mut rng);
+    let plan = fft::plan2(256, 256);
+    let e_time: f64 = x.data.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    for threads in THREADS {
+        let f = plan.rfft2(&x, threads);
+        let e_freq: f64 = f.data.iter().map(|z| z.norm_sqr() as f64).sum();
+        assert!(
+            ((e_time - e_freq) / e_time).abs() < 1e-3,
+            "threads={threads}: {e_time} vs {e_freq}"
+        );
+    }
+}
