@@ -8,7 +8,7 @@
 //! O(n²) DFT per line off powers of two.
 
 use std::time::Instant;
-use xai_accel::bench::BenchRunner;
+use xai_accel::bench::{json, runner_from_args, BenchResult};
 use xai_accel::linalg::complex::C32;
 use xai_accel::linalg::fft;
 use xai_accel::linalg::matrix::{CMatrix, Matrix};
@@ -101,12 +101,7 @@ fn seed_fft2(x: &CMatrix) -> CMatrix {
 // ---- bench ---------------------------------------------------------------
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
-    let runner = if quick {
-        BenchRunner::quick()
-    } else {
-        BenchRunner::default()
-    };
+    let runner = runner_from_args();
     let mut rng = Rng::new(42);
 
     // Acceptance: 256×256 real input.
@@ -120,16 +115,16 @@ fn main() {
     let agreement = plan.fft2(&x_cplx, 1).max_abs_diff(&seed_fft2(&x_cplx));
     assert!(agreement < 1e-2, "plan vs seed disagree: {agreement}");
 
-    let seed = runner.run("seed fft2", || {
+    let seed = runner.run("fft256_seed", || {
         std::hint::black_box(seed_fft2(&x_cplx));
     });
-    let plan1 = runner.run("planned fft2 t=1", || {
+    let plan1 = runner.run("fft256_planned_t1", || {
         std::hint::black_box(plan.fft2(&x_cplx, 1));
     });
-    let plan_auto = runner.run("planned fft2 auto", || {
+    let plan_auto = runner.run("fft256_planned_auto", || {
         std::hint::black_box(plan.fft2(&x_cplx, auto));
     });
-    let rfft_auto = runner.run("planned rfft2 auto", || {
+    let rfft_auto = runner.run("fft256_rfft2_auto", || {
         std::hint::black_box(plan.rfft2(&x_real, auto));
     });
 
@@ -202,4 +197,7 @@ fn main() {
         ]);
     }
     table.print();
+
+    let refs: Vec<&BenchResult> = vec![&seed, &plan1, &plan_auto, &rfft_auto];
+    json::emit(&refs);
 }

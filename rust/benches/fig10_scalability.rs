@@ -18,7 +18,7 @@ use xai_accel::util::table::{fmt_time, Table};
 use xai_accel::xai::{distillation, workloads};
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = xai_accel::bench::quick_requested();
     let sizes: &[usize] = if quick {
         &[16, 64, 256, 1024]
     } else {

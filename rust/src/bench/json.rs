@@ -1,0 +1,431 @@
+//! Machine-readable bench output + regression comparison.
+//!
+//! The `bench-smoke` CI job runs every bench target with `BENCH_QUICK=1`
+//! and `BENCH_JSON=BENCH_ci.json`; each target appends its results into
+//! that file through [`emit`] (read–merge–rewrite, so the 12 bench
+//! binaries can share one output).  `xai-accel bench-check` then loads
+//! the committed `BENCH_baseline.json` and fails if any tracked kernel
+//! regressed beyond the threshold.
+//!
+//! The format is deliberately tiny — a flat JSON object
+//! `{"name": {"mean_s": …, "p50_s": …, "p99_s": …, "iters": …}}` —
+//! parsed by the hand-rolled reader below (this crate is zero-dep; no
+//! serde offline).
+
+use crate::bench::BenchResult;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Environment variable naming the JSON file bench targets append to.
+pub const BENCH_JSON_ENV: &str = "BENCH_JSON";
+
+/// One serialized bench entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub iters: usize,
+}
+
+impl From<&BenchResult> for BenchRecord {
+    fn from(r: &BenchResult) -> Self {
+        Self {
+            mean_s: r.mean_s,
+            p50_s: r.p50_s,
+            p99_s: r.p99_s,
+            iters: r.iters,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serialize / parse
+// ---------------------------------------------------------------------------
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the map as stable, sorted, pretty-printed JSON.
+pub fn serialize(map: &BTreeMap<String, BenchRecord>) -> String {
+    let mut out = String::from("{\n");
+    for (i, (name, r)) in map.iter().enumerate() {
+        out.push_str(&format!(
+            "  \"{}\": {{\"mean_s\": {}, \"p50_s\": {}, \"p99_s\": {}, \"iters\": {}}}",
+            escape(name),
+            r.mean_s,
+            r.p50_s,
+            r.p99_s,
+            r.iters
+        ));
+        if i + 1 < map.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("}\n");
+    out
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn fail<T>(&self, what: &str) -> Result<T> {
+        Err(Error::Config(format!(
+            "bench json: {what} at byte {}",
+            self.i
+        )))
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8> {
+        match self.peek() {
+            Some(c) => {
+                self.i += 1;
+                Ok(c)
+            }
+            None => self.fail("unexpected end of input"),
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        let got = self.bump()?;
+        if got != c {
+            return self.fail(&format!("expected '{}', got '{}'", c as char, got as char));
+        }
+        Ok(())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        // accumulate raw bytes and decode once, so multi-byte UTF-8
+        // sequences in kernel names survive the round trip
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            match self.bump()? {
+                b'"' => {
+                    return String::from_utf8(out).map_err(|_| {
+                        Error::Config("bench json: invalid utf-8 in string".into())
+                    })
+                }
+                b'\\' => match self.bump()? {
+                    b'"' => out.push(b'"'),
+                    b'\\' => out.push(b'\\'),
+                    b'n' => out.push(b'\n'),
+                    c => return self.fail(&format!("unsupported escape '\\{}'", c as char)),
+                },
+                c => out.push(c),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        if start == self.i {
+            return self.fail("expected a number");
+        }
+        std::str::from_utf8(&self.s[start..self.i])
+            .ok()
+            .and_then(|t| t.parse::<f64>().ok())
+            .ok_or_else(|| Error::Config(format!("bench json: bad number at byte {start}")))
+    }
+}
+
+/// Parse the flat two-level object produced by [`serialize`].
+pub fn parse(text: &str) -> Result<BTreeMap<String, BenchRecord>> {
+    let mut p = Parser {
+        s: text.as_bytes(),
+        i: 0,
+    };
+    let mut out = BTreeMap::new();
+    p.ws();
+    p.expect(b'{')?;
+    p.ws();
+    if p.peek() == Some(b'}') {
+        p.i += 1;
+        return Ok(out);
+    }
+    loop {
+        p.ws();
+        let name = p.string()?;
+        p.ws();
+        p.expect(b':')?;
+        p.ws();
+        p.expect(b'{')?;
+        let mut fields: BTreeMap<String, f64> = BTreeMap::new();
+        p.ws();
+        if p.peek() == Some(b'}') {
+            p.i += 1;
+        } else {
+            loop {
+                p.ws();
+                let key = p.string()?;
+                p.ws();
+                p.expect(b':')?;
+                p.ws();
+                let value = p.number()?;
+                fields.insert(key, value);
+                p.ws();
+                match p.bump()? {
+                    b',' => continue,
+                    b'}' => break,
+                    _ => return p.fail("expected ',' or '}' in record"),
+                }
+            }
+        }
+        let get = |k: &str| fields.get(k).copied().unwrap_or(0.0);
+        out.insert(
+            name,
+            BenchRecord {
+                mean_s: get("mean_s"),
+                p50_s: get("p50_s"),
+                p99_s: get("p99_s"),
+                iters: get("iters") as usize,
+            },
+        );
+        p.ws();
+        match p.bump()? {
+            b',' => continue,
+            b'}' => break,
+            _ => return p.fail("expected ',' or '}' in object"),
+        }
+    }
+    Ok(out)
+}
+
+/// Load and parse a bench JSON file.
+pub fn load(path: &Path) -> Result<BTreeMap<String, BenchRecord>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+    parse(&text)
+}
+
+/// Read–merge–rewrite `results` into the JSON file at `path` (created
+/// if missing), so sequential bench binaries accumulate one file.
+pub fn merge_into_file(path: &Path, results: &[&BenchResult]) -> Result<()> {
+    let mut map = if path.exists() {
+        load(path)?
+    } else {
+        BTreeMap::new()
+    };
+    for r in results {
+        map.insert(r.name.clone(), BenchRecord::from(*r));
+    }
+    std::fs::write(path, serialize(&map))?;
+    Ok(())
+}
+
+/// Append `results` to the file named by `BENCH_JSON`, if set.  Bench
+/// binaries call this unconditionally; without the env var it is a
+/// no-op, and IO problems are reported but never kill the bench.
+pub fn emit(results: &[&BenchResult]) {
+    let Ok(path) = std::env::var(BENCH_JSON_ENV) else {
+        return;
+    };
+    if path.is_empty() {
+        return;
+    }
+    if let Err(e) = merge_into_file(Path::new(&path), results) {
+        eprintln!("bench json: could not write {path}: {e}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// regression comparison
+// ---------------------------------------------------------------------------
+
+/// One kernel's baseline-vs-current comparison.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub name: String,
+    pub baseline_s: f64,
+    pub current_s: f64,
+    /// current / baseline (>1 is slower).
+    pub ratio: f64,
+    pub regressed: bool,
+}
+
+/// Compare `current` against `baseline` on p50 (robust to one slow
+/// outlier iteration on shared CI runners).  `tracked = None` compares
+/// every kernel present in both files; naming a tracked kernel missing
+/// from either side is an error — a silently vanished bench must not
+/// pass the gate.
+pub fn compare(
+    baseline: &BTreeMap<String, BenchRecord>,
+    current: &BTreeMap<String, BenchRecord>,
+    tracked: Option<&[String]>,
+    threshold: f64,
+) -> Result<Vec<Comparison>> {
+    let names: Vec<String> = match tracked {
+        Some(list) => list.to_vec(),
+        None => baseline
+            .keys()
+            .filter(|k| current.contains_key(*k))
+            .cloned()
+            .collect(),
+    };
+    let mut out = Vec::with_capacity(names.len());
+    for name in names {
+        let b = baseline.get(&name).ok_or_else(|| {
+            Error::Config(format!("tracked kernel '{name}' missing from baseline"))
+        })?;
+        let c = current.get(&name).ok_or_else(|| {
+            Error::Config(format!("tracked kernel '{name}' missing from current run"))
+        })?;
+        if b.p50_s <= 0.0 {
+            continue; // unset baseline entry: record-only
+        }
+        let ratio = c.p50_s / b.p50_s;
+        out.push(Comparison {
+            name,
+            baseline_s: b.p50_s,
+            current_s: c.p50_s,
+            ratio,
+            regressed: ratio > 1.0 + threshold,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(p50: f64) -> BenchRecord {
+        BenchRecord {
+            mean_s: p50,
+            p50_s: p50,
+            p99_s: p50,
+            iters: 5,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut map = BTreeMap::new();
+        map.insert("fused shapley b=8".to_string(), rec(1.25e-4));
+        map.insert("plain \"quoted\"".to_string(), rec(0.5));
+        map.insert("fft 256²".to_string(), rec(2.0)); // multi-byte utf-8
+        let text = serialize(&map);
+        let back = parse(&text).unwrap();
+        assert_eq!(back, map);
+    }
+
+    #[test]
+    fn parses_empty_object() {
+        assert!(parse("{}").unwrap().is_empty());
+        assert!(parse("  { }  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("").is_err());
+        assert!(parse("[1, 2]").is_err());
+        assert!(parse("{\"a\": {\"mean_s\": }}").is_err());
+        assert!(parse("{\"a\"").is_err());
+    }
+
+    #[test]
+    fn merge_accumulates_across_writers() {
+        let dir = std::env::temp_dir().join(format!(
+            "xai-bench-json-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+        let _ = std::fs::remove_file(&path);
+        let a = BenchResult {
+            name: "alpha".into(),
+            iters: 3,
+            mean_s: 0.1,
+            p50_s: 0.1,
+            p99_s: 0.1,
+            min_s: 0.1,
+        };
+        let b = BenchResult {
+            name: "beta".into(),
+            iters: 4,
+            mean_s: 0.2,
+            p50_s: 0.2,
+            p99_s: 0.2,
+            min_s: 0.2,
+        };
+        merge_into_file(&path, &[&a]).unwrap();
+        merge_into_file(&path, &[&b]).unwrap();
+        let map = load(&path).unwrap();
+        assert_eq!(map.len(), 2);
+        assert!((map["alpha"].p50_s - 0.1).abs() < 1e-12);
+        assert!((map["beta"].iters) == 4);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn compare_flags_only_regressions_beyond_threshold() {
+        let mut base = BTreeMap::new();
+        base.insert("a".to_string(), rec(0.100));
+        base.insert("b".to_string(), rec(0.100));
+        base.insert("c".to_string(), rec(0.100));
+        let mut cur = BTreeMap::new();
+        cur.insert("a".to_string(), rec(0.110)); // +10%: fine
+        cur.insert("b".to_string(), rec(0.200)); // +100%: regression
+        cur.insert("c".to_string(), rec(0.050)); // faster: fine
+        let cmp = compare(&base, &cur, None, 0.25).unwrap();
+        let regressed: Vec<&str> = cmp
+            .iter()
+            .filter(|c| c.regressed)
+            .map(|c| c.name.as_str())
+            .collect();
+        assert_eq!(regressed, vec!["b"]);
+    }
+
+    #[test]
+    fn tracked_kernel_missing_is_an_error() {
+        let mut base = BTreeMap::new();
+        base.insert("a".to_string(), rec(0.1));
+        let cur = base.clone();
+        let tracked = vec!["a".to_string(), "ghost".to_string()];
+        assert!(compare(&base, &cur, Some(&tracked), 0.25).is_err());
+    }
+
+    #[test]
+    fn zero_baseline_is_record_only() {
+        let mut base = BTreeMap::new();
+        base.insert("a".to_string(), rec(0.0));
+        let mut cur = BTreeMap::new();
+        cur.insert("a".to_string(), rec(9.9));
+        let cmp = compare(&base, &cur, None, 0.25).unwrap();
+        assert!(cmp.is_empty());
+    }
+}

@@ -4,6 +4,8 @@
 //! mean/p50/p99 reporting, and the table printers that regenerate the
 //! paper's tables/figures row-for-row.
 
+pub mod json;
+
 use crate::util::stats;
 use std::time::Instant;
 
@@ -21,6 +23,19 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean_s
+    }
+
+    /// A deterministic single-value entry (simulated device times, the
+    /// machine-independent kernels the CI regression gate tracks).
+    pub fn point(name: &str, seconds: f64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: seconds,
+            p50_s: seconds,
+            p99_s: seconds,
+            min_s: seconds,
+        }
     }
 }
 
@@ -82,9 +97,21 @@ impl BenchRunner {
     }
 }
 
-/// Shared CLI convention for bench binaries: `--quick` shrinks budgets.
+/// Has quick mode been requested?  Either the `--quick` CLI flag or
+/// `BENCH_QUICK=1` in the environment (how CI invokes `cargo bench`,
+/// which offers no way to pass per-target flags).
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK")
+            .map(|v| v == "1" || v == "true")
+            .unwrap_or(false)
+}
+
+/// Shared convention for bench binaries: `--quick` / `BENCH_QUICK=1`
+/// shrinks warmup and iteration budgets so CI smoke runs finish in
+/// seconds.
 pub fn runner_from_args() -> BenchRunner {
-    if std::env::args().any(|a| a == "--quick") {
+    if quick_requested() {
         BenchRunner::quick()
     } else {
         BenchRunner::default()

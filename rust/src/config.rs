@@ -109,6 +109,18 @@ impl Config {
         if let Some(ms) = self.get_f64("coordinator", "max_wait_ms")? {
             c.policy.max_wait = std::time::Duration::from_secs_f64(ms / 1e3);
         }
+        if let Some(backend) = self.get("coordinator", "backend") {
+            c.backend = match backend {
+                "auto" => crate::coordinator::BackendMode::Auto,
+                "pjrt" => crate::coordinator::BackendMode::PjrtOnly,
+                "native" => crate::coordinator::BackendMode::NativeOnly,
+                other => {
+                    return Err(Error::Config(format!(
+                        "coordinator.backend: expected auto/pjrt/native, got '{other}'"
+                    )))
+                }
+            };
+        }
         Ok(c)
     }
 }
@@ -168,5 +180,23 @@ verbose = true
     fn zero_executors_rejected() {
         let c = Config::parse("[coordinator]\nexecutors = 0").unwrap();
         assert!(c.coordinator().is_err());
+    }
+
+    #[test]
+    fn backend_modes_parse() {
+        use crate::coordinator::BackendMode;
+        for (text, want) in [
+            ("auto", BackendMode::Auto),
+            ("pjrt", BackendMode::PjrtOnly),
+            ("native", BackendMode::NativeOnly),
+        ] {
+            let c = Config::parse(&format!("[coordinator]\nbackend = \"{text}\""))
+                .unwrap()
+                .coordinator()
+                .unwrap();
+            assert_eq!(c.backend, want);
+        }
+        let bad = Config::parse("[coordinator]\nbackend = \"gpu\"").unwrap();
+        assert!(bad.coordinator().is_err());
     }
 }

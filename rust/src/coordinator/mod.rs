@@ -26,6 +26,7 @@
 pub mod batcher;
 pub mod decomposition;
 pub mod metrics;
+pub mod native;
 pub mod queue;
 pub mod request;
 pub mod router;
@@ -33,5 +34,7 @@ pub mod service;
 pub mod worker;
 
 pub use metrics::Metrics;
+pub use native::NativeBackend;
 pub use request::{Request, RequestKind, Response};
 pub use service::{Coordinator, CoordinatorConfig};
+pub use worker::BackendMode;

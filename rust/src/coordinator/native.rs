@@ -1,0 +1,449 @@
+//! The native fused-batch execution backend.
+//!
+//! The tentpole of the fused serving path: a whole same-kind [`Batch`]
+//! executes as fused matrix computations instead of a per-envelope loop
+//! — one GEMM per batch, not one per request (§III-E):
+//!
+//! * **Shapley** — all B games with the same player count collapse
+//!   into φ = T·V with the process-cached structure matrix T and V the
+//!   2ⁿ×B stacked value columns ([`shapley::shapley_batch_fused`]).
+//! * **Classify** — B images become one `T·X` template-bank GEMM
+//!   ([`TemplateModel::logits_batch`]).
+//! * **Integrated gradients** — all B requests' path gradients stack
+//!   into a single (B·(steps+1))×d matrix and reduce through one
+//!   batched trapezoid GEMM ([`integrated_gradients::ig_trapezoid_batch`]).
+//! * **Saliency** — B gradient heatmaps smooth through one shared FFT
+//!   plan, batched `rfft2` sharding the rows of the whole batch
+//!   ([`saliency::smooth_heatmaps_batch`]).
+//! * **Distillation** — inherently per-request (each request is its own
+//!   spectral solve), executed through the per-request fallback.
+//!
+//! Requests that fail validation (wrong shape, bad class) are errored
+//! individually and the remaining valid subset still executes fused —
+//! the per-request fallback the worker relies on for odd remainders.
+//! Every fused path is checked bit-close against per-request execution
+//! by `tests/integration_fused_batch.rs`.
+
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::request::{Request, Response};
+use crate::error::{Error, Result};
+use crate::linalg::matrix::Matrix;
+use crate::models::TemplateModel;
+use crate::trace::NativeEngine;
+use crate::xai::attribution::Attribution;
+use crate::xai::{distillation, integrated_gradients, saliency, shapley};
+
+/// IG path resolution used by the native pipeline (steps+1 gradient
+/// evaluations per request).
+pub const IG_STEPS: usize = 32;
+
+/// Square sizes the native distillation path accepts (mirrors the
+/// compiled-variant gate so error behavior matches the PJRT path).
+pub const NATIVE_DISTILL_SIZES: [usize; 3] = [16, 32, 64];
+
+/// Fused native executor: owns the template model shared by every
+/// image-shaped pipeline.
+#[derive(Debug, Default)]
+pub struct NativeBackend {
+    model: TemplateModel,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn model(&self) -> &TemplateModel {
+        &self.model
+    }
+
+    /// Execute a whole batch through the fused kernels, one response
+    /// per envelope in order.
+    pub fn execute_batch(&self, batch: &Batch) -> Vec<Result<Response>> {
+        use crate::coordinator::request::RequestKind;
+        let requests: Vec<&Request> = batch.envelopes.iter().map(|e| &e.request).collect();
+        match batch.kind {
+            RequestKind::Classify => self.classify_batch(&requests),
+            RequestKind::Shapley => self.shapley_batch(&requests),
+            RequestKind::IntGrad => self.intgrad_batch(&requests),
+            RequestKind::Saliency => self.saliency_batch(&requests),
+            // distillation is one spectral solve per request
+            RequestKind::Distill => {
+                requests.iter().map(|r| self.execute_single(r)).collect()
+            }
+        }
+    }
+
+    /// Per-request execution — the fallback path, and the oracle the
+    /// fused paths are tested against.
+    pub fn execute_single(&self, req: &Request) -> Result<Response> {
+        match req {
+            Request::Classify { image } => {
+                self.check_image(image)?;
+                Ok(Response::Logits(self.model.logits(image)))
+            }
+            Request::Shapley { n, values, names } => {
+                check_shapley(*n, values)?;
+                let game = shapley::ValueTable::new(*n, values.clone());
+                let mut eng = NativeEngine::new();
+                let phi = shapley::shapley_matrix_form(&mut eng, std::slice::from_ref(&game));
+                Ok(Response::Attribution(Attribution::new(
+                    names.clone(),
+                    (0..*n).map(|i| phi.get(i, 0)).collect(),
+                )))
+            }
+            Request::IntGrad {
+                image,
+                baseline,
+                class,
+            } => {
+                self.check_image(image)?;
+                self.check_image(baseline)?;
+                self.check_class(*class)?;
+                let scorer = self.model.class_scorer(*class);
+                let mut eng = NativeEngine::new();
+                let grads = integrated_gradients::path_gradients(
+                    &mut eng,
+                    &scorer,
+                    &image.data,
+                    &baseline.data,
+                    IG_STEPS,
+                );
+                let attr = integrated_gradients::ig_trapezoid(
+                    &mut eng,
+                    &grads,
+                    &image.data,
+                    &baseline.data,
+                );
+                Ok(Response::Heatmap(Matrix::from_vec(image.rows, image.cols, attr)))
+            }
+            Request::Saliency { image, class } => {
+                self.check_image(image)?;
+                self.check_class(*class)?;
+                let raw = self.model.grad_heatmap(image, *class);
+                let mut eng = NativeEngine::new();
+                let smoothed = saliency::smooth_heatmap(&mut eng, &raw, &self.model.smooth);
+                Ok(Response::Heatmap(smoothed))
+            }
+            Request::Distill { x, y } => self.distill_single(x, y),
+        }
+    }
+
+    // ---- fused per-kind paths -------------------------------------------
+
+    /// Classification: ONE template-bank GEMM over the valid subset.
+    fn classify_batch(&self, requests: &[&Request]) -> Vec<Result<Response>> {
+        let images: Vec<&Matrix> = requests
+            .iter()
+            .map(|r| match r {
+                Request::Classify { image } => image,
+                _ => unreachable!("mixed batch"),
+            })
+            .collect();
+        let mut out: Vec<Option<Result<Response>>> = images.iter().map(|_| None).collect();
+        let mut valid: Vec<usize> = Vec::new();
+        for (i, img) in images.iter().enumerate() {
+            match self.check_image(img) {
+                Ok(()) => valid.push(i),
+                Err(e) => out[i] = Some(Err(e)),
+            }
+        }
+        if !valid.is_empty() {
+            let subset: Vec<&Matrix> = valid.iter().map(|&i| images[i]).collect();
+            let mut eng = NativeEngine::new();
+            let logits = self.model.logits_batch(&mut eng, &subset);
+            for (&i, l) in valid.iter().zip(logits) {
+                out[i] = Some(Ok(Response::Logits(l)));
+            }
+        }
+        out.into_iter().map(|r| r.expect("every slot filled")).collect()
+    }
+
+    /// Shapley: group by player count (arrival order preserved inside
+    /// a group), each group fused into one φ = T·V GEMM.
+    fn shapley_batch(&self, requests: &[&Request]) -> Vec<Result<Response>> {
+        let mut out: Vec<Option<Result<Response>>> = requests.iter().map(|_| None).collect();
+        // indices of valid requests, grouped by n
+        let mut groups: std::collections::BTreeMap<usize, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (i, r) in requests.iter().enumerate() {
+            let (n, values) = match r {
+                Request::Shapley { n, values, .. } => (*n, values),
+                _ => unreachable!("mixed batch"),
+            };
+            match check_shapley(n, values) {
+                Ok(()) => groups.entry(n).or_default().push(i),
+                Err(e) => out[i] = Some(Err(e)),
+            }
+        }
+        for (n, members) in groups {
+            let games: Vec<shapley::ValueTable> = members
+                .iter()
+                .map(|&i| match requests[i] {
+                    Request::Shapley { values, .. } => {
+                        shapley::ValueTable::new(n, values.clone())
+                    }
+                    _ => unreachable!(),
+                })
+                .collect();
+            let mut eng = NativeEngine::new();
+            let phi = shapley::shapley_batch_fused(&mut eng, &games);
+            for (col, &i) in members.iter().enumerate() {
+                let names = match requests[i] {
+                    Request::Shapley { names, .. } => names.clone(),
+                    _ => unreachable!(),
+                };
+                out[i] = Some(Ok(Response::Attribution(Attribution::new(
+                    names,
+                    (0..n).map(|r| phi.get(r, col)).collect(),
+                ))));
+            }
+        }
+        out.into_iter().map(|r| r.expect("every slot filled")).collect()
+    }
+
+    /// IG: every valid request's path gradients stacked into one GEMM +
+    /// one batched trapezoid reduce.
+    fn intgrad_batch(&self, requests: &[&Request]) -> Vec<Result<Response>> {
+        let mut out: Vec<Option<Result<Response>>> = requests.iter().map(|_| None).collect();
+        let mut valid: Vec<usize> = Vec::new();
+        for (i, r) in requests.iter().enumerate() {
+            let (image, baseline, class) = match r {
+                Request::IntGrad {
+                    image,
+                    baseline,
+                    class,
+                } => (image, baseline, *class),
+                _ => unreachable!("mixed batch"),
+            };
+            let ok = self
+                .check_image(image)
+                .and_then(|_| self.check_image(baseline))
+                .and_then(|_| self.check_class(class));
+            match ok {
+                Ok(()) => valid.push(i),
+                Err(e) => out[i] = Some(Err(e)),
+            }
+        }
+        if !valid.is_empty() {
+            let scorers: Vec<_> = valid
+                .iter()
+                .map(|&i| match requests[i] {
+                    Request::IntGrad { class, .. } => self.model.class_scorer(*class),
+                    _ => unreachable!(),
+                })
+                .collect();
+            let triples: Vec<_> = valid
+                .iter()
+                .zip(&scorers)
+                .map(|(&i, scorer)| match requests[i] {
+                    Request::IntGrad {
+                        image, baseline, ..
+                    } => (scorer, image.data.as_slice(), baseline.data.as_slice()),
+                    _ => unreachable!(),
+                })
+                .collect();
+            let mut eng = NativeEngine::new();
+            let grads = integrated_gradients::path_gradients_batch(&mut eng, &triples, IG_STEPS);
+            let xs: Vec<&[f32]> = triples.iter().map(|t| t.1).collect();
+            let bs: Vec<&[f32]> = triples.iter().map(|t| t.2).collect();
+            let attrs = integrated_gradients::ig_trapezoid_batch(&mut eng, &grads, &xs, &bs);
+            for (&i, attr) in valid.iter().zip(attrs) {
+                let (rows, cols) = match requests[i] {
+                    Request::IntGrad { image, .. } => (image.rows, image.cols),
+                    _ => unreachable!(),
+                };
+                out[i] = Some(Ok(Response::Heatmap(Matrix::from_vec(rows, cols, attr))));
+            }
+        }
+        out.into_iter().map(|r| r.expect("every slot filled")).collect()
+    }
+
+    /// Saliency: batched gradient heatmaps smoothed through one shared
+    /// FFT plan.
+    fn saliency_batch(&self, requests: &[&Request]) -> Vec<Result<Response>> {
+        let mut out: Vec<Option<Result<Response>>> = requests.iter().map(|_| None).collect();
+        let mut valid: Vec<usize> = Vec::new();
+        for (i, r) in requests.iter().enumerate() {
+            let (image, class) = match r {
+                Request::Saliency { image, class } => (image, *class),
+                _ => unreachable!("mixed batch"),
+            };
+            match self.check_image(image).and_then(|_| self.check_class(class)) {
+                Ok(()) => valid.push(i),
+                Err(e) => out[i] = Some(Err(e)),
+            }
+        }
+        if !valid.is_empty() {
+            let raw: Vec<Matrix> = valid
+                .iter()
+                .map(|&i| match requests[i] {
+                    Request::Saliency { image, class } => {
+                        self.model.grad_heatmap(image, *class)
+                    }
+                    _ => unreachable!(),
+                })
+                .collect();
+            let mut eng = NativeEngine::new();
+            let smoothed = saliency::smooth_heatmaps_batch(&mut eng, &raw, &self.model.smooth);
+            for (&i, h) in valid.iter().zip(smoothed) {
+                out[i] = Some(Ok(Response::Heatmap(h)));
+            }
+        }
+        out.into_iter().map(|r| r.expect("every slot filled")).collect()
+    }
+
+    fn distill_single(&self, x: &Matrix, y: &Matrix) -> Result<Response> {
+        let n = x.rows;
+        if x.cols != n || y.rows != n || y.cols != n {
+            return Err(Error::Shape {
+                expected: "square x/y of equal size".into(),
+                got: format!("x {}x{}, y {}x{}", x.rows, x.cols, y.rows, y.cols),
+            });
+        }
+        if !NATIVE_DISTILL_SIZES.contains(&n) {
+            return Err(Error::Shape {
+                expected: format!("one of {NATIVE_DISTILL_SIZES:?}"),
+                got: format!("{n}"),
+            });
+        }
+        let mut eng = NativeEngine::new_fft_baseline();
+        let kernel = distillation::distill_fft(&mut eng, x, y, 1e-9);
+        let contributions = distillation::contribution_factors(&mut eng, x, &kernel, n / 4);
+        Ok(Response::Distillation {
+            kernel,
+            contributions,
+        })
+    }
+
+    // ---- validation ------------------------------------------------------
+
+    fn check_image(&self, image: &Matrix) -> Result<()> {
+        let img = crate::data::cifar::IMG;
+        if image.rows != img || image.cols != img {
+            return Err(Error::Shape {
+                expected: format!("{img}x{img}"),
+                got: format!("{}x{}", image.rows, image.cols),
+            });
+        }
+        Ok(())
+    }
+
+    fn check_class(&self, class: usize) -> Result<()> {
+        let n = self.model.num_classes();
+        if class >= n {
+            return Err(Error::Shape {
+                expected: format!("class < {n}"),
+                got: format!("{class}"),
+            });
+        }
+        Ok(())
+    }
+}
+
+fn check_shapley(n: usize, values: &[f32]) -> Result<()> {
+    // serving bound: 2^16 value entries (256 KB) per request; also the
+    // largest T the shapley weight-matrix cache will retain
+    if n == 0 || n > shapley::MAX_CACHED_PLAYERS {
+        return Err(Error::Shape {
+            expected: format!("1 <= n <= {} players", shapley::MAX_CACHED_PLAYERS),
+            got: format!("{n}"),
+        });
+    }
+    if values.len() != 1usize << n {
+        return Err(Error::Shape {
+            expected: format!("2^{n} values"),
+            got: format!("{}", values.len()),
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestKind;
+    use crate::util::rng::Rng;
+
+    fn batch_of(kind: RequestKind, reqs: Vec<Request>) -> Batch {
+        use crate::coordinator::request::Envelope;
+        use std::sync::mpsc;
+        use std::time::Instant;
+        Batch {
+            kind,
+            envelopes: reqs
+                .into_iter()
+                .enumerate()
+                .map(|(i, request)| {
+                    let (tx, _rx) = mpsc::channel();
+                    Envelope {
+                        id: i as u64,
+                        request,
+                        reply: tx,
+                        enqueued_at: Instant::now(),
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn invalid_member_errors_alone_valid_rest_fused() {
+        let backend = NativeBackend::new();
+        let mut rng = Rng::new(0);
+        let good = crate::data::cifar::sample_class(1, &mut rng).image;
+        let batch = batch_of(
+            RequestKind::Classify,
+            vec![
+                Request::Classify {
+                    image: good.clone(),
+                },
+                Request::Classify {
+                    image: Matrix::zeros(7, 9),
+                },
+                Request::Classify { image: good },
+            ],
+        );
+        let out = backend.execute_batch(&batch);
+        assert!(out[0].is_ok());
+        assert!(out[1].is_err());
+        assert!(out[2].is_ok());
+    }
+
+    #[test]
+    fn mixed_n_shapley_groups_each_fused() {
+        let backend = NativeBackend::new();
+        let mut rng = Rng::new(1);
+        let reqs: Vec<Request> = [3usize, 5, 3, 5, 5]
+            .iter()
+            .map(|&n| Request::Shapley {
+                n,
+                values: rng.gauss_vec(1 << n),
+                names: (0..n).map(|i| format!("f{i}")).collect(),
+            })
+            .collect();
+        let batch = batch_of(RequestKind::Shapley, reqs.clone());
+        let fused = backend.execute_batch(&batch);
+        for (req, got) in reqs.iter().zip(&fused) {
+            let want = backend.execute_single(req).unwrap();
+            match (got.as_ref().unwrap(), &want) {
+                (Response::Attribution(a), Response::Attribution(b)) => {
+                    for (x, y) in a.scores.iter().zip(&b.scores) {
+                        assert!((x - y).abs() < 1e-5);
+                    }
+                }
+                other => panic!("unexpected responses {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn shapley_rejects_oversized_and_empty_games() {
+        assert!(check_shapley(0, &[]).is_err());
+        // above the cacheable bound: rejected before any 2^n allocation
+        assert!(check_shapley(17, &[0.0; 4]).is_err());
+        assert!(check_shapley(25, &[0.0; 4]).is_err());
+        assert!(check_shapley(2, &[0.0; 3]).is_err());
+        assert!(check_shapley(2, &[0.0; 4]).is_ok());
+    }
+}

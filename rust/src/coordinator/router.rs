@@ -1,14 +1,18 @@
-//! Request router: maps a batch onto compiled artifact variants and
-//! executes it.
+//! Request router: maps a batch onto an execution backend.
 //!
-//! Variant selection implements "one compiled executable per model
+//! With a compiled registry ([`crate::coordinator::worker::ExecBackend::Pjrt`])
+//! variant selection implements "one compiled executable per model
 //! variant": classification picks the smallest `cnn_fwd_b{1,8,32}` that
 //! fits the batch (padding the remainder), Shapley packs games into the
 //! `shapley_n{n}_b{b}` structure-vector matmul, distillation routes on
-//! input size to `distill_{n}x{n}` + `occlusion_{n}x{n}_b*`.
+//! input size to `distill_{n}x{n}` + `occlusion_{n}x{n}_b*`.  With the
+//! native backend the whole batch goes to the fused kernel layer
+//! ([`crate::coordinator::native::NativeBackend`]) — one GEMM per
+//! batch, not one per request.
 
 use crate::coordinator::batcher::Batch;
 use crate::coordinator::request::{Request, Response};
+use crate::coordinator::worker::ExecBackend;
 use crate::error::{Error, Result};
 use crate::linalg::matrix::Matrix;
 use crate::runtime::ArtifactRegistry;
@@ -33,9 +37,17 @@ pub fn pick_cnn_variant(n: usize) -> usize {
     *CNN_BATCH_VARIANTS.last().unwrap()
 }
 
-/// Execute one batch against the registry, producing one response per
-/// envelope (order preserved).
-pub fn execute_batch(reg: &ArtifactRegistry, batch: &Batch) -> Vec<Result<Response>> {
+/// Execute one batch against the live backend, producing one response
+/// per envelope (order preserved).
+pub fn execute_batch(backend: &ExecBackend, batch: &Batch) -> Vec<Result<Response>> {
+    match backend {
+        ExecBackend::Native(native) => native.execute_batch(batch),
+        ExecBackend::Pjrt(reg) => execute_batch_pjrt(reg, batch),
+    }
+}
+
+/// Execute one batch against a compiled registry.
+pub fn execute_batch_pjrt(reg: &ArtifactRegistry, batch: &Batch) -> Vec<Result<Response>> {
     match batch.kind {
         crate::coordinator::request::RequestKind::Classify => classify_batch(reg, batch),
         crate::coordinator::request::RequestKind::Shapley => shapley_batch(reg, batch),

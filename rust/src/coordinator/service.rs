@@ -25,6 +25,10 @@ pub struct CoordinatorConfig {
     pub work_capacity: usize,
     /// Batching policy.
     pub policy: BatchPolicy,
+    /// Execution backend policy: compiled artifacts, the native
+    /// fused-batch kernels, or (default) artifacts with native
+    /// fallback.
+    pub backend: crate::coordinator::worker::BackendMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -35,6 +39,7 @@ impl Default for CoordinatorConfig {
             queue_capacity: 256,
             work_capacity: 64,
             policy: BatchPolicy::default(),
+            backend: crate::coordinator::worker::BackendMode::default(),
         }
     }
 }
@@ -93,6 +98,7 @@ impl Coordinator {
         let executors = crate::coordinator::worker::spawn_executors(
             config.executors,
             config.artifact_dir.clone(),
+            config.backend,
             work.clone(),
             metrics.clone(),
             ready_tx,

@@ -21,6 +21,7 @@
 
 use crate::coordinator::batcher::Batch;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::native::NativeBackend;
 use crate::coordinator::queue::BoundedQueue;
 use crate::coordinator::router;
 use std::path::PathBuf;
@@ -31,6 +32,60 @@ use std::time::Instant;
 /// Startup report of one worker: `(worker_id, load result)`.
 pub type ReadySignal = (usize, crate::error::Result<()>);
 
+/// Which execution engine a worker may bring up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendMode {
+    /// Prefer the compiled PJRT registry; fall back to the native
+    /// fused-batch backend when artifacts cannot load (e.g. the
+    /// offline image, where the `xla` bindings are stubbed).
+    #[default]
+    Auto,
+    /// Compiled artifacts or startup failure — the pre-fused behavior.
+    PjrtOnly,
+    /// Native fused-batch execution only (no artifact load attempted).
+    NativeOnly,
+}
+
+/// A worker's execution engine: either a compiled PJRT registry or the
+/// native fused-batch backend ([`NativeBackend`]).  The router
+/// dispatches whole batches against whichever is live.
+pub enum ExecBackend {
+    Pjrt(crate::runtime::ArtifactRegistry),
+    Native(NativeBackend),
+}
+
+impl ExecBackend {
+    /// Bring up a backend under the given mode.
+    pub fn bring_up(
+        mode: BackendMode,
+        dir: &std::path::Path,
+    ) -> crate::error::Result<ExecBackend> {
+        match mode {
+            BackendMode::NativeOnly => Ok(ExecBackend::Native(NativeBackend::new())),
+            BackendMode::PjrtOnly => {
+                crate::runtime::ArtifactRegistry::load(dir).map(ExecBackend::Pjrt)
+            }
+            BackendMode::Auto => match crate::runtime::ArtifactRegistry::load(dir) {
+                Ok(reg) => Ok(ExecBackend::Pjrt(reg)),
+                Err(e) => {
+                    eprintln!(
+                        "xai-executor: artifacts unavailable ({e}); \
+                         serving through the native fused-batch backend"
+                    );
+                    Ok(ExecBackend::Native(NativeBackend::new()))
+                }
+            },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecBackend::Pjrt(_) => "pjrt",
+            ExecBackend::Native(_) => "native",
+        }
+    }
+}
+
 /// Spawn `count` executor threads consuming from `work`.
 ///
 /// Returns the join handles; workers exit when the queue closes.  Each
@@ -39,6 +94,7 @@ pub type ReadySignal = (usize, crate::error::Result<()>);
 pub fn spawn_executors(
     count: usize,
     artifact_dir: PathBuf,
+    backend: BackendMode,
     work: BoundedQueue<Batch>,
     metrics: Arc<Metrics>,
     ready: mpsc::Sender<ReadySignal>,
@@ -51,7 +107,7 @@ pub fn spawn_executors(
             let ready = ready.clone();
             std::thread::Builder::new()
                 .name(format!("xai-executor-{i}"))
-                .spawn(move || executor_loop(i, &dir, work, metrics, ready))
+                .spawn(move || executor_loop(i, backend, &dir, work, metrics, ready))
                 .expect("spawn executor")
         })
         .collect()
@@ -77,21 +133,23 @@ pub fn await_readiness(ready: &mpsc::Receiver<ReadySignal>) -> crate::error::Res
 
 fn executor_loop(
     id: usize,
+    mode: BackendMode,
     dir: &std::path::Path,
     work: BoundedQueue<Batch>,
     metrics: Arc<Metrics>,
     ready: mpsc::Sender<ReadySignal>,
 ) {
-    // Each worker compiles its own registry (own PJRT client), reports
-    // the outcome once, and releases the readiness channel.
-    let registry = match crate::runtime::ArtifactRegistry::load(dir) {
-        Ok(r) => {
+    // Each worker brings up its own backend (a PJRT registry is its own
+    // "core" and is not Send), reports the outcome once, and releases
+    // the readiness channel.
+    let backend = match ExecBackend::bring_up(mode, dir) {
+        Ok(b) => {
             let _ = ready.send((id, Ok(())));
             drop(ready);
-            r
+            b
         }
         Err(e) => {
-            eprintln!("executor {id}: failed to load artifacts: {e}");
+            eprintln!("executor {id}: failed to bring up backend: {e}");
             let _ = ready.send((id, Err(e)));
             return;
         }
@@ -100,7 +158,7 @@ fn executor_loop(
         let n = batch.envelopes.len();
         metrics.record_batch(n);
         let started = Instant::now();
-        let results = router::execute_batch(&registry, &batch);
+        let results = router::execute_batch(&backend, &batch);
         debug_assert_eq!(results.len(), n);
         for (env, result) in batch.envelopes.into_iter().zip(results) {
             let ok = result.is_ok();
@@ -145,6 +203,19 @@ mod tests {
             .unwrap();
         drop(tx);
         assert!(await_readiness(&rx).is_ok());
+    }
+
+    #[test]
+    fn backend_bring_up_modes() {
+        let missing = std::path::Path::new("definitely-missing-artifacts");
+        // native mode never touches the registry
+        let native = ExecBackend::bring_up(BackendMode::NativeOnly, missing).unwrap();
+        assert_eq!(native.name(), "native");
+        // auto mode degrades to native when artifacts cannot load
+        let auto = ExecBackend::bring_up(BackendMode::Auto, missing).unwrap();
+        assert_eq!(auto.name(), "native");
+        // pjrt-only surfaces the load failure (offline stub or missing dir)
+        assert!(ExecBackend::bring_up(BackendMode::PjrtOnly, missing).is_err());
     }
 
     #[test]

@@ -69,6 +69,9 @@ impl GpuSim {
     fn efficiency(&self, op: &Op) -> f64 {
         let base = match op {
             Op::Fft2 { .. } => self.divergent_eff,
+            // batched FFT is still branchy per line, but the batch grid
+            // keeps more SMs resident between divergent stages
+            Op::BatchedFft2 { .. } => self.divergent_eff * 1.5,
             Op::Elementwise { .. } | Op::Reduce { .. } | Op::HadamardDiv { .. } => {
                 self.elementwise_eff
             }

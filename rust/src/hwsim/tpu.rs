@@ -73,6 +73,11 @@ impl TpuSim {
     fn matrix_op_s(&self, op: &Op) -> f64 {
         match *op {
             Op::Matmul { m, k, n } => self.mxu_matmul_s(m, k, n),
+            // Fused batch: the weight-stationary array loads the shared
+            // left operand once and streams all b·n activation columns
+            // through it — ONE fill/drain instead of b, which is the
+            // §III-E batching speedup the paper measures.
+            Op::BatchedMatmul { b, m, k, n } => self.mxu_matmul_s(m, k, b * n),
             // 4 real matmuls stream back-to-back through the array
             Op::CMatmul { m, k, n } => 4.0 * self.mxu_matmul_s(m, k, n),
             Op::Dft2Matmul { m, n } => {
@@ -173,6 +178,50 @@ mod tests {
         // though the op has only 8K flops.
         let ideal = op.flops() as f64 / (2.0 * tpu.mxu.peak_macs_per_sec());
         assert!(t.busy_s > 50.0 * ideal);
+    }
+
+    #[test]
+    fn fused_batch_cheaper_than_b_independent_traces() {
+        // The ablation_batching acceptance: the batched Shapley trace
+        // (one fused T·V GEMM) must replay cheaper than B independent
+        // per-request traces — fewer dispatches AND one array
+        // fill/drain instead of B.
+        let tpu = TpuSim::default();
+        let (b, n_players, table) = (8usize, 12usize, 1usize << 12);
+        let mut fused = crate::trace::OpTrace::new();
+        fused.push(Op::BatchedMatmul {
+            b,
+            m: n_players,
+            k: table,
+            n: 1,
+        });
+        let mut per_request = crate::trace::OpTrace::new();
+        for _ in 0..b {
+            per_request.push(Op::Matmul {
+                m: n_players,
+                k: table,
+                n: 1,
+            });
+        }
+        let tf = tpu.replay_with_units(&fused, 1).time_s;
+        let tp = tpu.replay_with_units(&per_request, 1).time_s;
+        assert!(tf < tp, "fused {tf} vs per-request {tp}");
+        // and materially so: dispatch + fill/drain amortization
+        assert!(tp / tf > 2.0, "expected >2x, got {}", tp / tf);
+    }
+
+    #[test]
+    fn batched_fft_saves_dispatches_on_tpu() {
+        let tpu = TpuSim::default();
+        let mut fused = crate::trace::OpTrace::new();
+        fused.push(Op::BatchedFft2 { b: 8, m: 16, n: 16 });
+        let mut per_request = crate::trace::OpTrace::new();
+        for _ in 0..8 {
+            per_request.push(Op::Fft2 { m: 16, n: 16 });
+        }
+        let tf = tpu.replay_with_units(&fused, 1).time_s;
+        let tp = tpu.replay_with_units(&per_request, 1).time_s;
+        assert!(tf < tp, "fused {tf} vs per-request {tp}");
     }
 
     #[test]

@@ -29,6 +29,34 @@ pub fn circ_conv2(x: &Matrix, k: &Matrix) -> Matrix {
     fx.real()
 }
 
+/// Batched circular convolution of `b` images against ONE shared
+/// kernel: the kernel spectrum is computed once, the `b` forward
+/// transforms run fused through [`fft::Fft2Plan::rfft2_batch`] (row
+/// lines of the whole batch sharded together), and the inverses run
+/// fused through [`fft::Fft2Plan::process_batch`].  Identical results
+/// to calling [`circ_conv2`] per image.
+pub fn circ_conv2_batch(xs: &[&Matrix], k: &Matrix) -> Vec<Matrix> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let (m, n) = (k.rows, k.cols);
+    for x in xs {
+        assert_eq!((x.rows, x.cols), (m, n));
+    }
+    let threads = fft::recommended_threads(xs.len() * m, n);
+    let plan = fft::plan2(m, n);
+    let mut fxs = plan.rfft2_batch(xs, threads);
+    let fk = plan.rfft2(k, threads);
+    let scale = ((m * n) as f32).sqrt();
+    for fx in fxs.iter_mut() {
+        for (a, &b) in fx.data.iter_mut().zip(&fk.data) {
+            *a = (*a * b).scale(scale);
+        }
+    }
+    plan.process_batch(&mut fxs, true, threads);
+    fxs.into_iter().map(|fx| fx.real()).collect()
+}
+
 /// Direct O((MN)²) circular convolution — oracle for the FFT path.
 pub fn circ_conv2_direct(x: &Matrix, k: &Matrix) -> Matrix {
     assert_eq!((x.rows, x.cols), (k.rows, k.cols));
@@ -85,6 +113,21 @@ mod tests {
             let slow = circ_conv2_direct(&x, &k);
             assert!(fast.max_abs_diff(&slow) < 1e-3, "{m}x{n}");
         }
+    }
+
+    #[test]
+    fn batched_conv_matches_per_image() {
+        let mut rng = Rng::new(9);
+        let k = Matrix::random(16, 16, &mut rng);
+        let xs: Vec<Matrix> = (0..6).map(|_| Matrix::random(16, 16, &mut rng)).collect();
+        let refs: Vec<&Matrix> = xs.iter().collect();
+        let fused = circ_conv2_batch(&refs, &k);
+        assert_eq!(fused.len(), 6);
+        for (x, got) in xs.iter().zip(&fused) {
+            let want = circ_conv2(x, &k);
+            assert!(got.max_abs_diff(&want) < 1e-6);
+        }
+        assert!(circ_conv2_batch(&[], &k).is_empty());
     }
 
     #[test]

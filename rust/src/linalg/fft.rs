@@ -337,6 +337,191 @@ impl Fft2Plan {
         out
     }
 
+    /// Fused batched transform: `b` same-shape matrices processed as
+    /// ONE work set.  The row stage shards the `b·rows` concatenated
+    /// row lines across threads (not per-image), and the column stage
+    /// shards the `b·cols` column lines likewise — a batch of small
+    /// images keeps every worker busy where per-image dispatch would
+    /// leave the pool idle.  Results are identical to calling
+    /// [`Fft2Plan::process`] on each matrix.
+    pub fn process_batch(&self, xs: &mut [CMatrix], inverse: bool, threads: usize) {
+        let b = xs.len();
+        if b == 0 {
+            return;
+        }
+        for x in xs.iter() {
+            assert_eq!(
+                (x.rows, x.cols),
+                (self.rows, self.cols),
+                "matrix shape != plan shape"
+            );
+        }
+        if b == 1 {
+            self.process(&mut xs[0], inverse, threads);
+            return;
+        }
+        let (m, n) = (self.rows, self.cols);
+        if m == 0 || n == 0 {
+            return;
+        }
+        let threads = threads.max(1);
+        // pack image-major: rows of the whole batch become contiguous
+        let mut data = Vec::with_capacity(b * m * n);
+        for x in xs.iter() {
+            data.extend_from_slice(&x.data);
+        }
+        self.row_pass_batch(&mut data, b, inverse, threads);
+        self.col_pass_batch(&mut data, b, inverse, threads);
+        unitary_scale(&mut data, m * n);
+        for (img, x) in xs.iter_mut().enumerate() {
+            x.data.copy_from_slice(&data[img * m * n..(img + 1) * m * n]);
+        }
+    }
+
+    /// Batched real-input forward transform: the [`Fft2Plan::rfft2`]
+    /// pair-packing trick applied across the whole batch — with an even
+    /// row count every pair stays within one image, and the final odd
+    /// row (if any) of the concatenated set runs solo.  Returns one
+    /// spectrum per input; identical to per-image `rfft2`.
+    pub fn rfft2_batch(&self, xs: &[&Matrix], threads: usize) -> Vec<CMatrix> {
+        let b = xs.len();
+        if b == 0 {
+            return Vec::new();
+        }
+        for x in xs {
+            assert_eq!(
+                (x.rows, x.cols),
+                (self.rows, self.cols),
+                "matrix shape != plan shape"
+            );
+        }
+        if b == 1 {
+            return vec![self.rfft2(xs[0], threads)];
+        }
+        let (m, n) = (self.rows, self.cols);
+        if m == 0 || n == 0 {
+            return xs.iter().map(|_| CMatrix::zeros(m, n)).collect();
+        }
+        let threads = threads.max(1);
+        // Pair-packing across images only lines up with per-image
+        // rfft2 when every pair stays inside one image; odd row counts
+        // would straddle, so fall back to per-image there.
+        if m % 2 == 1 {
+            return xs.iter().map(|x| self.rfft2(x, threads)).collect();
+        }
+        let rows_total = b * m;
+        let mut xdata = Vec::with_capacity(rows_total * n);
+        for x in xs {
+            xdata.extend_from_slice(&x.data);
+        }
+        let mut out = vec![C32::ZERO; rows_total * n];
+        {
+            let pairs = rows_total / 2;
+            let body = &mut out[..];
+            let xdata = &xdata[..];
+            let row_plan = &*self.row_plan;
+            if threads <= 1 || pairs < 2 * threads {
+                run_row_pairs(row_plan, body, xdata, 0, n);
+            } else {
+                let chunk_pairs = pairs.div_ceil(threads);
+                std::thread::scope(|scope| {
+                    for (t, band) in body.chunks_mut(chunk_pairs * 2 * n).enumerate() {
+                        let r0 = t * chunk_pairs * 2;
+                        scope.spawn(move || run_row_pairs(row_plan, band, xdata, r0, n));
+                    }
+                });
+            }
+        }
+        self.col_pass_batch(&mut out, b, false, threads);
+        unitary_scale(&mut out, m * n);
+        (0..b)
+            .map(|img| CMatrix {
+                rows: m,
+                cols: n,
+                data: out[img * m * n..(img + 1) * m * n].to_vec(),
+            })
+            .collect()
+    }
+
+    /// Row stage over the packed batch: `b·rows` contiguous lines,
+    /// banded across threads.
+    fn row_pass_batch(&self, data: &mut [C32], b: usize, inverse: bool, threads: usize) {
+        let (m, n) = (self.rows, self.cols);
+        let rows_total = b * m;
+        let row_plan = &*self.row_plan;
+        if threads <= 1 || rows_total < 2 * threads {
+            run_rows(row_plan, data, n, inverse);
+            return;
+        }
+        let band_rows = rows_total.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for band in data.chunks_mut(band_rows * n) {
+                scope.spawn(move || run_rows(row_plan, band, n, inverse));
+            }
+        });
+    }
+
+    /// Column stage over the packed batch: the `b·cols` column lines of
+    /// all images form one work list, sharded across threads with the
+    /// same gather/transform/scatter pattern as [`Fft2Plan::col_pass`].
+    fn col_pass_batch(&self, data: &mut [C32], b: usize, inverse: bool, threads: usize) {
+        let (m, n) = (self.rows, self.cols);
+        let total = b * n;
+        let col_plan = &*self.col_plan;
+        if threads <= 1 || total < 2 * threads || m < 2 {
+            let mut line = vec![C32::ZERO; m];
+            let mut scratch = vec![C32::ZERO; col_plan.scratch_len()];
+            for img in 0..b {
+                let base = img * m * n;
+                for c in 0..n {
+                    for (r, slot) in line.iter_mut().enumerate() {
+                        *slot = data[base + r * n + c];
+                    }
+                    col_plan.process(&mut line, inverse, &mut scratch);
+                    for (r, &v) in line.iter().enumerate() {
+                        data[base + r * n + c] = v;
+                    }
+                }
+            }
+            return;
+        }
+        let shard = total.div_ceil(threads);
+        let shards: Vec<(usize, Vec<C32>)> = std::thread::scope(|scope| {
+            let shared = &*data;
+            let mut handles = Vec::new();
+            let mut l0 = 0;
+            while l0 < total {
+                let w = shard.min(total - l0);
+                handles.push(scope.spawn(move || {
+                    let mut block = vec![C32::ZERO; m * w];
+                    let mut scratch = vec![C32::ZERO; col_plan.scratch_len()];
+                    for (j, line) in block.chunks_mut(m).enumerate() {
+                        let gidx = l0 + j;
+                        let base = (gidx / n) * m * n;
+                        let c = gidx % n;
+                        for (r, slot) in line.iter_mut().enumerate() {
+                            *slot = shared[base + r * n + c];
+                        }
+                        col_plan.process(line, inverse, &mut scratch);
+                    }
+                    (l0, block)
+                }));
+                l0 += w;
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (l0, block) in shards {
+            for (j, line) in block.chunks(m).enumerate() {
+                let gidx = l0 + j;
+                let base = (gidx / n) * m * n;
+                let c = gidx % n;
+                for (r, &v) in line.iter().enumerate() {
+                    data[base + r * n + c] = v;
+                }
+            }
+        }
+    }
+
     /// Stage 1: every row is a contiguous slice — transform in place,
     /// sharding row bands across threads with `chunks_mut`.
     fn row_pass(&self, data: &mut [C32], inverse: bool, threads: usize) {
@@ -748,6 +933,67 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn batched_process_matches_per_image() {
+        let mut rng = Rng::new(10);
+        for (m, n) in [(8usize, 8usize), (12, 10), (7, 9)] {
+            let p = Fft2Plan::new(m, n);
+            let singles: Vec<CMatrix> = (0..5)
+                .map(|_| CMatrix::from_real(&Matrix::random(m, n, &mut rng)))
+                .collect();
+            for threads in [1usize, 4] {
+                let mut batch = singles.clone();
+                p.process_batch(&mut batch, false, threads);
+                for (orig, got) in singles.iter().zip(&batch) {
+                    let want = p.fft2(orig, 1);
+                    assert!(
+                        got.max_abs_diff(&want) < 1e-6,
+                        "{m}x{n} threads={threads}"
+                    );
+                }
+                p.process_batch(&mut batch, true, threads);
+                for (orig, got) in singles.iter().zip(&batch) {
+                    assert!(got.max_abs_diff(orig) < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_rfft2_matches_per_image() {
+        let mut rng = Rng::new(11);
+        // even and odd row counts (odd falls back to per-image), plus a
+        // batch big enough to exercise cross-image thread sharding
+        for (m, n, b) in [(16usize, 16usize, 8usize), (8, 12, 3), (9, 8, 4)] {
+            let p = Fft2Plan::new(m, n);
+            let xs: Vec<Matrix> = (0..b).map(|_| Matrix::random(m, n, &mut rng)).collect();
+            let refs: Vec<&Matrix> = xs.iter().collect();
+            for threads in [1usize, 4] {
+                let batch = p.rfft2_batch(&refs, threads);
+                assert_eq!(batch.len(), b);
+                for (x, got) in xs.iter().zip(&batch) {
+                    let want = p.rfft2(x, 1);
+                    assert!(
+                        got.max_abs_diff(&want) < 1e-6,
+                        "{m}x{n} b={b} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_empty_and_singleton_edge_cases() {
+        let p = Fft2Plan::new(8, 8);
+        assert!(p.rfft2_batch(&[], 4).is_empty());
+        let mut none: Vec<CMatrix> = Vec::new();
+        p.process_batch(&mut none, false, 4); // must not panic
+        let mut rng = Rng::new(12);
+        let x = Matrix::random(8, 8, &mut rng);
+        let lone = p.rfft2_batch(&[&x], 4);
+        assert!(lone[0].max_abs_diff(&p.rfft2(&x, 1)) < 1e-6);
     }
 
     #[test]

@@ -24,11 +24,12 @@ use xai_accel::util::rng::Rng;
 use xai_accel::util::table::{fmt_time, Table};
 use xai_accel::xai;
 
-const USAGE: &str = "usage: xai-accel <info|serve|explain|simulate> [options]
-  info                              artifact and device-model summary
-  serve    --executors N --requests R --artifact-dir DIR [--config FILE]
-  explain  --method distill|shapley|ig [--seed S] [--artifact-dir DIR]
-  simulate --size N [--devices cpu,gpu,tpu]";
+const USAGE: &str = "usage: xai-accel <info|serve|explain|simulate|bench-check> [options]
+  info        artifact and device-model summary
+  serve       --executors N --requests R --artifact-dir DIR [--config FILE]
+  explain     --method distill|shapley|ig [--seed S] [--artifact-dir DIR]
+  simulate    --size N [--devices cpu,gpu,tpu]
+  bench-check --baseline FILE --current FILE [--threshold 0.25] [--tracked a,b,c]";
 
 fn main() {
     let args = Args::from_env();
@@ -37,6 +38,7 @@ fn main() {
         Some("serve") => run_serve(&args),
         Some("explain") => run_explain(&args),
         Some("simulate") => run_simulate(&args),
+        Some("bench-check") => run_bench_check(&args),
         _ => {
             eprintln!("{USAGE}");
             Ok(())
@@ -46,6 +48,56 @@ fn main() {
         eprintln!("error: {e}");
         std::process::exit(1);
     }
+}
+
+/// CI regression gate: compare a fresh `BENCH_ci.json` against the
+/// committed `BENCH_baseline.json` and fail on tracked-kernel
+/// regressions beyond the threshold.
+fn run_bench_check(args: &Args) -> Result<()> {
+    use xai_accel::bench::json;
+    let baseline_path = args.get_or("baseline", "BENCH_baseline.json");
+    let current_path = args.get_or("current", "BENCH_ci.json");
+    let threshold = args.get_f64("threshold", 0.25)?;
+    let tracked: Option<Vec<String>> = args.get("tracked").map(|t| {
+        t.split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    });
+    let baseline = json::load(std::path::Path::new(baseline_path))?;
+    let current = json::load(std::path::Path::new(current_path))?;
+    let comparisons = json::compare(&baseline, &current, tracked.as_deref(), threshold)?;
+
+    let mut t = Table::new(format!(
+        "bench regression gate: p50 vs {baseline_path} (threshold +{:.0}%)",
+        threshold * 100.0
+    ))
+    .header(&["kernel", "baseline", "current", "ratio", "status"]);
+    let mut regressions = 0;
+    for c in &comparisons {
+        if c.regressed {
+            regressions += 1;
+        }
+        t.row(&[
+            c.name.clone(),
+            fmt_time(c.baseline_s),
+            fmt_time(c.current_s),
+            format!("{:.2}x", c.ratio),
+            if c.regressed { "REGRESSED" } else { "ok" }.into(),
+        ]);
+    }
+    t.print();
+    if comparisons.is_empty() {
+        println!("(no overlapping kernels compared — record-only run)");
+    }
+    if regressions > 0 {
+        return Err(xai_accel::error::Error::Config(format!(
+            "{regressions} tracked kernel(s) regressed more than {:.0}%",
+            threshold * 100.0
+        )));
+    }
+    println!("all {} tracked kernels within budget", comparisons.len());
+    Ok(())
 }
 
 fn artifact_dir(args: &Args) -> PathBuf {

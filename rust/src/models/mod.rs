@@ -13,9 +13,11 @@ pub mod cost;
 pub mod layers;
 pub mod microcnn;
 pub mod resnet;
+pub mod template;
 pub mod vgg;
 
 pub use layers::{LayerSpec, ModelSpec};
+pub use template::TemplateModel;
 
 /// The benchmark models of the paper's §IV-A.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

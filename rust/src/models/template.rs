@@ -1,0 +1,283 @@
+//! The native template scorer — the model the offline serving stack
+//! really evaluates and explains.
+//!
+//! The AOT MicroCNN weights live inside the PJRT artifacts, which this
+//! offline image cannot execute (see `runtime::pjrt_stub`).  The fused
+//! batch path still needs a *real* differentiable model, so this module
+//! provides one matched to the synthetic quadrant distribution of
+//! [`crate::data::cifar`]: per class `c` a template `t_c` (positive
+//! over quadrant `c`, slightly negative elsewhere) scores
+//!
+//! ```text
+//! s_c(x)     = ⟨t_c, x⟩                    (one row of a 4×d GEMM)
+//! logit_c(x) = s_c + γ·s_c²                (mildly non-linear)
+//! ∇logit_c   = t_c · (1 + 2γ·s_c)         (input-dependent saliency)
+//! ```
+//!
+//! Everything the XAI pipelines need reduces to matrix computations
+//! against the fixed template bank `T` (4×d), which is exactly what the
+//! fused batch kernels exploit: classification of B images is ONE
+//! `T·X` GEMM, saliency needs the same GEMM plus a scale, and IG path
+//! gradients stack into the batched trapezoid reduce.  The quadratic
+//! term keeps gradients input-dependent so saliency and IG are not
+//! degenerate constants.
+
+use crate::data::cifar;
+use crate::linalg::matrix::Matrix;
+use crate::trace::NativeEngine;
+use crate::xai::integrated_gradients::GradientProvider;
+
+/// Strength of the quadratic logit term.
+pub const GAMMA: f32 = 0.25;
+
+/// Template bank + saliency smoothing kernel.
+#[derive(Debug, Clone)]
+pub struct TemplateModel {
+    /// `NUM_CLASSES × d` template bank (row `c` is `t_c`), d = IMG².
+    pub templates: Matrix,
+    /// Circular blur kernel applied to saliency heatmaps (shared by
+    /// every request — the batched-FFT operand).
+    pub smooth: Matrix,
+}
+
+impl Default for TemplateModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TemplateModel {
+    pub fn new() -> Self {
+        let img = cifar::IMG;
+        let d = img * img;
+        let classes = cifar::NUM_CLASSES;
+        let templates = Matrix::from_fn(classes, d, |c, j| {
+            let (r0, c0) = cifar::quadrant_origin(c);
+            let h = img / 2;
+            let (r, col) = (j / img, j % img);
+            if r >= r0 && r < r0 + h && col >= c0 && col < c0 + h {
+                3.0 / d as f32
+            } else {
+                -1.0 / d as f32
+            }
+        });
+        // 3×3 circular box blur (normalized), centered at the origin
+        let mut smooth = Matrix::zeros(img, img);
+        for dr in [img - 1, 0, 1] {
+            for dc in [img - 1, 0, 1] {
+                smooth.set(dr % img, dc % img, 1.0 / 9.0);
+            }
+        }
+        Self { templates, smooth }
+    }
+
+    /// Input dimensionality (flattened image length).
+    pub fn d(&self) -> usize {
+        self.templates.cols
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.templates.rows
+    }
+
+    fn logits_from_scores(&self, scores: &[f32]) -> Vec<f32> {
+        scores.iter().map(|&s| s + GAMMA * s * s).collect()
+    }
+
+    /// Per-request logits (the fallback path): `T·x` then the
+    /// quadratic lift.
+    pub fn logits(&self, image: &Matrix) -> Vec<f32> {
+        assert_eq!(image.rows * image.cols, self.d());
+        let scores = self.templates.matvec(&image.data);
+        self.logits_from_scores(&scores)
+    }
+
+    /// Fused batched logits: ONE `T·X` GEMM over the column-stacked
+    /// batch (recorded as a `BatchedMatmul`), then the element-wise
+    /// lift.  Row `i` of the result is request `i`'s logits.
+    pub fn logits_batch(&self, eng: &mut NativeEngine, images: &[&Matrix]) -> Vec<Vec<f32>> {
+        assert!(!images.is_empty());
+        let d = self.d();
+        let b = images.len();
+        // X: d×B, one column per image
+        let x = Matrix::from_fn(d, b, |r, c| images[c].data[r]);
+        let scores = eng.batched_matmul(&self.templates, &x, b); // 4×B
+        eng.trace.push(crate::trace::Op::Elementwise {
+            elems: b * self.num_classes(),
+        });
+        (0..b)
+            .map(|i| {
+                let col: Vec<f32> =
+                    (0..self.num_classes()).map(|c| scores.get(c, i)).collect();
+                self.logits_from_scores(&col)
+            })
+            .collect()
+    }
+
+    /// Raw template scores `s_c = ⟨t_c, x⟩` for one image.
+    pub fn scores(&self, image: &Matrix) -> Vec<f32> {
+        self.templates.matvec(&image.data)
+    }
+
+    /// Gradient heatmap of `logit_class` at `image`:
+    /// `t_c · (1 + 2γ·s_c)`, reshaped to the image grid.
+    pub fn grad_heatmap(&self, image: &Matrix, class: usize) -> Matrix {
+        assert!(class < self.num_classes());
+        let s = self.scores(image)[class];
+        let gain = 1.0 + 2.0 * GAMMA * s;
+        let img = image.rows;
+        Matrix::from_fn(img, image.cols, |r, c| {
+            self.templates.get(class, r * image.cols + c) * gain
+        })
+    }
+
+    /// A per-class [`GradientProvider`] view for the IG pipeline.
+    pub fn class_scorer(&self, class: usize) -> TemplateScorer<'_> {
+        assert!(class < self.num_classes());
+        TemplateScorer { model: self, class }
+    }
+}
+
+/// One class's scalar logit as a differentiable function — the
+/// [`GradientProvider`] the IG and saliency pipelines consume.
+pub struct TemplateScorer<'a> {
+    model: &'a TemplateModel,
+    class: usize,
+}
+
+impl GradientProvider for TemplateScorer<'_> {
+    fn value(&self, x: &[f32]) -> f32 {
+        let s: f32 = self
+            .model
+            .templates
+            .row(self.class)
+            .iter()
+            .zip(x)
+            .map(|(t, xi)| t * xi)
+            .sum();
+        s + GAMMA * s * s
+    }
+
+    fn gradient(&self, x: &[f32]) -> Vec<f32> {
+        let s: f32 = self
+            .model
+            .templates
+            .row(self.class)
+            .iter()
+            .zip(x)
+            .map(|(t, xi)| t * xi)
+            .sum();
+        let gain = 1.0 + 2.0 * GAMMA * s;
+        self.model
+            .templates
+            .row(self.class)
+            .iter()
+            .map(|t| t * gain)
+            .collect()
+    }
+
+    fn grad_flops(&self) -> u64 {
+        // one dot product + one scaled copy over d elements
+        4 * self.model.d() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn classifies_the_synthetic_distribution() {
+        let model = TemplateModel::new();
+        let mut rng = Rng::new(0);
+        let mut correct = 0;
+        let trials = 40;
+        for i in 0..trials {
+            let s = cifar::sample_class(i % 4, &mut rng);
+            let logits = model.logits(&s.image);
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == s.label {
+                correct += 1;
+            }
+        }
+        assert!(correct >= trials - 1, "only {correct}/{trials} correct");
+    }
+
+    #[test]
+    fn batched_logits_match_single() {
+        let model = TemplateModel::new();
+        let mut rng = Rng::new(1);
+        let images: Vec<Matrix> = (0..5)
+            .map(|i| cifar::sample_class(i % 4, &mut rng).image)
+            .collect();
+        let refs: Vec<&Matrix> = images.iter().collect();
+        let mut eng = NativeEngine::new();
+        let fused = model.logits_batch(&mut eng, &refs);
+        for (img, got) in images.iter().zip(&fused) {
+            let want = model.logits(img);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5);
+            }
+        }
+        assert!(eng
+            .trace
+            .ops
+            .iter()
+            .any(|o| matches!(o, crate::trace::Op::BatchedMatmul { b: 5, .. })));
+    }
+
+    #[test]
+    fn gradient_is_input_dependent() {
+        let model = TemplateModel::new();
+        let mut rng = Rng::new(2);
+        let a = cifar::sample_class(0, &mut rng).image;
+        let b = cifar::sample_class(1, &mut rng).image;
+        let ga = model.grad_heatmap(&a, 0);
+        let gb = model.grad_heatmap(&b, 0);
+        assert!(ga.max_abs_diff(&gb) > 1e-6, "gradient must depend on x");
+    }
+
+    #[test]
+    fn scorer_gradient_matches_heatmap() {
+        let model = TemplateModel::new();
+        let mut rng = Rng::new(3);
+        let img = cifar::sample_class(2, &mut rng).image;
+        let scorer = model.class_scorer(2);
+        let g = scorer.gradient(&img.data);
+        let h = model.grad_heatmap(&img, 2);
+        for (a, b) in g.iter().zip(&h.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn value_gradient_consistency_finite_difference() {
+        let model = TemplateModel::new();
+        let mut rng = Rng::new(4);
+        let img = cifar::sample_class(1, &mut rng).image;
+        let scorer = model.class_scorer(1);
+        let g = scorer.gradient(&img.data);
+        let eps = 1e-2f32;
+        for j in [0usize, 40, 200] {
+            let mut plus = img.data.clone();
+            plus[j] += eps;
+            let mut minus = img.data.clone();
+            minus[j] -= eps;
+            let fd = (scorer.value(&plus) - scorer.value(&minus)) / (2.0 * eps);
+            assert!((fd - g[j]).abs() < 1e-3, "j={j}: fd {fd} vs {}", g[j]);
+        }
+    }
+
+    #[test]
+    fn smoothing_kernel_is_normalized() {
+        let model = TemplateModel::new();
+        let total: f32 = model.smooth.data.iter().sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+}

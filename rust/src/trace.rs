@@ -9,6 +9,29 @@
 //! recorded [`OpTrace`] under CPU / GPU / TPU cost models to produce
 //! the paper's tables — same algorithm, same op stream, different
 //! silicon.
+//!
+//! # Batched-op conventions
+//!
+//! The fused serving path (§III-E "parallel computation of multiple
+//! inputs") records *batched* ops instead of `b` repeated scalar ones:
+//!
+//! * [`Op::BatchedMatmul`]`{ b, m, k, n }` — `b` independent
+//!   (m×k)·(k×n) products fused into ONE dispatch.  The convention is
+//!   that the **left operand is batch-invariant** (the Shapley
+//!   structure matrix `T`, the trapezoid weight row `w`, the template
+//!   bank of the native classifier): natively the op executes as a
+//!   single (m×k)·(k×b·n) streaming GEMM over the column-concatenated
+//!   right operands.  FLOPs therefore count all `b` problems
+//!   (`b·2·m·k·n`), while bytes count the shared left operand **once**
+//!   plus `b` right operands and outputs — the memory-traffic saving
+//!   that makes fused batching beat a per-request loop even at equal
+//!   FLOPs.
+//! * [`Op::BatchedFft2`]`{ b, m, n }` — `b` same-shape 2-D FFTs through
+//!   one shared [`crate::linalg::fft::Fft2Plan`], row lines of the
+//!   whole batch sharded together across threads.  FLOPs and bytes are
+//!   `b×` the single [`Op::Fft2`] (the data is not shared); the fused
+//!   win is one dispatch instead of `b` and a full-width device grid,
+//!   which is how the device models price it.
 
 use crate::linalg::conv;
 use crate::linalg::dft;
@@ -25,6 +48,18 @@ use crate::linalg::vandermonde;
 pub enum Op {
     /// Real matmul (m×k)·(k×n).
     Matmul { m: usize, k: usize, n: usize },
+    /// `b` real matmuls (m×k)·(k×n) fused into one dispatch with a
+    /// batch-invariant left operand (see the module docs for the
+    /// FLOP/byte conventions).
+    BatchedMatmul {
+        b: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    },
+    /// `b` same-shape 2-D FFTs (planned butterfly schedule) fused into
+    /// one dispatch through a shared plan.
+    BatchedFft2 { b: usize, m: usize, n: usize },
     /// Complex matmul decomposed into 4 real matmuls + 2 adds.
     CMatmul { m: usize, k: usize, n: usize },
     /// 2-D DFT of an m×n matrix *in matmul form* (Eq. 14): two complex
@@ -55,6 +90,10 @@ impl Op {
     pub fn flops(&self) -> u64 {
         match *self {
             Op::Matmul { m, k, n } => 2 * (m * k * n) as u64,
+            // all b problems do full GEMM work — fusing saves traffic
+            // and dispatch, never arithmetic
+            Op::BatchedMatmul { b, m, k, n } => b as u64 * 2 * (m * k * n) as u64,
+            Op::BatchedFft2 { b, m, n } => b as u64 * Op::Fft2 { m, n }.flops(),
             // 4 real matmuls + 2 adds over the output
             Op::CMatmul { m, k, n } => 8 * (m * k * n) as u64 + 2 * (m * n) as u64,
             Op::Dft2Matmul { m, n } => {
@@ -84,6 +123,12 @@ impl Op {
         let f = 4u64; // f32
         match *self {
             Op::Matmul { m, k, n } => f * (m * k + k * n + m * n) as u64,
+            // shared left operand streamed once; right operands and
+            // outputs once per batch member (module-doc convention)
+            Op::BatchedMatmul { b, m, k, n } => {
+                f * (m * k + b * (k * n + m * n)) as u64
+            }
+            Op::BatchedFft2 { b, m, n } => b as u64 * Op::Fft2 { m, n }.bytes(),
             Op::CMatmul { m, k, n } => 2 * f * (m * k + k * n + m * n) as u64,
             Op::Dft2Matmul { m, n } => {
                 Op::CMatmul { m, k: m, n }.bytes() + Op::CMatmul { m, k: n, n }.bytes()
@@ -105,6 +150,8 @@ impl Op {
         let f = 4u64;
         match *self {
             Op::Matmul { m, n, .. } => f * (m * n) as u64,
+            Op::BatchedMatmul { b, m, n, .. } => f * (b * m * n) as u64,
+            Op::BatchedFft2 { b, m, n } => 2 * f * (b * m * n) as u64,
             Op::CMatmul { m, n, .. } => 2 * f * (m * n) as u64,
             Op::Dft2Matmul { m, n } => 2 * f * (m * n) as u64,
             Op::Fft2 { m, n } => 2 * f * (m * n) as u64,
@@ -125,6 +172,7 @@ impl Op {
         matches!(
             self,
             Op::Matmul { .. }
+                | Op::BatchedMatmul { .. }
                 | Op::CMatmul { .. }
                 | Op::Dft2Matmul { .. }
                 | Op::LuSolve { .. }
@@ -244,6 +292,50 @@ impl NativeEngine {
             n: b.cols,
         });
         a.matmul(b)
+    }
+
+    /// Fused batched matmul with a batch-invariant left operand: one
+    /// (m×k)·(k×b·n) GEMM over the column-concatenated right operands
+    /// `stacked` of `b` same-shape problems.  Records
+    /// [`Op::BatchedMatmul`] with per-problem `n = stacked.cols / b`.
+    pub fn batched_matmul(&mut self, a: &Matrix, stacked: &Matrix, b: usize) -> Matrix {
+        assert!(b > 0, "batch must be non-empty");
+        assert_eq!(
+            stacked.cols % b,
+            0,
+            "stacked right operand must hold b equal column blocks"
+        );
+        self.trace.push(Op::BatchedMatmul {
+            b,
+            m: a.rows,
+            k: a.cols,
+            n: stacked.cols / b,
+        });
+        a.matmul(stacked)
+    }
+
+    /// Batched real-input forward 2-D FFT of `b` same-shape matrices
+    /// through one shared cached plan — row lines of the whole batch
+    /// are sharded together across threads.  Records
+    /// [`Op::BatchedFft2`].
+    pub fn batched_rfft2(&mut self, xs: &[&Matrix]) -> Vec<CMatrix> {
+        assert!(!xs.is_empty());
+        let (m, n) = (xs[0].rows, xs[0].cols);
+        self.trace.push(Op::BatchedFft2 { b: xs.len(), m, n });
+        let plan = fft::plan2(m, n);
+        let threads = fft::recommended_threads(xs.len() * m, n);
+        plan.rfft2_batch(xs, threads)
+    }
+
+    /// Batched in-place inverse 2-D FFT (complex), the return leg of
+    /// the batched spectral pipelines.  Records [`Op::BatchedFft2`].
+    pub fn batched_ifft2(&mut self, xs: &mut [CMatrix]) {
+        assert!(!xs.is_empty());
+        let (m, n) = (xs[0].rows, xs[0].cols);
+        self.trace.push(Op::BatchedFft2 { b: xs.len(), m, n });
+        let plan = fft::plan2(m, n);
+        let threads = fft::recommended_threads(xs.len() * m, n);
+        plan.process_batch(xs, true, threads);
     }
 
     pub fn cmatmul(&mut self, a: &CMatrix, b: &CMatrix) -> CMatrix {
@@ -431,6 +523,71 @@ mod tests {
         // ...but the recorded ops differ
         assert!(matches!(tpu.trace.ops[0], Op::Dft2Matmul { .. }));
         assert!(matches!(cpu.trace.ops[0], Op::Fft2 { .. }));
+    }
+
+    #[test]
+    fn batched_matmul_counts_all_work_but_shares_lhs_traffic() {
+        let single = Op::Matmul { m: 12, k: 4096, n: 1 };
+        let fused = Op::BatchedMatmul { b: 8, m: 12, k: 4096, n: 1 };
+        // arithmetic is conserved: fusing never drops FLOPs...
+        assert_eq!(fused.flops(), 8 * single.flops());
+        // ...but the shared structure matrix is streamed once, not 8x
+        assert!(fused.bytes() < 8 * single.bytes());
+        assert_eq!(fused.output_bytes(), 8 * single.output_bytes());
+        assert!(fused.is_matrix_op());
+    }
+
+    #[test]
+    fn batched_fft2_is_b_times_single() {
+        let single = Op::Fft2 { m: 16, n: 16 };
+        let fused = Op::BatchedFft2 { b: 4, m: 16, n: 16 };
+        assert_eq!(fused.flops(), 4 * single.flops());
+        assert_eq!(fused.bytes(), 4 * single.bytes());
+        assert!(!fused.is_matrix_op());
+    }
+
+    #[test]
+    fn engine_batched_matmul_matches_per_problem_loop() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::random(3, 8, &mut rng);
+        let blocks: Vec<Matrix> =
+            (0..4).map(|_| Matrix::random(8, 2, &mut rng)).collect();
+        // column-concatenate the right operands
+        let stacked = Matrix::from_fn(8, 8, |r, c| blocks[c / 2].get(r, c % 2));
+        let mut eng = NativeEngine::new();
+        let fused = eng.batched_matmul(&a, &stacked, 4);
+        assert_eq!(eng.trace.ops.len(), 1);
+        assert!(matches!(
+            eng.trace.ops[0],
+            Op::BatchedMatmul { b: 4, m: 3, k: 8, n: 2 }
+        ));
+        for (i, block) in blocks.iter().enumerate() {
+            let lone = a.matmul(block);
+            for r in 0..3 {
+                for c in 0..2 {
+                    assert!((fused.get(r, 2 * i + c) - lone.get(r, c)).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engine_batched_fft_roundtrip_matches_singles() {
+        let mut rng = Rng::new(8);
+        let xs: Vec<Matrix> = (0..3).map(|_| Matrix::random(8, 8, &mut rng)).collect();
+        let refs: Vec<&Matrix> = xs.iter().collect();
+        let mut eng = NativeEngine::new_fft_baseline();
+        let mut spectra = eng.batched_rfft2(&refs);
+        for (x, s) in xs.iter().zip(&spectra) {
+            let lone = fft::rfft2(x);
+            assert!(s.max_abs_diff(&lone) < 1e-4);
+        }
+        eng.batched_ifft2(&mut spectra);
+        for (x, s) in xs.iter().zip(&spectra) {
+            assert!(s.real().max_abs_diff(x) < 1e-4);
+        }
+        assert_eq!(eng.trace.ops.len(), 2);
+        assert!(matches!(eng.trace.ops[0], Op::BatchedFft2 { b: 3, .. }));
     }
 
     #[test]

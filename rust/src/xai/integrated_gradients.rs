@@ -60,6 +60,92 @@ pub fn path_gradients<G: GradientProvider>(
     g
 }
 
+/// Batched path-gradient evaluation: all `B·(steps+1)` path points of
+/// `requests` (one `(model, x, baseline)` triple per request) stacked
+/// request-major into ONE `(B·(steps+1))×d` gradient matrix, recorded
+/// as a single `ModelGrad` — the batched feed of the fused IG GEMM.
+pub fn path_gradients_batch<G: GradientProvider>(
+    eng: &mut NativeEngine,
+    requests: &[(&G, &[f32], &[f32])],
+    steps: usize,
+) -> Matrix {
+    assert!(!requests.is_empty());
+    assert!(steps >= 1);
+    let d = requests[0].1.len();
+    let rows_per = steps + 1;
+    let mut g = Matrix::zeros(requests.len() * rows_per, d);
+    for (i, (model, x, baseline)) in requests.iter().enumerate() {
+        assert_eq!(x.len(), d);
+        assert_eq!(baseline.len(), d);
+        for s in 0..=steps {
+            let alpha = s as f32 / steps as f32;
+            let point: Vec<f32> = baseline
+                .iter()
+                .zip(*x)
+                .map(|(b, xi)| b + alpha * (xi - b))
+                .collect();
+            let grad = model.gradient(&point);
+            for (c, v) in grad.into_iter().enumerate() {
+                g.set(i * rows_per + s, c, v);
+            }
+        }
+    }
+    // one fused ModelGrad record; average per-grad FLOPs so batches of
+    // heterogeneous providers stay correctly priced in total
+    let count = requests.len() * rows_per;
+    let total_flops: u64 = requests
+        .iter()
+        .map(|(model, _, _)| rows_per as u64 * model.grad_flops())
+        .sum();
+    eng.record_model_grad(count, total_flops / count as u64);
+    g
+}
+
+/// Fused trapezoid reduce over a request-major gradient stack (the
+/// output of [`path_gradients_batch`]): the per-request `(S+1)×d`
+/// blocks are column-concatenated into one `(S+1)×(B·d)` matrix and
+/// reduced by the shared weight row in ONE batched GEMM (recorded as
+/// `BatchedMatmul { b: B, m: 1, k: S+1, n: d }`).  Per-column
+/// accumulation order matches [`ig_trapezoid`], so results are
+/// identical to the per-request loop.
+pub fn ig_trapezoid_batch(
+    eng: &mut NativeEngine,
+    grads: &Matrix,
+    xs: &[&[f32]],
+    baselines: &[&[f32]],
+) -> Vec<Vec<f32>> {
+    let b = xs.len();
+    assert!(b >= 1);
+    assert_eq!(baselines.len(), b);
+    assert_eq!(grads.rows % b, 0, "grads must stack b equal blocks");
+    let rows_per = grads.rows / b;
+    let steps = rows_per - 1;
+    assert!(steps >= 1);
+    let d = grads.cols;
+    // column-concatenate the per-request gradient blocks
+    let g_cat = Matrix::from_fn(rows_per, b * d, |s, j| {
+        grads.get((j / d) * rows_per + s, j % d)
+    });
+    let mut w = Matrix::zeros(1, rows_per);
+    for s in 0..=steps {
+        let wt = if s == 0 || s == steps { 0.5 } else { 1.0 };
+        w.set(0, s, wt / steps as f32);
+    }
+    let avg = eng.batched_matmul(&w, &g_cat, b); // 1×(B·d)
+    eng.trace.push(crate::trace::Op::Elementwise { elems: b * d });
+    (0..b)
+        .map(|i| {
+            let x = xs[i];
+            let baseline = baselines[i];
+            assert_eq!(x.len(), d);
+            assert_eq!(baseline.len(), d);
+            (0..d)
+                .map(|c| (x[c] - baseline[c]) * avg.get(0, i * d + c))
+                .collect()
+        })
+        .collect()
+}
+
 /// Trapezoid-rule IG from precomputed path gradients: the weighted
 /// reduction w·G is recorded as a (1, S+1)×(S+1, d) matmul — the MXU
 /// form of the L1 kernel.
@@ -192,6 +278,69 @@ mod tests {
         let expect = [1.0, -2.0, 2.0];
         for (got, want) in ig.iter().zip(&expect) {
             assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn fused_batch_matches_per_request_loop() {
+        let models: Vec<Quadratic> = vec![
+            Quadratic { w: vec![1.0, -0.5, 2.0] },
+            Quadratic { w: vec![0.3, 0.9, -1.1] },
+            Quadratic { w: vec![2.0, 0.0, 0.7] },
+        ];
+        let xs: Vec<Vec<f32>> = vec![
+            vec![1.0, 2.0, -1.0],
+            vec![0.5, -0.5, 0.25],
+            vec![-2.0, 1.0, 3.0],
+        ];
+        let bs: Vec<Vec<f32>> = vec![
+            vec![0.0, 0.0, 0.0],
+            vec![0.1, 0.1, 0.1],
+            vec![-1.0, 0.5, 0.0],
+        ];
+        let steps = 8;
+        let requests: Vec<(&Quadratic, &[f32], &[f32])> = models
+            .iter()
+            .zip(&xs)
+            .zip(&bs)
+            .map(|((m, x), b)| (m, x.as_slice(), b.as_slice()))
+            .collect();
+        let mut eng = NativeEngine::new();
+        let grads = path_gradients_batch(&mut eng, &requests, steps);
+        let xrefs: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let brefs: Vec<&[f32]> = bs.iter().map(|v| v.as_slice()).collect();
+        let fused = ig_trapezoid_batch(&mut eng, &grads, &xrefs, &brefs);
+        // one fused GEMM was recorded, not B matvecs
+        assert!(eng
+            .trace
+            .ops
+            .iter()
+            .any(|o| matches!(o, crate::trace::Op::BatchedMatmul { b: 3, m: 1, .. })));
+        for i in 0..3 {
+            let mut lone_eng = NativeEngine::new();
+            let g = path_gradients(&mut lone_eng, &models[i], &xs[i], &bs[i], steps);
+            let lone = ig_trapezoid(&mut lone_eng, &g, &xs[i], &bs[i]);
+            for (f, l) in fused[i].iter().zip(&lone) {
+                assert!((f - l).abs() < 1e-5, "request {i}: {f} vs {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_batch_of_one_equals_single() {
+        let m = Quadratic { w: vec![1.5, -0.25] };
+        let x = vec![1.0, -2.0];
+        let b = vec![0.0, 0.0];
+        let mut eng = NativeEngine::new();
+        let grads =
+            path_gradients_batch(&mut eng, &[(&m, x.as_slice(), b.as_slice())], 16);
+        let fused =
+            ig_trapezoid_batch(&mut eng, &grads, &[x.as_slice()], &[b.as_slice()]);
+        let mut lone_eng = NativeEngine::new();
+        let g = path_gradients(&mut lone_eng, &m, &x, &b, 16);
+        let lone = ig_trapezoid(&mut lone_eng, &g, &x, &b);
+        for (f, l) in fused[0].iter().zip(&lone) {
+            assert!((f - l).abs() < 1e-6);
         }
     }
 

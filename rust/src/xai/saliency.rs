@@ -3,6 +3,8 @@
 //! notes in §II-B ("if we choose linear regression ... the entire model
 //! distillation process degenerates to the Saliency Map method").
 
+use crate::linalg::matrix::Matrix;
+use crate::trace::NativeEngine;
 use crate::xai::attribution::Attribution;
 use crate::xai::integrated_gradients::GradientProvider;
 
@@ -10,6 +12,41 @@ use crate::xai::integrated_gradients::GradientProvider;
 pub fn saliency<G: GradientProvider>(model: &G, x: &[f32]) -> Attribution {
     let g = model.gradient(x);
     Attribution::unnamed(g.iter().map(|v| v.abs()).collect())
+}
+
+/// Spectrally smooth ONE gradient heatmap (circular convolution with
+/// `smooth`), engine-traced — the per-request leg the fused batch path
+/// is checked against.
+pub fn smooth_heatmap(eng: &mut NativeEngine, heatmap: &Matrix, smooth: &Matrix) -> Matrix {
+    let out = smooth_heatmaps_batch(eng, std::slice::from_ref(heatmap), smooth);
+    out.into_iter().next().unwrap()
+}
+
+/// Fused batched heatmap smoothing: `b` gradient heatmaps circularly
+/// convolved with one shared kernel through a single shared FFT plan
+/// ([`crate::linalg::conv::circ_conv2_batch`]: batched forward `rfft2`
+/// with the row lines of all heatmaps sharded together, one
+/// Hadamard/rescale pass, batched inverse).  Records two `BatchedFft2`
+/// ops, the kernel-spectrum `Fft2`, and the element-wise product;
+/// results are identical to smoothing each heatmap alone.
+pub fn smooth_heatmaps_batch(
+    eng: &mut NativeEngine,
+    heatmaps: &[Matrix],
+    smooth: &Matrix,
+) -> Vec<Matrix> {
+    assert!(!heatmaps.is_empty());
+    let (m, n) = (smooth.rows, smooth.cols);
+    for h in heatmaps {
+        assert_eq!((h.rows, h.cols), (m, n));
+    }
+    let b = heatmaps.len();
+    eng.trace.push(crate::trace::Op::BatchedFft2 { b, m, n });
+    // the shared kernel's spectrum is one extra forward transform
+    eng.trace.push(crate::trace::Op::Fft2 { m, n });
+    eng.trace.push(crate::trace::Op::Elementwise { elems: 2 * b * m * n });
+    eng.trace.push(crate::trace::Op::BatchedFft2 { b, m, n });
+    let refs: Vec<&Matrix> = heatmaps.iter().collect();
+    crate::linalg::conv::circ_conv2_batch(&refs, smooth)
 }
 
 /// Signed input-times-gradient variant (a cheap IG proxy).
@@ -42,6 +79,30 @@ mod tests {
         let a = saliency(&m, &[1.0, 1.0, 1.0]);
         assert_eq!(a.scores, vec![2.0, 3.0, 0.5]);
         assert_eq!(a.top_feature(), 1);
+    }
+
+    #[test]
+    fn batched_smoothing_matches_circ_conv() {
+        use crate::linalg::conv::circ_conv2;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let smooth = Matrix::random(16, 16, &mut rng);
+        let maps: Vec<Matrix> =
+            (0..4).map(|_| Matrix::random(16, 16, &mut rng)).collect();
+        let mut eng = NativeEngine::new_fft_baseline();
+        let fused = smooth_heatmaps_batch(&mut eng, &maps, &smooth);
+        for (m, got) in maps.iter().zip(&fused) {
+            let want = circ_conv2(m, &smooth);
+            assert!(got.max_abs_diff(&want) < 1e-5);
+        }
+        // the trace carries the two fused transforms, not 2·B singles
+        let fft_ops = eng
+            .trace
+            .ops
+            .iter()
+            .filter(|o| matches!(o, crate::trace::Op::BatchedFft2 { b: 4, .. }))
+            .count();
+        assert_eq!(fft_ops, 2);
     }
 
     #[test]

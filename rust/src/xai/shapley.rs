@@ -15,6 +15,8 @@ use crate::linalg::matrix::Matrix;
 use crate::trace::NativeEngine;
 use crate::util::rng::Rng;
 use crate::xai::attribution::Attribution;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// A cooperative game given as a dense value table: `values[s]` is
 /// v(S) where bit i of `s` means player i is in S.
@@ -90,6 +92,54 @@ pub fn shapley_matrix_form(eng: &mut NativeEngine, games: &[ValueTable]) -> Matr
     let t = weight_matrix(n);
     let v = Matrix::from_fn(1 << n, games.len(), |s, b| games[b].values[s]);
     eng.matmul(&t, &v)
+}
+
+fn weight_matrix_cache() -> &'static Mutex<HashMap<usize, Arc<Matrix>>> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<Matrix>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Largest player count the process-wide T cache retains.  T is an
+/// n×2ⁿ f32 matrix — n = 16 is ~4 MB; pinning anything bigger forever
+/// in a static map would let a handful of odd-sized requests exhaust
+/// serving memory, so larger games build T per call instead.
+pub const MAX_CACHED_PLAYERS: usize = 16;
+
+/// Process-wide cached structure-vector matrix T for `n` players —
+/// built once per n, like the `linalg::fft` plan cache, so the fused
+/// serving path pays the O(n·2ⁿ) construction on the first batch only.
+/// Above [`MAX_CACHED_PLAYERS`] the matrix is built fresh (not
+/// retained).
+pub fn weight_matrix_cached(n: usize) -> Arc<Matrix> {
+    if n > MAX_CACHED_PLAYERS {
+        return Arc::new(weight_matrix(n));
+    }
+    if let Some(t) = weight_matrix_cache().lock().unwrap().get(&n) {
+        return t.clone();
+    }
+    // built outside the lock: a lost race only costs one extra build
+    let built = Arc::new(weight_matrix(n));
+    weight_matrix_cache()
+        .lock()
+        .unwrap()
+        .entry(n)
+        .or_insert(built)
+        .clone()
+}
+
+/// Fused batched Shapley: the whole batch as ONE GEMM, φ = T·V with the
+/// cached T and V the 2ⁿ×B stacked value columns (recorded as a
+/// [`crate::trace::Op::BatchedMatmul`] so the device models price the
+/// fused dispatch).  Numerically identical to [`shapley_matrix_form`]
+/// — and to running it per game — since the per-column accumulation
+/// order is the same.  Returns n×B.
+pub fn shapley_batch_fused(eng: &mut NativeEngine, games: &[ValueTable]) -> Matrix {
+    assert!(!games.is_empty());
+    let n = games[0].n;
+    assert!(games.iter().all(|g| g.n == n));
+    let t = weight_matrix_cached(n);
+    let v = Matrix::from_fn(1 << n, games.len(), |s, b| games[b].values[s]);
+    eng.batched_matmul(&t, &v, games.len())
 }
 
 /// Permutation-sampling approximation with `samples` random orders.
@@ -214,6 +264,38 @@ mod tests {
                 approx[i]
             );
         }
+    }
+
+    #[test]
+    fn fused_batch_matches_per_game_matrix_form() {
+        // The tentpole's correctness property: T·V stacking against
+        // shapley_matrix_form run per game, across random n and B.
+        check("fused T·V == per-game matrix form", 20, |rng: &mut Rng| {
+            let n = rng.int_range(2, 11) as usize;
+            let b = rng.int_range(1, 9) as usize;
+            let games: Vec<ValueTable> = (0..b).map(|_| random_game(n, rng)).collect();
+            let mut fused_eng = NativeEngine::new();
+            let fused = shapley_batch_fused(&mut fused_eng, &games);
+            assert_eq!((fused.rows, fused.cols), (n, b));
+            // exactly one fused op was recorded
+            assert_eq!(fused_eng.trace.ops.len(), 1);
+            for (col, g) in games.iter().enumerate() {
+                let mut eng = NativeEngine::new();
+                let lone = shapley_matrix_form(&mut eng, std::slice::from_ref(g));
+                for i in 0..n {
+                    let d = (fused.get(i, col) - lone.get(i, 0)).abs();
+                    assert!(d < 1e-5, "n={n} b={b} i={i} col={col}: diff {d}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn weight_matrix_cache_shares_and_matches() {
+        let a = weight_matrix_cached(7);
+        let b = weight_matrix_cached(7);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(*a, weight_matrix(7));
     }
 
     #[test]

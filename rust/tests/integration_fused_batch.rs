@@ -1,0 +1,248 @@
+//! Integration: the fused-batch native backend through the LIVE
+//! coordinator under mixed-kind concurrent traffic, asserting that
+//! batched execution returns the same answers as per-request execution
+//! (bit-identical in principle; gated at 1e-5).  No artifacts needed —
+//! these tests run the `BackendMode::NativeOnly` fused kernel layer.
+
+use std::time::Duration;
+use xai_accel::coordinator::{
+    BackendMode, Coordinator, CoordinatorConfig, NativeBackend, Request, Response,
+};
+use xai_accel::data::cifar;
+use xai_accel::linalg::conv::circ_conv2;
+use xai_accel::linalg::matrix::Matrix;
+use xai_accel::util::rng::Rng;
+
+fn native_coordinator(executors: usize) -> Coordinator {
+    let mut config = CoordinatorConfig::default();
+    config.executors = executors;
+    config.backend = BackendMode::NativeOnly;
+    // generous flush window so concurrent submits actually batch
+    config.policy.max_wait = Duration::from_millis(10);
+    Coordinator::start(config).expect("native coordinator start")
+}
+
+fn mixed_request(i: usize, rng: &mut Rng) -> Request {
+    match i % 5 {
+        0 => Request::Classify {
+            image: cifar::sample_class(i % 4, rng).image,
+        },
+        1 => Request::Shapley {
+            n: 6,
+            values: rng.gauss_vec(64),
+            names: (0..6).map(|j| format!("f{j}")).collect(),
+        },
+        2 => Request::Saliency {
+            image: cifar::sample_class(i % 4, rng).image,
+            class: i % 4,
+        },
+        3 => Request::IntGrad {
+            image: cifar::sample_class(i % 4, rng).image,
+            baseline: Matrix::zeros(16, 16),
+            class: i % 4,
+        },
+        _ => {
+            let x = Matrix::from_fn(16, 16, |_, _| 4.0 + rng.gauss_f32());
+            let y = circ_conv2(&x, &Matrix::identity_kernel(16, 16));
+            Request::Distill { x, y }
+        }
+    }
+}
+
+fn assert_responses_close(got: &Response, want: &Response, tol: f32) {
+    match (got, want) {
+        (Response::Logits(a), Response::Logits(b)) => {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < tol, "logits {x} vs {y}");
+            }
+        }
+        (Response::Attribution(a), Response::Attribution(b)) => {
+            assert_eq!(a.names, b.names);
+            for (x, y) in a.scores.iter().zip(&b.scores) {
+                assert!((x - y).abs() < tol, "scores {x} vs {y}");
+            }
+        }
+        (Response::Heatmap(a), Response::Heatmap(b)) => {
+            assert!(a.max_abs_diff(b) < tol, "heatmap diff {}", a.max_abs_diff(b));
+        }
+        (
+            Response::Distillation {
+                kernel: ka,
+                contributions: ca,
+            },
+            Response::Distillation {
+                kernel: kb,
+                contributions: cb,
+            },
+        ) => {
+            assert!(ka.max_abs_diff(kb) < tol);
+            assert!(ca.max_abs_diff(cb) < tol);
+        }
+        other => panic!("response kinds differ: {other:?}"),
+    }
+}
+
+/// The tentpole equivalence: mixed-kind concurrent traffic through the
+/// batching coordinator returns exactly what per-request execution
+/// returns.
+#[test]
+fn fused_batches_match_per_request_execution() {
+    let coord = native_coordinator(2);
+    let oracle = NativeBackend::new();
+    let mut rng = Rng::new(42);
+    let requests: Vec<Request> = (0..60).map(|i| mixed_request(i, &mut rng)).collect();
+    let pendings: Vec<_> = requests
+        .iter()
+        .map(|r| coord.submit(r.clone()).unwrap())
+        .collect();
+    for (req, pending) in requests.iter().zip(pendings) {
+        let got = pending.wait().expect("request must succeed");
+        let want = oracle.execute_single(req).expect("oracle must succeed");
+        assert_responses_close(&got, &want, 1e-5);
+    }
+    // traffic of five kinds across two executors actually batched
+    assert!(coord.metrics().mean_batch_size() > 1.0);
+    assert_eq!(coord.metrics().completed(), 60);
+    coord.shutdown();
+}
+
+/// Submitting from several client threads at once must not corrupt
+/// routing: every response still matches its own request's oracle.
+#[test]
+fn concurrent_clients_get_their_own_answers() {
+    let coord = std::sync::Arc::new(native_coordinator(2));
+    let oracle = std::sync::Arc::new(NativeBackend::new());
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let coord = coord.clone();
+        let oracle = oracle.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            for i in 0..12 {
+                let req = mixed_request(i + t as usize, &mut rng);
+                let got = coord.call(req.clone()).expect("request ok");
+                let want = oracle.execute_single(&req).unwrap();
+                assert_responses_close(&got, &want, 1e-5);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    match std::sync::Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => panic!("coordinator still shared"),
+    }
+}
+
+/// Invalid members of a batch error individually while their batchmates
+/// succeed (the per-request fallback inside the fused path).
+#[test]
+fn invalid_requests_fail_alone_in_native_batches() {
+    let coord = native_coordinator(1);
+    let mut rng = Rng::new(7);
+    let good = coord
+        .submit(Request::Classify {
+            image: cifar::sample_class(2, &mut rng).image,
+        })
+        .unwrap();
+    let bad = coord
+        .submit(Request::Classify {
+            image: Matrix::zeros(3, 5),
+        })
+        .unwrap();
+    let bad_class = coord
+        .submit(Request::Saliency {
+            image: cifar::sample_class(0, &mut rng).image,
+            class: 99,
+        })
+        .unwrap();
+    let bad_table = coord
+        .submit(Request::Shapley {
+            n: 6,
+            values: vec![0.0; 10],
+            names: (0..6).map(|i| format!("f{i}")).collect(),
+        })
+        .unwrap();
+    assert!(good.wait().is_ok());
+    assert!(bad.wait().is_err());
+    assert!(bad_class.wait().is_err());
+    assert!(bad_table.wait().is_err());
+    // the pipeline still serves afterwards
+    let again = coord.call(Request::Classify {
+        image: cifar::sample_class(1, &mut rng).image,
+    });
+    assert!(again.is_ok());
+    coord.shutdown();
+}
+
+/// Native classification must actually classify the synthetic
+/// distribution (the template model mirrors the AOT MicroCNN's task).
+#[test]
+fn native_classify_predicts_the_right_quadrant() {
+    let coord = native_coordinator(1);
+    let mut rng = Rng::new(3);
+    for label in 0..4 {
+        let s = cifar::sample_class(label, &mut rng);
+        match coord.call(Request::Classify { image: s.image }).unwrap() {
+            Response::Logits(l) => {
+                assert_eq!(l.len(), 4);
+                let pred = l
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                assert_eq!(pred, label);
+            }
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+    coord.shutdown();
+}
+
+/// Shapley through the coordinator with a player count no compiled
+/// variant ever covered (n=9): the native fused path has no such
+/// constraint — odd sizes and odd batch remainders must work.
+#[test]
+fn odd_shapley_sizes_and_remainders_work() {
+    let coord = native_coordinator(1);
+    let oracle = NativeBackend::new();
+    let mut rng = Rng::new(11);
+    // batch cap for shapley is 8; submit 11 so a remainder batch forms
+    let reqs: Vec<Request> = (0..11)
+        .map(|_| Request::Shapley {
+            n: 9,
+            values: rng.gauss_vec(512),
+            names: (0..9).map(|i| format!("f{i}")).collect(),
+        })
+        .collect();
+    let pendings: Vec<_> = reqs
+        .iter()
+        .map(|r| coord.submit(r.clone()).unwrap())
+        .collect();
+    for (req, p) in reqs.iter().zip(pendings) {
+        let got = p.wait().unwrap();
+        let want = oracle.execute_single(req).unwrap();
+        assert_responses_close(&got, &want, 1e-5);
+    }
+    coord.shutdown();
+}
+
+/// Auto mode in this artifact-less environment must fall back to the
+/// native backend rather than failing startup.
+#[test]
+fn auto_backend_falls_back_to_native_offline() {
+    let mut config = CoordinatorConfig::default();
+    config.executors = 1;
+    config.backend = BackendMode::Auto;
+    config.artifact_dir = std::path::PathBuf::from("definitely-missing-artifacts");
+    let coord = Coordinator::start(config).expect("auto mode must come up offline");
+    let mut rng = Rng::new(5);
+    let resp = coord.call(Request::Classify {
+        image: cifar::sample_class(0, &mut rng).image,
+    });
+    assert!(resp.is_ok());
+    coord.shutdown();
+}
