@@ -1,190 +1,79 @@
-//! Algorithm 1 — data decomposition of the 2-D Fourier transform —
-//! as a *real* executable component (not just a cost model).
+//! Algorithm 1 — data decomposition of the 2-D Fourier transform — as
+//! the coordinator's *sharding layer*, not a demo.
 //!
 //! The paper's Algorithm 1: split the M×N input's rows across p cores,
 //! each core 1-D-transforms its rows; merge; split the columns of the
-//! intermediate across p cores; transform; merge.  Here the "cores" are
-//! OS threads and the 1-D transforms are the matmul-form `W·x` slices,
-//! so the component is bit-identical to [`linalg::dft::dft2_matmul`]
-//! while exercising the split/execute/merge machinery the coordinator
-//! relies on.
+//! intermediate across p cores; transform; merge.  The band vocabulary
+//! ([`Assignment`], [`plan_splits`]) lives in [`crate::linalg::shard`]
+//! and is shared with the planned-FFT engine and the hwsim pool; this
+//! module adds the serving policy (when to shard) and the executable
+//! entry points the native backend uses.
+//!
+//! The matmul-form band transforms the seed carried here are gone: the
+//! band stages now execute on cached [`crate::linalg::fft::FftPlan`]s
+//! (O(n log n) per line, pair-packed real input) through
+//! [`crate::linalg::fft::rfft2_sharded`] /
+//! [`crate::linalg::fft::process_sharded`].  The matmul-form DFT
+//! survives only as the property-test oracle
+//! ([`crate::linalg::dft::dft2_matmul`]).
 
-use crate::linalg::complex::C32;
-use crate::linalg::dft;
-use crate::linalg::matrix::CMatrix;
+use crate::linalg::fft;
+use crate::linalg::matrix::{CMatrix, Matrix};
 
-/// Row-range assignment for one worker.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct Assignment {
-    pub start: usize,
-    pub len: usize,
+pub use crate::linalg::shard::{plan_splits, Assignment};
+
+/// Serving-size edge (pixels per side) at and above which the native
+/// backend splits a request across the device pool (distill ≥ 256²;
+/// saliency batches reach the same machinery through the fused batch
+/// transforms).  Chosen where the per-band O(n log n) work first
+/// dwarfs the scatter/merge traffic on every modeled interconnect —
+/// see ROADMAP.md "Sharded execution plane".
+pub const SHARD_THRESHOLD: usize = 256;
+
+/// Should a rows×cols transform shard across a `pool`-wide device
+/// pool?  One device, or work below the threshold, runs unsharded.
+pub fn should_shard(rows: usize, cols: usize, pool: usize) -> bool {
+    pool > 1 && rows.max(cols) >= SHARD_THRESHOLD
 }
 
-/// Split `total` items over `p` workers as evenly as possible
-/// (Algorithm 1's "Split M/p rows from x").
-pub fn plan_splits(total: usize, p: usize) -> Vec<Assignment> {
-    assert!(p > 0);
-    let p = p.min(total.max(1));
-    let base = total / p;
-    let extra = total % p;
-    let mut out = Vec::with_capacity(p);
-    let mut start = 0;
-    for i in 0..p {
-        let len = base + usize::from(i < extra);
-        if len == 0 {
-            continue;
-        }
-        out.push(Assignment { start, len });
-        start += len;
-    }
-    out
-}
-
-/// Stage 1 of Algorithm 1 on one worker: transform a band of rows.
-/// Computes `W_M[rows, :] · x` — the worker only needs its band of the
-/// DFT matrix and the full input (read-only; no inter-core exchange).
-fn transform_row_band(wm: &CMatrix, x: &CMatrix, a: Assignment) -> CMatrix {
-    let mut band = CMatrix::zeros(a.len, x.cols);
-    for (r_out, r) in (a.start..a.start + a.len).enumerate() {
-        for c in 0..x.cols {
-            let mut acc = C32::ZERO;
-            for k in 0..x.rows {
-                acc += wm.get(r, k) * x.get(k, c);
-            }
-            band.set(r_out, c, acc);
-        }
-    }
-    band
-}
-
-/// Stage 2 on one worker: transform a band of columns of X':
-/// `X'[:, cols] · W_N[:, cols block]` — produces the output columns.
-fn transform_col_band(xp: &CMatrix, wn: &CMatrix, a: Assignment) -> CMatrix {
-    let mut band = CMatrix::zeros(xp.rows, a.len);
-    for r in 0..xp.rows {
-        for (c_out, c) in (a.start..a.start + a.len).enumerate() {
-            let mut acc = C32::ZERO;
-            for k in 0..xp.cols {
-                acc += xp.get(r, k) * wn.get(k, c);
-            }
-            band.set(r, c_out, acc);
-        }
-    }
-    band
-}
-
-fn merge_row_bands(bands: Vec<CMatrix>, cols: usize) -> CMatrix {
-    let rows: usize = bands.iter().map(|b| b.rows).sum();
-    let mut out = CMatrix::zeros(rows, cols);
-    let mut r0 = 0;
-    for b in bands {
-        for r in 0..b.rows {
-            for c in 0..b.cols {
-                out.set(r0 + r, c, b.get(r, c));
-            }
-        }
-        r0 += b.rows;
-    }
-    out
-}
-
-fn merge_col_bands(bands: Vec<CMatrix>, rows: usize) -> CMatrix {
-    let cols: usize = bands.iter().map(|b| b.cols).sum();
-    let mut out = CMatrix::zeros(rows, cols);
-    let mut c0 = 0;
-    for b in bands {
-        for r in 0..b.rows {
-            for c in 0..b.cols {
-                out.set(r, c0 + c, b.get(r, c));
-            }
-        }
-        c0 += b.cols;
-    }
-    out
-}
-
-/// Algorithm 1, threaded: 2-D unitary DFT of `x` over `p` workers.
+/// Algorithm 1, threaded: 2-D unitary DFT of `x` over `p` workers on
+/// cached FFT plans.  Kept as the stable public name; it is now a thin
+/// veneer over [`crate::linalg::fft::Fft2Plan::process_sharded`].
 pub fn dft2_decomposed(x: &CMatrix, p: usize) -> CMatrix {
-    let (m, n) = (x.rows, x.cols);
-    let wm = dft::dft_matrix(m);
-    let wn = dft::dft_matrix(n);
+    let plan = fft::plan2(x.rows, x.cols);
+    let mut out = x.clone();
+    plan.process_sharded(&mut out, false, &plan_splits(x.rows.max(1), p.max(1)));
+    out
+}
 
-    // Stage 1: rows split across workers, executed in parallel.
-    let row_plan = plan_splits(m, p);
-    let row_bands: Vec<CMatrix> = std::thread::scope(|scope| {
-        let handles: Vec<_> = row_plan
-            .iter()
-            .map(|&a| {
-                let wm = &wm;
-                scope.spawn(move || transform_row_band(wm, x, a))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    let xp = merge_row_bands(row_bands, n);
-
-    // Stage 2: columns split across workers.
-    let col_plan = plan_splits(n, p);
-    let col_bands: Vec<CMatrix> = std::thread::scope(|scope| {
-        let xp = &xp;
-        let handles: Vec<_> = col_plan
-            .iter()
-            .map(|&a| {
-                let wn = &wn;
-                scope.spawn(move || transform_col_band(xp, wn, a))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    merge_col_bands(col_bands, m)
+/// Algorithm 1 on real input: sharded `rfft2` over `p` workers (the
+/// pair-packed fast path the serving pipelines use).
+pub fn rfft2_decomposed(x: &Matrix, p: usize) -> CMatrix {
+    let plan = fft::plan2(x.rows, x.cols);
+    plan.rfft2_sharded(x, &plan_splits(x.rows.max(1), p.max(1)))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::fft;
+    use crate::linalg::dft;
     use crate::linalg::matrix::Matrix;
     use crate::util::prop::check;
     use crate::util::rng::Rng;
 
     #[test]
-    fn splits_cover_exactly() {
-        check("splits partition the range", 30, |rng: &mut Rng| {
-            let total = rng.int_range(1, 100) as usize;
-            let p = rng.int_range(1, 16) as usize;
-            let plan = plan_splits(total, p);
-            // contiguous, disjoint, covering
-            let mut expect = 0;
-            for a in &plan {
-                assert_eq!(a.start, expect);
-                assert!(a.len > 0);
-                expect += a.len;
-            }
-            assert_eq!(expect, total);
-            // balanced within 1
-            let min = plan.iter().map(|a| a.len).min().unwrap();
-            let max = plan.iter().map(|a| a.len).max().unwrap();
-            assert!(max - min <= 1);
-        });
-    }
-
-    #[test]
-    fn more_workers_than_rows_is_fine() {
-        let plan = plan_splits(3, 8);
-        assert_eq!(plan.len(), 3);
-    }
-
-    #[test]
-    fn decomposed_equals_fft() {
-        check("Algorithm 1 == fft2", 10, |rng: &mut Rng| {
+    fn decomposed_equals_matmul_oracle() {
+        // dft2_matmul (Eq. 14) is a different algorithm entirely — the
+        // one place the matmul form survives is as this oracle.
+        check("Algorithm 1 == matmul DFT", 10, |rng: &mut Rng| {
             let m = rng.int_range(2, 24) as usize;
             let n = rng.int_range(2, 24) as usize;
             let p = rng.int_range(1, 6) as usize;
             let x = CMatrix::from_real(&Matrix::random(m, n, rng));
             let via_alg1 = dft2_decomposed(&x, p);
-            let via_fft = fft::fft2(&x);
+            let oracle = dft::dft2_matmul(&x);
             assert!(
-                via_alg1.max_abs_diff(&via_fft) < 1e-3,
+                via_alg1.max_abs_diff(&oracle) < 1e-3,
                 "mismatch at {m}x{n} p={p}"
             );
         });
@@ -197,5 +86,28 @@ mod tests {
         let one = dft2_decomposed(&x, 1);
         let eight = dft2_decomposed(&x, 8);
         assert!(one.max_abs_diff(&eight) < 1e-4);
+    }
+
+    #[test]
+    fn real_input_path_matches_complex_path() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::random(33, 20, &mut rng); // odd rows: uneven bands
+        for p in [1usize, 2, 5] {
+            let real_path = rfft2_decomposed(&x, p);
+            let complex_path = dft2_decomposed(&CMatrix::from_real(&x), p);
+            assert!(
+                real_path.max_abs_diff(&complex_path) < 1e-4,
+                "p={p}: {}",
+                real_path.max_abs_diff(&complex_path)
+            );
+        }
+    }
+
+    #[test]
+    fn threshold_policy() {
+        assert!(should_shard(SHARD_THRESHOLD, SHARD_THRESHOLD, 2));
+        assert!(should_shard(SHARD_THRESHOLD, 8, 4)); // one long edge is enough
+        assert!(!should_shard(SHARD_THRESHOLD, SHARD_THRESHOLD, 1)); // no pool
+        assert!(!should_shard(64, 64, 8)); // below the edge
     }
 }

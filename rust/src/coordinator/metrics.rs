@@ -1,4 +1,6 @@
-//! Serving metrics: counters + latency summaries per request kind.
+//! Serving metrics: counters + latency summaries per request kind,
+//! plus per-device (executor) counters for the sharded execution
+//! plane — backlog depth, batches executed, busy time.
 
 use crate::coordinator::request::RequestKind;
 use crate::util::stats;
@@ -6,6 +8,26 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Counters for one executor device.
+#[derive(Default)]
+struct DeviceCounters {
+    /// Batches placed on the device's queue and not yet executed.
+    queue_depth: AtomicU64,
+    /// Batches this device has executed.
+    batches: AtomicU64,
+    /// Nanoseconds spent executing batches.
+    busy_ns: AtomicU64,
+}
+
+/// A point-in-time view of one device's counters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceStat {
+    pub device: usize,
+    pub queue_depth: u64,
+    pub batches: u64,
+    pub busy_s: f64,
+}
 
 /// Process-wide serving metrics (shared via `Arc`).
 #[derive(Default)]
@@ -19,6 +41,8 @@ pub struct Metrics {
     latencies: Mutex<HashMap<RequestKind, Vec<f64>>>,
     /// per-kind queue-wait samples (seconds)
     queue_waits: Mutex<HashMap<RequestKind, Vec<f64>>>,
+    /// one slot per executor device (fixed at construction)
+    devices: Vec<DeviceCounters>,
 }
 
 /// A rendered latency summary.
@@ -34,6 +58,72 @@ pub struct LatencySummary {
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Metrics with `n` per-device counter slots (the coordinator
+    /// sizes this to its executor pool).
+    pub fn with_devices(n: usize) -> Self {
+        Self {
+            devices: (0..n).map(|_| DeviceCounters::default()).collect(),
+            ..Self::default()
+        }
+    }
+
+    /// Number of tracked devices.
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// A batch was placed on device `d`'s queue.
+    pub fn record_device_enqueue(&self, d: usize) {
+        if let Some(dev) = self.devices.get(d) {
+            dev.queue_depth.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Undo an enqueue whose push failed (the lane closed before the
+    /// batch landed) — keeps the backlog counter truthful.
+    pub fn record_device_unenqueue(&self, d: usize) {
+        if let Some(dev) = self.devices.get(d) {
+            dev.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Device `d` finished executing a batch that took `busy`.
+    pub fn record_device_batch(&self, d: usize, busy: Duration) {
+        if let Some(dev) = self.devices.get(d) {
+            dev.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            dev.batches.fetch_add(1, Ordering::Relaxed);
+            dev.busy_ns
+                .fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Current backlog per device — the placement layer's load signal.
+    pub fn device_backlogs(&self) -> Vec<u64> {
+        self.devices
+            .iter()
+            .map(|d| d.queue_depth.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Point-in-time per-device counters.
+    pub fn device_stats(&self) -> Vec<DeviceStat> {
+        self.devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| DeviceStat {
+                device: i,
+                queue_depth: d.queue_depth.load(Ordering::Relaxed),
+                batches: d.batches.load(Ordering::Relaxed),
+                busy_s: d.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            })
+            .collect()
+    }
+
+    /// Total batches executed (all devices).
+    pub fn batches_executed(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
     }
 
     pub fn record_submit(&self) {
@@ -130,6 +220,15 @@ impl Metrics {
                 ));
             }
         }
+        for d in self.device_stats() {
+            out.push_str(&format!(
+                "  device {:<2} batches={:<5} busy={:.2}ms depth={}\n",
+                d.device,
+                d.batches,
+                d.busy_s * 1e3,
+                d.queue_depth,
+            ));
+        }
         out
     }
 }
@@ -172,6 +271,24 @@ mod tests {
     fn empty_summary_is_none() {
         let m = Metrics::new();
         assert!(m.latency_summary(RequestKind::Shapley).is_none());
+    }
+
+    #[test]
+    fn per_device_counters_track_enqueue_and_execution() {
+        let m = Metrics::with_devices(3);
+        assert_eq!(m.device_count(), 3);
+        m.record_device_enqueue(1);
+        m.record_device_enqueue(1);
+        assert_eq!(m.device_backlogs(), vec![0, 2, 0]);
+        m.record_device_batch(1, Duration::from_millis(4));
+        let stats = m.device_stats();
+        assert_eq!(stats[1].queue_depth, 1);
+        assert_eq!(stats[1].batches, 1);
+        assert!((stats[1].busy_s - 0.004).abs() < 1e-9);
+        assert_eq!(stats[0].batches, 0);
+        // out-of-range device ids are ignored, not panics
+        m.record_device_enqueue(99);
+        m.record_device_batch(99, Duration::ZERO);
     }
 
     #[test]

@@ -8,20 +8,25 @@
 //!                     │
 //!               batcher thread                   (dynamic batching:
 //!                     │                           group by request
-//!               [work queue]                      kind, flush on size
-//!                /    |    \                      or deadline)
-//!         executor  executor  executor           (each owns its own
-//!          thread    thread    thread             PJRT registry — a
-//!                \    |    /                      "core" in the
+//!              placement (least-loaded)           kind, flush on size
+//!               /       |       \                 or deadline)
+//!        [queue 0]  [queue 1]  [queue 2]         (one bounded queue
+//!            │          │          │              per device)
+//!        executor   executor   executor          (each owns its own
+//!         thread     thread     thread            PJRT registry — a
+//!               \       |       /                 "core" in the
 //!              per-request reply                  paper's Algorithm 1)
 //! ```
 //!
 //! The paper's two system activities map directly: **data
-//! decomposition** = the per-core executor pool (each PJRT registry is
-//! an independent core replica), **parallel computation of multiple
-//! inputs** = the dynamic batcher packing compatible requests into one
-//! compiled executable call (e.g. 8 Shapley games into the `(2ⁿ×8)`
-//! structure-vector matmul).
+//! decomposition** = the per-device execution plane — whole batches
+//! place onto the least-loaded device queue, and single requests above
+//! [`decomposition::SHARD_THRESHOLD`] split/execute/merge through the
+//! sharded FFT kernels (pool-width band plans on scoped core threads,
+//! priced as a multi-chip pool by `hwsim`); **parallel computation of
+//! multiple inputs** = the dynamic batcher packing compatible requests
+//! into one compiled executable call (e.g. 8 Shapley games into the
+//! `(2ⁿ×8)` structure-vector matmul).
 
 pub mod batcher;
 pub mod decomposition;
@@ -33,8 +38,8 @@ pub mod router;
 pub mod service;
 pub mod worker;
 
-pub use metrics::Metrics;
+pub use metrics::{DeviceStat, Metrics};
 pub use native::NativeBackend;
 pub use request::{Request, RequestKind, Response};
-pub use service::{Coordinator, CoordinatorConfig};
+pub use service::{Coordinator, CoordinatorConfig, CoordinatorStats};
 pub use worker::BackendMode;

@@ -16,7 +16,14 @@
 //!   plan, batched `rfft2` sharding the rows of the whole batch
 //!   ([`saliency::smooth_heatmaps_batch`]).
 //! * **Distillation** — inherently per-request (each request is its own
-//!   spectral solve), executed through the per-request fallback.
+//!   spectral solve), executed through the per-request fallback;
+//!   requests at or above
+//!   [`crate::coordinator::decomposition::SHARD_THRESHOLD`] (256²)
+//!   split/execute/merge via [`distillation::distill_fft_sharded`]
+//!   (Algorithm 1): a pool-width band plan run on scoped core threads
+//!   inside the owning executor, recording `ShardedFft2` + collective
+//!   ops so `hwsim` pool replays price the same split on a real
+//!   multi-chip topology.
 //!
 //! Requests that fail validation (wrong shape, bad class) are errored
 //! individually and the remaining valid subset still executes fused —
@@ -37,20 +44,54 @@ use crate::xai::{distillation, integrated_gradients, saliency, shapley};
 /// evaluations per request).
 pub const IG_STEPS: usize = 32;
 
-/// Square sizes the native distillation path accepts (mirrors the
-/// compiled-variant gate so error behavior matches the PJRT path).
-pub const NATIVE_DISTILL_SIZES: [usize; 3] = [16, 32, 64];
+/// Square sizes the native distillation path accepts.  The first three
+/// mirror the compiled-variant gate (so error behavior matches the
+/// PJRT path); the pow-2 sizes from 256 up are the sharded serving
+/// sizes that split across the device pool.
+pub const NATIVE_DISTILL_SIZES: [usize; 6] = [16, 32, 64, 256, 512, 1024];
 
 /// Fused native executor: owns the template model shared by every
-/// image-shaped pipeline.
-#[derive(Debug, Default)]
+/// image-shaped pipeline, plus the Algorithm-1 pool width used for
+/// sharded (≥ threshold) requests.
+#[derive(Debug)]
 pub struct NativeBackend {
     model: TemplateModel,
+    shards: usize,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self {
+            model: TemplateModel::default(),
+            shards: default_shards(),
+        }
+    }
+}
+
+/// Pool width when the coordinator doesn't dictate one: the host
+/// parallelism, capped like `fft::recommended_threads`.
+fn default_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(8)
 }
 
 impl NativeBackend {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Set the Algorithm-1 pool width (the coordinator passes its
+    /// executor count so sharding matches the real device pool).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// The pool width sharded requests split across.
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     pub fn model(&self) -> &TemplateModel {
@@ -308,7 +349,13 @@ impl NativeBackend {
             });
         }
         let mut eng = NativeEngine::new_fft_baseline();
-        let kernel = distillation::distill_fft(&mut eng, x, y, 1e-9);
+        let sharding = crate::coordinator::decomposition::should_shard(n, n, self.shards);
+        let kernel = if sharding {
+            // split/execute/merge across the device pool (Algorithm 1)
+            distillation::distill_fft_sharded(&mut eng, x, y, 1e-9, self.shards)
+        } else {
+            distillation::distill_fft(&mut eng, x, y, 1e-9)
+        };
         let contributions = distillation::contribution_factors(&mut eng, x, &kernel, n / 4);
         Ok(Response::Distillation {
             kernel,
@@ -435,6 +482,32 @@ mod tests {
                 other => panic!("unexpected responses {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn backend_pool_width_plumbs_through() {
+        let b = NativeBackend::new().with_shards(5);
+        assert_eq!(b.shards(), 5);
+        // degenerate pool clamps to one core
+        let b = NativeBackend::new().with_shards(0);
+        assert_eq!(b.shards(), 1);
+    }
+
+    #[test]
+    fn distill_gate_admits_sharded_sizes_and_rejects_odd_ones() {
+        let backend = NativeBackend::new();
+        // 128 is not a served size: below the shard threshold and not a
+        // compiled variant
+        let bad = backend.execute_single(&Request::Distill {
+            x: Matrix::zeros(128, 128),
+            y: Matrix::zeros(128, 128),
+        });
+        assert!(bad.is_err());
+        assert!(NATIVE_DISTILL_SIZES.contains(&256));
+        assert!(
+            crate::coordinator::decomposition::SHARD_THRESHOLD <= 256,
+            "every sharded serving size must be at or above the threshold"
+        );
     }
 
     #[test]

@@ -37,6 +37,34 @@ pub fn pick_cnn_variant(n: usize) -> usize {
     *CNN_BATCH_VARIANTS.last().unwrap()
 }
 
+/// Chunk a classification batch of `n` images into compiled-variant
+/// runs: greedy largest-fit, so 33 → `[32, 1]` and 70 → `[32, 32, 6]`
+/// (the 6-image tail pads into the `b8` executable).  This is the
+/// split `pick_cnn_variant` alone does not perform — every caller must
+/// chunk through this plan before touching an executable.
+pub fn cnn_chunk_plan(mut n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    while n > 0 {
+        let take = n.min(pick_cnn_variant(n));
+        out.push(take);
+        n -= take;
+    }
+    out
+}
+
+/// Least-loaded placement over the per-device backlogs: the device
+/// with the smallest backlog wins; ties go to the lowest index (so an
+/// idle pool drains round-robin-ish under the batcher's enqueue
+/// accounting).
+pub fn place_least_loaded(backlogs: &[u64]) -> usize {
+    backlogs
+        .iter()
+        .enumerate()
+        .min_by_key(|&(_, b)| *b)
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 /// Execute one batch against the live backend, producing one response
 /// per envelope (order preserved).
 pub fn execute_batch(backend: &ExecBackend, batch: &Batch) -> Vec<Result<Response>> {
@@ -71,12 +99,9 @@ fn classify_batch(reg: &ArtifactRegistry, batch: &Batch) -> Vec<Result<Response>
         .collect();
     let mut out: Vec<Result<Response>> = Vec::with_capacity(images.len());
     let mut idx = 0;
-    while idx < images.len() {
-        let remaining = images.len() - idx;
-        let bsz = pick_cnn_variant(remaining);
-        let take = remaining.min(bsz);
+    for take in cnn_chunk_plan(images.len()) {
         let chunk = &images[idx..idx + take];
-        match run_cnn_chunk(reg, chunk, bsz) {
+        match run_cnn_chunk(reg, chunk, pick_cnn_variant(take)) {
             Ok(mut logits) => out.append(&mut logits.drain(..).map(Ok).collect()),
             Err(e) => {
                 for _ in 0..take {
@@ -330,6 +355,33 @@ mod tests {
         assert_eq!(pick_cnn_variant(8), 8);
         assert_eq!(pick_cnn_variant(9), 32);
         assert_eq!(pick_cnn_variant(33), 32); // split into multiple runs
+    }
+
+    #[test]
+    fn oversized_batch_chunks_to_variant_sizes() {
+        // The n = 33 regression: pick_cnn_variant alone returns 32 and
+        // the old caller logic had to split — the chunk plan makes the
+        // split explicit and total-preserving.
+        assert_eq!(cnn_chunk_plan(33), vec![32, 1]);
+        assert_eq!(cnn_chunk_plan(70), vec![32, 32, 6]);
+        assert_eq!(cnn_chunk_plan(8), vec![8]);
+        assert!(cnn_chunk_plan(0).is_empty());
+        for n in [1usize, 7, 31, 32, 33, 64, 65, 100] {
+            let plan = cnn_chunk_plan(n);
+            assert_eq!(plan.iter().sum::<usize>(), n, "plan must conserve n={n}");
+            for take in plan {
+                // every chunk fits its chosen executable
+                assert!(take <= pick_cnn_variant(take));
+            }
+        }
+    }
+
+    #[test]
+    fn least_loaded_placement_picks_minimum_and_breaks_ties_low() {
+        assert_eq!(place_least_loaded(&[3, 1, 2]), 1);
+        assert_eq!(place_least_loaded(&[2, 2, 2]), 0);
+        assert_eq!(place_least_loaded(&[5, 0, 0]), 1);
+        assert_eq!(place_least_loaded(&[]), 0);
     }
 
     #[test]

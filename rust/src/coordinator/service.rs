@@ -1,10 +1,19 @@
 //! The [`Coordinator`]: public serving API wiring ingress → batcher →
-//! executors.
+//! placement → per-device executor queues.
+//!
+//! Since PR 4 the executor pool is a real device plane: every executor
+//! owns its own bounded work queue, the batcher places each assembled
+//! batch on the least-loaded device
+//! ([`crate::coordinator::router::place_least_loaded`] over the
+//! per-device backlog counters), and [`Coordinator::stats`] snapshots
+//! the per-device counters (queue depth, batches executed, busy time)
+//! alongside the aggregate serving metrics.
 
 use crate::coordinator::batcher::{Batch, BatchAssembler, BatchPolicy};
-use crate::coordinator::metrics::Metrics;
-use crate::coordinator::queue::BoundedQueue;
+use crate::coordinator::metrics::{DeviceStat, Metrics};
+use crate::coordinator::queue::{BoundedQueue, QueueError};
 use crate::coordinator::request::{Envelope, Request, Response};
+use crate::coordinator::router;
 use crate::error::{Error, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -17,11 +26,12 @@ use std::time::{Duration, Instant};
 pub struct CoordinatorConfig {
     /// Where `manifest.txt` and the HLO artifacts live.
     pub artifact_dir: PathBuf,
-    /// Executor threads (each compiles its own PJRT registry).
+    /// Executor threads (each compiles its own PJRT registry and owns
+    /// its own device queue).
     pub executors: usize,
     /// Ingress queue capacity (backpressure bound).
     pub queue_capacity: usize,
-    /// Work queue capacity (batches in flight).
+    /// Per-device work queue capacity (batches in flight per lane).
     pub work_capacity: usize,
     /// Batching policy.
     pub policy: BatchPolicy,
@@ -72,6 +82,17 @@ impl Pending {
     }
 }
 
+/// Aggregate + per-device serving snapshot.
+#[derive(Debug, Clone)]
+pub struct CoordinatorStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub mean_batch_size: f64,
+    /// One entry per executor device (queue depth, batches, busy time).
+    pub devices: Vec<DeviceStat>,
+}
+
 /// The serving engine.  Construct with [`Coordinator::start`], submit
 /// requests, then [`Coordinator::shutdown`].
 pub struct Coordinator {
@@ -80,23 +101,25 @@ pub struct Coordinator {
     next_id: AtomicU64,
     batcher: Option<JoinHandle<()>>,
     executors: Vec<JoinHandle<()>>,
-    work: BoundedQueue<Batch>,
+    work: Vec<BoundedQueue<Batch>>,
 }
 
 impl Coordinator {
-    /// Start the pipeline: spawns the batcher and `executors` workers,
-    /// and blocks until the sentinel worker (worker 0) has compiled its
-    /// registry, so the first submit doesn't race startup failure and a
-    /// sentinel compile error cannot be masked by a faster sibling (see
-    /// `worker::await_readiness`).
+    /// Start the pipeline: spawns the batcher and `executors` workers
+    /// (each with its own device queue), and blocks until the sentinel
+    /// worker (worker 0) has compiled its registry, so the first submit
+    /// doesn't race startup failure and a sentinel compile error cannot
+    /// be masked by a faster sibling (see `worker::await_readiness`).
     pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
+        let executors_n = config.executors.max(1);
         let ingress: BoundedQueue<Envelope> = BoundedQueue::new(config.queue_capacity);
-        let work: BoundedQueue<Batch> = BoundedQueue::new(config.work_capacity);
-        let metrics = Arc::new(Metrics::new());
+        let work: Vec<BoundedQueue<Batch>> = (0..executors_n)
+            .map(|_| BoundedQueue::new(config.work_capacity))
+            .collect();
+        let metrics = Arc::new(Metrics::with_devices(executors_n));
 
         let (ready_tx, ready_rx) = mpsc::channel();
         let executors = crate::coordinator::worker::spawn_executors(
-            config.executors,
             config.artifact_dir.clone(),
             config.backend,
             work.clone(),
@@ -109,10 +132,11 @@ impl Coordinator {
         let batcher = {
             let ingress = ingress.clone();
             let work = work.clone();
+            let metrics = metrics.clone();
             let policy = config.policy.clone();
             std::thread::Builder::new()
                 .name("xai-batcher".into())
-                .spawn(move || batcher_loop(ingress, work, policy))
+                .spawn(move || batcher_loop(ingress, work, policy, metrics))
                 .expect("spawn batcher")
         };
 
@@ -153,13 +177,26 @@ impl Coordinator {
         &self.metrics
     }
 
+    /// Aggregate + per-device counters in one snapshot.
+    pub fn stats(&self) -> CoordinatorStats {
+        CoordinatorStats {
+            submitted: self.metrics.submitted(),
+            completed: self.metrics.completed(),
+            failed: self.metrics.failed(),
+            mean_batch_size: self.metrics.mean_batch_size(),
+            devices: self.metrics.device_stats(),
+        }
+    }
+
     /// Drain and stop all threads.
     pub fn shutdown(mut self) {
         self.ingress.close();
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
         }
-        self.work.close();
+        for q in &self.work {
+            q.close();
+        }
         for h in self.executors.drain(..) {
             let _ = h.join();
         }
@@ -169,18 +206,66 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.ingress.close();
-        self.work.close();
+        for q in &self.work {
+            q.close();
+        }
     }
 }
 
-/// Batcher thread: drain ingress, assemble, flush on size or deadline.
+/// Batcher thread: drain ingress, assemble, flush on size or deadline,
+/// and place each ready batch on the least-loaded device queue.
 fn batcher_loop(
     ingress: BoundedQueue<Envelope>,
-    work: BoundedQueue<Batch>,
+    work: Vec<BoundedQueue<Batch>>,
     policy: BatchPolicy,
+    metrics: Arc<Metrics>,
 ) {
     let max_wait = policy.max_wait;
     let mut assembler = BatchAssembler::new(policy);
+    // Placement: pick the live device with the smallest backlog,
+    // account the enqueue so subsequent placements see it, then push.
+    // A lane whose worker never came up (bring-up failure closes its
+    // queue) is marked dead and skipped from then on — batches retry
+    // the survivors instead of piling onto a drain-less queue (the
+    // shared-queue fault tolerance the per-device split must keep).
+    // Blocking on a full live lane is the backpressure.
+    let mut alive: Vec<bool> = vec![true; work.len()];
+    let mut place = |batch: Batch| -> std::result::Result<(), ()> {
+        let mut batch = batch;
+        loop {
+            let mut backlogs = metrics.device_backlogs();
+            backlogs.resize(work.len(), 0);
+            for (b, &a) in backlogs.iter_mut().zip(&alive) {
+                if !a {
+                    *b = u64::MAX;
+                }
+            }
+            if !alive.iter().any(|&a| a) {
+                return Err(()); // every lane is gone: stop the batcher
+            }
+            let d = router::place_least_loaded(&backlogs);
+            metrics.record_device_enqueue(d);
+            match work[d].try_push(batch) {
+                Ok(()) => return Ok(()),
+                Err((b, QueueError::Closed)) => {
+                    metrics.record_device_unenqueue(d);
+                    alive[d] = false;
+                    batch = b;
+                }
+                Err((b, QueueError::Full)) => {
+                    return match work[d].push(b) {
+                        Ok(()) => Ok(()),
+                        Err(_) => {
+                            // closed while we were blocked (shutdown)
+                            metrics.record_device_unenqueue(d);
+                            alive[d] = false;
+                            Err(())
+                        }
+                    };
+                }
+            }
+        }
+    };
     loop {
         // Wait bounded by the earliest pending deadline.
         let timeout = assembler
@@ -190,14 +275,14 @@ fn batcher_loop(
         match ingress.pop_timeout(timeout) {
             Some(env) => {
                 if let Some(batch) = assembler.offer(env) {
-                    if work.push(batch).is_err() {
+                    if place(batch).is_err() {
                         break;
                     }
                 }
                 // opportunistically drain whatever else arrived
                 for env in ingress.drain_up_to(64) {
                     if let Some(batch) = assembler.offer(env) {
-                        if work.push(batch).is_err() {
+                        if place(batch).is_err() {
                             return;
                         }
                     }
@@ -210,16 +295,18 @@ fn batcher_loop(
             }
         }
         for batch in assembler.flush_expired(Instant::now()) {
-            if work.push(batch).is_err() {
+            if place(batch).is_err() {
                 return;
             }
         }
     }
     // shutdown: flush the tail
     for batch in assembler.flush_all() {
-        if work.push(batch).is_err() {
+        if place(batch).is_err() {
             return;
         }
     }
-    work.close();
+    for q in &work {
+        q.close();
+    }
 }

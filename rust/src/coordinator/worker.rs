@@ -1,11 +1,19 @@
-//! Executor workers: each owns a full PJRT registry (its "core").
+//! Executor workers: each owns a full PJRT registry (its "core") and
+//! its own work queue (its device lane).
 //!
 //! `PjRtClient` is not `Send`, so registries cannot be shared; instead
 //! every worker thread compiles its own copy of the artifacts at
 //! startup.  This mirrors the paper's Algorithm 1 topology: `p`
 //! independent cores, each executing sub-tasks "without requiring any
 //! data exchange between cores", with results merged by the reply
-//! channels.
+//! channels.  Since PR 4 the cores are real scheduling entities: the
+//! router places each batch on ONE device's queue (least-loaded), and
+//! requests above [`crate::coordinator::decomposition::SHARD_THRESHOLD`]
+//! split/execute/merge through the native backend's sharded kernels —
+//! a pool-width band plan executed on scoped core threads inside the
+//! owning executor (the simulated Algorithm-1 cores), recording the
+//! `ShardedFft2`/collective ops that `hwsim::pool::DevicePool` prices
+//! as a true multi-chip topology.
 //!
 //! # Readiness contract
 //!
@@ -55,13 +63,18 @@ pub enum ExecBackend {
 }
 
 impl ExecBackend {
-    /// Bring up a backend under the given mode.
+    /// Bring up a backend under the given mode.  `pool` is the device
+    /// pool width — the native backend shards oversized requests
+    /// across that many cores (Algorithm 1).
     pub fn bring_up(
         mode: BackendMode,
         dir: &std::path::Path,
+        pool: usize,
     ) -> crate::error::Result<ExecBackend> {
         match mode {
-            BackendMode::NativeOnly => Ok(ExecBackend::Native(NativeBackend::new())),
+            BackendMode::NativeOnly => {
+                Ok(ExecBackend::Native(NativeBackend::new().with_shards(pool)))
+            }
             BackendMode::PjrtOnly => {
                 crate::runtime::ArtifactRegistry::load(dir).map(ExecBackend::Pjrt)
             }
@@ -72,7 +85,7 @@ impl ExecBackend {
                         "xai-executor: artifacts unavailable ({e}); \
                          serving through the native fused-batch backend"
                     );
-                    Ok(ExecBackend::Native(NativeBackend::new()))
+                    Ok(ExecBackend::Native(NativeBackend::new().with_shards(pool)))
                 }
             },
         }
@@ -86,28 +99,29 @@ impl ExecBackend {
     }
 }
 
-/// Spawn `count` executor threads consuming from `work`.
+/// Spawn one executor thread per device queue in `work` (worker `i`
+/// drains queue `i` — its own device lane).
 ///
-/// Returns the join handles; workers exit when the queue closes.  Each
-/// worker sends exactly one [`ReadySignal`] and drops its sender, so
-/// the channel disconnects once every worker has reported.
+/// Returns the join handles; workers exit when their queue closes.
+/// Each worker sends exactly one [`ReadySignal`] and drops its sender,
+/// so the channel disconnects once every worker has reported.
 pub fn spawn_executors(
-    count: usize,
     artifact_dir: PathBuf,
     backend: BackendMode,
-    work: BoundedQueue<Batch>,
+    work: Vec<BoundedQueue<Batch>>,
     metrics: Arc<Metrics>,
     ready: mpsc::Sender<ReadySignal>,
 ) -> Vec<JoinHandle<()>> {
-    (0..count)
-        .map(|i| {
-            let work = work.clone();
+    let pool = work.len();
+    work.into_iter()
+        .enumerate()
+        .map(|(i, queue)| {
             let metrics = metrics.clone();
             let dir = artifact_dir.clone();
             let ready = ready.clone();
             std::thread::Builder::new()
                 .name(format!("xai-executor-{i}"))
-                .spawn(move || executor_loop(i, backend, &dir, work, metrics, ready))
+                .spawn(move || executor_loop(i, backend, &dir, pool, queue, metrics, ready))
                 .expect("spawn executor")
         })
         .collect()
@@ -135,6 +149,7 @@ fn executor_loop(
     id: usize,
     mode: BackendMode,
     dir: &std::path::Path,
+    pool: usize,
     work: BoundedQueue<Batch>,
     metrics: Arc<Metrics>,
     ready: mpsc::Sender<ReadySignal>,
@@ -142,7 +157,7 @@ fn executor_loop(
     // Each worker brings up its own backend (a PJRT registry is its own
     // "core" and is not Send), reports the outcome once, and releases
     // the readiness channel.
-    let backend = match ExecBackend::bring_up(mode, dir) {
+    let backend = match ExecBackend::bring_up(mode, dir, pool) {
         Ok(b) => {
             let _ = ready.send((id, Ok(())));
             drop(ready);
@@ -151,6 +166,15 @@ fn executor_loop(
         Err(e) => {
             eprintln!("executor {id}: failed to bring up backend: {e}");
             let _ = ready.send((id, Err(e)));
+            // Close this device's lane so the placement layer stops
+            // routing batches to a worker that will never drain them
+            // (the batcher marks the lane dead on the closed-push),
+            // then drain anything that already landed: dropping the
+            // envelopes disconnects their reply channels, so waiting
+            // clients get "worker dropped the request" instead of
+            // hanging on a queue nobody will ever pop.
+            work.close();
+            while work.pop().is_some() {}
             return;
         }
     };
@@ -160,6 +184,9 @@ fn executor_loop(
         let started = Instant::now();
         let results = router::execute_batch(&backend, &batch);
         debug_assert_eq!(results.len(), n);
+        // per-device accounting: this lane's backlog shrinks, its busy
+        // time grows — the placement layer reads both
+        metrics.record_device_batch(id, started.elapsed());
         for (env, result) in batch.envelopes.into_iter().zip(results) {
             let ok = result.is_ok();
             let latency = env.enqueued_at.elapsed();
@@ -209,13 +236,35 @@ mod tests {
     fn backend_bring_up_modes() {
         let missing = std::path::Path::new("definitely-missing-artifacts");
         // native mode never touches the registry
-        let native = ExecBackend::bring_up(BackendMode::NativeOnly, missing).unwrap();
+        let native = ExecBackend::bring_up(BackendMode::NativeOnly, missing, 4).unwrap();
         assert_eq!(native.name(), "native");
         // auto mode degrades to native when artifacts cannot load
-        let auto = ExecBackend::bring_up(BackendMode::Auto, missing).unwrap();
+        let auto = ExecBackend::bring_up(BackendMode::Auto, missing, 4).unwrap();
         assert_eq!(auto.name(), "native");
         // pjrt-only surfaces the load failure (offline stub or missing dir)
-        assert!(ExecBackend::bring_up(BackendMode::PjrtOnly, missing).is_err());
+        assert!(ExecBackend::bring_up(BackendMode::PjrtOnly, missing, 4).is_err());
+    }
+
+    #[test]
+    fn failed_bring_up_closes_its_device_queue() {
+        // A worker that cannot bring up its backend must close its
+        // lane, so the placement layer marks it dead instead of
+        // enqueueing batches no one will ever drain.
+        let (tx, rx) = mpsc::channel();
+        let work: Vec<BoundedQueue<Batch>> =
+            (0..2).map(|_| BoundedQueue::new(2)).collect();
+        let handles = spawn_executors(
+            PathBuf::from("definitely-missing-artifacts"),
+            BackendMode::PjrtOnly,
+            work.clone(),
+            Arc::new(Metrics::with_devices(2)),
+            tx,
+        );
+        for h in handles {
+            let _ = h.join();
+        }
+        drop(rx);
+        assert!(work.iter().all(|q| q.is_closed()));
     }
 
     #[test]

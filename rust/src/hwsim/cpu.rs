@@ -60,7 +60,8 @@ impl Device for CpuSim {
     }
 
     fn op_cost(&self, op: &Op, units: usize) -> OpCost {
-        let units = units.min(self.cores).max(1) as f64;
+        // Sharded ops carry their own core count (Algorithm 1's p).
+        let units = op.shard_parts().unwrap_or(units).min(self.cores).max(1) as f64;
         let compute = op.flops() as f64 / (self.throughput_for(op) * units);
         let memory = op.bytes() as f64 / self.mem_bw; // bw is shared
         OpCost {

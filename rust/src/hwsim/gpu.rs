@@ -72,6 +72,11 @@ impl GpuSim {
             // batched FFT is still branchy per line, but the batch grid
             // keeps more SMs resident between divergent stages
             Op::BatchedFft2 { .. } => self.divergent_eff * 1.5,
+            // sharded FFT bands behave like the batch grid: each band
+            // is an independent block of lines keeping SMs resident
+            Op::ShardedFft2 { .. } => self.divergent_eff * 1.5,
+            // collectives are pure data movement (bandwidth-bound)
+            Op::AllGather { .. } | Op::Scatter { .. } => self.elementwise_eff,
             Op::Elementwise { .. } | Op::Reduce { .. } | Op::HadamardDiv { .. } => {
                 self.elementwise_eff
             }
@@ -95,7 +100,8 @@ impl Device for GpuSim {
     fn op_cost(&self, op: &Op, units: usize) -> OpCost {
         // decomposition over SMs happens inside a kernel anyway; extra
         // "units" only help by overlapping independent ops, modeled as a
-        // modest multiplier.
+        // modest multiplier.  Sharded ops carry their own part count.
+        let units = op.shard_parts().unwrap_or(units);
         let overlap = 1.0 + 0.15 * (units.min(self.sms) as f64 - 1.0).max(0.0).ln_1p();
         let compute = match op {
             // single-sample model evaluations bypass the dense path

@@ -26,12 +26,14 @@ pub mod cpu;
 pub mod device;
 pub mod energy;
 pub mod gpu;
+pub mod pool;
 pub mod quantization;
 pub mod roofline;
 pub mod systolic;
 pub mod tpu;
 
 pub use device::{CostReport, Device};
+pub use pool::{DevicePool, Interconnect, PoolReport};
 
 /// The three accelerator configurations of the paper's §IV-A.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

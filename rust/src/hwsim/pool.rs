@@ -1,0 +1,360 @@
+//! Multi-chip device pool — Algorithm 1 as a *system*, not a knob.
+//!
+//! [`crate::hwsim::Device::replay_with_units`] models decomposition as
+//! a utilization multiplier inside one chip.  The [`DevicePool`]
+//! promotes it to an explicit topology: `p` single-core devices joined
+//! by an [`Interconnect`] with per-link bandwidth and per-hop latency.
+//! Replaying a sharded trace therefore shows exactly what the paper's
+//! Fig. 10 claims and no more:
+//!
+//! * each core prices *its own band* of a sharded op — a
+//!   [`Op::ShardedMatmul`] band pays one systolic fill/drain **per
+//!   core**, a [`Op::ShardedFft2`] band runs its share of row/column
+//!   lines — and the stage completes at the slowest core;
+//! * every merge is a priced collective (ring all-gather: `(p−1)` hops
+//!   of latency plus `payload·(p−1)/p` per link), so scaling is
+//!   sub-linear by construction, not by fiat;
+//! * unsharded ops fall to core 0 — decomposition only helps work that
+//!   was actually decomposed.
+//!
+//! The interconnect defaults follow the companion TPU deployment (Pan &
+//! Mishra 2021): ICI-class links for TPU pools, NVLink-class for GPU,
+//! shared-memory-class for CPU.
+
+use crate::hwsim::cpu::CpuSim;
+use crate::hwsim::device::Device;
+use crate::hwsim::gpu::GpuSim;
+use crate::hwsim::tpu::TpuSim;
+use crate::hwsim::DeviceKind;
+use crate::linalg::shard::plan_splits;
+use crate::trace::{Op, OpTrace};
+
+/// Inter-device link model: one bidirectional ring.
+#[derive(Debug, Clone, Copy)]
+pub struct Interconnect {
+    /// Per-link bandwidth (B/s).
+    pub link_bw: f64,
+    /// Per-hop latency (s).
+    pub hop_latency_s: f64,
+}
+
+impl Interconnect {
+    /// Defaults per device family (ICI / NVLink / shared memory).
+    pub fn for_kind(kind: DeviceKind) -> Interconnect {
+        match kind {
+            DeviceKind::Tpu => Interconnect {
+                link_bw: 100.0e9,
+                hop_latency_s: 1e-6,
+            },
+            DeviceKind::Gpu => Interconnect {
+                link_bw: 50.0e9,
+                hop_latency_s: 2e-6,
+            },
+            DeviceKind::Cpu => Interconnect {
+                link_bw: 20.0e9,
+                hop_latency_s: 5e-7,
+            },
+        }
+    }
+
+    /// Ring all-gather of a `payload` so every core ends with all of
+    /// it: `(p−1)` hops of latency, `payload·(p−1)/p` through each
+    /// link.
+    pub fn all_gather_s(&self, payload: u64, parts: usize) -> f64 {
+        if parts <= 1 {
+            return 0.0;
+        }
+        let p = parts as f64;
+        (p - 1.0) * self.hop_latency_s + payload as f64 * (p - 1.0) / p / self.link_bw
+    }
+
+    /// Root-to-pool scatter of disjoint shards: one hop of latency,
+    /// everything except the root's own shard leaves the root's link.
+    pub fn scatter_s(&self, payload: u64, parts: usize) -> f64 {
+        if parts <= 1 {
+            return 0.0;
+        }
+        let p = parts as f64;
+        self.hop_latency_s + payload as f64 * (p - 1.0) / p / self.link_bw
+    }
+}
+
+/// Replay summary for one sharded trace on a pool.
+#[derive(Debug, Clone, Default)]
+pub struct PoolReport {
+    /// End-to-end simulated wall time (s).
+    pub time_s: f64,
+    /// Time in per-core compute stages (critical-path core per stage).
+    pub compute_s: f64,
+    /// Time in priced collectives (scatters, merges, gathers).
+    pub collective_s: f64,
+    /// Dispatch overheads (one per stage per op).
+    pub overhead_s: f64,
+    /// Busy seconds accumulated per core (load-balance visibility).
+    pub per_device_busy_s: Vec<f64>,
+    /// Pool energy: busy + idle per core over the replay.
+    pub energy_j: f64,
+    /// Total floating-point work replayed.
+    pub flops: u64,
+}
+
+/// `p` cooperating single-core devices plus their interconnect.
+pub struct DevicePool {
+    pub kind: DeviceKind,
+    devices: Vec<Box<dyn Device>>,
+    pub interconnect: Interconnect,
+}
+
+/// One single-core member device of a pool (the pool owns cross-core
+/// parallelism, so members must not multiply units internally).
+fn single_core(kind: DeviceKind) -> Box<dyn Device> {
+    match kind {
+        DeviceKind::Cpu => Box::new(CpuSim {
+            cores: 1,
+            ..CpuSim::default()
+        }),
+        DeviceKind::Gpu => Box::new(GpuSim {
+            sms: 1,
+            ..GpuSim::default()
+        }),
+        DeviceKind::Tpu => Box::new(TpuSim {
+            cores: 1,
+            ..TpuSim::default()
+        }),
+    }
+}
+
+impl DevicePool {
+    /// A pool of `p` identical cores with the family-default
+    /// interconnect.
+    pub fn homogeneous(kind: DeviceKind, p: usize) -> DevicePool {
+        let p = p.max(1);
+        DevicePool {
+            kind,
+            devices: (0..p).map(|_| single_core(kind)).collect(),
+            interconnect: Interconnect::for_kind(kind),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Replay a trace across the pool.  Sharded ops split into their
+    /// per-core band stages with explicit interior merges; collectives
+    /// are priced on the interconnect; everything else runs on core 0.
+    pub fn replay_sharded(&self, trace: &OpTrace) -> PoolReport {
+        let p_pool = self.len();
+        let mut rep = PoolReport {
+            per_device_busy_s: vec![0.0; p_pool],
+            flops: trace.total_flops(),
+            ..PoolReport::default()
+        };
+        for op in &trace.ops {
+            match *op {
+                Op::ShardedFft2 { m, n, parts } => {
+                    let p = parts.min(p_pool).max(1);
+                    // interior merges: the full complex intermediate
+                    let merge = self.interconnect.all_gather_s(2 * 4 * (m * n) as u64, p);
+                    // stage 1: row bands (length-n lines), slowest core
+                    // gates the stage
+                    self.band_stage(&mut rep, &plan_splits(m, p), |band| Op::BatchedFft2 {
+                        b: band,
+                        m: 1,
+                        n,
+                    });
+                    self.collective(&mut rep, merge);
+                    // stage 2: column bands (length-m lines)
+                    self.band_stage(&mut rep, &plan_splits(n, p), |band| Op::BatchedFft2 {
+                        b: band,
+                        m: 1,
+                        n: m,
+                    });
+                    self.collective(&mut rep, merge);
+                }
+                Op::ShardedMatmul { m, k, n, parts } => {
+                    let p = parts.min(p_pool).max(1);
+                    // one fill/drain per core: each band is a real
+                    // matmul on that core's array
+                    self.band_stage(&mut rep, &plan_splits(m, p), |band| Op::Matmul {
+                        m: band,
+                        k,
+                        n,
+                    });
+                    self.collective(
+                        &mut rep,
+                        self.interconnect.all_gather_s(4 * (m * n) as u64, p),
+                    );
+                }
+                Op::AllGather { bytes, parts } => {
+                    let p = parts.min(p_pool).max(1);
+                    self.collective(&mut rep, self.interconnect.all_gather_s(bytes, p));
+                }
+                Op::Scatter { bytes, parts } => {
+                    let p = parts.min(p_pool).max(1);
+                    self.collective(&mut rep, self.interconnect.scatter_s(bytes, p));
+                }
+                // undecomposed work runs on core 0
+                _ => {
+                    let c = self.devices[0].op_cost(op, 1);
+                    rep.time_s += c.total();
+                    rep.compute_s += c.busy_s;
+                    rep.overhead_s += c.overhead_s;
+                    rep.per_device_busy_s[0] += c.busy_s;
+                }
+            }
+        }
+        // Energy: each core pays busy power for its own work and idle
+        // power while the rest of the replay runs.
+        let mut energy = 0.0;
+        for (i, d) in self.devices.iter().enumerate() {
+            let busy = rep.per_device_busy_s[i];
+            energy += d.busy_power_w() * busy + d.idle_power_w() * (rep.time_s - busy).max(0.0);
+        }
+        rep.energy_j = energy;
+        rep
+    }
+
+    /// One decomposed compute stage: core `i` prices band `i` as its
+    /// own op; the stage completes when the slowest core does.
+    fn band_stage<F: Fn(usize) -> Op>(
+        &self,
+        rep: &mut PoolReport,
+        bands: &[crate::linalg::shard::Assignment],
+        band_op: F,
+    ) {
+        let mut stage_max = 0.0f64;
+        let mut overhead_max = 0.0f64;
+        for (i, a) in bands.iter().enumerate() {
+            let op = band_op(a.len);
+            let c = self.devices[i].op_cost(&op, 1);
+            rep.per_device_busy_s[i] += c.busy_s;
+            stage_max = stage_max.max(c.total());
+            overhead_max = overhead_max.max(c.overhead_s);
+        }
+        rep.time_s += stage_max;
+        rep.compute_s += stage_max - overhead_max;
+        rep.overhead_s += overhead_max;
+    }
+
+    fn collective(&self, rep: &mut PoolReport, seconds: f64) {
+        rep.time_s += seconds;
+        rep.collective_s += seconds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sharded_fft_trace(n: usize, parts: usize) -> OpTrace {
+        let mut t = OpTrace::new();
+        t.push(Op::ShardedFft2 { m: n, n, parts });
+        t
+    }
+
+    #[test]
+    fn tpu_pool_scales_sublinearly_at_1024() {
+        // The Fig. 10 acceptance at unit level: ≥3x from p=1 to p=8,
+        // but sub-linear because every merge crosses the interconnect.
+        let t1 = DevicePool::homogeneous(DeviceKind::Tpu, 1)
+            .replay_sharded(&sharded_fft_trace(1024, 1))
+            .time_s;
+        let t8 = DevicePool::homogeneous(DeviceKind::Tpu, 8)
+            .replay_sharded(&sharded_fft_trace(1024, 8))
+            .time_s;
+        assert!(t1 / t8 >= 3.0, "speedup {}", t1 / t8);
+        assert!(t1 / t8 < 8.0, "must stay sub-linear: {}", t1 / t8);
+    }
+
+    #[test]
+    fn monotone_in_pool_size() {
+        let mut last = f64::INFINITY;
+        for p in [1usize, 2, 4, 8] {
+            let t = DevicePool::homogeneous(DeviceKind::Tpu, p)
+                .replay_sharded(&sharded_fft_trace(1024, p))
+                .time_s;
+            assert!(t < last, "p={p}: {t} !< {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn collectives_are_visible_and_grow_with_parts() {
+        let r2 = DevicePool::homogeneous(DeviceKind::Tpu, 2)
+            .replay_sharded(&sharded_fft_trace(512, 2));
+        let r8 = DevicePool::homogeneous(DeviceKind::Tpu, 8)
+            .replay_sharded(&sharded_fft_trace(512, 8));
+        assert!(r2.collective_s > 0.0);
+        assert!(r8.collective_s > r2.collective_s);
+        // p=1 pays no merges at all
+        let r1 = DevicePool::homogeneous(DeviceKind::Tpu, 1)
+            .replay_sharded(&sharded_fft_trace(512, 1));
+        assert_eq!(r1.collective_s, 0.0);
+    }
+
+    #[test]
+    fn per_core_busy_is_balanced_for_even_splits() {
+        let r = DevicePool::homogeneous(DeviceKind::Tpu, 4)
+            .replay_sharded(&sharded_fft_trace(1024, 4));
+        let max = r.per_device_busy_s.iter().cloned().fold(0.0, f64::max);
+        let min = r.per_device_busy_s.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max > 0.0 && (max - min) / max < 0.05, "{:?}", r.per_device_busy_s);
+    }
+
+    #[test]
+    fn sharded_matmul_pays_fill_drain_per_core() {
+        // 8 cores each fill/drain their own array: the pool can never
+        // reach the single-array time divided by 8 on small tiles.
+        let mut t = OpTrace::new();
+        t.push(Op::ShardedMatmul {
+            m: 256,
+            k: 256,
+            n: 256,
+            parts: 8,
+        });
+        let pool = DevicePool::homogeneous(DeviceKind::Tpu, 8);
+        let rep = pool.replay_sharded(&t);
+        let single = TpuSim {
+            cores: 1,
+            ..TpuSim::default()
+        };
+        let lone = single
+            .op_cost(
+                &Op::Matmul {
+                    m: 256,
+                    k: 256,
+                    n: 256,
+                },
+                1,
+            )
+            .total();
+        assert!(rep.time_s > lone / 8.0, "{} vs {}", rep.time_s, lone / 8.0);
+    }
+
+    #[test]
+    fn unsharded_ops_do_not_benefit_from_the_pool() {
+        let mut t = OpTrace::new();
+        t.push(Op::Fft2 { m: 256, n: 256 });
+        let t1 = DevicePool::homogeneous(DeviceKind::Tpu, 1).replay_sharded(&t);
+        let t8 = DevicePool::homogeneous(DeviceKind::Tpu, 8).replay_sharded(&t);
+        assert_eq!(t1.time_s, t8.time_s);
+        // ...and only core 0 worked
+        assert!(t8.per_device_busy_s[1..].iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn pool_energy_counts_idle_cores() {
+        let r4 = DevicePool::homogeneous(DeviceKind::Tpu, 4)
+            .replay_sharded(&sharded_fft_trace(1024, 4));
+        let r1 = DevicePool::homogeneous(DeviceKind::Tpu, 1)
+            .replay_sharded(&sharded_fft_trace(1024, 1));
+        // four chips burn more joules than one even while faster
+        assert!(r4.energy_j > 0.0 && r1.energy_j > 0.0);
+        assert!(r4.time_s < r1.time_s);
+    }
+}

@@ -78,6 +78,10 @@ impl TpuSim {
             // through it — ONE fill/drain instead of b, which is the
             // §III-E batching speedup the paper measures.
             Op::BatchedMatmul { b, m, k, n } => self.mxu_matmul_s(m, k, b * n),
+            // Sharded matmul: full problem time here; `op_cost` divides
+            // by the op's own part count (pool replay prices the
+            // per-core bands — and their per-core fill/drain — itself).
+            Op::ShardedMatmul { m, k, n, .. } => self.mxu_matmul_s(m, k, n),
             // 4 real matmuls stream back-to-back through the array
             Op::CMatmul { m, k, n } => 4.0 * self.mxu_matmul_s(m, k, n),
             Op::Dft2Matmul { m, n } => {
@@ -107,7 +111,15 @@ impl Device for TpuSim {
     }
 
     fn op_cost(&self, op: &Op, units: usize) -> OpCost {
-        let units = units.min(self.cores).max(1) as f64;
+        // Sharded ops carry their own core count; collectives ride the
+        // inter-core interconnect, not HBM.
+        let units = op.shard_parts().unwrap_or(units).min(self.cores).max(1) as f64;
+        if op.is_collective() {
+            return OpCost {
+                overhead_s: self.dispatch_s,
+                busy_s: op.bytes() as f64 / self.ici_bw,
+            };
+        }
         // Each core streams only its slice of the operands from its own
         // HBM stack, so the bandwidth floor also divides by `units`.
         let mem_floor = op.bytes() as f64 / (self.mem_bw * units);

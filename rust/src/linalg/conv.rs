@@ -7,25 +7,36 @@
 use crate::linalg::complex::C32;
 use crate::linalg::fft;
 use crate::linalg::matrix::{CMatrix, Matrix};
+use crate::linalg::shard;
 
 /// Circular convolution via the planned FFT (unnormalized convolution
 /// theorem).  Both inputs are real, so the forward transforms take the
-/// packed-pair [`fft::Fft2Plan::rfft2`] fast path, the product is
-/// fused with the rescale in one pass, and the inverse runs in place —
-/// one shared plan, zero per-line allocation.
+/// packed-pair sharded fast path ([`fft::rfft2_sharded`] over an
+/// Algorithm-1 band plan sized by [`fft::recommended_threads`]), the
+/// product is fused with the rescale in one pass, and the inverse runs
+/// in place through the same bands — one shared plan, one band
+/// assignment, zero per-line allocation.
 pub fn circ_conv2(x: &Matrix, k: &Matrix) -> Matrix {
     assert_eq!((x.rows, x.cols), (k.rows, k.cols));
     let (m, n) = (x.rows, x.cols);
     let threads = fft::recommended_threads(m, n);
+    // same break-even guard as `Fft2Plan::rfft2`: below it, one band
+    // keeps the pair-packed row stage intact (no solo-row bands)
+    let parts = if threads <= 1 || m / 2 < 2 * threads {
+        1
+    } else {
+        threads
+    };
     let plan = fft::plan2(m, n);
-    let mut fx = plan.rfft2(x, threads);
-    let fk = plan.rfft2(k, threads);
+    let bands = shard::plan_splits(m.max(1), parts);
+    let mut fx = fft::rfft2_sharded(&plan, x, &bands);
+    let fk = fft::rfft2_sharded(&plan, k, &bands);
     // Unitary transforms: F(x*k) = sqrt(MN) · F_u(x)∘F_u(k)
     let scale = ((m * n) as f32).sqrt();
     for (a, &b) in fx.data.iter_mut().zip(&fk.data) {
         *a = (*a * b).scale(scale);
     }
-    plan.process(&mut fx, true, threads);
+    fft::process_sharded(&plan, &mut fx, true, &bands);
     fx.real()
 }
 

@@ -14,9 +14,14 @@
 //!   in-place contiguous row passes, strided column passes through a
 //!   reused line buffer (no per-row/per-column heap allocation in the
 //!   inner loops), a real-input fast path ([`Fft2Plan::rfft2`]) that
-//!   packs two real rows into one complex transform, and row/column
-//!   sharding across threads with `std::thread::scope` — the same
-//!   pattern as `linalg::block::matmul_parallel`.
+//!   packs two real rows into one complex transform, and Algorithm-1
+//!   row/column band sharding over explicit
+//!   [`crate::linalg::shard::Assignment`]s with `std::thread::scope` —
+//!   [`Fft2Plan::rfft2_sharded`] / [`Fft2Plan::process_sharded`] take
+//!   the band plan directly (the coordinator maps bands to devices);
+//!   the thread-count entry points derive their bands from
+//!   [`crate::linalg::shard::plan_splits`], so both paths run the same
+//!   machinery.
 //! * A process-wide plan cache ([`plan`] / [`plan2`]) so repeated
 //!   requests at one shape (the serving common case) pay plan
 //!   construction once.
@@ -28,6 +33,7 @@
 
 use crate::linalg::complex::C32;
 use crate::linalg::matrix::{CMatrix, Matrix};
+use crate::linalg::shard::{self, Assignment};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -257,7 +263,8 @@ impl Fft2Plan {
     /// In-place unitary 2-D transform: contiguous row pass, then
     /// strided column pass, then one 1/sqrt(MN) scale pass.  `threads`
     /// shards rows (stage 1) and columns (stage 2) across scoped
-    /// worker threads; results are identical for every thread count.
+    /// worker threads via [`shard::plan_splits`] band assignments;
+    /// results are identical for every thread count.
     pub fn process(&self, x: &mut CMatrix, inverse: bool, threads: usize) {
         assert_eq!(
             (x.rows, x.cols),
@@ -269,8 +276,45 @@ impl Fft2Plan {
             return;
         }
         let threads = threads.max(1);
-        self.row_pass(&mut x.data, inverse, threads);
-        self.col_pass(&mut x.data, inverse, threads);
+        let row_parts = if threads <= 1 || m < 2 * threads {
+            1
+        } else {
+            threads
+        };
+        self.row_bands_inplace(&mut x.data, inverse, &shard::plan_splits(m, row_parts));
+        let col_parts = if threads <= 1 || n < 2 * threads || m < 2 {
+            1
+        } else {
+            threads
+        };
+        self.col_bands(&mut x.data, inverse, &shard::plan_splits(n, col_parts));
+        unitary_scale(&mut x.data, m * n);
+    }
+
+    /// Algorithm-1 execution of [`Fft2Plan::process`]: stage 1
+    /// transforms exactly the row bands named by `assignments` (one
+    /// scoped worker per band — the simulated "core"); stage 2 splits
+    /// the columns into `assignments.len()` bands the same way.  The
+    /// assignments must partition `0..rows` contiguously in order.
+    /// Results agree with the unsharded transform to f32 rounding at
+    /// every band count.
+    pub fn process_sharded(&self, x: &mut CMatrix, inverse: bool, assignments: &[Assignment]) {
+        assert_eq!(
+            (x.rows, x.cols),
+            (self.rows, self.cols),
+            "matrix shape != plan shape"
+        );
+        let (m, n) = (self.rows, self.cols);
+        if m == 0 || n == 0 {
+            return;
+        }
+        shard::validate_partition(assignments, m);
+        self.row_bands_inplace(&mut x.data, inverse, assignments);
+        self.col_bands(
+            &mut x.data,
+            inverse,
+            &shard::plan_splits(n, assignments.len()),
+        );
         unitary_scale(&mut x.data, m * n);
     }
 
@@ -293,8 +337,27 @@ impl Fft2Plan {
     /// The row stage packs two real rows per complex transform
     /// (`z = a + ib`, then `A[k] = (Z[k] + conj(Z[−k]))/2`,
     /// `B[k] = −i(Z[k] − conj(Z[−k]))/2`), halving stage-1 work; the
-    /// column stage is the ordinary complex pass.
+    /// column stage is the ordinary complex pass.  Thin wrapper over
+    /// [`Fft2Plan::rfft2_sharded`] with bands derived from `threads`.
     pub fn rfft2(&self, x: &Matrix, threads: usize) -> CMatrix {
+        let threads = threads.max(1);
+        let parts = if threads <= 1 || self.rows / 2 < 2 * threads {
+            1
+        } else {
+            threads
+        };
+        self.rfft2_sharded(x, &shard::plan_splits(self.rows.max(1), parts))
+    }
+
+    /// Algorithm-1 sharded real-input forward transform (unitary): the
+    /// pair-packed row stage runs one scoped worker per assignment
+    /// band (an odd-length band transforms its final row solo, so
+    /// uneven splits stay bit-close to the unsharded pair packing);
+    /// the column stage splits into `assignments.len()` bands; the
+    /// 1/sqrt(MN) scale runs once at the end.  This is the executable
+    /// core of the coordinator's split/execute/merge layer and of
+    /// [`crate::linalg::conv::circ_conv2`].
+    pub fn rfft2_sharded(&self, x: &Matrix, assignments: &[Assignment]) -> CMatrix {
         assert_eq!(
             (x.rows, x.cols),
             (self.rows, self.cols),
@@ -305,34 +368,29 @@ impl Fft2Plan {
         if m == 0 || n == 0 {
             return out;
         }
-        let threads = threads.max(1);
-        let pairs = m / 2;
-        {
-            let (body, tail) = out.data.split_at_mut(pairs * 2 * n);
-            let xdata = &x.data[..];
-            let row_plan = &*self.row_plan;
-            if threads <= 1 || pairs < 2 * threads {
-                run_row_pairs(row_plan, body, xdata, 0, n);
-            } else {
-                let chunk_pairs = pairs.div_ceil(threads);
-                std::thread::scope(|scope| {
-                    for (t, band) in body.chunks_mut(chunk_pairs * 2 * n).enumerate() {
-                        let r0 = t * chunk_pairs * 2;
-                        scope.spawn(move || run_row_pairs(row_plan, band, xdata, r0, n));
-                    }
-                });
-            }
-            if m % 2 == 1 {
-                let r = m - 1;
-                let row = &mut tail[..n];
-                for (j, slot) in row.iter_mut().enumerate() {
-                    *slot = C32::from(xdata[r * n + j]);
+        shard::validate_partition(assignments, m);
+        let xdata = &x.data[..];
+        let row_plan = &*self.row_plan;
+        if assignments.len() <= 1 {
+            run_row_band_real(row_plan, &mut out.data, xdata, 0, m, n);
+        } else {
+            std::thread::scope(|scope| {
+                let mut rest = &mut out.data[..];
+                for a in assignments {
+                    let (band, tail) = std::mem::take(&mut rest).split_at_mut(a.len * n);
+                    rest = tail;
+                    let (start, len) = (a.start, a.len);
+                    scope.spawn(move || {
+                        run_row_band_real(row_plan, band, xdata, start, len, n)
+                    });
                 }
-                let mut scratch = vec![C32::ZERO; row_plan.scratch_len()];
-                row_plan.process(row, false, &mut scratch);
-            }
+            });
         }
-        self.col_pass(&mut out.data, false, threads);
+        self.col_bands(
+            &mut out.data,
+            false,
+            &shard::plan_splits(n, assignments.len()),
+        );
         unitary_scale(&mut out.data, m * n);
         out
     }
@@ -443,27 +501,23 @@ impl Fft2Plan {
             .collect()
     }
 
-    /// Row stage over the packed batch: `b·rows` contiguous lines,
-    /// banded across threads.
+    /// Row stage over the packed batch: the `b·rows` contiguous lines
+    /// of all images form one Algorithm-1 band plan, executed by
+    /// [`Fft2Plan::row_bands_inplace`] (same machinery as the
+    /// single-image and sharded paths).
     fn row_pass_batch(&self, data: &mut [C32], b: usize, inverse: bool, threads: usize) {
-        let (m, n) = (self.rows, self.cols);
-        let rows_total = b * m;
-        let row_plan = &*self.row_plan;
-        if threads <= 1 || rows_total < 2 * threads {
-            run_rows(row_plan, data, n, inverse);
-            return;
-        }
-        let band_rows = rows_total.div_ceil(threads);
-        std::thread::scope(|scope| {
-            for band in data.chunks_mut(band_rows * n) {
-                scope.spawn(move || run_rows(row_plan, band, n, inverse));
-            }
-        });
+        let rows_total = b * self.rows;
+        let parts = if threads <= 1 || rows_total < 2 * threads {
+            1
+        } else {
+            threads
+        };
+        self.row_bands_inplace(data, inverse, &shard::plan_splits(rows_total, parts));
     }
 
     /// Column stage over the packed batch: the `b·cols` column lines of
     /// all images form one work list, sharded across threads with the
-    /// same gather/transform/scatter pattern as [`Fft2Plan::col_pass`].
+    /// same gather/transform/scatter pattern as [`Fft2Plan::col_bands`].
     fn col_pass_batch(&self, data: &mut [C32], b: usize, inverse: bool, threads: usize) {
         let (m, n) = (self.rows, self.cols);
         let total = b * n;
@@ -522,32 +576,34 @@ impl Fft2Plan {
         }
     }
 
-    /// Stage 1: every row is a contiguous slice — transform in place,
-    /// sharding row bands across threads with `chunks_mut`.
-    fn row_pass(&self, data: &mut [C32], inverse: bool, threads: usize) {
-        let (m, n) = (self.rows, self.cols);
+    /// Stage 1 over explicit row bands: every row is a contiguous
+    /// slice — transform in place, one scoped worker per band.
+    fn row_bands_inplace(&self, data: &mut [C32], inverse: bool, bands: &[Assignment]) {
+        let n = self.cols;
         let row_plan = &*self.row_plan;
-        if threads <= 1 || m < 2 * threads {
+        if bands.len() <= 1 {
             run_rows(row_plan, data, n, inverse);
             return;
         }
-        let band_rows = m.div_ceil(threads);
         std::thread::scope(|scope| {
-            for band in data.chunks_mut(band_rows * n) {
+            let mut rest = data;
+            for a in bands {
+                let (band, tail) = std::mem::take(&mut rest).split_at_mut(a.len * n);
+                rest = tail;
                 scope.spawn(move || run_rows(row_plan, band, n, inverse));
             }
         });
     }
 
-    /// Stage 2: strided column pass.  Single-threaded it runs fully in
-    /// place through one reused line buffer; threaded, each worker
-    /// gathers and transforms a disjoint column shard into its own
-    /// contiguous block (reading the matrix through a shared borrow),
-    /// and the shards are scattered back after the scope joins.
-    fn col_pass(&self, data: &mut [C32], inverse: bool, threads: usize) {
+    /// Stage 2 over explicit column bands.  A single band runs fully in
+    /// place through one reused line buffer; multiple bands gather and
+    /// transform disjoint column shards into per-worker contiguous
+    /// blocks (reading the matrix through a shared borrow), scattered
+    /// back after the scope joins.
+    fn col_bands(&self, data: &mut [C32], inverse: bool, bands: &[Assignment]) {
         let (m, n) = (self.rows, self.cols);
         let col_plan = &*self.col_plan;
-        if threads <= 1 || n < 2 * threads || m < 2 {
+        if bands.len() <= 1 || m < 2 {
             let mut line = vec![C32::ZERO; m];
             let mut scratch = vec![C32::ZERO; col_plan.scratch_len()];
             for c in 0..n {
@@ -561,26 +617,24 @@ impl Fft2Plan {
             }
             return;
         }
-        let shard = n.div_ceil(threads);
         let shards: Vec<(usize, Vec<C32>)> = std::thread::scope(|scope| {
             let shared = &*data;
-            let mut handles = Vec::new();
-            let mut c0 = 0;
-            while c0 < n {
-                let w = shard.min(n - c0);
-                handles.push(scope.spawn(move || {
-                    let mut block = vec![C32::ZERO; m * w];
-                    let mut scratch = vec![C32::ZERO; col_plan.scratch_len()];
-                    for (j, line) in block.chunks_mut(m).enumerate() {
-                        for (r, slot) in line.iter_mut().enumerate() {
-                            *slot = shared[r * n + c0 + j];
+            let handles: Vec<_> = bands
+                .iter()
+                .map(|&a| {
+                    scope.spawn(move || {
+                        let mut block = vec![C32::ZERO; m * a.len];
+                        let mut scratch = vec![C32::ZERO; col_plan.scratch_len()];
+                        for (j, line) in block.chunks_mut(m).enumerate() {
+                            for (r, slot) in line.iter_mut().enumerate() {
+                                *slot = shared[r * n + a.start + j];
+                            }
+                            col_plan.process(line, inverse, &mut scratch);
                         }
-                        col_plan.process(line, inverse, &mut scratch);
-                    }
-                    (c0, block)
-                }));
-                c0 += w;
-            }
+                        (a.start, block)
+                    })
+                })
+                .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         });
         for (c0, block) in shards {
@@ -597,6 +651,32 @@ fn run_rows(plan: &FftPlan, band: &mut [C32], line_len: usize, inverse: bool) {
     let mut scratch = vec![C32::ZERO; plan.scratch_len()];
     for row in band.chunks_mut(line_len) {
         plan.process(row, inverse, &mut scratch);
+    }
+}
+
+/// Real-input row stage over one Algorithm-1 assignment band: row
+/// pairs within the band go through [`run_row_pairs`]; an odd-length
+/// band transforms its final row solo, so uneven splits produce the
+/// same spectra as the unsharded pair packing to f32 rounding.
+fn run_row_band_real(
+    plan: &FftPlan,
+    band: &mut [C32],
+    xdata: &[f32],
+    r0: usize,
+    len: usize,
+    n: usize,
+) {
+    let pairs = len / 2;
+    let (body, tail) = band.split_at_mut(pairs * 2 * n);
+    run_row_pairs(plan, body, xdata, r0, n);
+    if len % 2 == 1 {
+        let r = r0 + len - 1;
+        let row = &mut tail[..n];
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = C32::from(xdata[r * n + j]);
+        }
+        let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+        plan.process(row, false, &mut scratch);
     }
 }
 
@@ -731,6 +811,25 @@ pub fn ifft2(x: &CMatrix) -> CMatrix {
 /// Unitary 2-D FFT of a real matrix (the packed-pair fast path).
 pub fn rfft2(x: &Matrix) -> CMatrix {
     plan2(x.rows, x.cols).rfft2(x, recommended_threads(x.rows, x.cols))
+}
+
+/// Algorithm-1 sharded real-input 2-D FFT through an explicit row-band
+/// plan (free-function form of [`Fft2Plan::rfft2_sharded`] — the entry
+/// point `conv::circ_conv2` and the coordinator's decomposition layer
+/// share).
+pub fn rfft2_sharded(plan: &Fft2Plan, x: &Matrix, assignments: &[Assignment]) -> CMatrix {
+    plan.rfft2_sharded(x, assignments)
+}
+
+/// Algorithm-1 sharded in-place 2-D transform (forward or inverse),
+/// free-function form of [`Fft2Plan::process_sharded`].
+pub fn process_sharded(
+    plan: &Fft2Plan,
+    x: &mut CMatrix,
+    inverse: bool,
+    assignments: &[Assignment],
+) {
+    plan.process_sharded(x, inverse, assignments)
 }
 
 #[cfg(test)]
@@ -994,6 +1093,48 @@ mod tests {
         let x = Matrix::random(8, 8, &mut rng);
         let lone = p.rfft2_batch(&[&x], 4);
         assert!(lone[0].max_abs_diff(&p.rfft2(&x, 1)) < 1e-6);
+    }
+
+    #[test]
+    fn sharded_rfft2_matches_plan_rfft2_uneven_bands() {
+        let mut rng = Rng::new(20);
+        for (m, n) in [(32usize, 24usize), (33, 17), (16, 16)] {
+            let x = Matrix::random(m, n, &mut rng);
+            let p2 = Fft2Plan::new(m, n);
+            let want = p2.rfft2(&x, 1);
+            for p in [1usize, 2, 3, 5] {
+                let got = p2.rfft2_sharded(&x, &shard::plan_splits(m, p));
+                assert!(
+                    got.max_abs_diff(&want) < 1e-4,
+                    "{m}x{n} p={p}: {}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_process_roundtrip_and_matches_unsharded() {
+        let mut rng = Rng::new(21);
+        let orig = CMatrix::from_real(&Matrix::random(24, 20, &mut rng));
+        let plan = Fft2Plan::new(24, 20);
+        let want = plan.fft2(&orig, 1);
+        for p in [1usize, 2, 4, 7] {
+            let bands = shard::plan_splits(24, p);
+            let mut x = orig.clone();
+            plan.process_sharded(&mut x, false, &bands);
+            assert!(x.max_abs_diff(&want) < 1e-5, "p={p}");
+            plan.process_sharded(&mut x, true, &bands);
+            assert!(x.max_abs_diff(&orig) < 1e-4, "roundtrip p={p}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cover")]
+    fn sharded_rejects_partial_assignment() {
+        let plan = Fft2Plan::new(8, 8);
+        let x = Matrix::zeros(8, 8);
+        plan.rfft2_sharded(&x, &[shard::Assignment { start: 0, len: 4 }]);
     }
 
     #[test]

@@ -17,5 +17,6 @@ pub mod conv;
 pub mod dft;
 pub mod fft;
 pub mod matrix;
+pub mod shard;
 pub mod solve;
 pub mod vandermonde;

@@ -1,0 +1,94 @@
+//! Algorithm-1 band assignments — the sharding vocabulary shared by
+//! every layer of the execution plane.
+//!
+//! The paper's Algorithm 1 splits the 2-D transform's rows (then
+//! columns) across `p` cores.  An [`Assignment`] names one core's
+//! contiguous band of lines; [`plan_splits`] produces the balanced
+//! partition.  The same types drive the planned-FFT band stages
+//! ([`crate::linalg::fft::Fft2Plan::rfft2_sharded`]), the coordinator's
+//! split/execute/merge layer ([`crate::coordinator::decomposition`]),
+//! and the pool replay ([`crate::hwsim::pool::DevicePool`]) — one
+//! decomposition vocabulary, three layers.
+
+/// Line-range (row or column band) assignment for one core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Split `total` items over `p` workers as evenly as possible
+/// (Algorithm 1's "Split M/p rows from x").  Workers beyond `total`
+/// get no assignment; every returned band is non-empty, contiguous,
+/// and the bands partition `0..total` in order.
+pub fn plan_splits(total: usize, p: usize) -> Vec<Assignment> {
+    assert!(p > 0);
+    let p = p.min(total.max(1));
+    let base = total / p;
+    let extra = total % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for i in 0..p {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            continue;
+        }
+        out.push(Assignment { start, len });
+        start += len;
+    }
+    out
+}
+
+/// Assert that `assignments` is exactly the contiguous, in-order,
+/// non-empty partition of `0..total` that the band stages require.
+pub fn validate_partition(assignments: &[Assignment], total: usize) {
+    let mut expect = 0;
+    for a in assignments {
+        assert!(
+            a.start == expect && a.len > 0,
+            "assignments must be a contiguous in-order partition \
+             (expected start {expect}, got {a:?})"
+        );
+        expect += a.len;
+    }
+    assert_eq!(expect, total, "assignments must cover all {total} lines");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn splits_cover_exactly() {
+        check("splits partition the range", 30, |rng: &mut Rng| {
+            let total = rng.int_range(1, 100) as usize;
+            let p = rng.int_range(1, 16) as usize;
+            let plan = plan_splits(total, p);
+            validate_partition(&plan, total);
+            // balanced within 1
+            let min = plan.iter().map(|a| a.len).min().unwrap();
+            let max = plan.iter().map(|a| a.len).max().unwrap();
+            assert!(max - min <= 1);
+        });
+    }
+
+    #[test]
+    fn more_workers_than_rows_is_fine() {
+        let plan = plan_splits(3, 8);
+        assert_eq!(plan.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous")]
+    fn validate_rejects_gaps() {
+        validate_partition(
+            &[
+                Assignment { start: 0, len: 2 },
+                Assignment { start: 3, len: 1 },
+            ],
+            4,
+        );
+    }
+}

@@ -32,11 +32,35 @@
 //!   `b×` the single [`Op::Fft2`] (the data is not shared); the fused
 //!   win is one dispatch instead of `b` and a full-width device grid,
 //!   which is how the device models price it.
+//!
+//! # Sharded-op conventions (Algorithm 1 across a device pool)
+//!
+//! Requests above the coordinator's sharding threshold execute under
+//! the paper's Algorithm-1 data decomposition and record *sharded* ops:
+//!
+//! * [`Op::ShardedFft2`]`{ m, n, parts }` — the 2-D transform's row and
+//!   column line bands split across `parts` cores.  FLOPs and bytes
+//!   equal the single-core [`Op::Fft2`]: decomposition conserves
+//!   arithmetic and every element is still read+written once per
+//!   stage, wherever it lives.  The cross-core merge traffic is NOT
+//!   folded in — [`crate::hwsim::pool::DevicePool`] prices the two
+//!   interior merges explicitly over its interconnect, and
+//!   single-device replay accounts it through `merge_cost_s`.
+//! * [`Op::ShardedMatmul`]`{ m, k, n, parts }` — the left operand's
+//!   rows banded across cores with the right operand replicated, so
+//!   bytes count B once per core: `f·(m·k + parts·k·n + m·n)`.
+//! * [`Op::AllGather`]`{ bytes, parts }` — ring all-gather: every core
+//!   ends with the full `bytes` payload; `bytes()` is the total data
+//!   crossing links, `bytes·(parts−1)`.  Zero FLOPs.
+//! * [`Op::Scatter`]`{ bytes, parts }` — the root hands each core its
+//!   disjoint shard; `bytes()` is the traffic leaving the root,
+//!   `bytes·(parts−1)/parts`.  Zero FLOPs.
 
 use crate::linalg::conv;
 use crate::linalg::dft;
 use crate::linalg::fft;
 use crate::linalg::matrix::{CMatrix, Matrix};
+use crate::linalg::shard;
 use crate::linalg::solve::Lu;
 use crate::linalg::vandermonde;
 
@@ -68,6 +92,22 @@ pub enum Op {
     /// 2-D FFT (planned butterfly form: radix-2, Bluestein-padded off
     /// powers of two) — the CPU-native schedule.
     Fft2 { m: usize, n: usize },
+    /// 2-D FFT under Algorithm-1 data decomposition: row/column line
+    /// bands split across `parts` cores with two interior merges (see
+    /// the module docs for the FLOP/byte/merge conventions).
+    ShardedFft2 { m: usize, n: usize, parts: usize },
+    /// Row-banded real matmul across `parts` cores, right operand
+    /// replicated per core.
+    ShardedMatmul {
+        m: usize,
+        k: usize,
+        n: usize,
+        parts: usize,
+    },
+    /// Ring all-gather of a `bytes` payload across `parts` cores.
+    AllGather { bytes: u64, parts: usize },
+    /// Root-to-pool scatter of disjoint shards of `bytes`.
+    Scatter { bytes: u64, parts: usize },
     /// Element-wise complex Hadamard division over m×n.
     HadamardDiv { m: usize, n: usize },
     /// Element-wise map over `elems` scalars (add/sub/scale...).
@@ -103,6 +143,12 @@ impl Op {
             // pass over every column, costed per line by the planned
             // engine's actual schedule (see `fft_line_flops`).
             Op::Fft2 { m, n } => m as u64 * fft_line_flops(n) + n as u64 * fft_line_flops(m),
+            // decomposition conserves arithmetic: same line schedule,
+            // different cores
+            Op::ShardedFft2 { m, n, .. } => Op::Fft2 { m, n }.flops(),
+            Op::ShardedMatmul { m, k, n, .. } => Op::Matmul { m, k, n }.flops(),
+            // collectives move data, they don't compute
+            Op::AllGather { .. } | Op::Scatter { .. } => 0,
             // conj-multiply (6) + |x|² (3) + 2 divides (2) per element
             Op::HadamardDiv { m, n } => 11 * (m * n) as u64,
             Op::Elementwise { elems } => elems as u64,
@@ -134,6 +180,19 @@ impl Op {
                 Op::CMatmul { m, k: m, n }.bytes() + Op::CMatmul { m, k: n, n }.bytes()
             }
             Op::Fft2 { m, n } => 2 * 2 * f * (m * n) as u64, // read+write complex
+            // each element still touched once per stage on whichever
+            // core holds its band; merge traffic priced separately
+            Op::ShardedFft2 { m, n, .. } => Op::Fft2 { m, n }.bytes(),
+            // A banded once; B streamed once per core; C written once
+            Op::ShardedMatmul { m, k, n, parts } => {
+                f * (m * k + parts * k * n + m * n) as u64
+            }
+            // ring all-gather: bytes·(p−1) transit the links in total
+            Op::AllGather { bytes, parts } => bytes * parts.saturating_sub(1) as u64,
+            // scatter: everything but the root's own shard leaves it
+            Op::Scatter { bytes, parts } => {
+                bytes * parts.saturating_sub(1) as u64 / (parts.max(1) as u64)
+            }
             Op::HadamardDiv { m, n } => 6 * f * (m * n) as u64,
             Op::Elementwise { elems } => 2 * f * elems as u64,
             Op::Reduce { elems } => f * elems as u64,
@@ -155,6 +214,9 @@ impl Op {
             Op::CMatmul { m, n, .. } => 2 * f * (m * n) as u64,
             Op::Dft2Matmul { m, n } => 2 * f * (m * n) as u64,
             Op::Fft2 { m, n } => 2 * f * (m * n) as u64,
+            Op::ShardedFft2 { m, n, .. } => 2 * f * (m * n) as u64,
+            Op::ShardedMatmul { m, n, .. } => f * (m * n) as u64,
+            Op::AllGather { bytes, .. } | Op::Scatter { bytes, .. } => bytes,
             Op::HadamardDiv { m, n } => 2 * f * (m * n) as u64,
             Op::Elementwise { elems } => f * elems as u64,
             Op::Reduce { .. } => f,
@@ -173,12 +235,29 @@ impl Op {
             self,
             Op::Matmul { .. }
                 | Op::BatchedMatmul { .. }
+                | Op::ShardedMatmul { .. }
                 | Op::CMatmul { .. }
                 | Op::Dft2Matmul { .. }
                 | Op::LuSolve { .. }
                 | Op::ModelGrad { .. }
                 | Op::ModelForward { .. }
         )
+    }
+
+    /// For ops that embed Algorithm-1 decomposition, the core count
+    /// the op was sharded over (device models use it as the effective
+    /// parallelism when replaying outside a pool).
+    pub fn shard_parts(&self) -> Option<usize> {
+        match *self {
+            Op::ShardedFft2 { parts, .. } | Op::ShardedMatmul { parts, .. } => Some(parts),
+            _ => None,
+        }
+    }
+
+    /// Pure data-movement collectives (zero FLOPs, priced on the
+    /// interconnect by [`crate::hwsim::pool::DevicePool`]).
+    pub fn is_collective(&self) -> bool {
+        matches!(self, Op::AllGather { .. } | Op::Scatter { .. })
     }
 }
 
@@ -336,6 +415,44 @@ impl NativeEngine {
         let plan = fft::plan2(m, n);
         let threads = fft::recommended_threads(xs.len() * m, n);
         plan.process_batch(xs, true, threads);
+    }
+
+    /// Algorithm-1 sharded real-input forward 2-D FFT across `parts`
+    /// simulated cores (row bands from [`shard::plan_splits`]).
+    /// Records [`Op::ShardedFft2`].
+    pub fn rfft2_sharded(&mut self, x: &Matrix, parts: usize) -> CMatrix {
+        let parts = parts.max(1);
+        self.trace.push(Op::ShardedFft2 {
+            m: x.rows,
+            n: x.cols,
+            parts,
+        });
+        let plan = fft::plan2(x.rows, x.cols);
+        fft::rfft2_sharded(&plan, x, &shard::plan_splits(x.rows.max(1), parts))
+    }
+
+    /// Algorithm-1 sharded in-place 2-D transform (complex, forward or
+    /// inverse) across `parts` cores.  Records [`Op::ShardedFft2`].
+    pub fn fft2_sharded_inplace(&mut self, x: &mut CMatrix, inverse: bool, parts: usize) {
+        let parts = parts.max(1);
+        self.trace.push(Op::ShardedFft2 {
+            m: x.rows,
+            n: x.cols,
+            parts,
+        });
+        let plan = fft::plan2(x.rows, x.cols);
+        fft::process_sharded(&plan, x, inverse, &shard::plan_splits(x.rows.max(1), parts));
+    }
+
+    /// Record the coordinator's explicit input scatter across the pool
+    /// (data movement only; no native compute happens here).
+    pub fn record_scatter(&mut self, bytes: u64, parts: usize) {
+        self.trace.push(Op::Scatter { bytes, parts });
+    }
+
+    /// Record the explicit result all-gather back to the root.
+    pub fn record_all_gather(&mut self, bytes: u64, parts: usize) {
+        self.trace.push(Op::AllGather { bytes, parts });
     }
 
     pub fn cmatmul(&mut self, a: &CMatrix, b: &CMatrix) -> CMatrix {
@@ -588,6 +705,64 @@ mod tests {
         }
         assert_eq!(eng.trace.ops.len(), 2);
         assert!(matches!(eng.trace.ops[0], Op::BatchedFft2 { b: 3, .. }));
+    }
+
+    #[test]
+    fn sharded_fft2_conserves_arithmetic_and_traffic() {
+        // Algorithm 1 never changes the line schedule — only where the
+        // lines run.  Merge traffic is priced separately (pool replay).
+        let single = Op::Fft2 { m: 64, n: 48 };
+        for parts in [1usize, 2, 4, 7] {
+            let sharded = Op::ShardedFft2 { m: 64, n: 48, parts };
+            assert_eq!(sharded.flops(), single.flops());
+            assert_eq!(sharded.bytes(), single.bytes());
+            assert_eq!(sharded.output_bytes(), single.output_bytes());
+            assert_eq!(sharded.shard_parts(), Some(parts));
+            assert!(!sharded.is_matrix_op());
+        }
+    }
+
+    #[test]
+    fn sharded_matmul_replicates_rhs_traffic() {
+        let single = Op::Matmul { m: 64, k: 32, n: 16 };
+        let sharded = Op::ShardedMatmul { m: 64, k: 32, n: 16, parts: 4 };
+        assert_eq!(sharded.flops(), single.flops());
+        assert!(sharded.bytes() > single.bytes()); // B streamed per core
+        assert!(sharded.is_matrix_op());
+    }
+
+    #[test]
+    fn collectives_move_data_without_flops() {
+        let ag = Op::AllGather { bytes: 1000, parts: 4 };
+        assert_eq!(ag.flops(), 0);
+        assert_eq!(ag.bytes(), 3000); // ring: bytes·(p−1) across links
+        assert_eq!(ag.output_bytes(), 1000);
+        assert!(ag.is_collective());
+        let sc = Op::Scatter { bytes: 1000, parts: 4 };
+        assert_eq!(sc.bytes(), 750); // root keeps its own shard
+        assert!(sc.is_collective());
+        // degenerate single-core collectives are free
+        assert_eq!(Op::AllGather { bytes: 1000, parts: 1 }.bytes(), 0);
+        assert_eq!(Op::Scatter { bytes: 1000, parts: 1 }.bytes(), 0);
+    }
+
+    #[test]
+    fn engine_sharded_fft_matches_unsharded_and_records() {
+        let mut rng = Rng::new(12);
+        let x = Matrix::random(24, 16, &mut rng);
+        let mut eng = NativeEngine::new_fft_baseline();
+        let sharded = eng.rfft2_sharded(&x, 3);
+        let want = fft::rfft2(&x);
+        assert!(sharded.max_abs_diff(&want) < 1e-4);
+        assert!(matches!(
+            eng.trace.ops[0],
+            Op::ShardedFft2 { m: 24, n: 16, parts: 3 }
+        ));
+        // inverse leg round-trips through the same sharded machinery
+        let mut back = sharded;
+        eng.fft2_sharded_inplace(&mut back, true, 3);
+        assert!(back.real().max_abs_diff(&x) < 1e-4);
+        assert_eq!(eng.trace.ops.len(), 2);
     }
 
     #[test]

@@ -33,6 +33,36 @@ pub fn distill_fft(eng: &mut NativeEngine, x: &Matrix, y: &Matrix, eps: f32) -> 
     scaled.real()
 }
 
+/// Eq. 5 under Algorithm-1 sharding: the three 2-D transforms split
+/// their row/column line bands across `parts` simulated cores
+/// ([`NativeEngine::rfft2_sharded`] /
+/// [`NativeEngine::fft2_sharded_inplace`]), and the coordinator's
+/// input scatter and kernel all-gather are recorded explicitly — the
+/// op stream [`crate::xai::workloads::distill_solve_trace_sharded`]
+/// builds analytically.  Numerically bit-close (≤ 1e-4) to
+/// [`distill_fft`] at every part count.
+pub fn distill_fft_sharded(
+    eng: &mut NativeEngine,
+    x: &Matrix,
+    y: &Matrix,
+    eps: f32,
+    parts: usize,
+) -> Matrix {
+    assert_eq!((x.rows, x.cols), (y.rows, y.cols));
+    let (m, n) = (x.rows, x.cols);
+    let f = 4u64; // f32
+    // both real inputs leave the root in disjoint row bands
+    eng.record_scatter(2 * f * (m * n) as u64, parts);
+    let fx = eng.rfft2_sharded(x, parts);
+    let fy = eng.rfft2_sharded(y, parts);
+    let mut q = eng.spectral_divide(&fy, &fx, eps);
+    eng.fft2_sharded_inplace(&mut q, true, parts);
+    let scaled = eng.cscale(&q, 1.0 / ((m * n) as f32).sqrt());
+    // the fitted real kernel gathers back to the root
+    eng.record_all_gather(f * (m * n) as u64, parts);
+    scaled.real()
+}
+
 /// Iterative baseline: minimize ‖X*K − Y‖² by gradient descent in the
 /// spatial domain.  ∇ = X̃ * (X*K − Y) where X̃ is the 180°-rotated X
 /// (adjoint of circular convolution).
@@ -158,6 +188,35 @@ mod tests {
         let mut eng = NativeEngine::new();
         let k = distill_fft(&mut eng, &x, &y, 1e-9);
         assert!(k.max_abs_diff(&k_true) < 1e-2, "{}", k.max_abs_diff(&k_true));
+    }
+
+    #[test]
+    fn sharded_solver_matches_unsharded_within_1e4() {
+        use crate::trace::Op;
+        let mut rng = Rng::new(11);
+        let x = well_conditioned_x(64, 64, &mut rng);
+        let y = circ_conv2(&x, &Matrix::identity_kernel(64, 64));
+        let mut base_eng = NativeEngine::new_fft_baseline();
+        let want = distill_fft(&mut base_eng, &x, &y, 1e-9);
+        for parts in [1usize, 2, 4, 7] {
+            let mut eng = NativeEngine::new_fft_baseline();
+            let got = distill_fft_sharded(&mut eng, &x, &y, 1e-9, parts);
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "parts={parts}: {}",
+                got.max_abs_diff(&want)
+            );
+            // the trace carries the sharded schedule + both collectives
+            assert!(matches!(eng.trace.ops[0], Op::Scatter { .. }));
+            let sharded = eng
+                .trace
+                .ops
+                .iter()
+                .filter(|o| matches!(o, Op::ShardedFft2 { .. }))
+                .count();
+            assert_eq!(sharded, 3);
+            assert!(matches!(eng.trace.ops.last().unwrap(), Op::AllGather { .. }));
+        }
     }
 
     #[test]

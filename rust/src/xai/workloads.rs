@@ -47,6 +47,32 @@ pub fn distill_solve_trace(n: usize) -> OpTrace {
     distill_solve_trace_sched(n, Schedule::MatmulForm)
 }
 
+/// Distillation solve under Algorithm-1 sharding across `parts` cores:
+/// input scatter, three sharded transforms, the spectral division and
+/// rescale (undecomposed, they run on the root core), and the kernel
+/// all-gather — exactly the op stream
+/// [`crate::xai::distillation::distill_fft_sharded`] records
+/// (unit-tested below), so pool replays of this trace are grounded in
+/// the real sharded execution.
+pub fn distill_solve_trace_sharded(n: usize, parts: usize) -> OpTrace {
+    let f = 4u64; // f32
+    let mut t = OpTrace::new();
+    t.push(Op::Scatter {
+        bytes: 2 * f * (n * n) as u64,
+        parts,
+    });
+    t.push(Op::ShardedFft2 { m: n, n, parts });
+    t.push(Op::ShardedFft2 { m: n, n, parts });
+    t.push(Op::HadamardDiv { m: n, n });
+    t.push(Op::ShardedFft2 { m: n, n, parts });
+    t.push(Op::Elementwise { elems: 2 * n * n });
+    t.push(Op::AllGather {
+        bytes: f * (n * n) as u64,
+        parts,
+    });
+    t
+}
+
 /// Block contribution factors (Eq. 6): one traced circular convolution
 /// (3 DFTs + hadamard + scale) + one norm per block.
 pub fn contribution_trace_sched(n: usize, block: usize, s: Schedule) -> OpTrace {
@@ -198,6 +224,20 @@ mod tests {
         let recorded = eng.take_trace();
         let analytic = distill_solve_trace(16);
         assert_eq!(recorded.ops, analytic.ops);
+    }
+
+    #[test]
+    fn analytic_sharded_solve_trace_matches_recorded() {
+        let mut rng = Rng::new(7);
+        let x = Matrix::from_fn(16, 16, |_, _| 3.0 + rng.gauss_f32());
+        let y = circ_conv2(&x, &Matrix::identity_kernel(16, 16));
+        for parts in [1usize, 3, 4] {
+            let mut eng = NativeEngine::new_fft_baseline();
+            distillation::distill_fft_sharded(&mut eng, &x, &y, 1e-6, parts);
+            let recorded = eng.take_trace();
+            let analytic = distill_solve_trace_sharded(16, parts);
+            assert_eq!(recorded.ops, analytic.ops, "parts={parts}");
+        }
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Property tests on coordinator invariants (no artifacts needed):
-//! batching conservation/ordering, queue FIFO + drain semantics, and
-//! decomposition-plan algebra under random interleavings.
+//! batching conservation/ordering, queue FIFO + drain semantics,
+//! decomposition-plan algebra under random interleavings, and the
+//! per-device accounting of the sharded execution plane.
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -8,6 +9,7 @@ use xai_accel::coordinator::batcher::{BatchAssembler, BatchPolicy};
 use xai_accel::coordinator::decomposition::plan_splits;
 use xai_accel::coordinator::queue::BoundedQueue;
 use xai_accel::coordinator::request::{Envelope, Request, RequestKind};
+use xai_accel::coordinator::{BackendMode, Coordinator, CoordinatorConfig};
 use xai_accel::linalg::matrix::Matrix;
 use xai_accel::util::prop::check;
 use xai_accel::util::rng::Rng;
@@ -175,6 +177,52 @@ fn queue_drain_plus_pop_sees_everything() {
         }
         assert_eq!(got, (0..n).collect::<Vec<_>>());
     });
+}
+
+#[test]
+fn per_device_counters_account_for_every_batch() {
+    // Live NativeOnly coordinator with a 3-device pool: after all
+    // replies arrive, the per-device counters must (a) sum to the
+    // aggregate batch counter, (b) show zero leftover backlog, and
+    // (c) have accumulated busy time on at least one device.
+    let mut config = CoordinatorConfig::default();
+    config.executors = 3;
+    config.backend = BackendMode::NativeOnly;
+    let coord = Coordinator::start(config).expect("start native coordinator");
+    let mut rng = Rng::new(77);
+    let pendings: Vec<_> = (0..40)
+        .map(|i| {
+            let req = if i % 2 == 0 {
+                Request::Shapley {
+                    n: 5,
+                    values: rng.gauss_vec(32),
+                    names: (0..5).map(|j| format!("f{j}")).collect(),
+                }
+            } else {
+                Request::Classify {
+                    image: xai_accel::data::cifar::sample_class(i % 4, &mut rng).image,
+                }
+            };
+            coord.submit(req).expect("submit")
+        })
+        .collect();
+    for p in pendings {
+        p.wait().expect("response");
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.devices.len(), 3);
+    assert_eq!(stats.completed, 40);
+    let per_device_batches: u64 = stats.devices.iter().map(|d| d.batches).sum();
+    assert_eq!(
+        per_device_batches,
+        coord.metrics().batches_executed(),
+        "every executed batch must be attributed to exactly one device"
+    );
+    assert!(per_device_batches > 0);
+    let leftover: u64 = stats.devices.iter().map(|d| d.queue_depth).sum();
+    assert_eq!(leftover, 0, "all placed batches must have drained");
+    assert!(stats.devices.iter().map(|d| d.busy_s).sum::<f64>() > 0.0);
+    coord.shutdown();
 }
 
 #[test]

@@ -9,6 +9,7 @@ use xai_accel::linalg::conv::{circ_conv2, circ_conv2_direct};
 use xai_accel::linalg::dft;
 use xai_accel::linalg::fft;
 use xai_accel::linalg::matrix::{CMatrix, Matrix};
+use xai_accel::linalg::shard::plan_splits;
 use xai_accel::util::prop::check_cases;
 use xai_accel::util::rng::Rng;
 
@@ -114,6 +115,42 @@ fn planned_convolution_matches_direct_oracle() {
             );
         }
     });
+}
+
+#[test]
+fn sharded_rfft2_matches_single_plan_at_256() {
+    // The sharding-layer acceptance: Algorithm-1 banded execution must
+    // be bit-consistent (≤ 1e-4) with the single-plan transform at the
+    // serving threshold size, for even AND uneven core counts (p = 7
+    // gives bands of 37/36 rows — the odd-band solo-row path).
+    let mut rng = Rng::new(106);
+    let x = Matrix::random(256, 256, &mut rng);
+    let plan = fft::plan2(256, 256);
+    let want = plan.rfft2(&x, 1);
+    for p in [1usize, 2, 4, 7] {
+        let got = fft::rfft2_sharded(&plan, &x, &plan_splits(256, p));
+        assert!(
+            got.max_abs_diff(&want) < 1e-4,
+            "p={p}: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn sharded_complex_transform_matches_process_at_256() {
+    let mut rng = Rng::new(107);
+    let orig = CMatrix::from_real(&Matrix::random(256, 256, &mut rng));
+    let plan = fft::plan2(256, 256);
+    let want = plan.fft2(&orig, 1);
+    for p in [2usize, 7] {
+        let bands = plan_splits(256, p);
+        let mut got = orig.clone();
+        fft::process_sharded(&plan, &mut got, false, &bands);
+        assert!(got.max_abs_diff(&want) < 1e-4, "forward p={p}");
+        fft::process_sharded(&plan, &mut got, true, &bands);
+        assert!(got.max_abs_diff(&orig) < 1e-4, "roundtrip p={p}");
+    }
 }
 
 #[test]
