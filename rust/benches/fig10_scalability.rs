@@ -12,10 +12,16 @@
 //! with p thanks to data decomposition.
 //!
 //! The `sim_sharded_tpu_p{1,2,4,8}_1024` rows are deterministic and
-//! tracked by the CI regression gate (`xai-accel bench-check`).
+//! tracked by the CI regression gate (`xai-accel bench-check`), as are
+//! the heterogeneous-pool rows: `sim_hetero_pool_mixed8_1024` (the
+//! {4×TPU, 2×GPU, 2×CPU} pool replaying the sharded 1024² solve on
+//! throughput-weighted bands) and `sim_hetero_{blind,affinity}_mixed8`
+//! (the mixed-workload placement sweep — cost-model affinity must beat
+//! kind-blind least-loaded by ≥ 1.3×, enforced under `BENCH_ENFORCE`).
 
 use std::time::Instant;
 use xai_accel::bench::{json, BenchResult};
+use xai_accel::coordinator::router::{self, PlacementPolicy};
 use xai_accel::hwsim::{self, DeviceKind, DevicePool};
 use xai_accel::linalg::conv::circ_conv2;
 use xai_accel::linalg::matrix::Matrix;
@@ -23,6 +29,18 @@ use xai_accel::trace::NativeEngine;
 use xai_accel::util::rng::Rng;
 use xai_accel::util::table::{fmt_time, Table};
 use xai_accel::xai::{distillation, workloads};
+
+/// The Fig. 10 mixed fleet: 4 TPU + 2 GPU + 2 CPU members.
+const MIXED8: [DeviceKind; 8] = [
+    DeviceKind::Tpu,
+    DeviceKind::Tpu,
+    DeviceKind::Tpu,
+    DeviceKind::Tpu,
+    DeviceKind::Gpu,
+    DeviceKind::Gpu,
+    DeviceKind::Cpu,
+    DeviceKind::Cpu,
+];
 
 fn main() {
     let quick = xai_accel::bench::quick_requested();
@@ -114,16 +132,79 @@ fn main() {
         "acceptance (p=8 at least 3x over p=1, sub-linear from priced interconnect): {} ({speedup:.1}x)",
         if sweep_ok { "PASS" } else { "FAIL" }
     );
+
+    // ---- heterogeneous pool: mixed members, weighted bands ----------
+    // The same sharded 1024² solve on the {4×TPU, 2×GPU, 2×CPU} pool:
+    // band stages are throughput-weighted (a CPU member takes a
+    // sliver, the accelerators the bulk), collectives ride the ring's
+    // weakest link.  The row is deterministic and CI-tracked.
+    let mixed = DevicePool::mixed(&MIXED8);
+    let homog = DevicePool::homogeneous(DeviceKind::Tpu, 8);
+    let mut hetero = Table::new(format!(
+        "Fig. 10 heterogeneous pool: sharded 1024² solve, {} vs homogeneous p8",
+        mixed.label()
+    ))
+    .header(&["pool", "time", "compute", "collective", "vs 8xTPU"]);
+    let trace_1024 = workloads::distill_solve_trace_sharded(n, 8);
+    let rep_homog = homog.replay_sharded(&trace_1024);
+    let rep_mixed = mixed.replay_sharded(&trace_1024);
+    for (label, rep) in [("8xTPU", &rep_homog), (mixed.label().as_str(), &rep_mixed)] {
+        hetero.row(&[
+            label.to_string(),
+            fmt_time(rep.time_s),
+            fmt_time(rep.compute_s),
+            fmt_time(rep.collective_s),
+            format!("{:.2}x", rep.time_s / rep_homog.time_s),
+        ]);
+    }
+    hetero.print();
+    results.push(BenchResult::point("sim_hetero_pool_mixed8_1024", rep_mixed.time_s));
+
+    // ---- placement sweep: affinity vs kind-blind on the mixed pool --
+    // The deterministic mixed workload (distill-256² solves, fused
+    // saliency/classify/IG batches, small Shapley builds) placed on
+    // the mixed fleet's lanes under both policies; each lane drains at
+    // its simulated service rate, makespan = last lane to finish.
+    let profiles = router::mixed_workload_profiles(8);
+    let blind =
+        router::simulate_mixed_placement(&MIXED8, &profiles, PlacementPolicy::LeastLoaded);
+    let affinity =
+        router::simulate_mixed_placement(&MIXED8, &profiles, PlacementPolicy::Affinity);
+    let gain = blind / affinity;
+    let mut placement = Table::new(format!(
+        "mixed-workload placement on {} ({} batches)",
+        mixed.label(),
+        profiles.len()
+    ))
+    .header(&["policy", "makespan", "vs blind"]);
+    placement.row(&["least-loaded (kind-blind)".into(), fmt_time(blind), "1.00x".into()]);
+    placement.row(&[
+        "affinity (cost model)".into(),
+        fmt_time(affinity),
+        format!("{gain:.2}x"),
+    ]);
+    placement.print();
+    results.push(BenchResult::point("sim_hetero_blind_mixed8", blind));
+    results.push(BenchResult::point("sim_hetero_affinity_mixed8", affinity));
+    let hetero_ok = gain >= 1.3;
+    println!(
+        "acceptance (affinity >= 1.3x over kind-blind on the mixed pool): {} ({gain:.2}x)",
+        if hetero_ok { "PASS" } else { "FAIL" }
+    );
+
     let refs: Vec<&BenchResult> = results.iter().collect();
     json::emit(&refs);
 
-    // BENCH_ENFORCE=1 turns the printed acceptance verdict into an
-    // exit code so a driver can hard-gate the scaling claim.
+    // BENCH_ENFORCE=1 turns the printed acceptance verdicts into an
+    // exit code so a driver can hard-gate the scaling claims.
     let enforce = std::env::var("BENCH_ENFORCE")
         .map(|v| v == "1" || v == "true")
         .unwrap_or(false);
-    if enforce && !sweep_ok {
-        eprintln!("acceptance FAILED: sharded sweep speedup {speedup:.2}x (need >= 3x, sub-linear)");
+    if enforce && !(sweep_ok && hetero_ok) {
+        eprintln!(
+            "acceptance FAILED: sharded sweep {speedup:.2}x (need >= 3x, sub-linear), \
+             affinity gain {gain:.2}x (need >= 1.3x)"
+        );
         std::process::exit(1);
     }
 }

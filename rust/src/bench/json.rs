@@ -23,9 +23,13 @@ pub const BENCH_JSON_ENV: &str = "BENCH_JSON";
 /// One serialized bench entry.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchRecord {
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub p50_s: f64,
+    /// 99th-percentile seconds per iteration.
     pub p99_s: f64,
+    /// Iterations measured.
     pub iters: usize,
 }
 

@@ -12,15 +12,22 @@ use std::time::Instant;
 /// Result of one timed benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Bench row name (the JSON/baseline key).
     pub name: String,
+    /// Iterations measured.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub p50_s: f64,
+    /// 99th-percentile seconds per iteration.
     pub p99_s: f64,
+    /// Fastest iteration (s).
     pub min_s: f64,
 }
 
 impl BenchResult {
+    /// Items per second given `items_per_iter` work per iteration.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean_s
     }
@@ -42,8 +49,11 @@ impl BenchResult {
 /// Warmup-then-measure bench runner.
 #[derive(Debug, Clone)]
 pub struct BenchRunner {
+    /// Untimed warmup iterations.
     pub warmup_iters: usize,
+    /// Minimum timed iterations.
     pub min_iters: usize,
+    /// Maximum timed iterations.
     pub max_iters: usize,
     /// Stop adding iterations once this much time is spent.
     pub budget_s: f64,

@@ -9,6 +9,7 @@ use std::collections::HashMap;
 /// Parsed command-line arguments.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Positional (non-flag) arguments in order.
     pub positional: Vec<String>,
     options: HashMap<String, String>,
     flags: Vec<String>,
@@ -45,18 +46,22 @@ impl Args {
         Self::parse_from(std::env::args().skip(1))
     }
 
+    /// True when `--name` was passed as a bare switch.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name <value>`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Parse `--name` as usize, or `default` when absent.
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -66,6 +71,7 @@ impl Args {
         }
     }
 
+    /// Parse `--name` as f64, or `default` when absent.
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -75,6 +81,7 @@ impl Args {
         }
     }
 
+    /// First positional argument (the subcommand name).
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }

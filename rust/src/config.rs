@@ -17,6 +17,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// Parse INI-style `[section]\nkey = value` text.
     pub fn parse(text: &str) -> Result<Config> {
         let mut sections: HashMap<String, HashMap<String, String>> = HashMap::new();
         let mut current = String::new();
@@ -49,16 +50,19 @@ impl Config {
         Ok(Config { sections })
     }
 
+    /// Load and parse a config file from disk.
     pub fn load(path: &std::path::Path) -> Result<Config> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
         Self::parse(&text)
     }
 
+    /// Raw string value of `[section] key`, if present.
     pub fn get(&self, section: &str, key: &str) -> Option<&str> {
         self.sections.get(section)?.get(key).map(|s| s.as_str())
     }
 
+    /// Parse `[section] key` as usize (None when absent).
     pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
         match self.get(section, key) {
             None => Ok(None),
@@ -69,6 +73,7 @@ impl Config {
         }
     }
 
+    /// Parse `[section] key` as f64 (None when absent).
     pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
         match self.get(section, key) {
             None => Ok(None),
@@ -79,6 +84,7 @@ impl Config {
         }
     }
 
+    /// Parse `[section] key` as bool (None when absent).
     pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
         match self.get(section, key) {
             None => Ok(None),
@@ -121,8 +127,33 @@ impl Config {
                 }
             };
         }
+        if let Some(lanes) = self.get("coordinator", "lanes") {
+            c.lanes = parse_lanes(lanes)?;
+        }
         Ok(c)
     }
+}
+
+/// Parse a heterogeneous lane list like `tpu,tpu,gpu,cpu` into
+/// per-lane device descriptors (the `[coordinator] lanes` key and the
+/// serve binary's `--lanes` flag both route through this).
+pub fn parse_lanes(spec: &str) -> Result<Vec<crate::hwsim::DeviceKind>> {
+    use crate::hwsim::DeviceKind;
+    let lanes: Vec<DeviceKind> = spec
+        .split(',')
+        .map(|s| match s.trim().to_ascii_lowercase().as_str() {
+            "cpu" => Ok(DeviceKind::Cpu),
+            "gpu" => Ok(DeviceKind::Gpu),
+            "tpu" => Ok(DeviceKind::Tpu),
+            other => Err(Error::Config(format!(
+                "lanes: expected cpu/gpu/tpu, got '{other}'"
+            ))),
+        })
+        .collect::<Result<_>>()?;
+    if lanes.is_empty() {
+        return Err(Error::Config("lanes: need at least one lane".into()));
+    }
+    Ok(lanes)
 }
 
 #[cfg(test)]
@@ -180,6 +211,29 @@ verbose = true
     fn zero_executors_rejected() {
         let c = Config::parse("[coordinator]\nexecutors = 0").unwrap();
         assert!(c.coordinator().is_err());
+    }
+
+    #[test]
+    fn lanes_parse_and_validate() {
+        use crate::hwsim::DeviceKind;
+        let c = Config::parse("[coordinator]\nlanes = \"tpu, tpu, gpu, cpu\"")
+            .unwrap()
+            .coordinator()
+            .unwrap();
+        assert_eq!(
+            c.lanes,
+            vec![
+                DeviceKind::Tpu,
+                DeviceKind::Tpu,
+                DeviceKind::Gpu,
+                DeviceKind::Cpu
+            ]
+        );
+        // default: no lanes key => homogeneous plane from `executors`
+        let d = Config::parse("").unwrap().coordinator().unwrap();
+        assert!(d.lanes.is_empty());
+        assert!(parse_lanes("tpu,npu").is_err());
+        assert!(parse_lanes("").is_err());
     }
 
     #[test]

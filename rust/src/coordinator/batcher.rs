@@ -13,7 +13,9 @@ use std::time::{Duration, Instant};
 /// A batch ready for an executor.
 #[derive(Debug)]
 pub struct Batch {
+    /// Request kind every envelope in the batch shares.
     pub kind: RequestKind,
+    /// The batched envelopes in arrival order.
     pub envelopes: Vec<Envelope>,
 }
 
@@ -45,6 +47,7 @@ impl Default for BatchPolicy {
 }
 
 impl BatchPolicy {
+    /// Maximum batch size for `kind` (1 when unconfigured).
     pub fn max_for(&self, kind: RequestKind) -> usize {
         *self.max_batch.get(&kind).unwrap_or(&1)
     }
@@ -59,6 +62,7 @@ pub struct BatchAssembler {
 }
 
 impl BatchAssembler {
+    /// An empty assembler under `policy`.
     pub fn new(policy: BatchPolicy) -> Self {
         Self {
             policy,
@@ -120,6 +124,7 @@ impl BatchAssembler {
         self.oldest.values().min().map(|t| *t + self.policy.max_wait)
     }
 
+    /// Requests currently waiting for companions.
     pub fn pending_count(&self) -> usize {
         self.pending.values().map(|v| v.len()).sum()
     }

@@ -1,8 +1,12 @@
 //! Serving metrics: counters + latency summaries per request kind,
-//! plus per-device (executor) counters for the sharded execution
-//! plane — backlog depth, batches executed, busy time.
+//! plus per-device (executor lane) counters for the sharded execution
+//! plane — backlog depth, batches executed, busy time — and, since the
+//! pool went heterogeneous, per-device-kind aggregates
+//! ([`Metrics::kind_stats`]) so a mixed fleet's load split is visible
+//! at a glance.
 
 use crate::coordinator::request::RequestKind;
+use crate::hwsim::DeviceKind;
 use crate::util::stats;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -23,9 +27,30 @@ struct DeviceCounters {
 /// A point-in-time view of one device's counters.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DeviceStat {
+    /// Lane index (executor id).
     pub device: usize,
+    /// The lane's device class (what the affinity placer prices it as).
+    pub kind: DeviceKind,
+    /// Batches placed on the lane and not yet executed.
     pub queue_depth: u64,
+    /// Batches the lane has executed.
     pub batches: u64,
+    /// Seconds the lane has spent executing batches.
+    pub busy_s: f64,
+}
+
+/// Aggregate counters for every lane of one device kind.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KindStat {
+    /// The device class these lanes share.
+    pub kind: DeviceKind,
+    /// Number of lanes of this kind in the pool.
+    pub lanes: usize,
+    /// Batches queued across the kind's lanes right now.
+    pub queue_depth: u64,
+    /// Batches executed across the kind's lanes.
+    pub batches: u64,
+    /// Busy seconds accumulated across the kind's lanes.
     pub busy_s: f64,
 }
 
@@ -43,28 +68,45 @@ pub struct Metrics {
     queue_waits: Mutex<HashMap<RequestKind, Vec<f64>>>,
     /// one slot per executor device (fixed at construction)
     devices: Vec<DeviceCounters>,
+    /// device class per lane (parallel to `devices`)
+    device_kinds: Vec<DeviceKind>,
 }
 
 /// A rendered latency summary.
 #[derive(Debug, Clone)]
 pub struct LatencySummary {
+    /// Number of samples.
     pub count: usize,
+    /// Mean latency (s).
     pub mean_s: f64,
+    /// Median latency (s).
     pub p50_s: f64,
+    /// 99th-percentile latency (s).
     pub p99_s: f64,
+    /// Worst latency (s).
     pub max_s: f64,
 }
 
 impl Metrics {
+    /// Metrics with no per-device slots.
     pub fn new() -> Self {
         Self::default()
     }
 
     /// Metrics with `n` per-device counter slots (the coordinator
-    /// sizes this to its executor pool).
+    /// sizes this to its executor pool).  Lanes default to TPU-class —
+    /// the homogeneous pool the plane served before PR 5; use
+    /// [`Metrics::with_device_kinds`] for a mixed fleet.
     pub fn with_devices(n: usize) -> Self {
+        Self::with_device_kinds(&vec![DeviceKind::Tpu; n])
+    }
+
+    /// Metrics with one counter slot per lane, each tagged with its
+    /// device class (the coordinator passes its bring-up descriptors).
+    pub fn with_device_kinds(kinds: &[DeviceKind]) -> Self {
         Self {
-            devices: (0..n).map(|_| DeviceCounters::default()).collect(),
+            devices: kinds.iter().map(|_| DeviceCounters::default()).collect(),
+            device_kinds: kinds.to_vec(),
             ..Self::default()
         }
     }
@@ -72,6 +114,11 @@ impl Metrics {
     /// Number of tracked devices.
     pub fn device_count(&self) -> usize {
         self.devices.len()
+    }
+
+    /// Device class per lane, in lane order.
+    pub fn device_kinds(&self) -> &[DeviceKind] {
+        &self.device_kinds
     }
 
     /// A batch was placed on device `d`'s queue.
@@ -114,9 +161,47 @@ impl Metrics {
             .enumerate()
             .map(|(i, d)| DeviceStat {
                 device: i,
+                kind: self
+                    .device_kinds
+                    .get(i)
+                    .copied()
+                    .unwrap_or(DeviceKind::Tpu),
                 queue_depth: d.queue_depth.load(Ordering::Relaxed),
                 batches: d.batches.load(Ordering::Relaxed),
                 busy_s: d.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            })
+            .collect()
+    }
+
+    /// Per-device-kind aggregates over the lane counters, in
+    /// [`DeviceKind::all`] order, covering only kinds present in the
+    /// pool — the mixed fleet's load split at a glance.
+    pub fn kind_stats(&self) -> Vec<KindStat> {
+        Self::kind_stats_of(&self.device_stats())
+    }
+
+    /// Aggregate an already-captured per-lane snapshot into per-kind
+    /// rows.  Callers that need the per-lane and per-kind views to be
+    /// mutually consistent (one moment in time) take ONE
+    /// [`Metrics::device_stats`] snapshot and derive both from it —
+    /// re-reading the live counters for each view could disagree under
+    /// traffic.
+    pub fn kind_stats_of(stats: &[DeviceStat]) -> Vec<KindStat> {
+        DeviceKind::all()
+            .iter()
+            .filter_map(|&kind| {
+                let lanes: Vec<&DeviceStat> =
+                    stats.iter().filter(|d| d.kind == kind).collect();
+                if lanes.is_empty() {
+                    return None;
+                }
+                Some(KindStat {
+                    kind,
+                    lanes: lanes.len(),
+                    queue_depth: lanes.iter().map(|d| d.queue_depth).sum(),
+                    batches: lanes.iter().map(|d| d.batches).sum(),
+                    busy_s: lanes.iter().map(|d| d.busy_s).sum(),
+                })
             })
             .collect()
     }
@@ -126,10 +211,12 @@ impl Metrics {
         self.batches.load(Ordering::Relaxed)
     }
 
+    /// A request entered the ingress queue.
     pub fn record_submit(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A request completed successfully with the given timings.
     pub fn record_complete(&self, kind: RequestKind, latency: Duration, queue_wait: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.latencies
@@ -146,24 +233,29 @@ impl Metrics {
             .push(queue_wait.as_secs_f64());
     }
 
+    /// A request failed.
     pub fn record_failure(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A batch of `size` requests began executing.
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests
             .fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// Requests submitted so far.
     pub fn submitted(&self) -> u64 {
         self.submitted.load(Ordering::Relaxed)
     }
 
+    /// Requests completed so far.
     pub fn completed(&self) -> u64 {
         self.completed.load(Ordering::Relaxed)
     }
 
+    /// Requests failed so far.
     pub fn failed(&self) -> u64 {
         self.failed.load(Ordering::Relaxed)
     }
@@ -178,6 +270,7 @@ impl Metrics {
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
     }
 
+    /// Latency summary for one request kind (None before any sample).
     pub fn latency_summary(&self, kind: RequestKind) -> Option<LatencySummary> {
         let map = self.latencies.lock().unwrap();
         let xs = map.get(&kind)?;
@@ -193,6 +286,7 @@ impl Metrics {
         })
     }
 
+    /// Mean queue wait for one request kind (None before any sample).
     pub fn mean_queue_wait(&self, kind: RequestKind) -> Option<f64> {
         let map = self.queue_waits.lock().unwrap();
         map.get(&kind).map(|xs| stats::mean(xs))
@@ -220,13 +314,26 @@ impl Metrics {
                 ));
             }
         }
-        for d in self.device_stats() {
+        // one snapshot feeds both sections, so they re-sum exactly
+        let devices = self.device_stats();
+        for d in &devices {
             out.push_str(&format!(
-                "  device {:<2} batches={:<5} busy={:.2}ms depth={}\n",
+                "  device {:<2} ({:<3}) batches={:<5} busy={:.2}ms depth={}\n",
                 d.device,
+                d.kind.name(),
                 d.batches,
                 d.busy_s * 1e3,
                 d.queue_depth,
+            ));
+        }
+        for k in Self::kind_stats_of(&devices) {
+            out.push_str(&format!(
+                "  kind {:<3} lanes={} batches={:<5} busy={:.2}ms depth={}\n",
+                k.kind.name(),
+                k.lanes,
+                k.batches,
+                k.busy_s * 1e3,
+                k.queue_depth,
             ));
         }
         out
@@ -289,6 +396,45 @@ mod tests {
         // out-of-range device ids are ignored, not panics
         m.record_device_enqueue(99);
         m.record_device_batch(99, Duration::ZERO);
+    }
+
+    #[test]
+    fn kind_stats_aggregate_lanes_of_a_mixed_fleet() {
+        let m = Metrics::with_device_kinds(&[
+            DeviceKind::Tpu,
+            DeviceKind::Tpu,
+            DeviceKind::Gpu,
+            DeviceKind::Cpu,
+        ]);
+        assert_eq!(m.device_kinds().len(), 4);
+        m.record_device_enqueue(0);
+        m.record_device_enqueue(1);
+        m.record_device_enqueue(2);
+        m.record_device_batch(0, Duration::from_millis(2));
+        m.record_device_batch(2, Duration::from_millis(3));
+        // lanes carry their class...
+        let stats = m.device_stats();
+        assert_eq!(stats[0].kind, DeviceKind::Tpu);
+        assert_eq!(stats[2].kind, DeviceKind::Gpu);
+        // ...and kinds aggregate them in DeviceKind::all() order,
+        // CPU/GPU/TPU, only kinds present
+        let kinds = m.kind_stats();
+        assert_eq!(kinds.len(), 3);
+        assert_eq!(kinds[0].kind, DeviceKind::Cpu);
+        assert_eq!(kinds[0].lanes, 1);
+        assert_eq!(kinds[0].batches, 0);
+        let tpu = kinds.iter().find(|k| k.kind == DeviceKind::Tpu).unwrap();
+        assert_eq!(tpu.lanes, 2);
+        assert_eq!(tpu.batches, 1);
+        assert_eq!(tpu.queue_depth, 1); // one of two enqueues executed
+        assert!((tpu.busy_s - 0.002).abs() < 1e-9);
+        // homogeneous default stays TPU-classed
+        let legacy = Metrics::with_devices(2);
+        assert!(legacy
+            .device_stats()
+            .iter()
+            .all(|d| d.kind == DeviceKind::Tpu));
+        assert_eq!(legacy.kind_stats().len(), 1);
     }
 
     #[test]

@@ -8,25 +8,30 @@
 //!                     │
 //!               batcher thread                   (dynamic batching:
 //!                     │                           group by request
-//!              placement (least-loaded)           kind, flush on size
+//!           placement (cost-model affinity)       kind, flush on size
 //!               /       |       \                 or deadline)
 //!        [queue 0]  [queue 1]  [queue 2]         (one bounded queue
-//!            │          │          │              per device)
-//!        executor   executor   executor          (each owns its own
-//!         thread     thread     thread            PJRT registry — a
-//!               \       |       /                 "core" in the
-//!              per-request reply                  paper's Algorithm 1)
+//!            │          │          │              per device lane —
+//!        executor   executor   executor           TPU/GPU/CPU-class
+//!         thread     thread     thread            since PR 5; each
+//!               \       |       /                 owns its own PJRT
+//!              per-request reply                  registry — a "core"
+//!                                                 in Algorithm 1)
 //! ```
 //!
 //! The paper's two system activities map directly: **data
 //! decomposition** = the per-device execution plane — whole batches
-//! place onto the least-loaded device queue, and single requests above
-//! [`decomposition::SHARD_THRESHOLD`] split/execute/merge through the
-//! sharded FFT kernels (pool-width band plans on scoped core threads,
-//! priced as a multi-chip pool by `hwsim`); **parallel computation of
-//! multiple inputs** = the dynamic batcher packing compatible requests
-//! into one compiled executable call (e.g. 8 Shapley games into the
-//! `(2ⁿ×8)` structure-vector matmul).
+//! place onto the lane the cost model says finishes them first
+//! ([`router::place_affinity`]: the batch's analytic op profile priced
+//! on each lane's device class, combined with live backlog, with a
+//! starvation guard spilling off saturated fast lanes), and single
+//! requests above [`decomposition::SHARD_THRESHOLD`]
+//! split/execute/merge through the sharded FFT kernels (pool-width
+//! band plans on scoped core threads, priced as a multi-chip pool by
+//! `hwsim`); **parallel computation of multiple inputs** = the dynamic
+//! batcher packing compatible requests into one compiled executable
+//! call (e.g. 8 Shapley games into the `(2ⁿ×8)` structure-vector
+//! matmul).
 
 pub mod batcher;
 pub mod decomposition;
@@ -38,7 +43,7 @@ pub mod router;
 pub mod service;
 pub mod worker;
 
-pub use metrics::{DeviceStat, Metrics};
+pub use metrics::{DeviceStat, KindStat, Metrics};
 pub use native::NativeBackend;
 pub use request::{Request, RequestKind, Response};
 pub use service::{Coordinator, CoordinatorConfig, CoordinatorStats};

@@ -78,6 +78,7 @@ fn default_shards() -> usize {
 }
 
 impl NativeBackend {
+    /// A backend with the default template model and host-sized pool.
     pub fn new() -> Self {
         Self::default()
     }
@@ -94,6 +95,7 @@ impl NativeBackend {
         self.shards
     }
 
+    /// The template model every image pipeline scores against.
     pub fn model(&self) -> &TemplateModel {
         &self.model
     }

@@ -33,11 +33,14 @@ impl<T> Clone for BoundedQueue<T> {
 /// Why an operation failed.
 #[derive(Debug, PartialEq, Eq)]
 pub enum QueueError {
+    /// The queue was closed; no further pushes are accepted.
     Closed,
+    /// The queue is at capacity (non-blocking push only).
     Full,
 }
 
 impl<T> BoundedQueue<T> {
+    /// A queue holding at most `capacity` items.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         Self {
@@ -149,6 +152,7 @@ impl<T> BoundedQueue<T> {
         drained
     }
 
+    /// Close the queue: pushes fail, pops drain the remainder.
     pub fn close(&self) {
         let mut state = self.inner.queue.lock().unwrap();
         state.closed = true;
@@ -156,14 +160,17 @@ impl<T> BoundedQueue<T> {
         self.inner.not_full.notify_all();
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.inner.queue.lock().unwrap().items.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// True when the queue has been closed.
     pub fn is_closed(&self) -> bool {
         self.inner.queue.lock().unwrap().closed
     }

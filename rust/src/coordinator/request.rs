@@ -12,37 +12,62 @@ pub type RequestId = u64;
 #[derive(Debug, Clone)]
 pub enum Request {
     /// Classify an image through the AOT MicroCNN forward.
-    Classify { image: Matrix },
+    Classify {
+        /// The image to classify.
+        image: Matrix,
+    },
     /// Model-distillation explanation of an (input, output) pair
     /// (Eq. 5 solve + Eq. 6 block contributions).
-    Distill { x: Matrix, y: Matrix },
+    Distill {
+        /// Model input.
+        x: Matrix,
+        /// Model output to fit the surrogate against.
+        y: Matrix,
+    },
     /// Shapley values of an n-player game given its 2ⁿ value table.
     Shapley {
+        /// Number of players.
         n: usize,
+        /// Coalition values, indexed by subset bitmask (2ⁿ entries).
         values: Vec<f32>,
+        /// Feature names for the returned attribution.
         names: Vec<String>,
     },
     /// Integrated-gradients heatmap for an image and target class.
     IntGrad {
+        /// The image to explain.
         image: Matrix,
+        /// Path baseline (usually all-zeros).
         baseline: Matrix,
+        /// Class whose logit is integrated.
         class: usize,
     },
     /// Vanilla gradient saliency (Fig. 14 baseline).
-    Saliency { image: Matrix, class: usize },
+    Saliency {
+        /// The image to explain.
+        image: Matrix,
+        /// Class whose logit is differentiated.
+        class: usize,
+    },
 }
 
 /// Batching key: requests of the same kind can share an executable.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum RequestKind {
+    /// Image classification.
     Classify,
+    /// Model distillation.
     Distill,
+    /// Shapley value attribution.
     Shapley,
+    /// Integrated gradients.
     IntGrad,
+    /// Gradient saliency.
     Saliency,
 }
 
 impl Request {
+    /// The batching key of this request.
     pub fn kind(&self) -> RequestKind {
         match self {
             Request::Classify { .. } => RequestKind::Classify,
@@ -55,6 +80,7 @@ impl Request {
 }
 
 impl RequestKind {
+    /// All five kinds in a stable order.
     pub fn all() -> [RequestKind; 5] {
         [
             RequestKind::Classify,
@@ -65,6 +91,7 @@ impl RequestKind {
         ]
     }
 
+    /// Lowercase display name.
     pub fn name(&self) -> &'static str {
         match self {
             RequestKind::Classify => "classify",
@@ -79,21 +106,30 @@ impl RequestKind {
 /// Successful response payloads.
 #[derive(Debug, Clone)]
 pub enum Response {
+    /// Class logits from a classification request.
     Logits(Vec<f32>),
     /// Distillation: the fitted kernel + block contributions.
     Distillation {
+        /// The fitted circular-convolution kernel (Eq. 5).
         kernel: Matrix,
+        /// Per-block contribution factors (Eq. 6).
         contributions: Matrix,
     },
+    /// Named per-feature attribution scores.
     Attribution(Attribution),
+    /// A per-pixel heatmap (saliency / IG).
     Heatmap(Matrix),
 }
 
 /// A request in flight: payload + reply channel + timing.
 pub struct Envelope {
+    /// Unique request id.
     pub id: RequestId,
+    /// The request payload.
     pub request: Request,
+    /// Channel the executor answers on.
     pub reply: mpsc::Sender<crate::error::Result<Response>>,
+    /// When the request entered the ingress queue.
     pub enqueued_at: Instant,
 }
 

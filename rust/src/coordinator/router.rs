@@ -1,9 +1,24 @@
-//! Request router: maps a batch onto an execution backend.
+//! Request router: placement across the device lanes + dispatch onto
+//! an execution backend.
 //!
-//! With a compiled registry ([`crate::coordinator::worker::ExecBackend::Pjrt`])
-//! variant selection implements "one compiled executable per model
-//! variant": classification picks the smallest `cnn_fwd_b{1,8,32}` that
-//! fits the batch (padding the remainder), Shapley packs games into the
+//! **Placement** (heterogeneous since PR 5): each assembled batch is
+//! priced on every lane's device model — [`batch_profile`] builds the
+//! batch's analytic op profile, [`lane_service_s`] replays it on the
+//! lane's [`DeviceKind`] cost model — and the batch goes to the lane
+//! with the smallest estimated completion time ([`place_affinity`]):
+//! FFT-heavy saliency/distill work lands on TPU/GPU-class lanes, small
+//! Shapley value-table builds stay cheap on CPU-class lanes, and fused
+//! batches prefer lanes that amortize the systolic fill/drain.  A
+//! starvation guard spills work off a saturated fast lane
+//! ([`SPILL_BACKLOG`]).  The kind-blind [`place_least_loaded`] remains
+//! as the degenerate policy (and the baseline the Fig. 10 mixed-pool
+//! sweep compares against).
+//!
+//! **Dispatch**: with a compiled registry
+//! ([`crate::coordinator::worker::ExecBackend::Pjrt`]) variant
+//! selection implements "one compiled executable per model variant":
+//! classification picks the smallest `cnn_fwd_b{1,8,32}` that fits the
+//! batch (padding the remainder), Shapley packs games into the
 //! `shapley_n{n}_b{b}` structure-vector matmul, distillation routes on
 //! input size to `distill_{n}x{n}` + `occlusion_{n}x{n}_b*`.  With the
 //! native backend the whole batch goes to the fused kernel layer
@@ -11,13 +26,17 @@
 //! batch, not one per request.
 
 use crate::coordinator::batcher::Batch;
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::{Request, RequestKind, Response};
 use crate::coordinator::worker::ExecBackend;
 use crate::error::{Error, Result};
+use crate::hwsim::{self, DeviceKind};
 use crate::linalg::matrix::Matrix;
 use crate::runtime::ArtifactRegistry;
+use crate::trace::{Op, OpTrace};
 use crate::xai::attribution::Attribution;
 use crate::xai::shapley;
+use crate::xai::workloads;
+use std::sync::OnceLock;
 
 /// Batch sizes compiled for the CNN forward (ascending).
 pub const CNN_BATCH_VARIANTS: [usize; 3] = [1, 8, 32];
@@ -63,6 +82,261 @@ pub fn place_least_loaded(backlogs: &[u64]) -> usize {
         .min_by_key(|&(_, b)| *b)
         .map(|(i, _)| i)
         .unwrap_or(0)
+}
+
+/// Backlog-imbalance bound of the affinity placer's starvation guard:
+/// when the cost-model winner is this many batches deeper than the
+/// emptiest lane, the batch spills to the cheapest least-loaded lane
+/// instead.  The guard is robustness against estimate error — the
+/// queued work ahead of a batch is approximated as same-profile, so a
+/// fast lane's real drain time can exceed its estimate — and it bounds
+/// how far a saturated fast lane can starve idle slower kinds.
+pub const SPILL_BACKLOG: u64 = 8;
+
+/// First-order analytic op profile of a `(kind, batch-size, edge)`
+/// request group, in the native fused-batch conventions the workers
+/// actually execute (one `BatchedMatmul`/`BatchedFft2` per fused
+/// stage; saliency smoothing excludes the cached kernel spectrum; the
+/// distillation profile is the Eq. 5 FFT-form solve plus the Eq. 6
+/// occlusion sweep per request).  `n` is the request's characteristic
+/// edge: players for Shapley, the square side for everything else.
+/// This is the profile the affinity placer prices — a deliberate
+/// first-order mirror of the executed trace, not a bit-exact one.
+pub fn profile_for(kind: RequestKind, b: usize, n: usize) -> OpTrace {
+    let b = b.max(1);
+    let mut t = OpTrace::new();
+    match kind {
+        RequestKind::Classify => {
+            let d = n * n;
+            t.push(Op::BatchedMatmul {
+                b,
+                m: crate::data::cifar::NUM_CLASSES,
+                k: d,
+                n: 1,
+            });
+            t.push(Op::Elementwise {
+                elems: b * crate::data::cifar::NUM_CLASSES,
+            });
+        }
+        RequestKind::Shapley => {
+            // table size is clamped like the serving gate, so a bad n
+            // cannot overflow the shift before validation rejects it
+            let table = 1usize << n.min(shapley::MAX_CACHED_PLAYERS);
+            t.push(Op::BatchedMatmul {
+                b,
+                m: n.min(shapley::MAX_CACHED_PLAYERS),
+                k: table,
+                n: 1,
+            });
+        }
+        RequestKind::IntGrad => {
+            let d = n * n;
+            let steps = crate::coordinator::native::IG_STEPS;
+            t.push(Op::ModelGrad {
+                count: b * (steps + 1),
+                flops_per_grad: 4 * d as u64,
+            });
+            t.push(Op::BatchedMatmul {
+                b,
+                m: 1,
+                k: steps + 1,
+                n: d,
+            });
+            t.push(Op::Elementwise { elems: b * d });
+        }
+        RequestKind::Saliency => {
+            let d = n * n;
+            t.push(Op::ModelGrad {
+                count: b,
+                flops_per_grad: 4 * d as u64,
+            });
+            // smooth_heatmaps_batch: two fused transforms around the
+            // Hadamard (kernel spectrum cached process-wide, not paid)
+            t.push(Op::BatchedFft2 { b, m: n, n });
+            t.push(Op::Elementwise { elems: 2 * b * d });
+            t.push(Op::BatchedFft2 { b, m: n, n });
+        }
+        RequestKind::Distill => {
+            let solve = workloads::distill_solve_trace_sched(n, workloads::Schedule::FftForm);
+            let contrib = workloads::contribution_trace_sched(
+                n,
+                (n / 4).max(1),
+                workloads::Schedule::FftForm,
+            );
+            for _ in 0..b {
+                t.extend(&solve);
+                t.extend(&contrib);
+            }
+        }
+    }
+    t
+}
+
+/// Analytic op profile of one assembled batch.  Batches group by
+/// request KIND only, so same-kind members may differ in size
+/// (different Shapley player counts, different distill edges): the
+/// profile prices the batch at its LARGEST characteristic edge —
+/// conservative, so a mixed batch cannot masquerade as tiny work and
+/// land on a lane that will stall on its big members.  Empty batches
+/// profile as an empty trace.
+pub fn batch_profile(batch: &Batch) -> OpTrace {
+    let b = batch.envelopes.len();
+    let n = batch
+        .envelopes
+        .iter()
+        .map(|e| match &e.request {
+            Request::Classify { image } => image.rows,
+            Request::Distill { x, .. } => x.rows,
+            Request::Shapley { n, .. } => *n,
+            Request::IntGrad { image, .. } => image.rows,
+            Request::Saliency { image, .. } => image.rows,
+        })
+        .max();
+    let Some(n) = n else {
+        return OpTrace::new();
+    };
+    profile_for(batch.kind, b, n)
+}
+
+/// The cached placement cost models, one per device kind.  A lane is
+/// priced as ONE core/stream of its class (`units = 1`) — the same
+/// single-core device semantics as the
+/// [`crate::hwsim::pool::DevicePool`] members and the Algorithm-1
+/// "cores" the executors simulate — NOT a whole multi-core board
+/// (whole-device pricing is what `Device::replay` gives the fig-8/9/10
+/// testbed tables).  Relative kind costs, which is all placement needs,
+/// are preserved either way.
+fn placement_sim(kind: DeviceKind) -> &'static dyn hwsim::device::Device {
+    static SIMS: OnceLock<[Box<dyn hwsim::device::Device>; 3]> = OnceLock::new();
+    let sims = SIMS.get_or_init(|| {
+        [
+            hwsim::device_for(DeviceKind::Cpu),
+            hwsim::device_for(DeviceKind::Gpu),
+            hwsim::device_for(DeviceKind::Tpu),
+        ]
+    });
+    match kind {
+        DeviceKind::Cpu => &*sims[0],
+        DeviceKind::Gpu => &*sims[1],
+        DeviceKind::Tpu => &*sims[2],
+    }
+}
+
+/// Estimated service time of `profile` on a lane of the given kind:
+/// one replay of the analytic batch profile on the kind's cost model
+/// at single-core lane semantics — the same single-core device model
+/// as the [`crate::hwsim::pool::DevicePool`] members, not a whole
+/// multi-core board.
+pub fn lane_service_s(kind: DeviceKind, profile: &OpTrace) -> f64 {
+    placement_sim(kind).replay_with_units(profile, 1).time_s
+}
+
+/// Cost-model-driven affinity placement: estimate every lane's
+/// completion time for this batch — `(backlog + 1) × service`, the
+/// queued work ahead approximated as same-profile batches — and route
+/// to the argmin (ties to the lowest index).  A lane whose backlog is
+/// [`SPILL_BACKLOG`] deeper than the emptiest lane's is considered
+/// saturated and the batch spills to the cheapest least-loaded lane,
+/// so slower kinds absorb overflow instead of idling (and mis-priced
+/// queues cannot starve the pool).  Dead lanes are marked by the
+/// batcher with `u64::MAX` backlog and never win.
+pub fn place_affinity(kinds: &[DeviceKind], backlogs: &[u64], profile: &OpTrace) -> usize {
+    let n = kinds.len().min(backlogs.len());
+    if n == 0 {
+        return place_least_loaded(backlogs);
+    }
+    // One replay per DISTINCT kind, not per lane: lane_service_s is a
+    // pure function of (kind, profile), and this runs on the batcher
+    // hot path for every placed batch.
+    let mut by_kind: [Option<f64>; 3] = [None; 3];
+    let service: Vec<f64> = kinds[..n]
+        .iter()
+        .map(|&k| {
+            let slot = match k {
+                DeviceKind::Cpu => 0,
+                DeviceKind::Gpu => 1,
+                DeviceKind::Tpu => 2,
+            };
+            *by_kind[slot].get_or_insert_with(|| lane_service_s(k, profile))
+        })
+        .collect();
+    let eta = |i: usize| (backlogs[i] as f64 + 1.0) * service[i];
+    let mut best = 0usize;
+    for i in 1..n {
+        if eta(i) < eta(best) {
+            best = i;
+        }
+    }
+    let min_backlog = *backlogs[..n].iter().min().unwrap();
+    if backlogs[best].saturating_sub(min_backlog) >= SPILL_BACKLOG {
+        // saturated winner: spill to the cheapest emptiest lane
+        let mut spill: Option<usize> = None;
+        for i in 0..n {
+            if backlogs[i] == min_backlog {
+                spill = match spill {
+                    Some(j) if service[j] <= service[i] => Some(j),
+                    _ => Some(i),
+                };
+            }
+        }
+        if let Some(s) = spill {
+            best = s;
+        }
+    }
+    best
+}
+
+/// Which placement policy a simulated sweep runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Kind-blind smallest-backlog placement (the PR 4 router).
+    LeastLoaded,
+    /// Cost-model-driven placement ([`place_affinity`]).
+    Affinity,
+}
+
+/// Deterministic burst-placement simulation over a mixed lane pool:
+/// every profile in `profiles` arrives in order, is placed under
+/// `policy` using live backlog counts, and each lane drains its queue
+/// sequentially at the simulated service rate of its kind.  Returns
+/// the makespan (the last lane's finish time).  This is the
+/// `fig10_scalability` mixed-workload sweep's engine and the unit-test
+/// oracle for the ≥ 1.3× affinity-over-blind acceptance.
+pub fn simulate_mixed_placement(
+    kinds: &[DeviceKind],
+    profiles: &[OpTrace],
+    policy: PlacementPolicy,
+) -> f64 {
+    assert!(!kinds.is_empty());
+    let mut backlog = vec![0u64; kinds.len()];
+    let mut finish = vec![0f64; kinds.len()];
+    for profile in profiles {
+        let lane = match policy {
+            PlacementPolicy::LeastLoaded => place_least_loaded(&backlog),
+            PlacementPolicy::Affinity => place_affinity(kinds, &backlog, profile),
+        };
+        backlog[lane] += 1;
+        finish[lane] += lane_service_s(kinds[lane], profile);
+    }
+    finish.iter().cloned().fold(0.0, f64::max)
+}
+
+/// The Fig. 10 mixed-serving workload: `rounds` deterministic arrival
+/// rounds, each one distill-256² solve (FFT-heavy), one fused
+/// saliency b=8 batch, one Shapley n=8 b=8 value-table build (tiny),
+/// one classify b=32 batch, and one IG b=4 batch — the op-profile mix
+/// the heterogeneous {TPU, GPU, CPU} pool is meant to absorb.
+pub fn mixed_workload_profiles(rounds: usize) -> Vec<OpTrace> {
+    let img = crate::data::cifar::IMG;
+    let mut out = Vec::with_capacity(rounds * 5);
+    for _ in 0..rounds {
+        out.push(profile_for(RequestKind::Distill, 1, 256));
+        out.push(profile_for(RequestKind::Saliency, 8, img));
+        out.push(profile_for(RequestKind::Shapley, 8, 8));
+        out.push(profile_for(RequestKind::Classify, 32, img));
+        out.push(profile_for(RequestKind::IntGrad, 4, img));
+    }
+    out
 }
 
 /// Execute one batch against the live backend, producing one response
@@ -382,6 +656,123 @@ mod tests {
         assert_eq!(place_least_loaded(&[2, 2, 2]), 0);
         assert_eq!(place_least_loaded(&[5, 0, 0]), 1);
         assert_eq!(place_least_loaded(&[]), 0);
+    }
+
+    /// The Fig. 10 mixed fleet: 4 TPU + 2 GPU + 2 CPU lanes.
+    fn mixed_lanes() -> Vec<DeviceKind> {
+        vec![
+            DeviceKind::Tpu,
+            DeviceKind::Tpu,
+            DeviceKind::Tpu,
+            DeviceKind::Tpu,
+            DeviceKind::Gpu,
+            DeviceKind::Gpu,
+            DeviceKind::Cpu,
+            DeviceKind::Cpu,
+        ]
+    }
+
+    #[test]
+    fn affinity_keeps_fft_heavy_work_off_idle_cpu_lanes() {
+        // A 256² distillation solve is FFT-heavy: with every lane idle
+        // the cost model must route it to an accelerator lane, never a
+        // CPU lane (three orders of magnitude slower on matrix work).
+        let kinds = mixed_lanes();
+        let backlogs = vec![0u64; kinds.len()];
+        let profile = profile_for(RequestKind::Distill, 1, 256);
+        let lane = place_affinity(&kinds, &backlogs, &profile);
+        assert_ne!(kinds[lane], DeviceKind::Cpu, "picked lane {lane}");
+        // and the pricing itself must agree about why
+        assert!(
+            lane_service_s(DeviceKind::Cpu, &profile)
+                > 10.0 * lane_service_s(DeviceKind::Tpu, &profile)
+        );
+    }
+
+    #[test]
+    fn affinity_lets_small_shapley_stay_cheap_on_cpu_lanes() {
+        // A small Shapley value-table build is dispatch-dominated on
+        // accelerators: as soon as the fast lane has any backlog, the
+        // idle CPU lane's estimated completion wins.
+        let kinds = vec![DeviceKind::Tpu, DeviceKind::Cpu];
+        let profile = profile_for(RequestKind::Shapley, 8, 8);
+        assert_eq!(place_affinity(&kinds, &[1, 0], &profile), 1);
+    }
+
+    #[test]
+    fn starvation_guard_spills_a_saturated_fast_lane() {
+        // Backlog imbalance at SPILL_BACKLOG forces the spill even for
+        // a profile the fast lane prices far cheaper.
+        let kinds = vec![DeviceKind::Tpu, DeviceKind::Cpu];
+        let profile = profile_for(RequestKind::Saliency, 8, 16);
+        // below the bound the fast lane keeps winning...
+        assert_eq!(
+            place_affinity(&kinds, &[SPILL_BACKLOG - 2, 0], &profile),
+            0
+        );
+        // ...at the bound the batch spills to the emptiest lane
+        assert_eq!(place_affinity(&kinds, &[SPILL_BACKLOG, 0], &profile), 1);
+    }
+
+    #[test]
+    fn affinity_never_picks_a_dead_lane() {
+        // The batcher marks dead lanes with u64::MAX backlog.
+        let kinds = vec![DeviceKind::Gpu, DeviceKind::Cpu];
+        let profile = profile_for(RequestKind::Distill, 1, 256);
+        assert_eq!(place_affinity(&kinds, &[u64::MAX, 0], &profile), 1);
+    }
+
+    #[test]
+    fn affinity_beats_kind_blind_placement_on_the_mixed_pool() {
+        // The PR 5 acceptance at unit level: on the {4×TPU, 2×GPU,
+        // 2×CPU} fleet under the deterministic mixed workload, the
+        // cost-model placer's makespan beats kind-blind least-loaded
+        // by ≥ 1.3× (in practice far more: blind placement hands
+        // FFT-heavy solves to CPU lanes).
+        let kinds = mixed_lanes();
+        let profiles = mixed_workload_profiles(8);
+        let blind =
+            simulate_mixed_placement(&kinds, &profiles, PlacementPolicy::LeastLoaded);
+        let affinity =
+            simulate_mixed_placement(&kinds, &profiles, PlacementPolicy::Affinity);
+        assert!(
+            blind / affinity >= 1.3,
+            "affinity {affinity} must beat blind {blind} by >= 1.3x (got {:.2}x)",
+            blind / affinity
+        );
+    }
+
+    #[test]
+    fn homogeneous_affinity_degenerates_to_least_loaded_spread() {
+        // On an all-TPU pool every lane prices a batch identically, so
+        // affinity reduces to backlog order with low-index ties — the
+        // PR 4 policy.
+        let kinds = vec![DeviceKind::Tpu; 4];
+        let profile = profile_for(RequestKind::Classify, 32, 16);
+        assert_eq!(place_affinity(&kinds, &[2, 1, 3, 1], &profile), 1);
+        assert_eq!(place_affinity(&kinds, &[0, 0, 0, 0], &profile), 0);
+    }
+
+    #[test]
+    fn batch_profiles_are_kind_and_size_shaped() {
+        // FFT-heavy kinds record transforms; table kinds record GEMMs;
+        // size flows through (a 256² distill profile dwarfs a 16²).
+        let sal = profile_for(RequestKind::Saliency, 8, 16);
+        assert!(sal
+            .ops
+            .iter()
+            .any(|o| matches!(o, Op::BatchedFft2 { b: 8, m: 16, n: 16 })));
+        let shap = profile_for(RequestKind::Shapley, 4, 10);
+        assert!(shap
+            .ops
+            .iter()
+            .any(|o| matches!(o, Op::BatchedMatmul { b: 4, m: 10, k: 1024, n: 1 })));
+        let big = profile_for(RequestKind::Distill, 1, 256).total_flops();
+        let small = profile_for(RequestKind::Distill, 1, 16).total_flops();
+        assert!(big > 100 * small);
+        // absurd Shapley n cannot overflow before validation rejects it
+        let huge = profile_for(RequestKind::Shapley, 1, 4000);
+        assert!(huge.total_flops() > 0);
     }
 
     #[test]

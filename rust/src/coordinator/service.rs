@@ -2,19 +2,23 @@
 //! placement → per-device executor queues.
 //!
 //! Since PR 4 the executor pool is a real device plane: every executor
-//! owns its own bounded work queue, the batcher places each assembled
-//! batch on the least-loaded device
-//! ([`crate::coordinator::router::place_least_loaded`] over the
-//! per-device backlog counters), and [`Coordinator::stats`] snapshots
-//! the per-device counters (queue depth, batches executed, busy time)
-//! alongside the aggregate serving metrics.
+//! owns its own bounded work queue, and [`Coordinator::stats`]
+//! snapshots the per-device counters (queue depth, batches executed,
+//! busy time) alongside the aggregate serving metrics.  Since PR 5 the
+//! plane is *heterogeneous*: [`CoordinatorConfig::lanes`] names each
+//! lane's device class, the batcher places every assembled batch by
+//! cost-model affinity ([`crate::coordinator::router::place_affinity`]
+//! over the per-lane backlog counters and the batch's analytic op
+//! profile), and the stats snapshot adds per-kind aggregates
+//! ([`crate::coordinator::metrics::KindStat`]).
 
 use crate::coordinator::batcher::{Batch, BatchAssembler, BatchPolicy};
-use crate::coordinator::metrics::{DeviceStat, Metrics};
+use crate::coordinator::metrics::{DeviceStat, KindStat, Metrics};
 use crate::coordinator::queue::{BoundedQueue, QueueError};
 use crate::coordinator::request::{Envelope, Request, Response};
 use crate::coordinator::router;
 use crate::error::{Error, Result};
+use crate::hwsim::DeviceKind;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -27,8 +31,14 @@ pub struct CoordinatorConfig {
     /// Where `manifest.txt` and the HLO artifacts live.
     pub artifact_dir: PathBuf,
     /// Executor threads (each compiles its own PJRT registry and owns
-    /// its own device queue).
+    /// its own device queue).  Ignored when [`CoordinatorConfig::lanes`]
+    /// is non-empty — the lane list then sizes the pool.
     pub executors: usize,
+    /// Per-lane device descriptors for a heterogeneous pool (e.g.
+    /// `[Tpu, Tpu, Gpu, Cpu]`): one executor per entry, priced by the
+    /// affinity placer as that device class.  Empty (the default)
+    /// means `executors` TPU-class lanes — the PR 4 homogeneous plane.
+    pub lanes: Vec<DeviceKind>,
     /// Ingress queue capacity (backpressure bound).
     pub queue_capacity: usize,
     /// Per-device work queue capacity (batches in flight per lane).
@@ -46,6 +56,7 @@ impl Default for CoordinatorConfig {
         Self {
             artifact_dir: PathBuf::from("artifacts"),
             executors: 2,
+            lanes: Vec::new(),
             queue_capacity: 256,
             work_capacity: 64,
             policy: BatchPolicy::default(),
@@ -56,6 +67,7 @@ impl Default for CoordinatorConfig {
 
 /// Handle for an in-flight request.
 pub struct Pending {
+    /// The request id this handle waits on.
     pub id: u64,
     rx: mpsc::Receiver<Result<Response>>,
 }
@@ -85,12 +97,19 @@ impl Pending {
 /// Aggregate + per-device serving snapshot.
 #[derive(Debug, Clone)]
 pub struct CoordinatorStats {
+    /// Requests accepted by [`Coordinator::submit`].
     pub submitted: u64,
+    /// Requests answered successfully.
     pub completed: u64,
+    /// Requests answered with an error.
     pub failed: u64,
+    /// Mean requests per executed batch (batching efficiency).
     pub mean_batch_size: f64,
-    /// One entry per executor device (queue depth, batches, busy time).
+    /// One entry per executor device (kind, queue depth, batches, busy
+    /// time).
     pub devices: Vec<DeviceStat>,
+    /// Per-device-kind aggregates over the lanes (mixed-fleet view).
+    pub kinds: Vec<KindStat>,
 }
 
 /// The serving engine.  Construct with [`Coordinator::start`], submit
@@ -111,17 +130,25 @@ impl Coordinator {
     /// doesn't race startup failure and a sentinel compile error cannot
     /// be masked by a faster sibling (see `worker::await_readiness`).
     pub fn start(config: CoordinatorConfig) -> Result<Coordinator> {
-        let executors_n = config.executors.max(1);
+        // Bring-up descriptors: explicit lane list, or `executors`
+        // TPU-class lanes for the homogeneous default.
+        let lane_kinds: Vec<DeviceKind> = if config.lanes.is_empty() {
+            vec![DeviceKind::Tpu; config.executors.max(1)]
+        } else {
+            config.lanes.clone()
+        };
+        let executors_n = lane_kinds.len();
         let ingress: BoundedQueue<Envelope> = BoundedQueue::new(config.queue_capacity);
         let work: Vec<BoundedQueue<Batch>> = (0..executors_n)
             .map(|_| BoundedQueue::new(config.work_capacity))
             .collect();
-        let metrics = Arc::new(Metrics::with_devices(executors_n));
+        let metrics = Arc::new(Metrics::with_device_kinds(&lane_kinds));
 
         let (ready_tx, ready_rx) = mpsc::channel();
         let executors = crate::coordinator::worker::spawn_executors(
             config.artifact_dir.clone(),
             config.backend,
+            lane_kinds.clone(),
             work.clone(),
             metrics.clone(),
             ready_tx,
@@ -136,7 +163,7 @@ impl Coordinator {
             let policy = config.policy.clone();
             std::thread::Builder::new()
                 .name("xai-batcher".into())
-                .spawn(move || batcher_loop(ingress, work, policy, metrics))
+                .spawn(move || batcher_loop(ingress, work, policy, metrics, lane_kinds))
                 .expect("spawn batcher")
         };
 
@@ -173,18 +200,25 @@ impl Coordinator {
         self.submit(request)?.wait()
     }
 
+    /// The live metrics registry.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
 
-    /// Aggregate + per-device counters in one snapshot.
+    /// Aggregate + per-device + per-kind counters in one snapshot.
+    /// The per-kind rows are derived from the SAME per-lane snapshot
+    /// as `devices`, so the two views of one `CoordinatorStats` always
+    /// re-sum exactly even under live traffic.
     pub fn stats(&self) -> CoordinatorStats {
+        let devices = self.metrics.device_stats();
+        let kinds = Metrics::kind_stats_of(&devices);
         CoordinatorStats {
             submitted: self.metrics.submitted(),
             completed: self.metrics.completed(),
             failed: self.metrics.failed(),
             mean_batch_size: self.metrics.mean_batch_size(),
-            devices: self.metrics.device_stats(),
+            devices,
+            kinds,
         }
     }
 
@@ -213,24 +247,30 @@ impl Drop for Coordinator {
 }
 
 /// Batcher thread: drain ingress, assemble, flush on size or deadline,
-/// and place each ready batch on the least-loaded device queue.
+/// and place each ready batch on the lane the cost model says will
+/// finish it first.
 fn batcher_loop(
     ingress: BoundedQueue<Envelope>,
     work: Vec<BoundedQueue<Batch>>,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
+    lane_kinds: Vec<DeviceKind>,
 ) {
     let max_wait = policy.max_wait;
     let mut assembler = BatchAssembler::new(policy);
-    // Placement: pick the live device with the smallest backlog,
-    // account the enqueue so subsequent placements see it, then push.
-    // A lane whose worker never came up (bring-up failure closes its
-    // queue) is marked dead and skipped from then on — batches retry
-    // the survivors instead of piling onto a drain-less queue (the
+    // Placement: price the batch's op profile on every live lane's
+    // device model and pick the smallest estimated completion
+    // (router::place_affinity over the live backlog counters, with the
+    // starvation guard spilling off saturated fast lanes), account the
+    // enqueue so subsequent placements see it, then push.  A lane
+    // whose worker never came up (bring-up failure closes its queue)
+    // is marked dead and skipped from then on — batches retry the
+    // survivors instead of piling onto a drain-less queue (the
     // shared-queue fault tolerance the per-device split must keep).
     // Blocking on a full live lane is the backpressure.
     let mut alive: Vec<bool> = vec![true; work.len()];
     let mut place = |batch: Batch| -> std::result::Result<(), ()> {
+        let profile = router::batch_profile(&batch);
         let mut batch = batch;
         loop {
             let mut backlogs = metrics.device_backlogs();
@@ -243,7 +283,7 @@ fn batcher_loop(
             if !alive.iter().any(|&a| a) {
                 return Err(()); // every lane is gone: stop the batcher
             }
-            let d = router::place_least_loaded(&backlogs);
+            let d = router::place_affinity(&lane_kinds, &backlogs, &profile);
             metrics.record_device_enqueue(d);
             match work[d].try_push(batch) {
                 Ok(()) => return Ok(()),

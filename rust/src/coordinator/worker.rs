@@ -7,7 +7,8 @@
 //! independent cores, each executing sub-tasks "without requiring any
 //! data exchange between cores", with results merged by the reply
 //! channels.  Since PR 4 the cores are real scheduling entities: the
-//! router places each batch on ONE device's queue (least-loaded), and
+//! router places each batch on ONE device's queue (cost-model
+//! affinity over the lane's device class since PR 5), and
 //! requests above [`crate::coordinator::decomposition::SHARD_THRESHOLD`]
 //! split/execute/merge through the native backend's sharded kernels —
 //! a pool-width band plan executed on scoped core threads inside the
@@ -32,6 +33,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::native::NativeBackend;
 use crate::coordinator::queue::BoundedQueue;
 use crate::coordinator::router;
+use crate::hwsim::DeviceKind;
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
@@ -58,7 +60,9 @@ pub enum BackendMode {
 /// native fused-batch backend ([`NativeBackend`]).  The router
 /// dispatches whole batches against whichever is live.
 pub enum ExecBackend {
+    /// A compiled PJRT artifact registry.
     Pjrt(crate::runtime::ArtifactRegistry),
+    /// The native fused-batch kernel backend.
     Native(NativeBackend),
 }
 
@@ -91,6 +95,7 @@ impl ExecBackend {
         }
     }
 
+    /// Short backend name for logs (`pjrt`/`native`).
     pub fn name(&self) -> &'static str {
         match self {
             ExecBackend::Pjrt(_) => "pjrt",
@@ -100,7 +105,8 @@ impl ExecBackend {
 }
 
 /// Spawn one executor thread per device queue in `work` (worker `i`
-/// drains queue `i` — its own device lane).
+/// drains queue `i` — its own device lane, priced by the placement
+/// layer as device class `kinds[i]`).
 ///
 /// Returns the join handles; workers exit when their queue closes.
 /// Each worker sends exactly one [`ReadySignal`] and drops its sender,
@@ -108,20 +114,23 @@ impl ExecBackend {
 pub fn spawn_executors(
     artifact_dir: PathBuf,
     backend: BackendMode,
+    kinds: Vec<DeviceKind>,
     work: Vec<BoundedQueue<Batch>>,
     metrics: Arc<Metrics>,
     ready: mpsc::Sender<ReadySignal>,
 ) -> Vec<JoinHandle<()>> {
+    assert_eq!(kinds.len(), work.len(), "one device descriptor per lane queue");
     let pool = work.len();
     work.into_iter()
+        .zip(kinds)
         .enumerate()
-        .map(|(i, queue)| {
+        .map(|(i, (queue, kind))| {
             let metrics = metrics.clone();
             let dir = artifact_dir.clone();
             let ready = ready.clone();
             std::thread::Builder::new()
                 .name(format!("xai-executor-{i}"))
-                .spawn(move || executor_loop(i, backend, &dir, pool, queue, metrics, ready))
+                .spawn(move || executor_loop(i, kind, backend, &dir, pool, queue, metrics, ready))
                 .expect("spawn executor")
         })
         .collect()
@@ -145,8 +154,10 @@ pub fn await_readiness(ready: &mpsc::Receiver<ReadySignal>) -> crate::error::Res
     ))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn executor_loop(
     id: usize,
+    kind: DeviceKind,
     mode: BackendMode,
     dir: &std::path::Path,
     pool: usize,
@@ -164,7 +175,7 @@ fn executor_loop(
             b
         }
         Err(e) => {
-            eprintln!("executor {id}: failed to bring up backend: {e}");
+            eprintln!("executor {id} ({kind}-class lane): failed to bring up backend: {e}");
             let _ = ready.send((id, Err(e)));
             // Close this device's lane so the placement layer stops
             // routing batches to a worker that will never drain them
@@ -256,6 +267,7 @@ mod tests {
         let handles = spawn_executors(
             PathBuf::from("definitely-missing-artifacts"),
             BackendMode::PjrtOnly,
+            vec![DeviceKind::Tpu, DeviceKind::Cpu],
             work.clone(),
             Arc::new(Metrics::with_devices(2)),
             tx,

@@ -13,14 +13,19 @@ use crate::util::rng::Rng;
 pub const IMG: usize = 16;
 /// Classes — one per quadrant, matches `model.NUM_CLASSES`.
 pub const NUM_CLASSES: usize = 4;
+/// Bright-quadrant mean intensity.
 pub const HI: f32 = 1.0;
+/// Background mean intensity.
 pub const LO: f32 = 0.2;
+/// Additive noise scale.
 pub const NOISE: f32 = 0.3;
 
 /// A labeled image.
 #[derive(Debug, Clone)]
 pub struct Sample {
+    /// The image pixels.
     pub image: Matrix,
+    /// Ground-truth class (the bright quadrant index).
     pub label: usize,
 }
 

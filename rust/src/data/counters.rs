@@ -12,12 +12,17 @@ use crate::util::rng::Rng;
 
 /// Counter order everywhere: the Fig. 13 feature list.
 pub const FEATURES: [&str; 6] = ["BMP", "PGF", "INS", "LLCM", "BRC", "LLCR"];
+/// Number of hardware counters per sample.
 pub const N_FEATURES: usize = 6;
 
+/// Ground-truth label of a hardware-counter sample (Fig. 12/13).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ProgramClass {
+    /// Ordinary workload.
     Benign,
+    /// Spectre-style speculative side channel.
     Spectre,
+    /// Meltdown-style out-of-order side channel.
     Meltdown,
     /// Fig. 13(a): Spectre inflating PGF to mask itself.
     SpectreAdversarial,
@@ -28,7 +33,9 @@ pub enum ProgramClass {
 /// One captured sample: normalized counter readings in [0, 1].
 #[derive(Debug, Clone)]
 pub struct CounterSample {
+    /// Normalized counter readings in [0, 1].
     pub features: [f32; N_FEATURES],
+    /// Ground-truth program class.
     pub class: ProgramClass,
 }
 

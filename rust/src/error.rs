@@ -20,7 +20,12 @@ pub enum Error {
     Artifact(String),
 
     /// Shape mismatch between a request and the compiled executable.
-    Shape { expected: String, got: String },
+    Shape {
+        /// What the executable / validator required.
+        expected: String,
+        /// What the request actually carried.
+        got: String,
+    },
 
     /// Coordinator queue closed or over capacity.
     Coordinator(String),
@@ -31,6 +36,7 @@ pub enum Error {
     /// Numerical failure (singular system, non-finite values).
     Numeric(String),
 
+    /// Filesystem errors (artifact loading, bench output).
     Io(std::io::Error),
 }
 
@@ -71,4 +77,5 @@ impl From<xla::Error> for Error {
     }
 }
 
+/// Crate-wide result alias over [`Error`].
 pub type Result<T> = std::result::Result<T, Error>;

@@ -10,6 +10,7 @@ use crate::hwsim::DeviceKind;
 use crate::trace::Op;
 
 #[derive(Debug, Clone)]
+/// Analytical CPU model (the paper's Intel i7 testbed host).
 pub struct CpuSim {
     /// Sustained dense-matmul throughput **per core** (FLOP/s).  AVX2
     /// FMA at ~3.7 GHz sustains ~7.5 GFLOP/s of GEMM per core; the

@@ -13,6 +13,7 @@ pub struct OpCost {
 }
 
 impl OpCost {
+    /// Overhead + busy time.
     pub fn total(&self) -> f64 {
         self.overhead_s + self.busy_s
     }
@@ -49,6 +50,7 @@ impl CostReport {
 
 /// An analytical accelerator model.
 pub trait Device: Send + Sync {
+    /// Which device family this model simulates.
     fn kind(&self) -> DeviceKind;
 
     /// Simulated cost of one op executed on `units` cooperating cores

@@ -13,6 +13,7 @@ use crate::util::stats;
 /// One workload's replay on one device, tagged with its work size.
 #[derive(Debug, Clone)]
 pub struct TrialEnergy {
+    /// The replay this energy row was derived from.
     pub report: CostReport,
     /// Weight for WM (the paper weights by workload size; we use flops).
     pub weight: f64,

@@ -13,6 +13,7 @@ use crate::hwsim::DeviceKind;
 use crate::trace::Op;
 
 #[derive(Debug, Clone)]
+/// Analytical GPU model (the paper's RTX 2080 Ti comparator).
 pub struct GpuSim {
     /// Peak fp32 throughput (FLOP/s). 2080 Ti ≈ 13.4 TFLOP/s.
     pub peak_flops: f64,
@@ -34,6 +35,7 @@ pub struct GpuSim {
     pub saturation_flops: f64,
     /// Board power under load / idle (W). 2080 Ti TDP 250 W.
     pub busy_w: f64,
+    /// Idle board power (W).
     pub idle_w: f64,
     /// Host CPU power attributed in total-energy accounting (W).
     pub host_w: f64,

@@ -38,12 +38,16 @@ pub use pool::{DevicePool, Interconnect, PoolReport};
 /// The three accelerator configurations of the paper's §IV-A.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DeviceKind {
+    /// General-purpose host CPU (the software baseline).
     Cpu,
+    /// Many-core GPU (the paper's RTX 2080 Ti comparator).
     Gpu,
+    /// Systolic-array TPU (the paper's Cloud TPUv2).
     Tpu,
 }
 
 impl DeviceKind {
+    /// Uppercase display name (`CPU`/`GPU`/`TPU`).
     pub fn name(&self) -> &'static str {
         match self {
             DeviceKind::Cpu => "CPU",
@@ -52,6 +56,7 @@ impl DeviceKind {
         }
     }
 
+    /// All three kinds, CPU first (table order of the paper).
     pub fn all() -> [DeviceKind; 3] {
         [DeviceKind::Cpu, DeviceKind::Gpu, DeviceKind::Tpu]
     }

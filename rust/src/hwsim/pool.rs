@@ -7,15 +7,30 @@
 //! Replaying a sharded trace therefore shows exactly what the paper's
 //! Fig. 10 claims and no more:
 //!
-//! * each core prices *its own band* of a sharded op — a
-//!   [`Op::ShardedMatmul`] band pays one systolic fill/drain **per
-//!   core**, a [`Op::ShardedFft2`] band runs its share of row/column
-//!   lines — and the stage completes at the slowest core;
+//! * each core prices *its own band* of a sharded op on *its own cost
+//!   model* — a [`Op::ShardedMatmul`] band pays one systolic fill/drain
+//!   **per core**, a [`Op::ShardedFft2`] band runs its share of
+//!   row/column lines — and the stage completes at the slowest core;
 //! * every merge is a priced collective (ring all-gather: `(p−1)` hops
 //!   of latency plus `payload·(p−1)/p` per link), so scaling is
 //!   sub-linear by construction, not by fiat;
 //! * unsharded ops fall to core 0 — decomposition only helps work that
 //!   was actually decomposed.
+//!
+//! # Heterogeneous pools
+//!
+//! Since PR 5 a pool may hold **mixed-kind members**
+//! ([`DevicePool::mixed`]): each member carries its own device model
+//! *and* its own link class ([`Interconnect::for_kind`]); the ring's
+//! effective interconnect is gated by its weakest link
+//! ([`Interconnect::ring_of`]).  Band stages are no longer split
+//! evenly: each member's band is sized by its simulated throughput on
+//! that exact stage ([`DevicePool::stage_weights`] feeding
+//! [`plan_splits_weighted`]), so a GPU member takes a wider band than
+//! a CPU member and the stage-completing straggler is the cost model's
+//! choice, not an even-split artifact.  A homogeneous pool degenerates
+//! to the PR 4 behavior exactly (equal weights ⇒ balanced bands, one
+//! link class ⇒ the same ring constants).
 //!
 //! The interconnect defaults follow the companion TPU deployment (Pan &
 //! Mishra 2021): ICI-class links for TPU pools, NVLink-class for GPU,
@@ -26,7 +41,7 @@ use crate::hwsim::device::Device;
 use crate::hwsim::gpu::GpuSim;
 use crate::hwsim::tpu::TpuSim;
 use crate::hwsim::DeviceKind;
-use crate::linalg::shard::plan_splits;
+use crate::linalg::shard::{plan_splits_weighted, Assignment};
 use crate::trace::{Op, OpTrace};
 
 /// Inter-device link model: one bidirectional ring.
@@ -54,6 +69,17 @@ impl Interconnect {
                 link_bw: 20.0e9,
                 hop_latency_s: 5e-7,
             },
+        }
+    }
+
+    /// Effective interconnect of a ring built from mixed link classes:
+    /// every collective step crosses every link, so the slowest
+    /// bandwidth and the largest hop latency gate the ring.
+    pub fn ring_of(links: &[Interconnect]) -> Interconnect {
+        assert!(!links.is_empty(), "a ring needs at least one link");
+        Interconnect {
+            link_bw: links.iter().map(|l| l.link_bw).fold(f64::INFINITY, f64::min),
+            hop_latency_s: links.iter().map(|l| l.hop_latency_s).fold(0.0, f64::max),
         }
     }
 
@@ -99,9 +125,12 @@ pub struct PoolReport {
 }
 
 /// `p` cooperating single-core devices plus their interconnect.
+/// Members may be mixed-kind ([`DevicePool::mixed`]); band stages size
+/// each member's share by its own simulated throughput.
 pub struct DevicePool {
-    pub kind: DeviceKind,
+    kinds: Vec<DeviceKind>,
     devices: Vec<Box<dyn Device>>,
+    /// Effective ring interconnect (weakest member link gates it).
     pub interconnect: Interconnect,
 }
 
@@ -128,25 +157,79 @@ impl DevicePool {
     /// A pool of `p` identical cores with the family-default
     /// interconnect.
     pub fn homogeneous(kind: DeviceKind, p: usize) -> DevicePool {
-        let p = p.max(1);
+        DevicePool::mixed(&vec![kind; p.max(1)])
+    }
+
+    /// A mixed-kind pool: one single-core member per entry of
+    /// `members`, each with its family link class; the ring's
+    /// effective interconnect is its weakest link.  Member order is
+    /// placement order — band `i` of a decomposed stage runs on
+    /// member `i`.
+    pub fn mixed(members: &[DeviceKind]) -> DevicePool {
+        assert!(!members.is_empty(), "a pool needs at least one member");
+        let links: Vec<Interconnect> =
+            members.iter().map(|&k| Interconnect::for_kind(k)).collect();
         DevicePool {
-            kind,
-            devices: (0..p).map(|_| single_core(kind)).collect(),
-            interconnect: Interconnect::for_kind(kind),
+            kinds: members.to_vec(),
+            devices: members.iter().map(|&k| single_core(k)).collect(),
+            interconnect: Interconnect::ring_of(&links),
         }
     }
 
+    /// Number of member devices.
     pub fn len(&self) -> usize {
         self.devices.len()
     }
 
+    /// True when the pool has no members (never, post-construction).
     pub fn is_empty(&self) -> bool {
         self.devices.is_empty()
     }
 
+    /// Member device kinds in placement order.
+    pub fn member_kinds(&self) -> &[DeviceKind] {
+        &self.kinds
+    }
+
+    /// Human label of the member mix, e.g. `4xTPU+2xGPU+2xCPU`.
+    pub fn label(&self) -> String {
+        let mut runs: Vec<(DeviceKind, usize)> = Vec::new();
+        for &k in &self.kinds {
+            match runs.last_mut() {
+                Some((rk, n)) if *rk == k => *n += 1,
+                _ => runs.push((k, 1)),
+            }
+        }
+        runs.iter()
+            .map(|(k, n)| format!("{n}x{}", k.name()))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Per-member throughput weights for one decomposed stage across
+    /// the first `p` members: the inverse of each member's simulated
+    /// price for the probe op (the stage at full size).  Equal models
+    /// give equal weights, so homogeneous pools keep the balanced
+    /// PR 4 bands; a mixed pool hands a CPU member a sliver and a TPU
+    /// member the bulk.
+    pub fn stage_weights(&self, p: usize, probe: &Op) -> Vec<f64> {
+        self.devices[..p.min(self.len())]
+            .iter()
+            .map(|d| {
+                let t = d.op_cost(probe, 1).total();
+                if t > 0.0 {
+                    1.0 / t
+                } else {
+                    1.0
+                }
+            })
+            .collect()
+    }
+
     /// Replay a trace across the pool.  Sharded ops split into their
-    /// per-core band stages with explicit interior merges; collectives
-    /// are priced on the interconnect; everything else runs on core 0.
+    /// per-core band stages (throughput-weighted when members differ)
+    /// with explicit interior merges; collectives are priced on the
+    /// ring interconnect; everything else runs on core 0.
     pub fn replay_sharded(&self, trace: &OpTrace) -> PoolReport {
         let p_pool = self.len();
         let mut rep = PoolReport {
@@ -162,14 +245,14 @@ impl DevicePool {
                     let merge = self.interconnect.all_gather_s(2 * 4 * (m * n) as u64, p);
                     // stage 1: row bands (length-n lines), slowest core
                     // gates the stage
-                    self.band_stage(&mut rep, &plan_splits(m, p), |band| Op::BatchedFft2 {
+                    self.band_stage(&mut rep, m, p, |band| Op::BatchedFft2 {
                         b: band,
                         m: 1,
                         n,
                     });
                     self.collective(&mut rep, merge);
                     // stage 2: column bands (length-m lines)
-                    self.band_stage(&mut rep, &plan_splits(n, p), |band| Op::BatchedFft2 {
+                    self.band_stage(&mut rep, n, p, |band| Op::BatchedFft2 {
                         b: band,
                         m: 1,
                         n: m,
@@ -180,7 +263,7 @@ impl DevicePool {
                     let p = parts.min(p_pool).max(1);
                     // one fill/drain per core: each band is a real
                     // matmul on that core's array
-                    self.band_stage(&mut rep, &plan_splits(m, p), |band| Op::Matmul {
+                    self.band_stage(&mut rep, m, p, |band| Op::Matmul {
                         m: band,
                         k,
                         n,
@@ -219,17 +302,25 @@ impl DevicePool {
         rep
     }
 
-    /// One decomposed compute stage: core `i` prices band `i` as its
-    /// own op; the stage completes when the slowest core does.
+    /// One decomposed compute stage over `lines` lines and the first
+    /// `p` members: member `i` prices band `i` (sized by its own
+    /// throughput on this stage) as its own op; the stage completes
+    /// when the slowest member does.
     fn band_stage<F: Fn(usize) -> Op>(
         &self,
         rep: &mut PoolReport,
-        bands: &[crate::linalg::shard::Assignment],
+        lines: usize,
+        p: usize,
         band_op: F,
     ) {
+        let weights = self.stage_weights(p, &band_op(lines.max(1)));
+        let bands: Vec<Assignment> = plan_splits_weighted(lines, &weights);
         let mut stage_max = 0.0f64;
         let mut overhead_max = 0.0f64;
         for (i, a) in bands.iter().enumerate() {
+            if a.len == 0 {
+                continue; // this member's share rounded to nothing
+            }
             let op = band_op(a.len);
             let c = self.devices[i].op_cost(&op, 1);
             rep.per_device_busy_s[i] += c.busy_s;
@@ -356,5 +447,127 @@ mod tests {
         // four chips burn more joules than one even while faster
         assert!(r4.energy_j > 0.0 && r1.energy_j > 0.0);
         assert!(r4.time_s < r1.time_s);
+    }
+
+    // ---- heterogeneous pools -------------------------------------------
+
+    /// The Fig. 10 mixed fleet: 4 TPU + 2 GPU + 2 CPU members.
+    fn mixed8() -> DevicePool {
+        DevicePool::mixed(&[
+            DeviceKind::Tpu,
+            DeviceKind::Tpu,
+            DeviceKind::Tpu,
+            DeviceKind::Tpu,
+            DeviceKind::Gpu,
+            DeviceKind::Gpu,
+            DeviceKind::Cpu,
+            DeviceKind::Cpu,
+        ])
+    }
+
+    #[test]
+    fn mixed_pool_reports_its_members() {
+        let pool = mixed8();
+        assert_eq!(pool.len(), 8);
+        assert_eq!(pool.label(), "4xTPU+2xGPU+2xCPU");
+        assert_eq!(pool.member_kinds()[0], DeviceKind::Tpu);
+        assert_eq!(pool.member_kinds()[7], DeviceKind::Cpu);
+    }
+
+    #[test]
+    fn mixed_ring_is_gated_by_its_weakest_link() {
+        let pool = mixed8();
+        let cpu_link = Interconnect::for_kind(DeviceKind::Cpu);
+        let gpu_link = Interconnect::for_kind(DeviceKind::Gpu);
+        // slowest bandwidth (CPU link) and largest hop latency (GPU
+        // link) both gate the mixed ring
+        assert_eq!(pool.interconnect.link_bw, cpu_link.link_bw);
+        assert_eq!(pool.interconnect.hop_latency_s, gpu_link.hop_latency_s);
+    }
+
+    #[test]
+    fn weighted_bands_give_fast_members_more_lines() {
+        // On an FFT stage the CPU member's scalar pipe is orders of
+        // magnitude slower than the TPU VPU: its band must be narrower.
+        let pool = DevicePool::mixed(&[DeviceKind::Tpu, DeviceKind::Cpu]);
+        let probe = Op::BatchedFft2 { b: 1024, m: 1, n: 1024 };
+        let w = pool.stage_weights(2, &probe);
+        assert!(w[0] > w[1], "TPU weight {} must exceed CPU {}", w[0], w[1]);
+        let bands = plan_splits_weighted(1024, &w);
+        assert!(bands[0].len > bands[1].len, "{bands:?}");
+        assert_eq!(bands[0].len + bands[1].len, 1024);
+    }
+
+    #[test]
+    fn homogeneous_weights_are_equal_and_bands_balanced() {
+        // The PR 4 behavior must be the degenerate case: identical
+        // members ⇒ identical weights ⇒ the balanced partition.
+        let pool = DevicePool::homogeneous(DeviceKind::Tpu, 8);
+        let probe = Op::BatchedFft2 { b: 1024, m: 1, n: 1024 };
+        let w = pool.stage_weights(8, &probe);
+        for wi in &w {
+            assert_eq!(*wi, w[0]);
+        }
+        let bands = plan_splits_weighted(1024, &w);
+        assert_eq!(bands, crate::linalg::shard::plan_splits(1024, 8));
+    }
+
+    #[test]
+    fn mixed_pool_beats_its_own_cpu_members_alone() {
+        // Adding fast members to a slow pool must help: the mixed pool
+        // replays the sharded 1024² transform faster than a CPU-only
+        // pool of the same width.
+        let mixed = mixed8().replay_sharded(&sharded_fft_trace(1024, 8));
+        let cpus = DevicePool::homogeneous(DeviceKind::Cpu, 8)
+            .replay_sharded(&sharded_fft_trace(1024, 8));
+        assert!(
+            mixed.time_s < cpus.time_s,
+            "mixed {} vs cpu-only {}",
+            mixed.time_s,
+            cpus.time_s
+        );
+    }
+
+    #[test]
+    fn mixed_pool_stage_is_not_starved_by_slow_members() {
+        // The whole point of weighted bands: the straggler effect of an
+        // even split (CPU member prices 1/8 of the lines at scalar
+        // rate) must not survive.  Price the same trace with forced
+        // even bands by building a pool-of-one-kind comparison: the
+        // mixed pool must land far closer to the TPU-only pool than to
+        // the CPU-only pool.
+        let t = sharded_fft_trace(1024, 8);
+        let mixed = mixed8().replay_sharded(&t).time_s;
+        let tpus = DevicePool::homogeneous(DeviceKind::Tpu, 8)
+            .replay_sharded(&t)
+            .time_s;
+        let cpus = DevicePool::homogeneous(DeviceKind::Cpu, 8)
+            .replay_sharded(&t)
+            .time_s;
+        let to_tpu = mixed / tpus;
+        let to_cpu = cpus / mixed;
+        assert!(
+            to_cpu > to_tpu,
+            "mixed pool {mixed} should sit near the TPU pool {tpus}, not the CPU pool {cpus}"
+        );
+    }
+
+    #[test]
+    fn mixed_busy_time_lands_on_the_members_that_worked() {
+        let rep = mixed8().replay_sharded(&sharded_fft_trace(1024, 8));
+        // every member class got *some* work (weights are finite)...
+        let tpu_busy: f64 = rep.per_device_busy_s[..4].iter().sum();
+        assert!(tpu_busy > 0.0);
+        // ...and no CPU member out-busied the stage critical path into
+        // absurdity: weighted bands keep per-member busy times within
+        // the same order of magnitude
+        let max = rep.per_device_busy_s.iter().cloned().fold(0.0, f64::max);
+        let min = rep
+            .per_device_busy_s
+            .iter()
+            .cloned()
+            .filter(|&b| b > 0.0)
+            .fold(f64::MAX, f64::min);
+        assert!(max / min < 50.0, "{:?}", rep.per_device_busy_s);
     }
 }

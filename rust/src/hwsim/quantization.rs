@@ -23,9 +23,13 @@ pub mod energy_pj {
 /// Symmetric int8 quantization of a tensor.
 #[derive(Debug, Clone)]
 pub struct Quantized {
+    /// Quantized elements, row-major.
     pub data: Vec<i8>,
+    /// Dequantization scale (`value = data * scale`).
     pub scale: f32,
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
 }
 

@@ -16,7 +16,9 @@ pub const VMEM_BYTES: usize = 16 * 1024 * 1024;
 pub struct KernelTiling {
     /// Output tile rows/cols and contraction tile.
     pub bm: usize,
+    /// Tile width (columns of B per tile).
     pub bn: usize,
+    /// Tile depth (reduction length per tile).
     pub bk: usize,
     /// Number of input/output planes resident per grid step (e.g. the
     /// complex matmul holds 4 inputs + 2 accumulators = 6).

@@ -18,6 +18,7 @@ use crate::hwsim::DeviceKind;
 use crate::trace::Op;
 
 #[derive(Debug, Clone)]
+/// Analytical TPU model (Cloud TPUv2-style, systolic MXU).
 pub struct TpuSim {
     /// The matrix unit.
     pub mxu: SystolicArray,
@@ -31,6 +32,7 @@ pub struct TpuSim {
     /// Chip power under load / idle (W). TPUv2 chip ≈ 200-280 W TDP but
     /// sustained ML workloads draw far less; int8 paths draw least.
     pub busy_w: f64,
+    /// Idle chip power (W).
     pub idle_w: f64,
     /// Host power for total-energy accounting (W).
     pub host_w: f64,

@@ -25,6 +25,11 @@
 //! Python runs only at build time (`make artifacts`); the serving binary
 //! is self-contained.
 //!
+//! A paper-to-code map (Algorithm 1 / Figs. 8–10 / Tables II–V →
+//! modules and bench targets), the request lifecycle, and the
+//! FLOP/byte conventions live in `docs/ARCHITECTURE.md` at the repo
+//! root.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -39,6 +44,11 @@
 //! let contrib = xai::distillation::contribution_factors(&mut eng, &x, &k, 4);
 //! println!("block contributions: {contrib:?}");
 //! ```
+
+// Every public item carries docs; the `docs` CI job builds with
+// `RUSTDOCFLAGS="-D warnings"`, which promotes violations (and broken
+// intra-doc links) to errors.
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod cli;

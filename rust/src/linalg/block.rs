@@ -12,13 +12,18 @@ use crate::linalg::matrix::Matrix;
 /// A partition of an (M, N) matrix into tiles of at most (bm, bn).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BlockPlan {
+    /// Matrix rows.
     pub rows: usize,
+    /// Matrix columns.
     pub cols: usize,
+    /// Tile height.
     pub bm: usize,
+    /// Tile width.
     pub bn: usize,
 }
 
 impl BlockPlan {
+    /// Tiling of a rows x cols matrix into bm x bn tiles.
     pub fn new(rows: usize, cols: usize, bm: usize, bn: usize) -> Self {
         assert!(bm > 0 && bn > 0);
         Self { rows, cols, bm, bn }
@@ -36,6 +41,7 @@ impl BlockPlan {
         (h, w)
     }
 
+    /// Number of tiles covering the matrix.
     pub fn num_tiles(&self) -> usize {
         let (gr, gc) = self.grid();
         gr * gc

@@ -5,16 +5,22 @@ use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
 /// Complex number with `f32` parts.
 #[derive(Copy, Clone, Debug, Default, PartialEq)]
 pub struct C32 {
+    /// Real part.
     pub re: f32,
+    /// Imaginary part.
     pub im: f32,
 }
 
 impl C32 {
+    /// The additive identity.
     pub const ZERO: C32 = C32 { re: 0.0, im: 0.0 };
+    /// The multiplicative identity.
     pub const ONE: C32 = C32 { re: 1.0, im: 0.0 };
+    /// The imaginary unit.
     pub const I: C32 = C32 { re: 0.0, im: 1.0 };
 
     #[inline]
+    /// A complex number from its parts.
     pub fn new(re: f32, im: f32) -> Self {
         Self { re, im }
     }
@@ -27,25 +33,30 @@ impl C32 {
     }
 
     #[inline]
+    /// Complex conjugate.
     pub fn conj(self) -> Self {
         Self::new(self.re, -self.im)
     }
 
     #[inline]
+    /// |z|^2 without the square root.
     pub fn norm_sqr(self) -> f32 {
         self.re * self.re + self.im * self.im
     }
 
     #[inline]
+    /// Modulus |z|.
     pub fn abs(self) -> f32 {
         self.norm_sqr().sqrt()
     }
 
     #[inline]
+    /// Scale both parts by `s`.
     pub fn scale(self, s: f32) -> Self {
         Self::new(self.re * s, self.im * s)
     }
 
+    /// True when both parts are finite.
     pub fn is_finite(self) -> bool {
         self.re.is_finite() && self.im.is_finite()
     }

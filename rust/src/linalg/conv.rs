@@ -8,6 +8,81 @@ use crate::linalg::complex::C32;
 use crate::linalg::fft;
 use crate::linalg::matrix::{CMatrix, Matrix};
 use crate::linalg::shard;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Most distinct kernel spectra the process-wide cache retains; at
+/// capacity one arbitrary entry is evicted per insert (the serving
+/// workload has ONE smoothing kernel, so eviction is a safety valve,
+/// not a policy — and evicting one entry, not all, keeps a hot kernel
+/// cached even when many cold kernels rotate through).
+pub const MAX_CACHED_SPECTRA: usize = 16;
+
+/// FNV-1a over the kernel's shape and exact f32 bit patterns — the
+/// content key of the spectrum cache.
+fn kernel_fingerprint(k: &Matrix) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |byte: u8| {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for d in [k.rows as u64, k.cols as u64] {
+        for b in d.to_le_bytes() {
+            eat(b);
+        }
+    }
+    for v in &k.data {
+        for b in v.to_bits().to_le_bytes() {
+            eat(b);
+        }
+    }
+    h
+}
+
+type SpectrumKey = (usize, usize, u64);
+
+/// A cached entry: the exact kernel content the spectrum was computed
+/// from (hits verify against it, so a fingerprint collision can never
+/// serve the wrong spectrum) plus the spectrum itself.
+type SpectrumEntry = (Vec<f32>, Arc<CMatrix>);
+
+fn spectrum_cache() -> &'static Mutex<HashMap<SpectrumKey, SpectrumEntry>> {
+    static CACHE: OnceLock<Mutex<HashMap<SpectrumKey, SpectrumEntry>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Forward unitary spectrum of a convolution kernel, served from a
+/// process-lifetime cache keyed by the kernel's shape + a fingerprint
+/// of its exact bit content, with the stored kernel compared on every
+/// hit (a 64-bit FNV collision therefore costs a recompute, never a
+/// wrong spectrum).  The saliency smoothing kernel is a
+/// process-lifetime constant, so every batch after the first gets its
+/// spectrum for a hash + compare instead of a full 2-D transform —
+/// the ROADMAP "cache the smooth-kernel spectrum" item.  The transform
+/// runs outside the cache lock (concurrent misses of the same kernel
+/// both compute the identical spectrum; last insert wins).
+pub fn cached_kernel_spectrum(k: &Matrix) -> Arc<CMatrix> {
+    let key: SpectrumKey = (k.rows, k.cols, kernel_fingerprint(k));
+    if let Some((bits, hit)) = spectrum_cache().lock().unwrap().get(&key) {
+        if bits == &k.data {
+            return hit.clone();
+        }
+    }
+    let plan = fft::plan2(k.rows, k.cols);
+    let spectrum = Arc::new(plan.rfft2(k, fft::recommended_threads(k.rows, k.cols)));
+    let mut cache = spectrum_cache().lock().unwrap();
+    if cache.len() >= MAX_CACHED_SPECTRA && !cache.contains_key(&key) {
+        // evict one arbitrary entry (never when re-inserting an
+        // existing key after a concurrent miss); clearing everything
+        // would defeat caching for workloads rotating > cap kernels
+        let victim = cache.keys().next().copied();
+        if let Some(victim) = victim {
+            cache.remove(&victim);
+        }
+    }
+    cache.insert(key, (k.data.clone(), spectrum.clone()));
+    spectrum
+}
 
 /// Circular convolution via the planned FFT (unnormalized convolution
 /// theorem).  Both inputs are real, so the forward transforms take the
@@ -41,11 +116,13 @@ pub fn circ_conv2(x: &Matrix, k: &Matrix) -> Matrix {
 }
 
 /// Batched circular convolution of `b` images against ONE shared
-/// kernel: the kernel spectrum is computed once, the `b` forward
-/// transforms run fused through [`fft::Fft2Plan::rfft2_batch`] (row
-/// lines of the whole batch sharded together), and the inverses run
-/// fused through [`fft::Fft2Plan::process_batch`].  Identical results
-/// to calling [`circ_conv2`] per image.
+/// kernel: the kernel spectrum comes from the process-lifetime
+/// [`cached_kernel_spectrum`] cache (one transform per distinct kernel
+/// per process, not one per batch), the `b` forward transforms run
+/// fused through [`fft::Fft2Plan::rfft2_batch`] (row lines of the
+/// whole batch sharded together), and the inverses run fused through
+/// [`fft::Fft2Plan::process_batch`].  Identical results to calling
+/// [`circ_conv2`] per image.
 pub fn circ_conv2_batch(xs: &[&Matrix], k: &Matrix) -> Vec<Matrix> {
     if xs.is_empty() {
         return Vec::new();
@@ -57,7 +134,7 @@ pub fn circ_conv2_batch(xs: &[&Matrix], k: &Matrix) -> Vec<Matrix> {
     let threads = fft::recommended_threads(xs.len() * m, n);
     let plan = fft::plan2(m, n);
     let mut fxs = plan.rfft2_batch(xs, threads);
-    let fk = plan.rfft2(k, threads);
+    let fk = cached_kernel_spectrum(k);
     let scale = ((m * n) as f32).sqrt();
     for fx in fxs.iter_mut() {
         for (a, &b) in fx.data.iter_mut().zip(&fk.data) {
@@ -139,6 +216,36 @@ mod tests {
             assert!(got.max_abs_diff(&want) < 1e-6);
         }
         assert!(circ_conv2_batch(&[], &k).is_empty());
+    }
+
+    #[test]
+    fn kernel_spectrum_cache_hits_and_stays_bounded() {
+        // Hit-path assertions run FIRST, while the shared process-wide
+        // cache is far below capacity (the handful of other lib tests
+        // insert ≤ a few kernels): below the cap no eviction can ever
+        // happen, so the identity check cannot be raced by concurrent
+        // tests.  The flood that exercises the bound runs after.
+        let mut rng = Rng::new(22);
+        let k = Matrix::random(12, 12, &mut rng);
+        let first = cached_kernel_spectrum(&k);
+        let second = cached_kernel_spectrum(&k);
+        // same kernel content => the very same cached spectrum
+        assert!(Arc::ptr_eq(&first, &second));
+        // and it is the real forward spectrum circ_conv2 would use
+        let want = fft::plan2(12, 12).rfft2(&k, fft::recommended_threads(12, 12));
+        assert!(first.max_abs_diff(&want) < 1e-7);
+        // a bitwise-different kernel misses
+        let mut k2 = k.clone();
+        k2.set(0, 0, k.get(0, 0) + 1.0);
+        let third = cached_kernel_spectrum(&k2);
+        assert!(!Arc::ptr_eq(&first, &third));
+
+        // flood: the cap holds under one-entry eviction
+        for _ in 0..3 * MAX_CACHED_SPECTRA {
+            let k = Matrix::random(4, 4, &mut rng);
+            let _ = cached_kernel_spectrum(&k);
+        }
+        assert!(spectrum_cache().lock().unwrap().len() <= MAX_CACHED_SPECTRA);
     }
 
     #[test]

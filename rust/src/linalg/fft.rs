@@ -116,6 +116,7 @@ impl FftPlan {
         self.n
     }
 
+    /// True for the degenerate zero-length plan.
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }
@@ -244,13 +245,16 @@ fn process_pow2(bitrev: &[u32], tw: &[C32], buf: &mut [C32], inverse: bool) {
 /// column plan (length = `rows`), shared through the global cache so a
 /// square plan holds one table set, not two.
 pub struct Fft2Plan {
+    /// Row count the plan transforms.
     pub rows: usize,
+    /// Column count the plan transforms.
     pub cols: usize,
     row_plan: Arc<FftPlan>,
     col_plan: Arc<FftPlan>,
 }
 
 impl Fft2Plan {
+    /// Plan a rows x cols 2-D transform (tables built once).
     pub fn new(rows: usize, cols: usize) -> Fft2Plan {
         Fft2Plan {
             rows,

@@ -6,12 +6,16 @@ use crate::util::rng::Rng;
 /// Dense row-major `f32` matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major element storage.
     pub data: Vec<f32>,
 }
 
 impl Matrix {
+    /// All-zeros matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self {
             rows,
@@ -20,6 +24,7 @@ impl Matrix {
         }
     }
 
+    /// Build element-wise from `f(row, col)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
         let mut m = Self::zeros(rows, cols);
         for r in 0..rows {
@@ -30,11 +35,13 @@ impl Matrix {
         m
     }
 
+    /// Wrap an existing row-major buffer (length must be rows*cols).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Self { rows, cols, data }
     }
 
+    /// The n x n identity.
     pub fn identity(n: usize) -> Self {
         Self::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
     }
@@ -47,6 +54,7 @@ impl Matrix {
         m
     }
 
+    /// I.i.d. standard-normal entries from `rng`.
     pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
         Self {
             rows,
@@ -56,21 +64,25 @@ impl Matrix {
     }
 
     #[inline]
+    /// Element at (r, c).
     pub fn get(&self, r: usize, c: usize) -> f32 {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
     #[inline]
+    /// Set element at (r, c).
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c] = v;
     }
 
+    /// Borrow row `r` as a slice.
     pub fn row(&self, r: usize) -> &[f32] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> Matrix {
         Matrix::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
     }
@@ -96,6 +108,7 @@ impl Matrix {
         out
     }
 
+    /// Matrix-vector product.
     pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
         assert_eq!(self.cols, v.len());
         (0..self.rows)
@@ -109,6 +122,7 @@ impl Matrix {
             .collect()
     }
 
+    /// Element-wise sum.
     pub fn add(&self, other: &Matrix) -> Matrix {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Matrix::from_vec(
@@ -122,6 +136,7 @@ impl Matrix {
         )
     }
 
+    /// Element-wise difference.
     pub fn sub(&self, other: &Matrix) -> Matrix {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Matrix::from_vec(
@@ -135,6 +150,7 @@ impl Matrix {
         )
     }
 
+    /// Scale every element by `s`.
     pub fn scale(&self, s: f32) -> Matrix {
         Matrix::from_vec(
             self.rows,
@@ -143,6 +159,7 @@ impl Matrix {
         )
     }
 
+    /// Element-wise (Hadamard) product.
     pub fn hadamard(&self, other: &Matrix) -> Matrix {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Matrix::from_vec(
@@ -156,6 +173,7 @@ impl Matrix {
         )
     }
 
+    /// Frobenius norm.
     pub fn frobenius_norm(&self) -> f32 {
         self.data.iter().map(|a| a * a).sum::<f32>().sqrt()
     }
@@ -172,6 +190,7 @@ impl Matrix {
             .fold(0.0, |m, d| if d.is_nan() { f32::INFINITY } else { m.max(d) })
     }
 
+    /// True when every element is finite.
     pub fn is_finite(&self) -> bool {
         self.data.iter().all(|a| a.is_finite())
     }
@@ -214,12 +233,16 @@ impl Matrix {
 /// Dense row-major complex matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CMatrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major complex element storage.
     pub data: Vec<C32>,
 }
 
 impl CMatrix {
+    /// All-zeros complex matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self {
             rows,
@@ -228,6 +251,7 @@ impl CMatrix {
         }
     }
 
+    /// Build element-wise from `f(row, col)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> C32) -> Self {
         let mut m = Self::zeros(rows, cols);
         for r in 0..rows {
@@ -238,6 +262,7 @@ impl CMatrix {
         m
     }
 
+    /// Complex copy of a real matrix (zero imaginary parts).
     pub fn from_real(m: &Matrix) -> Self {
         Self {
             rows: m.rows,
@@ -247,15 +272,18 @@ impl CMatrix {
     }
 
     #[inline]
+    /// Element at (r, c).
     pub fn get(&self, r: usize, c: usize) -> C32 {
         self.data[r * self.cols + c]
     }
 
     #[inline]
+    /// Set element at (r, c).
     pub fn set(&mut self, r: usize, c: usize, v: C32) {
         self.data[r * self.cols + c] = v;
     }
 
+    /// Real parts as a real matrix.
     pub fn real(&self) -> Matrix {
         Matrix::from_vec(
             self.rows,
@@ -264,6 +292,7 @@ impl CMatrix {
         )
     }
 
+    /// Imaginary parts as a real matrix.
     pub fn imag(&self) -> Matrix {
         Matrix::from_vec(
             self.rows,
@@ -272,6 +301,7 @@ impl CMatrix {
         )
     }
 
+    /// Complex matrix product.
     pub fn matmul(&self, other: &CMatrix) -> CMatrix {
         assert_eq!(self.cols, other.rows);
         let (m, k, n) = (self.rows, self.cols, other.cols);
@@ -289,6 +319,7 @@ impl CMatrix {
         out
     }
 
+    /// Element-wise (Hadamard) product.
     pub fn hadamard(&self, other: &CMatrix) -> CMatrix {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         CMatrix {
@@ -303,6 +334,7 @@ impl CMatrix {
         }
     }
 
+    /// Scale every element by real `s`.
     pub fn scale(&self, s: f32) -> CMatrix {
         CMatrix {
             rows: self.rows,
@@ -311,6 +343,7 @@ impl CMatrix {
         }
     }
 
+    /// Largest element-wise modulus difference (comparison metric).
     pub fn max_abs_diff(&self, other: &CMatrix) -> f32 {
         self.data
             .iter()

@@ -13,7 +13,9 @@
 /// Line-range (row or column band) assignment for one core.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Assignment {
+    /// First line (row or column index) of the band.
     pub start: usize,
+    /// Number of contiguous lines in the band.
     pub len: usize,
 }
 
@@ -37,6 +39,73 @@ pub fn plan_splits(total: usize, p: usize) -> Vec<Assignment> {
         start += len;
     }
     out
+}
+
+/// Split `total` lines over workers **proportionally to `weights`**
+/// (per-core throughput — a GPU core takes a wider band than a CPU
+/// core).  Returns exactly `weights.len()` assignments in worker
+/// order, forming a contiguous in-order partition of `0..total`;
+/// zero-length bands are legal here (a worker whose share rounds to
+/// nothing sits the stage out) — [`compact`] drops them before the
+/// strict band executors.  Largest-remainder apportionment keeps every
+/// band within one line of its ideal `total·wᵢ/Σw` quota (the property
+/// `weighted_splits_track_the_proportional_ideal` checks).
+///
+/// Non-finite or negative weights are rejected; an all-zero weight
+/// vector degenerates to the balanced [`plan_splits`] partition.
+pub fn plan_splits_weighted(total: usize, weights: &[f64]) -> Vec<Assignment> {
+    assert!(!weights.is_empty(), "need at least one worker");
+    assert!(
+        weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+        "weights must be finite and non-negative: {weights:?}"
+    );
+    let p = weights.len();
+    let sum: f64 = weights.iter().sum();
+    if sum <= 0.0 {
+        // no throughput signal: fall back to the balanced partition,
+        // padded with empty tail bands so worker i still maps to band i
+        let mut out = plan_splits(total.max(1), p);
+        if total == 0 {
+            out.clear();
+        }
+        while out.len() < p {
+            out.push(Assignment {
+                start: total,
+                len: 0,
+            });
+        }
+        return out;
+    }
+    // Largest-remainder apportionment: floor every quota, then hand the
+    // leftover lines to the largest fractional remainders (ties to the
+    // lowest worker index, so the result is deterministic).
+    let quotas: Vec<f64> = weights.iter().map(|w| total as f64 * w / sum).collect();
+    let mut lens: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let assigned: usize = lens.iter().sum();
+    let mut order: Vec<usize> = (0..p).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - quotas[a].floor();
+        let fb = quotas[b] - quotas[b].floor();
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    for &i in order.iter().take(total.saturating_sub(assigned)) {
+        lens[i] += 1;
+    }
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for len in lens {
+        out.push(Assignment { start, len });
+        start += len;
+    }
+    out
+}
+
+/// Drop zero-length bands from a weighted plan, yielding the strict
+/// non-empty partition the band executors
+/// ([`crate::linalg::fft::Fft2Plan::rfft2_sharded`] and friends)
+/// require.  The surviving bands still partition `0..total` in order.
+pub fn compact(assignments: &[Assignment]) -> Vec<Assignment> {
+    assignments.iter().filter(|a| a.len > 0).copied().collect()
 }
 
 /// Assert that `assignments` is exactly the contiguous, in-order,
@@ -78,6 +147,85 @@ mod tests {
     fn more_workers_than_rows_is_fine() {
         let plan = plan_splits(3, 8);
         assert_eq!(plan.len(), 3);
+    }
+
+    #[test]
+    fn weighted_splits_track_the_proportional_ideal() {
+        // The satellite property: weighted bands are total-preserving,
+        // contiguous, and within ONE line of the weighted-proportional
+        // ideal — largest-remainder apportionment guarantees it.
+        check("weighted splits", 60, |rng: &mut Rng| {
+            let total = rng.int_range(0, 300) as usize;
+            let p = rng.int_range(1, 12) as usize;
+            // weight profiles spanning 3 orders of magnitude (the
+            // TPU-vs-CPU throughput gap the mixed pools really see)
+            let weights: Vec<f64> = (0..p)
+                .map(|_| match rng.below(4) {
+                    0 => 0.001,
+                    1 => 0.1,
+                    2 => 1.0,
+                    _ => rng.int_range(1, 1000) as f64 / 100.0,
+                })
+                .collect();
+            let plan = plan_splits_weighted(total, &weights);
+            // one band per worker, in order, total-preserving
+            assert_eq!(plan.len(), p);
+            let mut expect = 0usize;
+            for a in &plan {
+                assert_eq!(a.start, expect, "bands must be contiguous in order");
+                expect += a.len;
+            }
+            assert_eq!(expect, total, "bands must cover all lines");
+            // within one line of the weighted-proportional ideal
+            let sum: f64 = weights.iter().sum();
+            for (a, w) in plan.iter().zip(&weights) {
+                let ideal = total as f64 * w / sum;
+                assert!(
+                    (a.len as f64 - ideal).abs() < 1.0 + 1e-9,
+                    "band {} lines vs ideal {ideal:.3} (w={w})",
+                    a.len
+                );
+            }
+            // compacting yields the strict partition the executors need
+            let strict = compact(&plan);
+            if total > 0 {
+                validate_partition(&strict, total);
+            } else {
+                assert!(strict.is_empty());
+            }
+        });
+    }
+
+    #[test]
+    fn equal_weights_degenerate_to_balanced_splits() {
+        check("weighted == balanced at equal weights", 30, |rng: &mut Rng| {
+            let total = rng.int_range(1, 200) as usize;
+            let p = rng.int_range(1, 10) as usize;
+            let weighted = compact(&plan_splits_weighted(total, &vec![1.0; p]));
+            assert_eq!(weighted, plan_splits(total, p));
+        });
+    }
+
+    #[test]
+    fn zero_and_degenerate_weights() {
+        // all-zero weights: no throughput signal, balanced fallback
+        let plan = plan_splits_weighted(10, &[0.0, 0.0, 0.0]);
+        assert_eq!(compact(&plan), plan_splits(10, 3));
+        // a zero-weight member gets nothing; the rest share it all
+        let plan = plan_splits_weighted(10, &[1.0, 0.0, 1.0]);
+        assert_eq!(plan[1].len, 0);
+        assert_eq!(plan[0].len + plan[2].len, 10);
+        // zero lines: every band empty but worker-aligned
+        let plan = plan_splits_weighted(0, &[2.0, 1.0]);
+        assert_eq!(plan.len(), 2);
+        assert!(plan.iter().all(|a| a.len == 0));
+    }
+
+    #[test]
+    fn dominant_weight_takes_nearly_everything() {
+        let plan = plan_splits_weighted(100, &[1000.0, 1.0, 1.0]);
+        assert!(plan[0].len >= 98, "{plan:?}");
+        assert_eq!(plan.iter().map(|a| a.len).sum::<usize>(), 100);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! xai-accel info                      # artifact + device-model summary
-//! xai-accel serve   [--executors N] [--requests R] [--config FILE]
+//! xai-accel serve   [--executors N] [--lanes tpu,gpu,cpu] [--requests R] [--config FILE]
 //! xai-accel explain [--method distill|shapley|ig] [--seed S]
 //! xai-accel simulate [--devices cpu,gpu,tpu] [--size N]
 //! ```
@@ -27,6 +27,7 @@ use xai_accel::xai;
 const USAGE: &str = "usage: xai-accel <info|serve|explain|simulate|bench-check> [options]
   info        artifact and device-model summary
   serve       --executors N --requests R --artifact-dir DIR [--config FILE]
+              [--lanes tpu,tpu,gpu,cpu]   heterogeneous device lanes
   explain     --method distill|shapley|ig [--seed S] [--artifact-dir DIR]
   simulate    --size N [--devices cpu,gpu,tpu]
   bench-check --baseline FILE --current FILE [--threshold 0.25] [--tracked a,b,c]";
@@ -141,11 +142,25 @@ fn run_serve(args: &Args) -> Result<()> {
     };
     config.artifact_dir = artifact_dir(args);
     config.executors = args.get_usize("executors", config.executors)?;
+    // heterogeneous plane: --lanes tpu,tpu,gpu,cpu overrides the
+    // config file's `lanes` key (and `executors` sizing)
+    if let Some(lanes) = args.get("lanes") {
+        config.lanes = xai_accel::config::parse_lanes(lanes)?;
+    }
     let requests = args.get_usize("requests", 64)?;
 
+    let lanes_desc = if config.lanes.is_empty() {
+        format!("{} TPU-class executors", config.executors)
+    } else {
+        config
+            .lanes
+            .iter()
+            .map(|k| k.name())
+            .collect::<Vec<_>>()
+            .join(",")
+    };
     println!(
-        "starting coordinator: {} executors, artifacts at {}",
-        config.executors,
+        "starting coordinator: lanes [{lanes_desc}], artifacts at {}",
         config.artifact_dir.display()
     );
     let coord = Coordinator::start(config)?;

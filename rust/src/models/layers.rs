@@ -5,19 +5,46 @@
 pub enum LayerSpec {
     /// 2-D convolution: `out = conv(in)` on an H×W feature map.
     Conv {
+        /// Input feature-map height.
         h: usize,
+        /// Input feature-map width.
         w: usize,
+        /// Input channels.
         cin: usize,
+        /// Output channels.
         cout: usize,
+        /// Square kernel edge.
         k: usize,
+        /// Convolution stride.
         stride: usize,
     },
     /// Fully connected.
-    Dense { cin: usize, cout: usize },
+    Dense {
+        /// Input features.
+        cin: usize,
+        /// Output features.
+        cout: usize,
+    },
     /// Max/avg pooling (no params; counted as elementwise work).
-    Pool { h: usize, w: usize, c: usize, k: usize },
+    Pool {
+        /// Input feature-map height.
+        h: usize,
+        /// Input feature-map width.
+        w: usize,
+        /// Channels.
+        c: usize,
+        /// Pooling window edge.
+        k: usize,
+    },
     /// Batch norm / activation over an H×W×C tensor.
-    Elementwise { h: usize, w: usize, c: usize },
+    Elementwise {
+        /// Tensor height.
+        h: usize,
+        /// Tensor width.
+        w: usize,
+        /// Tensor channels.
+        c: usize,
+    },
 }
 
 impl LayerSpec {
@@ -69,7 +96,9 @@ impl LayerSpec {
 /// A whole model as an ordered layer stack.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
+    /// Human-readable model name (e.g. `VGG16`).
     pub name: &'static str,
+    /// Layers in forward order.
     pub layers: Vec<LayerSpec>,
     /// Input feature dimension seen by the XAI algorithms (e.g. the
     /// image edge for distillation's X matrix).
@@ -77,10 +106,12 @@ pub struct ModelSpec {
 }
 
 impl ModelSpec {
+    /// Forward-pass FLOPs summed over all layers.
     pub fn total_flops(&self) -> u64 {
         self.layers.iter().map(|l| l.flops()).sum()
     }
 
+    /// Trainable parameters summed over all layers.
     pub fn total_params(&self) -> u64 {
         self.layers.iter().map(|l| l.params()).sum()
     }
@@ -90,6 +121,7 @@ impl ModelSpec {
         2 * self.total_flops()
     }
 
+    /// Number of layers.
     pub fn depth(&self) -> usize {
         self.layers
             .iter()

@@ -12,6 +12,7 @@ pub const IMG: usize = 16;
 /// Class count — must match `model.NUM_CLASSES`.
 pub const NUM_CLASSES: usize = 4;
 
+/// The 4-class MicroCNN the serving stack compiles and explains.
 pub fn microcnn() -> ModelSpec {
     ModelSpec {
         name: "MicroCNN",

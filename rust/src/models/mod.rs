@@ -22,13 +22,18 @@ pub use template::TemplateModel;
 /// The benchmark models of the paper's §IV-A.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Benchmark {
+    /// VGG19 at ImageNet scale.
     Vgg19,
+    /// VGG16 at ImageNet scale.
     Vgg16,
+    /// ResNet50 at ImageNet scale.
     ResNet50,
+    /// The 4-class MicroCNN the serving stack compiles.
     MicroCnn,
 }
 
 impl Benchmark {
+    /// Layer-level spec of this benchmark model.
     pub fn spec(&self) -> ModelSpec {
         match self {
             Benchmark::Vgg19 => vgg::vgg19(),
@@ -38,6 +43,7 @@ impl Benchmark {
         }
     }
 
+    /// Human-readable model name.
     pub fn name(&self) -> &'static str {
         match self {
             Benchmark::Vgg19 => "VGG19",

@@ -47,6 +47,7 @@ impl Default for TemplateModel {
 }
 
 impl TemplateModel {
+    /// Build the quadrant template bank and the shared smoothing kernel.
     pub fn new() -> Self {
         let img = cifar::IMG;
         let d = img * img;
@@ -76,6 +77,7 @@ impl TemplateModel {
         self.templates.cols
     }
 
+    /// Number of output classes.
     pub fn num_classes(&self) -> usize {
         self.templates.rows
     }

@@ -17,6 +17,7 @@ use std::path::Path;
 /// mirrors the paper's multi-core decomposition — see
 /// `coordinator::worker`.
 pub struct Executable {
+    /// Shape/dtype spec the executable was compiled against.
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -116,6 +117,7 @@ impl ArtifactRegistry {
         })
     }
 
+    /// Look up a compiled executable by artifact name.
     pub fn get(&self, name: &str) -> Result<&Executable> {
         self.executables.get(name).ok_or_else(|| {
             Error::Artifact(format!(
@@ -125,20 +127,24 @@ impl ArtifactRegistry {
         })
     }
 
+    /// All compiled artifact names.
     pub fn names(&self) -> Vec<&str> {
         let mut names: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
         names.sort();
         names
     }
 
+    /// PJRT platform the registry compiled for.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Number of compiled executables.
     pub fn len(&self) -> usize {
         self.executables.len()
     }
 
+    /// True when the registry holds no executables.
     pub fn is_empty(&self) -> bool {
         self.executables.is_empty()
     }

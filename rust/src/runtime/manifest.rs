@@ -17,6 +17,7 @@ use std::path::{Path, PathBuf};
 pub struct Shape(pub Vec<usize>);
 
 impl Shape {
+    /// Parse a `f32[2,3]`-style shape string.
     pub fn parse(s: &str) -> Result<Shape> {
         let dims: std::result::Result<Vec<usize>, _> =
             s.split('x').map(|d| d.trim().parse::<usize>()).collect();
@@ -24,10 +25,12 @@ impl Shape {
             .map_err(|e| Error::Artifact(format!("bad shape '{s}': {e}")))
     }
 
+    /// Total element count of the shape.
     pub fn elements(&self) -> usize {
         self.0.iter().product()
     }
 
+    /// Dimensions as the i64 vector PJRT expects.
     pub fn dims_i64(&self) -> Vec<i64> {
         self.0.iter().map(|&d| d as i64).collect()
     }
@@ -43,15 +46,20 @@ impl std::fmt::Display for Shape {
 /// One artifact's metadata.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Artifact name (the registry lookup key).
     pub name: String,
+    /// HLO text file path.
     pub path: PathBuf,
+    /// Input shapes in argument order.
     pub inputs: Vec<Shape>,
+    /// Output shapes in result order.
     pub outputs: Vec<Shape>,
 }
 
 /// The parsed manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// Artifact specs in manifest order.
     pub artifacts: Vec<ArtifactSpec>,
 }
 
@@ -68,6 +76,7 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Parse `manifest.txt` text; paths resolve relative to `dir`.
     pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
         let mut artifacts = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
@@ -104,10 +113,12 @@ impl Manifest {
         Ok(Manifest { artifacts })
     }
 
+    /// Look up an artifact spec by name.
     pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
         self.artifacts.iter().find(|a| a.name == name)
     }
 
+    /// All artifact names in manifest order.
     pub fn names(&self) -> Vec<&str> {
         self.artifacts.iter().map(|a| a.name.as_str()).collect()
     }

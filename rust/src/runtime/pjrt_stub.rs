@@ -41,18 +41,22 @@ fn unavailable<T>() -> Result<T, Error> {
 pub struct Literal;
 
 impl Literal {
+    /// Stub literal constructor (fails offline).
     pub fn vec1(_data: &[f32]) -> Literal {
         Literal
     }
 
+    /// Stub reshape (fails offline).
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
         unavailable()
     }
 
+    /// Stub tuple destructuring (fails offline).
     pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
         unavailable()
     }
 
+    /// Stub host transfer (fails offline).
     pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
         unavailable()
     }
@@ -62,6 +66,7 @@ impl Literal {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Stub device-to-host copy (fails offline).
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         unavailable()
     }
@@ -71,6 +76,7 @@ impl PjRtBuffer {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Stub execution (fails offline).
     pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
         unavailable()
     }
@@ -81,14 +87,17 @@ impl PjRtLoadedExecutable {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Stub CPU client constructor (fails offline).
     pub fn cpu() -> Result<PjRtClient, Error> {
         unavailable()
     }
 
+    /// Stub compilation (fails offline).
     pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
         unavailable()
     }
 
+    /// Reports the stub platform name.
     pub fn platform_name(&self) -> String {
         "unavailable".into()
     }
@@ -98,6 +107,7 @@ impl PjRtClient {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Stub HLO text loader (fails offline).
     pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
         unavailable()
     }
@@ -107,6 +117,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Stub proto-to-computation conversion.
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }

@@ -71,58 +71,145 @@ use crate::linalg::vandermonde;
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Op {
     /// Real matmul (m×k)·(k×n).
-    Matmul { m: usize, k: usize, n: usize },
+    Matmul {
+        /// Rows of the left operand (and the output).
+        m: usize,
+        /// Shared inner (reduction) dimension.
+        k: usize,
+        /// Columns of the right operand (and the output).
+        n: usize,
+    },
     /// `b` real matmuls (m×k)·(k×n) fused into one dispatch with a
     /// batch-invariant left operand (see the module docs for the
     /// FLOP/byte conventions).
     BatchedMatmul {
+        /// Independent problems fused into the dispatch.
         b: usize,
+        /// Rows of the shared left operand.
         m: usize,
+        /// Shared inner (reduction) dimension.
         k: usize,
+        /// Columns of each problem's right operand.
         n: usize,
     },
     /// `b` same-shape 2-D FFTs (planned butterfly schedule) fused into
     /// one dispatch through a shared plan.
-    BatchedFft2 { b: usize, m: usize, n: usize },
+    BatchedFft2 {
+        /// Transforms fused into the dispatch.
+        b: usize,
+        /// Rows of each transform.
+        m: usize,
+        /// Columns of each transform.
+        n: usize,
+    },
     /// Complex matmul decomposed into 4 real matmuls + 2 adds.
-    CMatmul { m: usize, k: usize, n: usize },
+    CMatmul {
+        /// Rows of the left operand (and the output).
+        m: usize,
+        /// Shared inner (reduction) dimension.
+        k: usize,
+        /// Columns of the right operand (and the output).
+        n: usize,
+    },
     /// 2-D DFT of an m×n matrix *in matmul form* (Eq. 14): two complex
     /// matmuls (m×m)·(m×n) and (m×n)·(n×n).
-    Dft2Matmul { m: usize, n: usize },
+    Dft2Matmul {
+        /// Rows of the transformed matrix.
+        m: usize,
+        /// Columns of the transformed matrix.
+        n: usize,
+    },
     /// 2-D FFT (planned butterfly form: radix-2, Bluestein-padded off
     /// powers of two) — the CPU-native schedule.
-    Fft2 { m: usize, n: usize },
+    Fft2 {
+        /// Rows of the transformed matrix.
+        m: usize,
+        /// Columns of the transformed matrix.
+        n: usize,
+    },
     /// 2-D FFT under Algorithm-1 data decomposition: row/column line
     /// bands split across `parts` cores with two interior merges (see
     /// the module docs for the FLOP/byte/merge conventions).
-    ShardedFft2 { m: usize, n: usize, parts: usize },
+    ShardedFft2 {
+        /// Rows of the transformed matrix.
+        m: usize,
+        /// Columns of the transformed matrix.
+        n: usize,
+        /// Cores the line bands were split across.
+        parts: usize,
+    },
     /// Row-banded real matmul across `parts` cores, right operand
     /// replicated per core.
     ShardedMatmul {
+        /// Rows of the left operand (banded across cores).
         m: usize,
+        /// Shared inner (reduction) dimension.
         k: usize,
+        /// Columns of the replicated right operand.
         n: usize,
+        /// Cores the row bands were split across.
         parts: usize,
     },
     /// Ring all-gather of a `bytes` payload across `parts` cores.
-    AllGather { bytes: u64, parts: usize },
+    AllGather {
+        /// Payload every core ends up holding.
+        bytes: u64,
+        /// Ring size.
+        parts: usize,
+    },
     /// Root-to-pool scatter of disjoint shards of `bytes`.
-    Scatter { bytes: u64, parts: usize },
+    Scatter {
+        /// Total payload being scattered from the root.
+        bytes: u64,
+        /// Pool size (shard count).
+        parts: usize,
+    },
     /// Element-wise complex Hadamard division over m×n.
-    HadamardDiv { m: usize, n: usize },
+    HadamardDiv {
+        /// Rows of the operand.
+        m: usize,
+        /// Columns of the operand.
+        n: usize,
+    },
     /// Element-wise map over `elems` scalars (add/sub/scale...).
-    Elementwise { elems: usize },
+    Elementwise {
+        /// Scalars touched.
+        elems: usize,
+    },
     /// Reduction over `elems` scalars (norms, sums).
-    Reduce { elems: usize },
+    Reduce {
+        /// Scalars reduced.
+        elems: usize,
+    },
     /// Dense LU factor + solve of an n×n system with `rhs` right sides.
-    LuSolve { n: usize, rhs: usize },
+    LuSolve {
+        /// System dimension.
+        n: usize,
+        /// Right-hand sides solved against the factorization.
+        rhs: usize,
+    },
     /// Vandermonde build m×n (transcendental per element).
-    VandermondeBuild { m: usize, n: usize },
+    VandermondeBuild {
+        /// Rows (sample points).
+        m: usize,
+        /// Columns (polynomial degree + 1).
+        n: usize,
+    },
     /// Gradient backprop through the target model, `count` times.
     /// Modeled as `flops_per_grad` dense FLOPs each (model-dependent).
-    ModelGrad { count: usize, flops_per_grad: u64 },
+    ModelGrad {
+        /// Gradient evaluations.
+        count: usize,
+        /// Dense-equivalent FLOPs per evaluation.
+        flops_per_grad: u64,
+    },
     /// Forward pass through the target model, `count` times.
-    ModelForward { count: usize, flops_per_fwd: u64 },
+    ModelForward {
+        /// Forward evaluations.
+        count: usize,
+        /// Dense-equivalent FLOPs per evaluation.
+        flops_per_fwd: u64,
+    },
 }
 
 impl Op {
@@ -284,22 +371,27 @@ fn fft_line_flops(n: usize) -> u64 {
 /// A recorded sequence of primitive ops.
 #[derive(Debug, Clone, Default)]
 pub struct OpTrace {
+    /// The recorded ops, in execution order.
     pub ops: Vec<Op>,
 }
 
 impl OpTrace {
+    /// An empty trace.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one op.
     pub fn push(&mut self, op: Op) {
         self.ops.push(op);
     }
 
+    /// Total floating-point work across the trace.
     pub fn total_flops(&self) -> u64 {
         self.ops.iter().map(|o| o.flops()).sum()
     }
 
+    /// Total bytes moved across the trace.
     pub fn total_bytes(&self) -> u64 {
         self.ops.iter().map(|o| o.bytes()).sum()
     }
@@ -320,10 +412,12 @@ impl OpTrace {
         mm as f64 / self.total_flops().max(1) as f64
     }
 
+    /// Drop all recorded ops.
     pub fn clear(&mut self) {
         self.ops.clear();
     }
 
+    /// Append every op of `other`.
     pub fn extend(&mut self, other: &OpTrace) {
         self.ops.extend_from_slice(&other.ops);
     }
@@ -337,7 +431,9 @@ impl OpTrace {
 /// differ.
 #[derive(Debug, Default)]
 pub struct NativeEngine {
+    /// Every op the engine has executed so far.
     pub trace: OpTrace,
+    /// Matmul-form DFT (TPU schedule) when true; planned FFT otherwise.
     pub use_matmul_dft: bool,
 }
 
@@ -358,12 +454,14 @@ impl NativeEngine {
         }
     }
 
+    /// Take the recorded trace, leaving an empty one.
     pub fn take_trace(&mut self) -> OpTrace {
         std::mem::take(&mut self.trace)
     }
 
     // ---- primitives -----------------------------------------------------
 
+    /// Real matmul, recorded as [`Op::Matmul`].
     pub fn matmul(&mut self, a: &Matrix, b: &Matrix) -> Matrix {
         self.trace.push(Op::Matmul {
             m: a.rows,
@@ -455,6 +553,7 @@ impl NativeEngine {
         self.trace.push(Op::AllGather { bytes, parts });
     }
 
+    /// Complex matmul, recorded as [`Op::CMatmul`].
     pub fn cmatmul(&mut self, a: &CMatrix, b: &CMatrix) -> CMatrix {
         self.trace.push(Op::CMatmul {
             m: a.rows,
@@ -498,6 +597,7 @@ impl NativeEngine {
         }
     }
 
+    /// Wiener-regularized spectral division (Eq. 5 core), recorded as [`Op::HadamardDiv`].
     pub fn spectral_divide(&mut self, fy: &CMatrix, fx: &CMatrix, eps: f32) -> CMatrix {
         self.trace.push(Op::HadamardDiv {
             m: fy.rows,
@@ -506,6 +606,7 @@ impl NativeEngine {
         conv::spectral_divide(fy, fx, eps)
     }
 
+    /// Complex element-wise product, recorded as element-wise work.
     pub fn hadamard(&mut self, a: &CMatrix, b: &CMatrix) -> CMatrix {
         self.trace.push(Op::Elementwise {
             elems: 2 * a.rows * a.cols,
@@ -513,6 +614,7 @@ impl NativeEngine {
         a.hadamard(b)
     }
 
+    /// Matrix subtraction, recorded as element-wise work.
     pub fn sub(&mut self, a: &Matrix, b: &Matrix) -> Matrix {
         self.trace.push(Op::Elementwise {
             elems: a.rows * a.cols,
@@ -520,6 +622,7 @@ impl NativeEngine {
         a.sub(b)
     }
 
+    /// Frobenius norm, recorded as a reduction.
     pub fn frobenius_norm(&mut self, a: &Matrix) -> f32 {
         self.trace.push(Op::Reduce {
             elems: a.rows * a.cols,
@@ -527,11 +630,13 @@ impl NativeEngine {
         a.frobenius_norm()
     }
 
+    /// Dense LU solve, recorded as [`Op::LuSolve`].
     pub fn lu_solve(&mut self, a: &Matrix, b: &[f32]) -> crate::error::Result<Vec<f32>> {
         self.trace.push(Op::LuSolve { n: a.rows, rhs: 1 });
         Ok(Lu::factor(a)?.solve(b))
     }
 
+    /// Vandermonde build, recorded as [`Op::VandermondeBuild`].
     pub fn vandermonde(&mut self, xs: &[f32], ncols: usize) -> Matrix {
         self.trace.push(Op::VandermondeBuild {
             m: xs.len(),
@@ -549,6 +654,7 @@ impl NativeEngine {
         });
     }
 
+    /// Record `count` model gradient evaluations (see [`NativeEngine::record_model_forward`]).
     pub fn record_model_grad(&mut self, count: usize, flops_per_grad: u64) {
         self.trace.push(Op::ModelGrad {
             count,

@@ -10,6 +10,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A titled table with no columns yet.
     pub fn new(title: impl Into<String>) -> Self {
         Self {
             title: title.into(),
@@ -17,11 +18,13 @@ impl Table {
         }
     }
 
+    /// Set the header row (builder style).
     pub fn header(mut self, cols: &[&str]) -> Self {
         self.header = cols.iter().map(|s| s.to_string()).collect();
         self
     }
 
+    /// Append one data row.
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(
             cells.len(),
@@ -38,6 +41,7 @@ impl Table {
         self.row(&strs)
     }
 
+    /// Render the table to a string.
     pub fn render(&self) -> String {
         let ncols = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
@@ -80,6 +84,7 @@ impl Table {
         out
     }
 
+    /// Render and print to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

@@ -11,20 +11,24 @@ pub struct Attribution {
 }
 
 impl Attribution {
+    /// Attribution with explicit feature names.
     pub fn new(names: Vec<String>, scores: Vec<f32>) -> Self {
         assert_eq!(names.len(), scores.len());
         Self { names, scores }
     }
 
+    /// Attribution with positional feature names.
     pub fn unnamed(scores: Vec<f32>) -> Self {
         let names = (0..scores.len()).map(|i| format!("f{i}")).collect();
         Self { names, scores }
     }
 
+    /// Number of features.
     pub fn len(&self) -> usize {
         self.scores.len()
     }
 
+    /// True when no features are present.
     pub fn is_empty(&self) -> bool {
         self.scores.is_empty()
     }

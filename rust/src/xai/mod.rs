@@ -26,12 +26,16 @@ pub use attribution::Attribution;
 /// The three XAI algorithms of the paper.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum XaiMethod {
+    /// Linear-surrogate distillation via the spectral solve (§III-A).
     ModelDistillation,
+    /// Shapley value attribution in structure-vector form (§III-B).
     ShapleyValues,
+    /// Integrated gradients with the trapezoid reduce (§III-C).
     IntegratedGradients,
 }
 
 impl XaiMethod {
+    /// Human-readable method name.
     pub fn name(&self) -> &'static str {
         match self {
             XaiMethod::ModelDistillation => "Model Distillation",
@@ -40,6 +44,7 @@ impl XaiMethod {
         }
     }
 
+    /// All three methods in paper order.
     pub fn all() -> [XaiMethod; 3] {
         [
             XaiMethod::ModelDistillation,

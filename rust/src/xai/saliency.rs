@@ -27,8 +27,13 @@ pub fn smooth_heatmap(eng: &mut NativeEngine, heatmap: &Matrix, smooth: &Matrix)
 /// ([`crate::linalg::conv::circ_conv2_batch`]: batched forward `rfft2`
 /// with the row lines of all heatmaps sharded together, one
 /// Hadamard/rescale pass, batched inverse).  Records two `BatchedFft2`
-/// ops, the kernel-spectrum `Fft2`, and the element-wise product;
-/// results are identical to smoothing each heatmap alone.
+/// ops and the element-wise product — and **no kernel-spectrum
+/// `Fft2`**: the smoothing kernel is a process-lifetime constant whose
+/// spectrum is served from
+/// [`crate::linalg::conv::cached_kernel_spectrum`], so its one-time
+/// transform amortizes to zero in steady-state serving and is excluded
+/// from the per-batch trace convention.  Results are identical to
+/// smoothing each heatmap alone.
 pub fn smooth_heatmaps_batch(
     eng: &mut NativeEngine,
     heatmaps: &[Matrix],
@@ -41,8 +46,6 @@ pub fn smooth_heatmaps_batch(
     }
     let b = heatmaps.len();
     eng.trace.push(crate::trace::Op::BatchedFft2 { b, m, n });
-    // the shared kernel's spectrum is one extra forward transform
-    eng.trace.push(crate::trace::Op::Fft2 { m, n });
     eng.trace.push(crate::trace::Op::Elementwise { elems: 2 * b * m * n });
     eng.trace.push(crate::trace::Op::BatchedFft2 { b, m, n });
     let refs: Vec<&Matrix> = heatmaps.iter().collect();
@@ -103,6 +106,19 @@ mod tests {
             .filter(|o| matches!(o, crate::trace::Op::BatchedFft2 { b: 4, .. }))
             .count();
         assert_eq!(fft_ops, 2);
+        // ...and NO per-batch kernel-spectrum transform: the smooth
+        // kernel is a process-lifetime constant served from the conv
+        // spectrum cache, so the per-batch convention excludes it
+        assert!(
+            !eng
+                .trace
+                .ops
+                .iter()
+                .any(|o| matches!(o, crate::trace::Op::Fft2 { .. })),
+            "kernel spectrum must not be re-priced per batch: {:?}",
+            eng.trace.ops
+        );
+        assert_eq!(eng.trace.ops.len(), 3);
     }
 
     #[test]

@@ -22,11 +22,14 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// v(S) where bit i of `s` means player i is in S.
 #[derive(Debug, Clone)]
 pub struct ValueTable {
+    /// Number of players.
     pub n: usize,
+    /// Value of every coalition, indexed by subset bitmask (2^n entries).
     pub values: Vec<f32>,
 }
 
 impl ValueTable {
+    /// A value table for `n` players (panics unless `values.len() == 2^n`).
     pub fn new(n: usize, values: Vec<f32>) -> Self {
         assert_eq!(values.len(), 1usize << n, "need 2^n values");
         Self { n, values }

@@ -19,7 +19,9 @@ use crate::trace::{Op, OpTrace};
 /// version of the paper's CPU column.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Schedule {
+    /// Matmul-form DFT (Eq. 14) — the MXU-friendly accelerator form.
     MatmulForm,
+    /// Planned-FFT schedule — the CPU's best native algorithm.
     FftForm,
 }
 

@@ -226,6 +226,65 @@ fn per_device_counters_account_for_every_batch() {
 }
 
 #[test]
+fn mixed_lane_coordinator_accounts_per_kind() {
+    // Live heterogeneous plane: {TPU, GPU, CPU}-class lanes under
+    // mixed traffic.  Every batch must land on exactly one lane, the
+    // per-kind aggregates must re-sum the per-lane counters, and the
+    // tiny-Shapley-heavy workload must not starve: every request
+    // completes even when affinity concentrates work.
+    let mut config = CoordinatorConfig::default();
+    config.lanes = vec![
+        xai_accel::hwsim::DeviceKind::Tpu,
+        xai_accel::hwsim::DeviceKind::Gpu,
+        xai_accel::hwsim::DeviceKind::Cpu,
+    ];
+    config.backend = BackendMode::NativeOnly;
+    let coord = Coordinator::start(config).expect("start mixed coordinator");
+    let mut rng = Rng::new(78);
+    let pendings: Vec<_> = (0..36)
+        .map(|i| {
+            let req = match i % 3 {
+                0 => Request::Shapley {
+                    n: 5,
+                    values: rng.gauss_vec(32),
+                    names: (0..5).map(|j| format!("f{j}")).collect(),
+                },
+                1 => Request::Classify {
+                    image: xai_accel::data::cifar::sample_class(i % 4, &mut rng).image,
+                },
+                _ => Request::Saliency {
+                    image: xai_accel::data::cifar::sample_class(i % 4, &mut rng).image,
+                    class: i % 4,
+                },
+            };
+            coord.submit(req).expect("submit")
+        })
+        .collect();
+    for p in pendings {
+        p.wait().expect("response");
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.completed, 36);
+    assert_eq!(stats.devices.len(), 3);
+    // lanes carry the configured classes in order
+    assert_eq!(stats.devices[0].kind, xai_accel::hwsim::DeviceKind::Tpu);
+    assert_eq!(stats.devices[2].kind, xai_accel::hwsim::DeviceKind::Cpu);
+    // per-kind aggregates re-sum the per-lane counters exactly
+    let lane_batches: u64 = stats.devices.iter().map(|d| d.batches).sum();
+    let kind_batches: u64 = stats.kinds.iter().map(|k| k.batches).sum();
+    assert_eq!(lane_batches, kind_batches);
+    assert_eq!(lane_batches, coord.metrics().batches_executed());
+    assert_eq!(
+        stats.kinds.iter().map(|k| k.lanes).sum::<usize>(),
+        3,
+        "every lane must appear in exactly one kind aggregate"
+    );
+    let leftover: u64 = stats.devices.iter().map(|d| d.queue_depth).sum();
+    assert_eq!(leftover, 0, "all placed batches must have drained");
+    coord.shutdown();
+}
+
+#[test]
 fn split_plans_compose_with_matrix_vstack() {
     check("plan_splits slices reassemble", 20, |rng: &mut Rng| {
         let rows = rng.int_range(1, 64) as usize;

@@ -154,6 +154,65 @@ fn sharded_complex_transform_matches_process_at_256() {
 }
 
 #[test]
+fn heterogeneous_weighted_bands_match_single_plan_at_256() {
+    // The PR 5 acceptance: a heterogeneous pool sizes bands by
+    // per-core throughput (a TPU member takes most of the lines, a CPU
+    // member a sliver) — those *uneven, cost-model-derived* band plans
+    // must stay bit-consistent (≤ 1e-4) with the unsharded transform
+    // at the serving threshold size.  Runs the real mixed-fleet
+    // weights, not synthetic ones.
+    use xai_accel::hwsim::{DeviceKind, DevicePool};
+    use xai_accel::linalg::shard::{compact, plan_splits_weighted};
+    use xai_accel::trace::Op;
+    let pool = DevicePool::mixed(&[
+        DeviceKind::Tpu,
+        DeviceKind::Tpu,
+        DeviceKind::Tpu,
+        DeviceKind::Tpu,
+        DeviceKind::Gpu,
+        DeviceKind::Gpu,
+        DeviceKind::Cpu,
+        DeviceKind::Cpu,
+    ]);
+    let probe = Op::BatchedFft2 { b: 256, m: 1, n: 256 };
+    let weights = pool.stage_weights(8, &probe);
+    let bands = compact(&plan_splits_weighted(256, &weights));
+    assert!(bands.len() >= 2, "mixed weights must yield real bands: {bands:?}");
+    let mut rng = Rng::new(108);
+    let x = Matrix::random(256, 256, &mut rng);
+    let plan = fft::plan2(256, 256);
+    let want = plan.rfft2(&x, 1);
+    let got = fft::rfft2_sharded(&plan, &x, &bands);
+    assert!(
+        got.max_abs_diff(&want) < 1e-4,
+        "weighted bands {bands:?}: {}",
+        got.max_abs_diff(&want)
+    );
+    // and the full sharded 256² solve round-trips through the same
+    // weighted bands: K = F⁻¹(F(Y)∘conj(F(X))/(|F(X)|²+eps))·1/√(MN)
+    let k_true = Matrix::identity_kernel(256, 256);
+    let y = circ_conv2(&x, &k_true);
+    // (the solve's trailing 1/√(MN) rescale is the same constant on
+    // both paths, so the comparison elides it)
+    let fx = fft::rfft2_sharded(&plan, &x, &bands);
+    let fy = fft::rfft2_sharded(&plan, &y, &bands);
+    let mut q = xai_accel::linalg::conv::spectral_divide(&fy, &fx, 1e-6);
+    fft::process_sharded(&plan, &mut q, true, &bands);
+    let k_sharded = q.real();
+    // unsharded reference solve
+    let fx1 = plan.rfft2(&x, 1);
+    let fy1 = plan.rfft2(&y, 1);
+    let mut q1 = xai_accel::linalg::conv::spectral_divide(&fy1, &fx1, 1e-6);
+    plan.process(&mut q1, true, 1);
+    let k_unsharded = q1.real();
+    assert!(
+        k_sharded.max_abs_diff(&k_unsharded) < 1e-4,
+        "sharded 256² solve drifted: {}",
+        k_sharded.max_abs_diff(&k_unsharded)
+    );
+}
+
+#[test]
 fn parseval_at_256() {
     let mut rng = Rng::new(105);
     let x = Matrix::random(256, 256, &mut rng);
