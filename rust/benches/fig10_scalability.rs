@@ -18,6 +18,14 @@
 //! throughput-weighted bands) and `sim_hetero_{blind,affinity}_mixed8`
 //! (the mixed-workload placement sweep — cost-model affinity must beat
 //! kind-blind least-loaded by ≥ 1.3×, enforced under `BENCH_ENFORCE`).
+//!
+//! Since PR 6 the gate also tracks the collective-plane rows
+//! `sim_collective_{tpu8,tpu_gpu,fleet8}_1024`: one 1024²
+//! distillation interpretation executed by typed collective groups
+//! (grouped ops carrying their membership, per-hop ring pricing), with
+//! the acceptance that the best group beats the best single lane by
+//! ≥ 1.3× — the "one big request can use every device" claim made
+//! deterministic.
 
 use std::time::Instant;
 use xai_accel::bench::{json, BenchResult};
@@ -192,6 +200,95 @@ fn main() {
         if hetero_ok { "PASS" } else { "FAIL" }
     );
 
+    // ---- cross-lane collective groups: one request, every device ----
+    // The PR 6 plane: a single 1024² distillation interpretation
+    // (solve + occlusion sweep) priced as a typed collective group —
+    // grouped ops carry their membership, merges are per-hop over each
+    // member's own link class — against the best single lane running
+    // the same request alone (sharded solve at p=1 + the per-block
+    // unfused sweep, the pre-collective serving path).  Deterministic
+    // rows, CI-tracked.
+    let block = 256usize;
+    let single_profile = {
+        let mut t = workloads::distill_solve_trace_sharded(n, 1);
+        t.extend(&workloads::contribution_trace_sched(
+            n,
+            block,
+            workloads::Schedule::FftForm,
+        ));
+        t
+    };
+    let (single_kind, single_s) = DeviceKind::all()
+        .iter()
+        .map(|&k| {
+            (k, DevicePool::mixed(&[k]).replay_sharded(&single_profile).time_s)
+        })
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    let tpu8 = [DeviceKind::Tpu; 8];
+    let tpu_gpu = [
+        DeviceKind::Gpu,
+        DeviceKind::Gpu,
+        DeviceKind::Tpu,
+        DeviceKind::Tpu,
+        DeviceKind::Tpu,
+        DeviceKind::Tpu,
+    ];
+    let groups: [(&str, &[DeviceKind]); 3] = [
+        ("sim_collective_tpu8_1024", &tpu8),
+        ("sim_collective_tpu_gpu_1024", &tpu_gpu),
+        ("sim_collective_fleet8_1024", &MIXED8),
+    ];
+    let mut collective = Table::new(format!(
+        "Fig. 10 collective groups: 1024² distill interpretation vs best single lane ({})",
+        single_kind.name()
+    ))
+    .header(&["group", "time", "compute", "collective", "vs single"]);
+    collective.row(&[
+        format!("single {}", single_kind.name()),
+        fmt_time(single_s),
+        "-".into(),
+        "-".into(),
+        "1.00x".into(),
+    ]);
+    let mut best_collective = f64::INFINITY;
+    for (name, members) in groups {
+        let pool = DevicePool::mixed(members);
+        let rep = pool.replay_sharded(&workloads::distill_interpretation_trace_collective(
+            n, block, members,
+        ));
+        best_collective = best_collective.min(rep.time_s);
+        collective.row(&[
+            pool.label(),
+            fmt_time(rep.time_s),
+            fmt_time(rep.compute_s),
+            fmt_time(rep.collective_s),
+            format!("{:.2}x", single_s / rep.time_s),
+        ]);
+        results.push(BenchResult::point(name, rep.time_s));
+    }
+    collective.print();
+    // the group planner, fed the full fleet, must land on the same
+    // answer pricing does: weak-link members priced out, not filtered
+    let chosen = hwsim::pool::plan_collective_group(&MIXED8, &|members| {
+        DevicePool::mixed(members)
+            .replay_sharded(&workloads::distill_interpretation_trace_collective(
+                n, block, members,
+            ))
+            .time_s
+    });
+    println!(
+        "planner choice from the {} fleet: {}",
+        DevicePool::mixed(&MIXED8).label(),
+        DevicePool::mixed(&chosen).label()
+    );
+    let collective_gain = single_s / best_collective;
+    let collective_ok = collective_gain >= 1.3;
+    println!(
+        "acceptance (best collective >= 1.3x over best single lane at 1024x1024): {} ({collective_gain:.2}x)",
+        if collective_ok { "PASS" } else { "FAIL" }
+    );
+
     let refs: Vec<&BenchResult> = results.iter().collect();
     json::emit(&refs);
 
@@ -200,10 +297,11 @@ fn main() {
     let enforce = std::env::var("BENCH_ENFORCE")
         .map(|v| v == "1" || v == "true")
         .unwrap_or(false);
-    if enforce && !(sweep_ok && hetero_ok) {
+    if enforce && !(sweep_ok && hetero_ok && collective_ok) {
         eprintln!(
             "acceptance FAILED: sharded sweep {speedup:.2}x (need >= 3x, sub-linear), \
-             affinity gain {gain:.2}x (need >= 1.3x)"
+             affinity gain {gain:.2}x (need >= 1.3x), \
+             collective gain {collective_gain:.2}x (need >= 1.3x)"
         );
         std::process::exit(1);
     }

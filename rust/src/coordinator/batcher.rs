@@ -17,6 +17,30 @@ pub struct Batch {
     pub kind: RequestKind,
     /// The batched envelopes in arrival order.
     pub envelopes: Vec<Envelope>,
+    /// A cross-lane collective work item riding this (otherwise empty)
+    /// batch — the member-stage transport of the collective plane.
+    pub collective: Option<crate::coordinator::collective::CollectiveStage>,
+}
+
+impl Batch {
+    /// An ordinary batch of envelopes.
+    pub fn new(kind: RequestKind, envelopes: Vec<Envelope>) -> Self {
+        Self {
+            kind,
+            envelopes,
+            collective: None,
+        }
+    }
+
+    /// A batch carrying one collective member stage and no envelopes
+    /// (the stage's job owns the envelope).
+    pub fn collective_stage(stage: crate::coordinator::collective::CollectiveStage) -> Self {
+        Self {
+            kind: RequestKind::Distill,
+            envelopes: Vec::new(),
+            collective: Some(stage),
+        }
+    }
 }
 
 /// Batching policy knobs.
@@ -116,7 +140,7 @@ impl BatchAssembler {
         if envelopes.is_empty() {
             return None;
         }
-        Some(Batch { kind, envelopes })
+        Some(Batch::new(kind, envelopes))
     }
 
     /// Next deadline at which `flush_expired` could release work.

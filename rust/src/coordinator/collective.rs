@@ -1,0 +1,582 @@
+//! Cross-lane collective execution: one ≥-threshold request fanned
+//! out over a typed group of executor lanes.
+//!
+//! Until this layer, a big distillation always ran whole on ONE lane —
+//! the sharded kernels split it across scoped core threads *inside*
+//! that executor, but the other lanes idled.  Here the batcher prices
+//! plan variants on the simulator ([`router::plan_cross_lane_group`]:
+//! single lane vs. accelerator subgroup vs. full fleet, weak links
+//! excluded by pricing) and, when a group wins, dispatches one
+//! [`CollectiveStage`] to each member lane's queue:
+//!
+//! * the first member to start claims the **solve** — the Eq. 5
+//!   spectral solve executed through the group-banded FFT entry points
+//!   ([`distillation::distill_fft_collective`]), recording the grouped
+//!   op stream the hwsim pool prices;
+//! * every member then computes its **band** of the Eq. 6 occlusion
+//!   sweep (blocks split by simulated member throughput), publishing
+//!   into the shared job;
+//! * the last member to finish performs the **barrier merge** — it
+//!   assembles the contribution matrix and answers the envelope.
+//!
+//! Dead lanes degrade the group instead of failing the request: a
+//! stage that cannot be dispatched (lane queue closed) or is dropped
+//! un-run re-bands its blocks onto the survivors
+//! ([`CollectiveJob`]'s orphan list) and the re-plan is counted in
+//! [`Metrics::record_replan`].  If NO member lane accepts, the
+//! envelope falls back to ordinary single-lane placement.
+
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::decomposition::SHARD_THRESHOLD;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::native::NATIVE_DISTILL_SIZES;
+use crate::coordinator::queue::{BoundedQueue, QueueError};
+use crate::coordinator::request::{Envelope, Request, RequestKind, Response};
+use crate::coordinator::router;
+use crate::hwsim::pool::DevicePool;
+use crate::hwsim::DeviceKind;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::shard::{self, Assignment, CollectivePlan};
+use crate::trace::{NativeEngine, Op};
+use crate::xai::distillation;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Shared state of one cross-lane request (one per collective
+/// dispatch, shared by the member stages via `Arc`).
+pub struct CollectiveJob {
+    n: usize,
+    block: usize,
+    x: Matrix,
+    y: Matrix,
+    /// Row bands for the group-banded solve transforms.
+    rows_plan: CollectivePlan,
+    metrics: Arc<Metrics>,
+    inner: Mutex<JobInner>,
+    cv: Condvar,
+}
+
+struct JobInner {
+    /// Fitted kernel, published by the solver member.
+    kernel: Option<Arc<Matrix>>,
+    /// Whether some member already claimed the solve.
+    solver_claimed: bool,
+    /// Set once dispatch finished and `expected` is authoritative.
+    sealed: bool,
+    /// Member stages that were successfully dispatched.
+    expected: usize,
+    /// Member stages that finished all their work.
+    finished: usize,
+    /// Block bands abandoned by undispatched/dropped members, awaiting
+    /// adoption by a survivor.
+    orphans: Vec<Assignment>,
+    /// Orphan bands claimed but not yet computed.
+    outstanding: usize,
+    /// Flat row-major per-block contribution norms.
+    contrib: Vec<f32>,
+    envelope: Option<Envelope>,
+    replied: bool,
+}
+
+impl std::fmt::Debug for CollectiveJob {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CollectiveJob")
+            .field("n", &self.n)
+            .field("block", &self.block)
+            .field("group", &self.rows_plan.members)
+            .finish()
+    }
+}
+
+impl CollectiveJob {
+    fn new(
+        n: usize,
+        block: usize,
+        x: Matrix,
+        y: Matrix,
+        rows_plan: CollectivePlan,
+        envelope: Envelope,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let blocks = (n / block) * (n / block);
+        Self {
+            n,
+            block,
+            x,
+            y,
+            rows_plan,
+            metrics,
+            inner: Mutex::new(JobInner {
+                kernel: None,
+                solver_claimed: false,
+                sealed: false,
+                expected: 0,
+                finished: 0,
+                orphans: Vec::new(),
+                outstanding: 0,
+                contrib: vec![0.0; blocks],
+                envelope: Some(envelope),
+                replied: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Blocks per row of the contribution grid.
+    fn grid_cols(&self) -> usize {
+        self.n / self.block
+    }
+
+    /// Publish the dispatch count; from here on the finish condition
+    /// is decidable and members may complete the barrier.
+    fn seal(&self, dispatched: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.sealed = true;
+        g.expected = dispatched;
+        self.try_finish(&mut g);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Recover the envelope (the zero-members-dispatched fallback).
+    fn take_envelope(&self) -> Option<Envelope> {
+        self.inner.lock().unwrap().envelope.take()
+    }
+
+    /// A member stage was dropped without running (undispatchable or
+    /// dead lane): its band re-plans onto the survivors.  If every
+    /// surviving member already passed the adoption point, the calling
+    /// thread computes the band itself so the barrier still closes.
+    fn abandon(&self, band: Assignment) {
+        self.metrics.record_replan();
+        let mut g = self.inner.lock().unwrap();
+        if g.sealed {
+            g.expected = g.expected.saturating_sub(1);
+        }
+        if band.len == 0 {
+            self.try_finish(&mut g);
+            drop(g);
+            self.cv.notify_all();
+            return;
+        }
+        let adopt_here = g.sealed
+            && g.finished == g.expected
+            && g.outstanding == 0
+            && g.kernel.is_some();
+        if adopt_here {
+            let kernel = g.kernel.clone().unwrap();
+            g.outstanding += 1;
+            drop(g);
+            let values = self.compute_band(&kernel, band);
+            let mut g = self.inner.lock().unwrap();
+            self.publish_band(&mut g, band, &values);
+            g.outstanding -= 1;
+            self.try_finish(&mut g);
+        } else {
+            g.orphans.push(band);
+            self.try_finish(&mut g);
+        }
+        self.cv.notify_all();
+    }
+
+    /// One member's full lifecycle: claim-or-await the solve, compute
+    /// the own band, adopt orphans, and close the barrier if last.
+    fn run_member(&self, band: Assignment) {
+        // first member to start claims the group-banded solve
+        let am_solver = {
+            let mut g = self.inner.lock().unwrap();
+            if g.solver_claimed {
+                false
+            } else {
+                g.solver_claimed = true;
+                true
+            }
+        };
+        let kernel = if am_solver {
+            let mut eng = NativeEngine::new_fft_baseline();
+            let k = Arc::new(distillation::distill_fft_collective(
+                &mut eng,
+                &self.x,
+                &self.y,
+                1e-9,
+                &self.rows_plan,
+            ));
+            let mut g = self.inner.lock().unwrap();
+            g.kernel = Some(k.clone());
+            drop(g);
+            self.cv.notify_all();
+            k
+        } else {
+            let mut g = self.inner.lock().unwrap();
+            while g.kernel.is_none() {
+                g = self.cv.wait(g).unwrap();
+            }
+            g.kernel.clone().unwrap()
+        };
+        // own band of the occlusion sweep
+        if band.len > 0 {
+            let values = self.compute_band(&kernel, band);
+            let mut g = self.inner.lock().unwrap();
+            self.publish_band(&mut g, band, &values);
+        }
+        // adopt bands of members that never made it
+        loop {
+            let adopted = {
+                let mut g = self.inner.lock().unwrap();
+                loop {
+                    if let Some(b) = g.orphans.pop() {
+                        g.outstanding += 1;
+                        break Some(b);
+                    }
+                    if g.sealed {
+                        break None;
+                    }
+                    // dispatch still in progress: more orphans may come
+                    g = self.cv.wait(g).unwrap();
+                }
+            };
+            match adopted {
+                Some(b) => {
+                    let values = self.compute_band(&kernel, b);
+                    let mut g = self.inner.lock().unwrap();
+                    self.publish_band(&mut g, b, &values);
+                    g.outstanding -= 1;
+                    self.try_finish(&mut g);
+                    drop(g);
+                    self.cv.notify_all();
+                }
+                None => break,
+            }
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.finished += 1;
+        self.try_finish(&mut g);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Per-block contribution norms for `band` (row-major block
+    /// indices) — the same masked-convolution math as
+    /// [`distillation::contribution_factors`].
+    fn compute_band(&self, kernel: &Matrix, band: Assignment) -> Vec<f32> {
+        let cols = self.grid_cols();
+        (band.start..band.start + band.len)
+            .map(|idx| {
+                let (br, bc) = (idx / cols, idx % cols);
+                let masked = Matrix::from_fn(self.n, self.n, |r, c| {
+                    if r / self.block == br && c / self.block == bc {
+                        self.x.get(r, c)
+                    } else {
+                        0.0
+                    }
+                });
+                let delta = crate::linalg::conv::circ_conv2(&masked, kernel);
+                delta
+                    .data
+                    .iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum::<f64>()
+                    .sqrt() as f32
+            })
+            .collect()
+    }
+
+    fn publish_band(&self, g: &mut JobInner, band: Assignment, values: &[f32]) {
+        g.contrib[band.start..band.start + band.len].copy_from_slice(values);
+    }
+
+    /// Barrier merge: when dispatch is sealed, every member finished,
+    /// and no orphan remains, the caller assembles the contribution
+    /// grid and answers the envelope.
+    fn try_finish(&self, g: &mut JobInner) {
+        let done = g.sealed
+            && g.finished >= g.expected
+            && g.outstanding == 0
+            && g.orphans.is_empty()
+            && g.kernel.is_some()
+            && !g.replied;
+        if !done {
+            return;
+        }
+        g.replied = true;
+        let Some(env) = g.envelope.take() else { return };
+        let kernel = g.kernel.as_ref().map(|k| (**k).clone()).unwrap();
+        let cols = self.grid_cols();
+        let contributions =
+            Matrix::from_vec(cols, cols, g.contrib.clone());
+        let latency = env.enqueued_at.elapsed();
+        self.metrics
+            .record_complete(RequestKind::Distill, latency, Duration::ZERO);
+        let _ = env.reply.send(Ok(Response::Distillation {
+            kernel,
+            contributions,
+        }));
+    }
+}
+
+/// One member lane's work item of a [`CollectiveJob`], carried by an
+/// otherwise-empty [`Batch`].  A stage dropped without running (its
+/// lane died) abandons its band back to the job — degradation is
+/// automatic, not a special case in every owner of a `Batch`.
+pub struct CollectiveStage {
+    job: Arc<CollectiveJob>,
+    band: Assignment,
+    ran: bool,
+}
+
+impl std::fmt::Debug for CollectiveStage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CollectiveStage")
+            .field("band", &(self.band.start, self.band.len))
+            .field("job", &self.job)
+            .finish()
+    }
+}
+
+impl CollectiveStage {
+    /// Execute this member's share on the calling executor thread.
+    pub fn run(mut self) {
+        self.ran = true;
+        self.job.clone().run_member(self.band);
+    }
+}
+
+impl Drop for CollectiveStage {
+    fn drop(&mut self) {
+        if !self.ran {
+            self.job.abandon(self.band);
+        }
+    }
+}
+
+/// Intercept a batch on the placement path: if it is a single
+/// ≥-threshold distillation and the simulator prices a cross-lane
+/// group under the best single lane, dispatch member stages to the
+/// group's lane queues and return `None`.  Otherwise (wrong kind,
+/// too small, no winning group, or no member lane accepted) give the
+/// batch back for ordinary placement.
+pub fn try_dispatch(
+    mut batch: Batch,
+    lane_kinds: &[DeviceKind],
+    alive: &mut [bool],
+    work: &[BoundedQueue<Batch>],
+    metrics: &Arc<Metrics>,
+) -> Option<Batch> {
+    if batch.kind != RequestKind::Distill
+        || batch.envelopes.len() != 1
+        || batch.collective.is_some()
+    {
+        return Some(batch);
+    }
+    let n = match &batch.envelopes[0].request {
+        Request::Distill { x, y }
+            if x.rows == x.cols
+                && (y.rows, y.cols) == (x.rows, x.cols)
+                && x.rows >= SHARD_THRESHOLD
+                && NATIVE_DISTILL_SIZES.contains(&x.rows) =>
+        {
+            x.rows
+        }
+        _ => return Some(batch),
+    };
+    let block = n / 4;
+    let mut backlogs = metrics.device_backlogs();
+    backlogs.resize(work.len(), 0);
+    for (b, &a) in backlogs.iter_mut().zip(alive.iter()) {
+        if !a {
+            *b = u64::MAX;
+        }
+    }
+    let choice = router::plan_cross_lane_group(lane_kinds, &backlogs, n, block)?;
+    let env = batch.envelopes.pop().expect("single-envelope batch");
+    let (x, y) = match &env.request {
+        Request::Distill { x, y } => (x.clone(), y.clone()),
+        _ => unreachable!("kind checked above"),
+    };
+    // Band plans from the SAME pool model the pricing used: rows of
+    // the solve transforms, blocks of the occlusion sweep, both split
+    // by simulated member throughput.
+    let pool = DevicePool::mixed(&choice.kinds);
+    let rows_plan = pool.plan_for(n, &Op::BatchedFft2 { b: n, m: 1, n });
+    let blocks = (n / block) * (n / block);
+    let weights = pool.stage_weights(
+        choice.kinds.len(),
+        &Op::BatchedFft2 { b: blocks, m: n, n },
+    );
+    let bands = shard::plan_splits_weighted(blocks, &weights);
+    let job = Arc::new(CollectiveJob::new(
+        n,
+        block,
+        x,
+        y,
+        rows_plan,
+        env,
+        metrics.clone(),
+    ));
+    let mut dispatched = 0usize;
+    for (member, &lane) in choice.lanes.iter().enumerate() {
+        let stage = CollectiveStage {
+            job: job.clone(),
+            band: bands[member],
+            ran: false,
+        };
+        metrics.record_device_enqueue(lane);
+        match work[lane].try_push(Batch::collective_stage(stage)) {
+            Ok(()) => dispatched += 1,
+            Err((b, QueueError::Full)) => match work[lane].push(b) {
+                Ok(()) => dispatched += 1,
+                Err(_) => {
+                    // closed while blocked: dropping `b` abandons the
+                    // band back to the job (degrade + re-plan)
+                    metrics.record_device_unenqueue(lane);
+                    alive[lane] = false;
+                }
+            },
+            Err((b, QueueError::Closed)) => {
+                metrics.record_device_unenqueue(lane);
+                alive[lane] = false;
+                drop(b);
+            }
+        }
+    }
+    if dispatched == 0 {
+        // every member lane refused: back to single-lane placement
+        let env = job.take_envelope()?;
+        return Some(Batch::new(RequestKind::Distill, vec![env]));
+    }
+    metrics.record_collective_dispatch();
+    job.seal(dispatched);
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn distill_env(n: usize) -> (Envelope, mpsc::Receiver<crate::error::Result<Response>>) {
+        let mut rng = Rng::new(7);
+        let (tx, rx) = mpsc::channel();
+        (
+            Envelope {
+                id: 1,
+                request: Request::Distill {
+                    x: Matrix::random(n, n, &mut rng),
+                    y: Matrix::random(n, n, &mut rng),
+                },
+                reply: tx,
+                enqueued_at: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    fn job_for(
+        n: usize,
+        members: &[DeviceKind],
+    ) -> (Arc<CollectiveJob>, mpsc::Receiver<crate::error::Result<Response>>) {
+        let (env, rx) = distill_env(n);
+        let (x, y) = match &env.request {
+            Request::Distill { x, y } => (x.clone(), y.clone()),
+            _ => unreachable!(),
+        };
+        let rows_plan = CollectivePlan::balanced(n, members);
+        let job = Arc::new(CollectiveJob::new(
+            n,
+            n / 4,
+            x,
+            y,
+            rows_plan,
+            env,
+            Arc::new(Metrics::with_devices(members.len())),
+        ));
+        (job, rx)
+    }
+
+    #[test]
+    fn members_band_the_sweep_and_the_last_one_merges() {
+        // Three members over 16 blocks; run on real threads so the
+        // solve hand-off and the barrier both exercise the condvar.
+        let members = [DeviceKind::Tpu, DeviceKind::Gpu, DeviceKind::Tpu];
+        let (job, rx) = job_for(32, &members);
+        let bands = shard::plan_splits(16, 3);
+        job.seal(3);
+        let handles: Vec<_> = bands
+            .iter()
+            .map(|&band| {
+                let j = job.clone();
+                std::thread::spawn(move || j.run_member(band))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let resp = rx.recv().unwrap().unwrap();
+        let Response::Distillation { kernel, contributions } = resp else {
+            panic!("wrong response kind");
+        };
+        // oracle: the unsharded native pipeline
+        let mut eng = NativeEngine::new_fft_baseline();
+        let (env2, _rx2) = distill_env(32);
+        let (x, y) = match &env2.request {
+            Request::Distill { x, y } => (x.clone(), y.clone()),
+            _ => unreachable!(),
+        };
+        let want_k = distillation::distill_fft(&mut eng, &x, &y, 1e-9);
+        assert!(kernel.max_abs_diff(&want_k) < 1e-4);
+        let want_c = distillation::contribution_factors(&mut eng, &x, &want_k, 8);
+        assert!(contributions.max_abs_diff(&want_c) < 1e-3);
+    }
+
+    #[test]
+    fn abandoned_bands_are_adopted_by_survivors() {
+        // Dispatch "fails" for member 2: its stage drops un-run, the
+        // band orphans, and the two real members absorb it — the
+        // request still completes whole.
+        let members = [DeviceKind::Tpu, DeviceKind::Tpu, DeviceKind::Tpu];
+        let (job, rx) = job_for(32, &members);
+        let bands = shard::plan_splits(16, 3);
+        let dead = CollectiveStage {
+            job: job.clone(),
+            band: bands[2],
+            ran: false,
+        };
+        drop(dead); // orphan + re-plan, pre-seal
+        job.seal(2);
+        let handles: Vec<_> = bands[..2]
+            .iter()
+            .map(|&band| {
+                let j = job.clone();
+                std::thread::spawn(move || j.run_member(band))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let resp = rx.recv().unwrap().unwrap();
+        let Response::Distillation { contributions, .. } = resp else {
+            panic!("wrong response kind");
+        };
+        // every block was computed (none left at the zero fill)
+        assert!(contributions.data.iter().all(|&v| v > 0.0));
+        assert_eq!(job.metrics.replans(), 1);
+        assert_eq!(job.metrics.completed(), 1);
+    }
+
+    #[test]
+    fn non_distill_and_small_batches_pass_through() {
+        let metrics = Arc::new(Metrics::with_devices(2));
+        let mut alive = vec![true, true];
+        let work: Vec<BoundedQueue<Batch>> = (0..2).map(|_| BoundedQueue::new(4)).collect();
+        let kinds = [DeviceKind::Tpu, DeviceKind::Gpu];
+        // below the shard threshold: handed back untouched
+        let (env, _rx) = distill_env(64);
+        let b = Batch::new(RequestKind::Distill, vec![env]);
+        let back = try_dispatch(b, &kinds, &mut alive, &work, &metrics)
+            .expect("64² must stay single-lane");
+        assert_eq!(back.envelopes.len(), 1);
+        assert_eq!(metrics.collective_jobs(), 0);
+    }
+}

@@ -62,6 +62,10 @@ pub struct Metrics {
     failed: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
+    /// cross-lane collective jobs dispatched (one per grouped request)
+    collective_jobs: AtomicU64,
+    /// collective re-plans: member stages degraded onto survivors
+    replans: AtomicU64,
     /// per-kind latency samples (seconds)
     latencies: Mutex<HashMap<RequestKind, Vec<f64>>>,
     /// per-kind queue-wait samples (seconds)
@@ -245,6 +249,27 @@ impl Metrics {
             .fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// A cross-lane collective job was dispatched to a lane group.
+    pub fn record_collective_dispatch(&self) {
+        self.collective_jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A collective member stage could not run on its lane and its
+    /// band re-planned onto the surviving group members.
+    pub fn record_replan(&self) {
+        self.replans.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Cross-lane collective jobs dispatched so far.
+    pub fn collective_jobs(&self) -> u64 {
+        self.collective_jobs.load(Ordering::Relaxed)
+    }
+
+    /// Collective re-plans (degraded member stages) so far.
+    pub fn replans(&self) -> u64 {
+        self.replans.load(Ordering::Relaxed)
+    }
+
     /// Requests submitted so far.
     pub fn submitted(&self) -> u64 {
         self.submitted.load(Ordering::Relaxed)
@@ -295,11 +320,14 @@ impl Metrics {
     /// Render a metrics report for all kinds with data.
     pub fn report(&self) -> String {
         let mut out = format!(
-            "requests: submitted={} completed={} failed={} | mean batch={:.2}\n",
+            "requests: submitted={} completed={} failed={} | mean batch={:.2} | \
+             collective jobs={} replans={}\n",
             self.submitted(),
             self.completed(),
             self.failed(),
-            self.mean_batch_size()
+            self.mean_batch_size(),
+            self.collective_jobs(),
+            self.replans(),
         );
         for kind in RequestKind::all() {
             if let Some(s) = self.latency_summary(kind) {

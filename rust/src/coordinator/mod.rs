@@ -32,8 +32,16 @@
 //! batcher packing compatible requests into one compiled executable
 //! call (e.g. 8 Shapley games into the `(2ⁿ×8)` structure-vector
 //! matmul).
+//!
+//! Since PR 6 one big request can use EVERY device: a single
+//! ≥-threshold distillation that the simulator prices cheaper on a
+//! typed collective group than on the best single lane is fanned out
+//! as member stages across the group's lane queues, with a barrier
+//! merge on the last member and pricing-driven weak-link exclusion
+//! ([`collective`]).
 
 pub mod batcher;
+pub mod collective;
 pub mod decomposition;
 pub mod metrics;
 pub mod native;

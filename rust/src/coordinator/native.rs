@@ -418,10 +418,9 @@ mod tests {
         use crate::coordinator::request::Envelope;
         use std::sync::mpsc;
         use std::time::Instant;
-        Batch {
+        Batch::new(
             kind,
-            envelopes: reqs
-                .into_iter()
+            reqs.into_iter()
                 .enumerate()
                 .map(|(i, request)| {
                     let (tx, _rx) = mpsc::channel();
@@ -433,7 +432,7 @@ mod tests {
                     }
                 })
                 .collect(),
-        }
+        )
     }
 
     #[test]

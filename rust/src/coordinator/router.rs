@@ -157,19 +157,38 @@ pub fn profile_for(kind: RequestKind, b: usize, n: usize) -> OpTrace {
             t.push(Op::BatchedFft2 { b, m: n, n });
         }
         RequestKind::Distill => {
-            let solve = workloads::distill_solve_trace_sched(n, workloads::Schedule::FftForm);
-            let contrib = workloads::contribution_trace_sched(
+            // Price ONE solve + occlusion sweep regardless of `b`: the
+            // batch's `b` members are `b` identical sub-traces, and a
+            // replay is a linear fold over ops, so materializing all of
+            // them costs exactly `b ×` one instance — a waste of ops on
+            // the batcher hot path (a 1024² distill profile is ~100 ops
+            // per instance).  The uniform `b ×` scale also cancels out
+            // of `place_affinity`'s cross-lane argmin, so placement
+            // decisions are unchanged; callers needing the absolute
+            // magnitude multiply by [`profile_repeat`].
+            t.extend(&workloads::distill_solve_trace_sched(
+                n,
+                workloads::Schedule::FftForm,
+            ));
+            t.extend(&workloads::contribution_trace_sched(
                 n,
                 (n / 4).max(1),
                 workloads::Schedule::FftForm,
-            );
-            for _ in 0..b {
-                t.extend(&solve);
-                t.extend(&contrib);
-            }
+            ));
         }
     }
     t
+}
+
+/// How many copies of [`profile_for`]'s trace one batch of `b`
+/// requests executes.  Per-request pipelines (distillation) run the
+/// profile once per member; the fused kinds already encode the batch
+/// dimension inside their ops.
+pub fn profile_repeat(kind: RequestKind, b: usize) -> u64 {
+    match kind {
+        RequestKind::Distill => b.max(1) as u64,
+        _ => 1,
+    }
 }
 
 /// Analytic op profile of one assembled batch.  Batches group by
@@ -284,6 +303,97 @@ pub fn place_affinity(kinds: &[DeviceKind], backlogs: &[u64], profile: &OpTrace)
         }
     }
     best
+}
+
+/// A priced cross-lane collective dispatch decision: which live lanes
+/// form the group, and the simulated times that justified it.
+#[derive(Debug, Clone)]
+pub struct GroupChoice {
+    /// Lane indices of the group members, in member order.
+    pub lanes: Vec<usize>,
+    /// Device class of each member (parallel to `lanes`).
+    pub kinds: Vec<DeviceKind>,
+    /// Simulated time of the collective plan on the chosen group.
+    pub group_s: f64,
+    /// Simulated time of the best single live lane (the status quo).
+    pub single_s: f64,
+}
+
+/// Plan a cross-lane collective group for one ≥-threshold distillation
+/// of edge `n` with occlusion block `block`: build the candidate set
+/// from the LIVE lanes (dead lanes carry `u64::MAX` backlog), let the
+/// pricing-driven planner ([`hwsim::pool::plan_collective_group`])
+/// drop weak-link members, and accept the group only if the simulator
+/// prices the grouped plan strictly under the best single live lane
+/// replaying the status-quo stream (pool-width sharded solve + the
+/// per-block unfused sweep).  Every variant — single lane, accelerator
+/// subgroup, full fleet — is priced on [`hwsim::pool::DevicePool`]
+/// replays of the same request; nothing is hardcoded by kind.
+/// `None` means "stay on one lane".
+pub fn plan_cross_lane_group(
+    kinds: &[DeviceKind],
+    backlogs: &[u64],
+    n: usize,
+    block: usize,
+) -> Option<GroupChoice> {
+    let m = kinds.len().min(backlogs.len());
+    let live: Vec<usize> = (0..m).filter(|&i| backlogs[i] != u64::MAX).collect();
+    if live.len() < 2 {
+        return None;
+    }
+    let live_kinds: Vec<DeviceKind> = live.iter().map(|&i| kinds[i]).collect();
+    let price = |members: &[DeviceKind]| {
+        hwsim::pool::DevicePool::mixed(members)
+            .replay_sharded(&workloads::distill_interpretation_trace_collective(
+                n, block, members,
+            ))
+            .time_s
+    };
+    let chosen = hwsim::pool::plan_collective_group(&live_kinds, &price);
+    if chosen.len() < 2 {
+        return None;
+    }
+    let group_s = price(&chosen);
+    // status quo: the request stays whole on one lane — the pool-width
+    // sharded solve plus the per-request occlusion sweep the native
+    // backend records today
+    let single_s = live_kinds
+        .iter()
+        .map(|&k| {
+            let mut t = workloads::distill_solve_trace_sharded(n, 1);
+            t.extend(&workloads::contribution_trace_sched(
+                n,
+                block,
+                workloads::Schedule::FftForm,
+            ));
+            hwsim::pool::DevicePool::mixed(&[k]).replay_sharded(&t).time_s
+        })
+        .fold(f64::INFINITY, f64::min);
+    if group_s >= single_s {
+        return None;
+    }
+    // Map each chosen member class onto a distinct live lane of that
+    // class, emptiest first, so the group lands on the least-loaded
+    // lanes of each kind.
+    let mut by_backlog = live.clone();
+    by_backlog.sort_by_key(|&i| (backlogs[i], i));
+    let mut used = vec![false; by_backlog.len()];
+    let mut lanes = Vec::with_capacity(chosen.len());
+    for &k in &chosen {
+        let slot = by_backlog
+            .iter()
+            .enumerate()
+            .find(|&(j, &i)| !used[j] && kinds[i] == k)
+            .map(|(j, &i)| (j, i))?;
+        used[slot.0] = true;
+        lanes.push(slot.1);
+    }
+    Some(GroupChoice {
+        lanes,
+        kinds: chosen,
+        group_s,
+        single_s,
+    })
 }
 
 /// Which placement policy a simulated sweep runs.
@@ -773,6 +883,60 @@ mod tests {
         // absurd Shapley n cannot overflow before validation rejects it
         let huge = profile_for(RequestKind::Shapley, 1, 4000);
         assert!(huge.total_flops() > 0);
+    }
+
+    #[test]
+    fn distill_profile_prices_one_instance_scaled_by_repeat() {
+        // The b-fold materialization is gone: a batch of 4 distills
+        // profiles the SAME op stream as a batch of 1, with the batch
+        // dimension carried by profile_repeat instead.  Placement is
+        // invariant (uniform scale cancels out of the argmin), and the
+        // batcher hot path stops building 4x the ops.
+        let one = profile_for(RequestKind::Distill, 1, 64);
+        let four = profile_for(RequestKind::Distill, 4, 64);
+        assert_eq!(one.ops, four.ops);
+        assert_eq!(profile_repeat(RequestKind::Distill, 4), 4);
+        assert_eq!(profile_repeat(RequestKind::Distill, 0), 1);
+        // fused kinds encode the batch inside their ops already
+        assert_eq!(profile_repeat(RequestKind::Classify, 32), 1);
+        assert_ne!(
+            profile_for(RequestKind::Classify, 1, 16).ops,
+            profile_for(RequestKind::Classify, 32, 16).ops
+        );
+    }
+
+    #[test]
+    fn cross_lane_planner_groups_accelerators_and_prices_out_weak_links() {
+        // On the idle mixed fleet a 1024² distill is worth a collective
+        // group: the planner must find one, price it under the best
+        // single lane, and exclude CPU-class members whose links and
+        // element-wise throughput drag the ring — by pricing, not fiat.
+        let kinds = mixed_lanes();
+        let backlogs = vec![0u64; kinds.len()];
+        let choice = plan_cross_lane_group(&kinds, &backlogs, 1024, 256)
+            .expect("1024² must plan a cross-lane group on the idle fleet");
+        assert!(choice.kinds.len() >= 2);
+        assert!(choice.group_s < choice.single_s);
+        assert!(
+            !choice.kinds.contains(&DeviceKind::Cpu),
+            "weak links must be priced out, got {:?}",
+            choice.kinds
+        );
+        // member lanes are distinct, live, and match the chosen classes
+        let mut seen = std::collections::HashSet::new();
+        for (&lane, &k) in choice.lanes.iter().zip(&choice.kinds) {
+            assert!(seen.insert(lane), "lane {lane} assigned twice");
+            assert_eq!(kinds[lane], k);
+        }
+    }
+
+    #[test]
+    fn cross_lane_planner_declines_without_two_live_lanes() {
+        let kinds = mixed_lanes();
+        let mut backlogs = vec![u64::MAX; kinds.len()];
+        assert!(plan_cross_lane_group(&kinds, &backlogs, 1024, 256).is_none());
+        backlogs[4] = 0; // one survivor is not a group
+        assert!(plan_cross_lane_group(&kinds, &backlogs, 1024, 256).is_none());
     }
 
     #[test]

@@ -105,6 +105,11 @@ pub struct CoordinatorStats {
     pub failed: u64,
     /// Mean requests per executed batch (batching efficiency).
     pub mean_batch_size: f64,
+    /// Cross-lane collective jobs dispatched (grouped big requests).
+    pub collective_jobs: u64,
+    /// Collective re-plans: member stages degraded onto survivors
+    /// after a lane died mid-dispatch.
+    pub replans: u64,
     /// One entry per executor device (kind, queue depth, batches, busy
     /// time).
     pub devices: Vec<DeviceStat>,
@@ -217,8 +222,21 @@ impl Coordinator {
             completed: self.metrics.completed(),
             failed: self.metrics.failed(),
             mean_batch_size: self.metrics.mean_batch_size(),
+            collective_jobs: self.metrics.collective_jobs(),
+            replans: self.metrics.replans(),
             devices,
             kinds,
+        }
+    }
+
+    /// Test hook: close lane `i`'s work queue, simulating an executor
+    /// whose device died.  The next dispatch that touches the lane
+    /// marks it dead; collective jobs degrade their group onto the
+    /// survivors (and count a re-plan in [`CoordinatorStats::replans`]).
+    #[doc(hidden)]
+    pub fn kill_lane(&self, i: usize) {
+        if let Some(q) = self.work.get(i) {
+            q.close();
         }
     }
 
@@ -270,6 +288,22 @@ fn batcher_loop(
     // Blocking on a full live lane is the backpressure.
     let mut alive: Vec<bool> = vec![true; work.len()];
     let mut place = |batch: Batch| -> std::result::Result<(), ()> {
+        // Cross-lane interception: a single ≥-threshold distillation
+        // may be worth a typed collective group over several lanes —
+        // the simulator prices the variants and, when a group wins,
+        // member stages go straight to the group's queues (dead lanes
+        // degrade the group and count a re-plan).  Everything else
+        // comes back for ordinary single-lane placement.
+        let batch = match crate::coordinator::collective::try_dispatch(
+            batch,
+            &lane_kinds,
+            &mut alive,
+            &work,
+            &metrics,
+        ) {
+            Some(b) => b,
+            None => return Ok(()),
+        };
         let profile = router::batch_profile(&batch);
         let mut batch = batch;
         loop {

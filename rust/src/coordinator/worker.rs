@@ -189,7 +189,18 @@ fn executor_loop(
             return;
         }
     };
-    while let Some(batch) = work.pop() {
+    while let Some(mut batch) = work.pop() {
+        if let Some(stage) = batch.collective.take() {
+            // Cross-lane collective member stage: this lane computes
+            // its band of a multi-lane job (the job's last member
+            // answers the envelope).  Counts toward lane busy time and
+            // backlog, not toward batching efficiency — the job's
+            // request completes once, on the merging member.
+            let started = Instant::now();
+            stage.run();
+            metrics.record_device_batch(id, started.elapsed());
+            continue;
+        }
         let n = batch.envelopes.len();
         metrics.record_batch(n);
         let started = Instant::now();

@@ -76,9 +76,12 @@ impl GpuSim {
             Op::BatchedFft2 { .. } => self.divergent_eff * 1.5,
             // sharded FFT bands behave like the batch grid: each band
             // is an independent block of lines keeping SMs resident
-            Op::ShardedFft2 { .. } => self.divergent_eff * 1.5,
+            Op::ShardedFft2 { .. } | Op::ShardedFft2Grouped { .. } => self.divergent_eff * 1.5,
             // collectives are pure data movement (bandwidth-bound)
-            Op::AllGather { .. } | Op::Scatter { .. } => self.elementwise_eff,
+            Op::AllGather { .. }
+            | Op::Scatter { .. }
+            | Op::AllGatherGrouped { .. }
+            | Op::ScatterGrouped { .. } => self.elementwise_eff,
             Op::Elementwise { .. } | Op::Reduce { .. } | Op::HadamardDiv { .. } => {
                 self.elementwise_eff
             }

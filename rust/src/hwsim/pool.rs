@@ -35,13 +35,31 @@
 //! The interconnect defaults follow the companion TPU deployment (Pan &
 //! Mishra 2021): ICI-class links for TPU pools, NVLink-class for GPU,
 //! shared-memory-class for CPU.
+//!
+//! # The collective plane (typed groups)
+//!
+//! The weakest-link [`Interconnect::ring_of`] collapse prices every
+//! ring step at the worst bandwidth *and* worst latency of the whole
+//! membership — honest for a ring that always includes its weakest
+//! member, but it leaves group *selection* with no basis: excluding the
+//! weak member cannot be priced because the collapse already threw the
+//! per-link structure away.  Grouped ops
+//! ([`Op::ShardedFft2Grouped`]-family) carry their membership, so the
+//! pool prices each ring step **per hop** over the member's actual link
+//! class ([`all_gather_group_s`] / [`scatter_group_s`]) and sizes each
+//! member's band from the member's own cost model.  On a homogeneous
+//! group the per-hop formulas degenerate to the legacy ring constants
+//! exactly.  [`plan_collective_group`] turns that pricing into a
+//! selection rule: greedily drop members while dropping them makes the
+//! priced time better (the honest PR 5 finding — a CPU-class link gated
+//! the 8×TPU merge ring — becomes a *decision*, not a footnote).
 
 use crate::hwsim::cpu::CpuSim;
 use crate::hwsim::device::Device;
 use crate::hwsim::gpu::GpuSim;
 use crate::hwsim::tpu::TpuSim;
 use crate::hwsim::DeviceKind;
-use crate::linalg::shard::{plan_splits_weighted, Assignment};
+use crate::linalg::shard::{plan_splits_weighted, Assignment, CollectivePlan};
 use crate::trace::{Op, OpTrace};
 
 /// Inter-device link model: one bidirectional ring.
@@ -103,6 +121,80 @@ impl Interconnect {
         let p = parts as f64;
         self.hop_latency_s + payload as f64 * (p - 1.0) / p / self.link_bw
     }
+}
+
+/// Ring all-gather of `payload` over a typed group's **per-member
+/// links**: `p−1` synchronized steps, each step gated by the slowest
+/// member hop *for that chunk size* (`latᵢ + (payload/p)/bwᵢ`), not by
+/// the global worst bandwidth and worst latency separately.  A
+/// homogeneous group degenerates to
+/// [`Interconnect::all_gather_s`] exactly:
+/// `(p−1)·lat + payload·(p−1)/p/bw`.
+pub fn all_gather_group_s(payload: u64, links: &[Interconnect]) -> f64 {
+    let p = links.len();
+    if p <= 1 {
+        return 0.0;
+    }
+    let chunk = payload as f64 / p as f64;
+    let step = links
+        .iter()
+        .map(|l| l.hop_latency_s + chunk / l.link_bw)
+        .fold(0.0, f64::max);
+    (p as f64 - 1.0) * step
+}
+
+/// Root-to-group scatter over per-member links: one (worst) hop of
+/// latency, then each non-root member's shard crosses **its own** link.
+/// Homogeneous groups degenerate to [`Interconnect::scatter_s`].
+pub fn scatter_group_s(payload: u64, links: &[Interconnect]) -> f64 {
+    let p = links.len();
+    if p <= 1 {
+        return 0.0;
+    }
+    let chunk = payload as f64 / p as f64;
+    let lat = links.iter().map(|l| l.hop_latency_s).fold(0.0, f64::max);
+    lat + links.iter().skip(1).map(|l| chunk / l.link_bw).sum::<f64>()
+}
+
+/// Link classes of a member list (helper for the grouped pricing).
+fn links_of(kinds: &[DeviceKind]) -> Vec<Interconnect> {
+    kinds.iter().map(|&k| Interconnect::for_kind(k)).collect()
+}
+
+/// Greedy weak-link exclusion: starting from the full candidate
+/// membership, repeatedly drop the member whose removal most improves
+/// the priced time, until no removal helps.  `price` must return the
+/// simulated time of executing the workload on the given membership
+/// (e.g. a grouped-trace replay) — the planner never hardcodes a kind
+/// preference, so whether a CPU-class member is worth its link is
+/// decided by the cost model, not by fiat.  Deterministic: ties keep
+/// the earliest removal candidate.
+pub fn plan_collective_group(
+    candidates: &[DeviceKind],
+    price: &dyn Fn(&[DeviceKind]) -> f64,
+) -> Vec<DeviceKind> {
+    assert!(!candidates.is_empty(), "planner needs candidates");
+    let mut best: Vec<DeviceKind> = candidates.to_vec();
+    let mut best_t = price(&best);
+    while best.len() > 1 {
+        let mut round: Option<(Vec<DeviceKind>, f64)> = None;
+        for i in 0..best.len() {
+            let mut trial = best.clone();
+            trial.remove(i);
+            let t = price(&trial);
+            if round.as_ref().map_or(true, |(_, rt)| t < *rt) {
+                round = Some((trial, t));
+            }
+        }
+        match round {
+            Some((g, t)) if t < best_t => {
+                best = g;
+                best_t = t;
+            }
+            _ => break,
+        }
+    }
+    best
 }
 
 /// Replay summary for one sharded trace on a pool.
@@ -281,6 +373,64 @@ impl DevicePool {
                     let p = parts.min(p_pool).max(1);
                     self.collective(&mut rep, self.interconnect.scatter_s(bytes, p));
                 }
+                // Typed-group ops price themselves from the membership
+                // they carry: per-member band weights from the member's
+                // own model, per-hop merges over the member's own link.
+                Op::ShardedFft2Grouped { b, m, n, group } => {
+                    let kinds = group.kinds();
+                    let links = links_of(kinds);
+                    if b <= 1 {
+                        // line-banded single transform: row stage,
+                        // merge, column stage, merge — grouped twin of
+                        // the ShardedFft2 arm above
+                        let merge = all_gather_group_s(2 * 4 * (m * n) as u64, &links);
+                        self.band_stage_group(&mut rep, m, kinds, |band| Op::BatchedFft2 {
+                            b: band,
+                            m: 1,
+                            n,
+                        });
+                        self.collective(&mut rep, merge);
+                        self.band_stage_group(&mut rep, n, kinds, |band| Op::BatchedFft2 {
+                            b: band,
+                            m: 1,
+                            n: m,
+                        });
+                        self.collective(&mut rep, merge);
+                    } else {
+                        // image-banded batch: each member transforms
+                        // whole images, so there is no interior merge
+                        self.band_stage_group(&mut rep, b, kinds, |band| Op::BatchedFft2 {
+                            b: band,
+                            m,
+                            n,
+                        });
+                    }
+                }
+                Op::ShardedMatmulGrouped { m, k, n, group } => {
+                    let kinds = group.kinds();
+                    let links = links_of(kinds);
+                    self.band_stage_group(&mut rep, m, kinds, |band| Op::Matmul {
+                        m: band,
+                        k,
+                        n,
+                    });
+                    self.collective(
+                        &mut rep,
+                        all_gather_group_s(4 * (m * n) as u64, &links),
+                    );
+                }
+                Op::AllGatherGrouped { bytes, group } => {
+                    self.collective(
+                        &mut rep,
+                        all_gather_group_s(bytes, &links_of(group.kinds())),
+                    );
+                }
+                Op::ScatterGrouped { bytes, group } => {
+                    self.collective(
+                        &mut rep,
+                        scatter_group_s(bytes, &links_of(group.kinds())),
+                    );
+                }
                 // undecomposed work runs on core 0
                 _ => {
                     let c = self.devices[0].op_cost(op, 1);
@@ -330,6 +480,62 @@ impl DevicePool {
         rep.time_s += stage_max;
         rep.compute_s += stage_max - overhead_max;
         rep.overhead_s += overhead_max;
+    }
+
+    /// One decomposed compute stage over a typed group: like
+    /// [`DevicePool::band_stage`], but members come from the op's own
+    /// membership (fresh single-core models per kind), so a grouped
+    /// trace prices identically on any pool.  Busy seconds land on the
+    /// pool slot of the same index (the benches build the pool to match
+    /// the group); members beyond the pool width attribute to the last
+    /// slot.
+    fn band_stage_group<F: Fn(usize) -> Op>(
+        &self,
+        rep: &mut PoolReport,
+        lines: usize,
+        kinds: &[DeviceKind],
+        band_op: F,
+    ) {
+        let devices: Vec<Box<dyn Device>> = kinds.iter().map(|&k| single_core(k)).collect();
+        let probe = band_op(lines.max(1));
+        let weights: Vec<f64> = devices
+            .iter()
+            .map(|d| {
+                let t = d.op_cost(&probe, 1).total();
+                if t > 0.0 {
+                    1.0 / t
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        let bands: Vec<Assignment> = plan_splits_weighted(lines, &weights);
+        let mut stage_max = 0.0f64;
+        let mut overhead_max = 0.0f64;
+        for (i, a) in bands.iter().enumerate() {
+            if a.len == 0 {
+                continue;
+            }
+            let op = band_op(a.len);
+            let c = devices[i].op_cost(&op, 1);
+            let slot = i.min(rep.per_device_busy_s.len().saturating_sub(1));
+            rep.per_device_busy_s[slot] += c.busy_s;
+            stage_max = stage_max.max(c.total());
+            overhead_max = overhead_max.max(c.overhead_s);
+        }
+        rep.time_s += stage_max;
+        rep.compute_s += stage_max - overhead_max;
+        rep.overhead_s += overhead_max;
+    }
+
+    /// The pool's throughput-weighted [`CollectivePlan`] for one
+    /// decomposed stage of `lines` lines probed with `probe` — the
+    /// productized form of the stage-weights → weighted-splits →
+    /// compact flow that the executors previously assembled by hand.
+    /// Members whose share rounds to zero are excluded from the plan.
+    pub fn plan_for(&self, lines: usize, probe: &Op) -> CollectivePlan {
+        let weights = self.stage_weights(self.len(), probe);
+        CollectivePlan::from_weights(lines, &self.kinds, &weights)
     }
 
     fn collective(&self, rep: &mut PoolReport, seconds: f64) {
@@ -550,6 +756,131 @@ mod tests {
             to_cpu > to_tpu,
             "mixed pool {mixed} should sit near the TPU pool {tpus}, not the CPU pool {cpus}"
         );
+    }
+
+    // ---- typed collective groups ---------------------------------------
+
+    #[test]
+    fn per_hop_ring_degenerates_to_legacy_on_homogeneous_groups() {
+        let link = Interconnect::for_kind(DeviceKind::Tpu);
+        for p in [2usize, 4, 8] {
+            let links = vec![link; p];
+            for payload in [4096u64, 8 * 1024 * 1024] {
+                let legacy = link.all_gather_s(payload, p);
+                let grouped = all_gather_group_s(payload, &links);
+                assert!(
+                    ((legacy - grouped) / legacy).abs() < 1e-12,
+                    "all_gather p={p}: {legacy} vs {grouped}"
+                );
+                let legacy = link.scatter_s(payload, p);
+                let grouped = scatter_group_s(payload, &links);
+                assert!(
+                    ((legacy - grouped) / legacy).abs() < 1e-12,
+                    "scatter p={p}: {legacy} vs {grouped}"
+                );
+            }
+        }
+        // degenerate single-member group moves nothing
+        assert_eq!(all_gather_group_s(1 << 20, &[link]), 0.0);
+        assert_eq!(scatter_group_s(1 << 20, &[link]), 0.0);
+    }
+
+    #[test]
+    fn per_hop_ring_prices_the_actual_slowest_step_not_the_collapse() {
+        // Mixed TPU+GPU ring: the legacy collapse charges every step
+        // the CPU-free ring never pays (worst bandwidth AND worst
+        // latency combined); per-hop pricing charges the true max step.
+        let tg = links_of(&[DeviceKind::Tpu, DeviceKind::Tpu, DeviceKind::Gpu]);
+        let collapsed = Interconnect::ring_of(&tg);
+        let payload = 8 * 1024 * 1024u64;
+        let per_hop = all_gather_group_s(payload, &tg);
+        let legacy = collapsed.all_gather_s(payload, 3);
+        // both price 2 steps; per-hop must never exceed the collapse
+        assert!(per_hop <= legacy + 1e-15, "{per_hop} vs {legacy}");
+        // and adding a CPU-class member makes every step dearer
+        let tgc = links_of(&[
+            DeviceKind::Tpu,
+            DeviceKind::Tpu,
+            DeviceKind::Gpu,
+            DeviceKind::Cpu,
+        ]);
+        let with_cpu = all_gather_group_s(payload, &tgc);
+        assert!(
+            with_cpu / 3.0 > per_hop / 2.0,
+            "per-step cost must rise with the weak link: {with_cpu} vs {per_hop}"
+        );
+    }
+
+    #[test]
+    fn grouped_replay_matches_legacy_on_homogeneous_pools() {
+        // A typed group of 8 TPUs must price exactly like the legacy
+        // parts-only sharded op on the 8×TPU pool — the grouped plane
+        // is a refinement, not a re-costing, of the homogeneous case.
+        use crate::trace::GroupSpec;
+        let pool = DevicePool::homogeneous(DeviceKind::Tpu, 8);
+        let legacy = pool.replay_sharded(&sharded_fft_trace(1024, 8)).time_s;
+        let mut t = OpTrace::new();
+        t.push(Op::ShardedFft2Grouped {
+            b: 1,
+            m: 1024,
+            n: 1024,
+            group: GroupSpec::new(&[DeviceKind::Tpu; 8]),
+        });
+        let grouped = pool.replay_sharded(&t).time_s;
+        assert!(
+            ((legacy - grouped) / legacy).abs() < 1e-12,
+            "legacy {legacy} vs grouped {grouped}"
+        );
+    }
+
+    #[test]
+    fn image_banded_batch_has_no_interior_merges() {
+        use crate::trace::GroupSpec;
+        let pool = DevicePool::mixed(&[DeviceKind::Gpu, DeviceKind::Gpu]);
+        let mut t = OpTrace::new();
+        t.push(Op::ShardedFft2Grouped {
+            b: 16,
+            m: 256,
+            n: 256,
+            group: GroupSpec::new(&[DeviceKind::Gpu, DeviceKind::Gpu]),
+        });
+        let rep = pool.replay_sharded(&t);
+        assert_eq!(rep.collective_s, 0.0, "image bands never merge interior state");
+        // both members transformed images
+        assert!(rep.per_device_busy_s.iter().all(|&b| b > 0.0));
+    }
+
+    #[test]
+    fn group_planner_excludes_weak_links_by_pricing() {
+        // The acceptance rule: given the mixed fleet as candidates and
+        // the real collective 1024² distill trace as the workload, the
+        // greedy planner must drop the CPU-class members (their link
+        // gates every merge hop and their bands gate no stage) — and it
+        // must do so because the replay says so, not because any code
+        // path names a kind.
+        use crate::xai::workloads::distill_interpretation_trace_collective;
+        let fleet = [
+            DeviceKind::Gpu,
+            DeviceKind::Gpu,
+            DeviceKind::Tpu,
+            DeviceKind::Tpu,
+            DeviceKind::Tpu,
+            DeviceKind::Tpu,
+            DeviceKind::Cpu,
+            DeviceKind::Cpu,
+        ];
+        let price = |members: &[DeviceKind]| -> f64 {
+            let trace = distill_interpretation_trace_collective(1024, 256, members);
+            DevicePool::mixed(members).replay_sharded(&trace).time_s
+        };
+        let chosen = plan_collective_group(&fleet, &price);
+        assert!(
+            !chosen.contains(&DeviceKind::Cpu),
+            "pricing must exclude CPU-class members: {chosen:?}"
+        );
+        assert!(chosen.len() >= 2, "a collective group survived: {chosen:?}");
+        // exclusion must actually pay: the chosen group beats the fleet
+        assert!(price(&chosen) < price(&fleet));
     }
 
     #[test]

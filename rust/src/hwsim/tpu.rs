@@ -84,6 +84,9 @@ impl TpuSim {
             // by the op's own part count (pool replay prices the
             // per-core bands — and their per-core fill/drain — itself).
             Op::ShardedMatmul { m, k, n, .. } => self.mxu_matmul_s(m, k, n),
+            // Grouped variant: identical full-problem convention; the
+            // pool's grouped replay bands it over the *group's* members.
+            Op::ShardedMatmulGrouped { m, k, n, .. } => self.mxu_matmul_s(m, k, n),
             // 4 real matmuls stream back-to-back through the array
             Op::CMatmul { m, k, n } => 4.0 * self.mxu_matmul_s(m, k, n),
             Op::Dft2Matmul { m, n } => {

@@ -836,6 +836,30 @@ pub fn process_sharded(
     plan.process_sharded(x, inverse, assignments)
 }
 
+/// Real-input 2-D FFT banded by a typed [`shard::CollectivePlan`]: the
+/// sharded entry point executes *any* plan — pool-width, weighted, or
+/// a degraded survivor group — since the collective plan's bands are
+/// ordinary [`Assignment`]s.
+pub fn rfft2_collective(
+    plan: &Fft2Plan,
+    x: &Matrix,
+    cplan: &shard::CollectivePlan,
+) -> CMatrix {
+    plan.rfft2_sharded(x, &cplan.bands)
+}
+
+/// In-place 2-D transform (forward or inverse) banded by a typed
+/// [`shard::CollectivePlan`] — free-function twin of
+/// [`rfft2_collective`] for the complex legs of the spectral pipelines.
+pub fn process_collective(
+    plan: &Fft2Plan,
+    x: &mut CMatrix,
+    inverse: bool,
+    cplan: &shard::CollectivePlan,
+) {
+    plan.process_sharded(x, inverse, &cplan.bands)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -19,6 +19,141 @@ pub struct Assignment {
     pub len: usize,
 }
 
+/// How a collective group merges its partial results.
+///
+/// Every interconnect class the fleet models exposes a bucket ring, so
+/// that is the only topology today; the enum exists so a plan can name
+/// its merge shape explicitly instead of the pool assuming one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeTopology {
+    /// Bucket ring: `p−1` steps, each moving `payload/p` per link.
+    Ring,
+}
+
+/// A typed collective group: *which* devices cooperate on one sharded
+/// request, the line band each member owns, and how the partial
+/// results merge.  This is the explicit form of what the device pool
+/// used to decide implicitly ("split over my own width, merge over my
+/// own ring") — the coordinator, the pool replay, and the FFT band
+/// executors all consume the same plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CollectivePlan {
+    /// Device class of each member, in band order (member `i` owns
+    /// `bands[i]`).
+    pub members: Vec<crate::hwsim::DeviceKind>,
+    /// Per-member contiguous line bands; a strict in-order partition of
+    /// `0..total` (zero-share members are dropped at construction).
+    pub bands: Vec<Assignment>,
+    /// Merge topology for the interior collectives.
+    pub merge: MergeTopology,
+}
+
+impl CollectivePlan {
+    /// Balanced plan: `total` lines split evenly over `members`.
+    /// Members beyond `total` are dropped (a 3-line problem over 8
+    /// devices is a 3-member group).
+    pub fn balanced(total: usize, members: &[crate::hwsim::DeviceKind]) -> Self {
+        assert!(!members.is_empty(), "a collective group needs members");
+        let bands = plan_splits(total.max(1), members.len());
+        let members = members[..bands.len().min(members.len())].to_vec();
+        Self {
+            members,
+            bands,
+            merge: MergeTopology::Ring,
+        }
+    }
+
+    /// Throughput-weighted plan: member `i` takes a band proportional
+    /// to `weights[i]` (largest-remainder apportionment, same contract
+    /// as [`plan_splits_weighted`]).  Members whose share rounds to
+    /// zero are dropped from the group.
+    pub fn from_weights(
+        total: usize,
+        members: &[crate::hwsim::DeviceKind],
+        weights: &[f64],
+    ) -> Self {
+        assert_eq!(members.len(), weights.len(), "one weight per member");
+        assert!(!members.is_empty(), "a collective group needs members");
+        let raw = plan_splits_weighted(total, weights);
+        let mut kept_members = Vec::new();
+        let mut bands = Vec::new();
+        for (kind, band) in members.iter().zip(&raw) {
+            if band.len > 0 {
+                kept_members.push(*kind);
+                bands.push(*band);
+            }
+        }
+        Self {
+            members: kept_members,
+            bands,
+            merge: MergeTopology::Ring,
+        }
+    }
+
+    /// Surviving members of the group (= band count).
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// True when every member was dropped (e.g. a degrade with no
+    /// survivors).
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Lines the plan covers (sum of band lengths).
+    pub fn total_lines(&self) -> usize {
+        self.bands.iter().map(|a| a.len).sum()
+    }
+
+    /// Assert the plan is a strict partition of `0..total` with one
+    /// band per member — the invariant every executor relies on.
+    pub fn validate(&self, total: usize) {
+        assert_eq!(
+            self.members.len(),
+            self.bands.len(),
+            "one band per member"
+        );
+        validate_partition(&self.bands, total);
+    }
+
+    /// Link traffic one ring merge of a `payload`-byte result costs:
+    /// `payload·(p−1)` bytes cross the links in total, independent of
+    /// how unevenly the bands are sized (conservation — the property
+    /// test pins this).
+    pub fn merge_bytes(&self, payload: u64) -> u64 {
+        match self.merge {
+            MergeTopology::Ring => payload * self.len().saturating_sub(1) as u64,
+        }
+    }
+
+    /// Re-plan after losing members: survivors (marked `true` in
+    /// `alive`, indexed like `members`) re-split `total` lines in
+    /// proportion to their old band sizes, preserving the original
+    /// throughput weighting.  Returns `None` when nobody survives.
+    pub fn degrade(&self, total: usize, alive: &[bool]) -> Option<Self> {
+        assert_eq!(alive.len(), self.members.len(), "one flag per member");
+        let members: Vec<_> = self
+            .members
+            .iter()
+            .zip(alive)
+            .filter(|(_, &a)| a)
+            .map(|(k, _)| *k)
+            .collect();
+        if members.is_empty() {
+            return None;
+        }
+        let weights: Vec<f64> = self
+            .bands
+            .iter()
+            .zip(alive)
+            .filter(|(_, &a)| a)
+            .map(|(b, _)| b.len.max(1) as f64)
+            .collect();
+        Some(Self::from_weights(total, &members, &weights))
+    }
+}
+
 /// Split `total` items over `p` workers as evenly as possible
 /// (Algorithm 1's "Split M/p rows from x").  Workers beyond `total`
 /// get no assignment; every returned band is non-empty, contiguous,
@@ -226,6 +361,57 @@ mod tests {
         let plan = plan_splits_weighted(100, &[1000.0, 1.0, 1.0]);
         assert!(plan[0].len >= 98, "{plan:?}");
         assert_eq!(plan.iter().map(|a| a.len).sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn collective_plans_partition_and_conserve_merge_bytes() {
+        use crate::hwsim::DeviceKind;
+        // The satellite property: every constructed plan passes
+        // validate_partition, and ring merge traffic is exactly
+        // payload·(p−1) regardless of band skew.
+        check("collective plan invariants", 40, |rng: &mut Rng| {
+            let total = rng.int_range(1, 400) as usize;
+            let p = rng.int_range(1, 8) as usize;
+            let members: Vec<DeviceKind> = (0..p)
+                .map(|_| match rng.below(3) {
+                    0 => DeviceKind::Cpu,
+                    1 => DeviceKind::Gpu,
+                    _ => DeviceKind::Tpu,
+                })
+                .collect();
+            let plan = if rng.below(2) == 0 {
+                CollectivePlan::balanced(total, &members)
+            } else {
+                let weights: Vec<f64> = (0..p)
+                    .map(|_| rng.int_range(1, 1000) as f64 / 10.0)
+                    .collect();
+                CollectivePlan::from_weights(total, &members, &weights)
+            };
+            plan.validate(total);
+            assert_eq!(plan.total_lines(), total);
+            let payload = rng.int_range(1, 1 << 20) as u64;
+            assert_eq!(
+                plan.merge_bytes(payload),
+                payload * (plan.len() as u64 - 1),
+                "ring merge traffic must conserve payload·(p−1)"
+            );
+        });
+    }
+
+    #[test]
+    fn degraded_plans_rebalance_over_survivors() {
+        use crate::hwsim::DeviceKind;
+        let members = [DeviceKind::Tpu, DeviceKind::Gpu, DeviceKind::Cpu];
+        let plan = CollectivePlan::from_weights(300, &members, &[10.0, 80.0, 10.0]);
+        plan.validate(300);
+        // lose the GPU member: survivors re-split all 300 lines
+        let degraded = plan.degrade(300, &[true, false, true]).unwrap();
+        degraded.validate(300);
+        assert_eq!(degraded.members, vec![DeviceKind::Tpu, DeviceKind::Cpu]);
+        // survivors keep their *relative* weighting (equal here)
+        assert!(degraded.bands.iter().all(|b| b.len == 150));
+        // nobody left: no plan
+        assert!(plan.degrade(300, &[false, false, false]).is_none());
     }
 
     #[test]

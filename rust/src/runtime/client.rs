@@ -166,6 +166,45 @@ pub fn cnn_fwd_variant(b: usize) -> String {
     format!("cnn_fwd_b{b}")
 }
 
+/// Helper: the band-sharded distillation executable for a square n×n
+/// problem split over `parts` cores (the compiled counterpart of the
+/// native `ShardedFft2` plan — `aot.py` lowers one program per
+/// (size, width) pair the fleet serves).
+pub fn distill_sharded_variant(n: usize, parts: usize) -> String {
+    format!("distill_sharded_{n}x{n}_p{parts}")
+}
+
+/// Helper: the cross-lane collective distillation executable for a
+/// square n×n problem on a typed group — member device classes encode
+/// in band order as one letter each (`t`/`g`/`c`), so
+/// `[Tpu,Tpu,Gpu]` compiles as `distill_collective_1024x1024_ttg`.
+pub fn distill_collective_variant(n: usize, members: &[crate::hwsim::DeviceKind]) -> String {
+    use crate::hwsim::DeviceKind;
+    let tags: String = members
+        .iter()
+        .map(|k| match k {
+            DeviceKind::Tpu => 't',
+            DeviceKind::Gpu => 'g',
+            DeviceKind::Cpu => 'c',
+        })
+        .collect();
+    format!("distill_collective_{n}x{n}_{tags}")
+}
+
+/// Pick the distillation artifact for a square n×n request served by a
+/// `parts`-wide lane: at or above the coordinator's
+/// [`crate::coordinator::decomposition::SHARD_THRESHOLD`] a multi-core
+/// lane prefers the sharded executable; everything else runs the
+/// whole-matrix variant.  Pure name selection — the registry reports
+/// whether the variant was actually compiled.
+pub fn select_distill_variant(n: usize, parts: usize) -> String {
+    if parts > 1 && n >= crate::coordinator::decomposition::SHARD_THRESHOLD {
+        distill_sharded_variant(n, parts)
+    } else {
+        distill_variant(n)
+    }
+}
+
 /// Validate shape helpers without a live registry.
 #[cfg(test)]
 mod tests {
@@ -176,6 +215,23 @@ mod tests {
         assert_eq!(distill_variant(16), "distill_16x16");
         assert_eq!(shapley_variant(6, 8), "shapley_n6_b8");
         assert_eq!(cnn_fwd_variant(32), "cnn_fwd_b32");
+        assert_eq!(distill_sharded_variant(1024, 4), "distill_sharded_1024x1024_p4");
+        use crate::hwsim::DeviceKind::{Cpu, Gpu, Tpu};
+        assert_eq!(
+            distill_collective_variant(1024, &[Tpu, Tpu, Gpu, Cpu]),
+            "distill_collective_1024x1024_ttgc"
+        );
+    }
+
+    #[test]
+    fn sharded_selection_respects_threshold_and_width() {
+        // Below SHARD_THRESHOLD (or on a 1-wide lane) the whole-matrix
+        // executable serves; at/above it a multi-core lane prefers the
+        // band-sharded program.
+        assert_eq!(select_distill_variant(64, 8), "distill_64x64");
+        assert_eq!(select_distill_variant(1024, 1), "distill_1024x1024");
+        assert_eq!(select_distill_variant(256, 4), "distill_sharded_256x256_p4");
+        assert_eq!(select_distill_variant(1024, 8), "distill_sharded_1024x1024_p8");
     }
 
     #[test]

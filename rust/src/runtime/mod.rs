@@ -12,5 +12,8 @@ pub mod client;
 pub mod manifest;
 pub mod pjrt_stub;
 
-pub use client::{ArtifactRegistry, Executable};
+pub use client::{
+    distill_collective_variant, distill_sharded_variant, select_distill_variant,
+    ArtifactRegistry, Executable,
+};
 pub use manifest::{ArtifactSpec, Manifest, Shape};

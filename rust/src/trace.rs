@@ -55,7 +55,34 @@
 //! * [`Op::Scatter`]`{ bytes, parts }` — the root hands each core its
 //!   disjoint shard; `bytes()` is the traffic leaving the root,
 //!   `bytes·(parts−1)/parts`.  Zero FLOPs.
+//!
+//! # Grouped-op conventions (typed collective groups)
+//!
+//! The parts-only sharded ops above describe *how many* cores split the
+//! work; the cross-lane collective plane also needs *which* devices —
+//! their classes fix both the band weights and the link classes every
+//! merge hop crosses.  Grouped ops carry that membership as a
+//! [`GroupSpec`]:
+//!
+//! * [`Op::ShardedFft2Grouped`]`{ b, m, n, group }` — `b = 1`: one 2-D
+//!   transform with its row/column line bands split across the group
+//!   (the grouped form of [`Op::ShardedFft2`], two interior ring
+//!   merges priced per hop over the members' links).  `b > 1`: `b`
+//!   whole same-shape transforms banded *by image* across the group —
+//!   each transform lives wholly on one member, so there are **no**
+//!   interior merges (the contribution sweep's shape).  FLOPs and
+//!   bytes are `b×` the single [`Op::Fft2`] in both regimes:
+//!   decomposition conserves arithmetic.
+//! * [`Op::ShardedMatmulGrouped`]`{ m, k, n, group }` — row-banded
+//!   matmul across the group, right operand replicated per member
+//!   (bytes `f·(m·k + p·k·n + m·n)`), partials ring-merged.
+//! * [`Op::AllGatherGrouped`]`{ bytes, group }` /
+//!   [`Op::ScatterGrouped`]`{ bytes, group }` — the explicit
+//!   collectives, same total-traffic conventions as the parts-only
+//!   forms; the pool prices each ring hop over the member's actual
+//!   link class instead of collapsing to the weakest link.
 
+use crate::hwsim::DeviceKind;
 use crate::linalg::conv;
 use crate::linalg::dft;
 use crate::linalg::fft;
@@ -63,6 +90,55 @@ use crate::linalg::matrix::{CMatrix, Matrix};
 use crate::linalg::shard;
 use crate::linalg::solve::Lu;
 use crate::linalg::vandermonde;
+
+/// Most members a typed collective group embedded in an [`Op`] can
+/// carry — the fleet's widest pool.  Fixed so [`GroupSpec`] (and thus
+/// [`Op`]) stays `Copy`.
+pub const MAX_GROUP: usize = 8;
+
+/// The device-class membership of a collective group, as carried by
+/// grouped ops.  Stores up to [`MAX_GROUP`] member kinds inline (unused
+/// slots are padding and never observable through [`GroupSpec::kinds`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupSpec {
+    len: u8,
+    kinds: [DeviceKind; MAX_GROUP],
+}
+
+impl GroupSpec {
+    /// Build a spec from member kinds in band order.
+    ///
+    /// # Panics
+    /// If `members` is empty or longer than [`MAX_GROUP`].
+    pub fn new(members: &[DeviceKind]) -> Self {
+        assert!(
+            !members.is_empty() && members.len() <= MAX_GROUP,
+            "a collective group holds 1..={MAX_GROUP} members, got {}",
+            members.len()
+        );
+        let mut kinds = [DeviceKind::Tpu; MAX_GROUP];
+        kinds[..members.len()].copy_from_slice(members);
+        Self {
+            len: members.len() as u8,
+            kinds,
+        }
+    }
+
+    /// Member count.
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    /// Always false — an empty group cannot be constructed.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Member kinds in band order.
+    pub fn kinds(&self) -> &[DeviceKind] {
+        &self.kinds[..self.len as usize]
+    }
+}
 
 /// One primitive matrix operation with its problem size.
 ///
@@ -164,6 +240,48 @@ pub enum Op {
         /// Pool size (shard count).
         parts: usize,
     },
+    /// 2-D FFT work banded across a typed collective group: `b = 1`
+    /// line-bands one transform (two interior ring merges); `b > 1`
+    /// image-bands `b` whole transforms (no interior merges).  See the
+    /// module docs for the conventions.
+    ShardedFft2Grouped {
+        /// Same-shape transforms in the dispatch (1 = line-banded).
+        b: usize,
+        /// Rows of each transform.
+        m: usize,
+        /// Columns of each transform.
+        n: usize,
+        /// The cooperating devices (kinds fix bands and link classes).
+        group: GroupSpec,
+    },
+    /// Row-banded real matmul across a typed collective group, right
+    /// operand replicated per member, partials ring-merged.
+    ShardedMatmulGrouped {
+        /// Rows of the left operand (banded across members).
+        m: usize,
+        /// Shared inner (reduction) dimension.
+        k: usize,
+        /// Columns of the replicated right operand.
+        n: usize,
+        /// The cooperating devices.
+        group: GroupSpec,
+    },
+    /// Ring all-gather of a `bytes` payload across a typed group, each
+    /// hop priced on the link class it actually crosses.
+    AllGatherGrouped {
+        /// Payload every member ends up holding.
+        bytes: u64,
+        /// The cooperating devices.
+        group: GroupSpec,
+    },
+    /// Root-to-group scatter of disjoint shards of `bytes` over the
+    /// members' own links.
+    ScatterGrouped {
+        /// Total payload being scattered from the root member.
+        bytes: u64,
+        /// The cooperating devices.
+        group: GroupSpec,
+    },
     /// Element-wise complex Hadamard division over m×n.
     HadamardDiv {
         /// Rows of the operand.
@@ -234,8 +352,15 @@ impl Op {
             // different cores
             Op::ShardedFft2 { m, n, .. } => Op::Fft2 { m, n }.flops(),
             Op::ShardedMatmul { m, k, n, .. } => Op::Matmul { m, k, n }.flops(),
+            Op::ShardedFft2Grouped { b, m, n, .. } => {
+                b as u64 * Op::Fft2 { m, n }.flops()
+            }
+            Op::ShardedMatmulGrouped { m, k, n, .. } => Op::Matmul { m, k, n }.flops(),
             // collectives move data, they don't compute
-            Op::AllGather { .. } | Op::Scatter { .. } => 0,
+            Op::AllGather { .. }
+            | Op::Scatter { .. }
+            | Op::AllGatherGrouped { .. }
+            | Op::ScatterGrouped { .. } => 0,
             // conj-multiply (6) + |x|² (3) + 2 divides (2) per element
             Op::HadamardDiv { m, n } => 11 * (m * n) as u64,
             Op::Elementwise { elems } => elems as u64,
@@ -270,15 +395,27 @@ impl Op {
             // each element still touched once per stage on whichever
             // core holds its band; merge traffic priced separately
             Op::ShardedFft2 { m, n, .. } => Op::Fft2 { m, n }.bytes(),
+            Op::ShardedFft2Grouped { b, m, n, .. } => {
+                b as u64 * Op::Fft2 { m, n }.bytes()
+            }
             // A banded once; B streamed once per core; C written once
             Op::ShardedMatmul { m, k, n, parts } => {
                 f * (m * k + parts * k * n + m * n) as u64
             }
+            Op::ShardedMatmulGrouped { m, k, n, group } => {
+                f * (m * k + group.len() * k * n + m * n) as u64
+            }
             // ring all-gather: bytes·(p−1) transit the links in total
             Op::AllGather { bytes, parts } => bytes * parts.saturating_sub(1) as u64,
+            Op::AllGatherGrouped { bytes, group } => {
+                bytes * group.len().saturating_sub(1) as u64
+            }
             // scatter: everything but the root's own shard leaves it
             Op::Scatter { bytes, parts } => {
                 bytes * parts.saturating_sub(1) as u64 / (parts.max(1) as u64)
+            }
+            Op::ScatterGrouped { bytes, group } => {
+                bytes * group.len().saturating_sub(1) as u64 / group.len() as u64
             }
             Op::HadamardDiv { m, n } => 6 * f * (m * n) as u64,
             Op::Elementwise { elems } => 2 * f * elems as u64,
@@ -302,8 +439,13 @@ impl Op {
             Op::Dft2Matmul { m, n } => 2 * f * (m * n) as u64,
             Op::Fft2 { m, n } => 2 * f * (m * n) as u64,
             Op::ShardedFft2 { m, n, .. } => 2 * f * (m * n) as u64,
+            Op::ShardedFft2Grouped { b, m, n, .. } => 2 * f * (b * m * n) as u64,
             Op::ShardedMatmul { m, n, .. } => f * (m * n) as u64,
-            Op::AllGather { bytes, .. } | Op::Scatter { bytes, .. } => bytes,
+            Op::ShardedMatmulGrouped { m, n, .. } => f * (m * n) as u64,
+            Op::AllGather { bytes, .. }
+            | Op::Scatter { bytes, .. }
+            | Op::AllGatherGrouped { bytes, .. }
+            | Op::ScatterGrouped { bytes, .. } => bytes,
             Op::HadamardDiv { m, n } => 2 * f * (m * n) as u64,
             Op::Elementwise { elems } => f * elems as u64,
             Op::Reduce { .. } => f,
@@ -323,6 +465,7 @@ impl Op {
             Op::Matmul { .. }
                 | Op::BatchedMatmul { .. }
                 | Op::ShardedMatmul { .. }
+                | Op::ShardedMatmulGrouped { .. }
                 | Op::CMatmul { .. }
                 | Op::Dft2Matmul { .. }
                 | Op::LuSolve { .. }
@@ -337,6 +480,10 @@ impl Op {
     pub fn shard_parts(&self) -> Option<usize> {
         match *self {
             Op::ShardedFft2 { parts, .. } | Op::ShardedMatmul { parts, .. } => Some(parts),
+            Op::ShardedFft2Grouped { group, .. }
+            | Op::ShardedMatmulGrouped { group, .. }
+            | Op::AllGatherGrouped { group, .. }
+            | Op::ScatterGrouped { group, .. } => Some(group.len()),
             _ => None,
         }
     }
@@ -344,7 +491,24 @@ impl Op {
     /// Pure data-movement collectives (zero FLOPs, priced on the
     /// interconnect by [`crate::hwsim::pool::DevicePool`]).
     pub fn is_collective(&self) -> bool {
-        matches!(self, Op::AllGather { .. } | Op::Scatter { .. })
+        matches!(
+            self,
+            Op::AllGather { .. }
+                | Op::Scatter { .. }
+                | Op::AllGatherGrouped { .. }
+                | Op::ScatterGrouped { .. }
+        )
+    }
+
+    /// For grouped ops, the typed collective group they execute on.
+    pub fn group(&self) -> Option<GroupSpec> {
+        match *self {
+            Op::ShardedFft2Grouped { group, .. }
+            | Op::ShardedMatmulGrouped { group, .. }
+            | Op::AllGatherGrouped { group, .. }
+            | Op::ScatterGrouped { group, .. } => Some(group),
+            _ => None,
+        }
     }
 }
 
@@ -551,6 +715,65 @@ impl NativeEngine {
     /// Record the explicit result all-gather back to the root.
     pub fn record_all_gather(&mut self, bytes: u64, parts: usize) {
         self.trace.push(Op::AllGather { bytes, parts });
+    }
+
+    /// Real-input forward 2-D FFT banded across a typed collective
+    /// group's members (one line band per member, per the plan).
+    /// Records [`Op::ShardedFft2Grouped`] with `b = 1`.
+    pub fn rfft2_collective(
+        &mut self,
+        x: &Matrix,
+        plan: &shard::CollectivePlan,
+    ) -> CMatrix {
+        self.trace.push(Op::ShardedFft2Grouped {
+            b: 1,
+            m: x.rows,
+            n: x.cols,
+            group: GroupSpec::new(&plan.members),
+        });
+        let fplan = fft::plan2(x.rows, x.cols);
+        fft::rfft2_sharded(&fplan, x, &plan.bands)
+    }
+
+    /// In-place 2-D transform (forward or inverse) banded across a
+    /// typed collective group.  Records [`Op::ShardedFft2Grouped`].
+    pub fn fft2_collective_inplace(
+        &mut self,
+        x: &mut CMatrix,
+        inverse: bool,
+        plan: &shard::CollectivePlan,
+    ) {
+        self.trace.push(Op::ShardedFft2Grouped {
+            b: 1,
+            m: x.rows,
+            n: x.cols,
+            group: GroupSpec::new(&plan.members),
+        });
+        let fplan = fft::plan2(x.rows, x.cols);
+        fft::process_sharded(&fplan, x, inverse, &plan.bands);
+    }
+
+    /// Record `b` whole transforms image-banded across the group (the
+    /// contribution sweep's fused shape; compute happens at the call
+    /// site through the shared plan).
+    pub fn record_collective_batch_fft2(
+        &mut self,
+        b: usize,
+        m: usize,
+        n: usize,
+        group: GroupSpec,
+    ) {
+        self.trace.push(Op::ShardedFft2Grouped { b, m, n, group });
+    }
+
+    /// Record the input scatter over a typed group's own links.
+    pub fn record_scatter_grouped(&mut self, bytes: u64, group: GroupSpec) {
+        self.trace.push(Op::ScatterGrouped { bytes, group });
+    }
+
+    /// Record the result all-gather over a typed group's own links.
+    pub fn record_all_gather_grouped(&mut self, bytes: u64, group: GroupSpec) {
+        self.trace.push(Op::AllGatherGrouped { bytes, group });
     }
 
     /// Complex matmul, recorded as [`Op::CMatmul`].
@@ -850,6 +1073,69 @@ mod tests {
         // degenerate single-core collectives are free
         assert_eq!(Op::AllGather { bytes: 1000, parts: 1 }.bytes(), 0);
         assert_eq!(Op::Scatter { bytes: 1000, parts: 1 }.bytes(), 0);
+    }
+
+    #[test]
+    fn grouped_ops_conserve_arithmetic_and_carry_membership() {
+        let group = GroupSpec::new(&[DeviceKind::Tpu, DeviceKind::Gpu, DeviceKind::Cpu]);
+        assert_eq!(group.len(), 3);
+        assert_eq!(
+            group.kinds(),
+            &[DeviceKind::Tpu, DeviceKind::Gpu, DeviceKind::Cpu]
+        );
+        // line-banded: identical flop/byte conventions to ShardedFft2
+        let single = Op::ShardedFft2 { m: 64, n: 48, parts: 3 };
+        let grouped = Op::ShardedFft2Grouped { b: 1, m: 64, n: 48, group };
+        assert_eq!(grouped.flops(), single.flops());
+        assert_eq!(grouped.bytes(), single.bytes());
+        assert_eq!(grouped.output_bytes(), single.output_bytes());
+        assert_eq!(grouped.shard_parts(), Some(3));
+        assert_eq!(grouped.group(), Some(group));
+        assert!(!grouped.is_matrix_op());
+        // image-banded: b× the single transform, still no merge folded in
+        let batch = Op::ShardedFft2Grouped { b: 5, m: 64, n: 48, group };
+        assert_eq!(batch.flops(), 5 * Op::Fft2 { m: 64, n: 48 }.flops());
+        assert_eq!(batch.bytes(), 5 * Op::Fft2 { m: 64, n: 48 }.bytes());
+        // grouped matmul matches the parts-only convention at p = len
+        let mm = Op::ShardedMatmul { m: 64, k: 32, n: 16, parts: 3 };
+        let mmg = Op::ShardedMatmulGrouped { m: 64, k: 32, n: 16, group };
+        assert_eq!(mmg.flops(), mm.flops());
+        assert_eq!(mmg.bytes(), mm.bytes());
+        assert!(mmg.is_matrix_op());
+        // grouped collectives: same total-traffic conventions
+        let ag = Op::AllGatherGrouped { bytes: 1000, group };
+        assert_eq!(ag.flops(), 0);
+        assert_eq!(ag.bytes(), 2000);
+        assert!(ag.is_collective());
+        let sc = Op::ScatterGrouped { bytes: 999, group };
+        assert_eq!(sc.bytes(), 999 * 2 / 3);
+        assert!(sc.is_collective());
+    }
+
+    #[test]
+    fn engine_collective_fft_matches_unsharded_and_records_group() {
+        use crate::hwsim::DeviceKind;
+        use crate::linalg::shard::CollectivePlan;
+        let mut rng = Rng::new(13);
+        let x = Matrix::random(24, 16, &mut rng);
+        let plan = CollectivePlan::from_weights(
+            24,
+            &[DeviceKind::Tpu, DeviceKind::Gpu],
+            &[3.0, 1.0],
+        );
+        let mut eng = NativeEngine::new_fft_baseline();
+        let got = eng.rfft2_collective(&x, &plan);
+        assert!(got.max_abs_diff(&fft::rfft2(&x)) < 1e-4);
+        match eng.trace.ops[0] {
+            Op::ShardedFft2Grouped { b: 1, m: 24, n: 16, group } => {
+                assert_eq!(group.kinds(), &[DeviceKind::Tpu, DeviceKind::Gpu]);
+            }
+            ref other => panic!("unexpected op {other:?}"),
+        }
+        let mut back = got;
+        eng.fft2_collective_inplace(&mut back, true, &plan);
+        assert!(back.real().max_abs_diff(&x) < 1e-4);
+        assert_eq!(eng.trace.ops.len(), 2);
     }
 
     #[test]

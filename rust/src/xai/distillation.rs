@@ -63,6 +63,40 @@ pub fn distill_fft_sharded(
     scaled.real()
 }
 
+/// Eq. 5 executed by a **typed collective group**: the grouped twin of
+/// [`distill_fft_sharded`].  The three 2-D transforms band their lines
+/// per the plan's weighted assignments
+/// ([`NativeEngine::rfft2_collective`] /
+/// [`NativeEngine::fft2_collective_inplace`]), and the input scatter
+/// and kernel all-gather are recorded as grouped collectives carrying
+/// the membership — the op stream
+/// [`crate::xai::workloads::distill_solve_trace_collective`] builds
+/// analytically.  Numerically bit-close (≤ 1e-4) to [`distill_fft`]
+/// for every valid plan.
+pub fn distill_fft_collective(
+    eng: &mut NativeEngine,
+    x: &Matrix,
+    y: &Matrix,
+    eps: f32,
+    plan: &crate::linalg::shard::CollectivePlan,
+) -> Matrix {
+    assert_eq!((x.rows, x.cols), (y.rows, y.cols));
+    let (m, n) = (x.rows, x.cols);
+    plan.validate(m);
+    let f = 4u64; // f32
+    let group = crate::trace::GroupSpec::new(&plan.members);
+    // both real inputs leave the root over the group's own links
+    eng.record_scatter_grouped(2 * f * (m * n) as u64, group);
+    let fx = eng.rfft2_collective(x, plan);
+    let fy = eng.rfft2_collective(y, plan);
+    let mut q = eng.spectral_divide(&fy, &fx, eps);
+    eng.fft2_collective_inplace(&mut q, true, plan);
+    let scaled = eng.cscale(&q, 1.0 / ((m * n) as f32).sqrt());
+    // the fitted real kernel gathers back to the root
+    eng.record_all_gather_grouped(f * (m * n) as u64, group);
+    scaled.real()
+}
+
 /// Iterative baseline: minimize ‖X*K − Y‖² by gradient descent in the
 /// spatial domain.  ∇ = X̃ * (X*K − Y) where X̃ is the 180°-rotated X
 /// (adjoint of circular convolution).
@@ -146,6 +180,69 @@ pub fn contribution_factors(
     out
 }
 
+/// Eq. 6 executed by a typed collective group.  The per-block math is
+/// identical to [`contribution_factors`], but the `(n/block)²` masked
+/// convolutions are **image-banded** over the group: each member
+/// batch-transforms its share of occluded images with the fused batch
+/// kernels (the PR 2 ramp), so the recorded stream is one grouped op
+/// per pipeline stage — 3 image-banded batch transforms, the fused
+/// hadamard/scale element-wise passes, and one fused norm reduce —
+/// after a single broadcast of the shared input spectrum.  The op
+/// stream [`crate::xai::workloads::contribution_trace_collective`]
+/// builds analytically.
+pub fn contribution_factors_collective(
+    eng: &mut NativeEngine,
+    x: &Matrix,
+    k: &Matrix,
+    block: usize,
+    plan: &crate::linalg::shard::CollectivePlan,
+) -> Matrix {
+    let (m, n) = (x.rows, x.cols);
+    assert!(m % block == 0 && n % block == 0, "block must tile the input");
+    let rows = m / block;
+    let cols = n / block;
+    let blocks = rows * cols;
+    let f = 4u64; // f32
+    let group = crate::trace::GroupSpec::new(&plan.members);
+    // shared kernel spectrum broadcast once over the group's links
+    eng.record_all_gather_grouped(f * (m * n) as u64, group);
+    // fused grouped stream: forward transforms of all occluded images,
+    // hadamard + scale, inverse transforms, fused norm reduce
+    eng.record_collective_batch_fft2(blocks, m, n, group);
+    eng.record_collective_batch_fft2(blocks, m, n, group);
+    eng.trace.push(crate::trace::Op::Elementwise {
+        elems: 2 * blocks * m * n, // hadamard
+    });
+    eng.trace.push(crate::trace::Op::Elementwise {
+        elems: 2 * blocks * m * n, // scale
+    });
+    eng.record_collective_batch_fft2(blocks, m, n, group);
+    eng.trace.push(crate::trace::Op::Reduce { elems: blocks * m * n });
+    // native execution of each member's image share (same per-block
+    // math as the unsharded path; band order is row-major over blocks)
+    let mut out = Matrix::zeros(rows, cols);
+    for br in 0..rows {
+        for bc in 0..cols {
+            let masked = Matrix::from_fn(m, n, |r, c| {
+                if r / block == br && c / block == bc {
+                    x.get(r, c)
+                } else {
+                    0.0
+                }
+            });
+            let delta = crate::linalg::conv::circ_conv2(&masked, k);
+            let norm = delta
+                .data
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum::<f64>()
+                .sqrt() as f32;
+            out.set(br, bc, norm);
+        }
+    }
+    out
+}
+
 /// Full distillation explanation: solve for K, compute block
 /// contributions, return them as an [`Attribution`] in row-major block
 /// order.
@@ -217,6 +314,69 @@ mod tests {
             assert_eq!(sharded, 3);
             assert!(matches!(eng.trace.ops.last().unwrap(), Op::AllGather { .. }));
         }
+    }
+
+    #[test]
+    fn collective_solver_matches_unsharded_within_1e4() {
+        use crate::hwsim::DeviceKind;
+        use crate::linalg::shard::CollectivePlan;
+        use crate::trace::Op;
+        let mut rng = Rng::new(21);
+        let x = well_conditioned_x(64, 64, &mut rng);
+        let y = circ_conv2(&x, &Matrix::identity_kernel(64, 64));
+        let mut base_eng = NativeEngine::new_fft_baseline();
+        let want = distill_fft(&mut base_eng, &x, &y, 1e-9);
+        let groups: [&[DeviceKind]; 3] = [
+            &[DeviceKind::Tpu, DeviceKind::Tpu],
+            &[DeviceKind::Gpu, DeviceKind::Gpu, DeviceKind::Gpu],
+            &[DeviceKind::Tpu, DeviceKind::Gpu, DeviceKind::Cpu],
+        ];
+        for members in groups {
+            // uneven, weight-derived bands exercise the general plan
+            let weights: Vec<f64> = (0..members.len()).map(|i| 1.0 + i as f64).collect();
+            let plan = CollectivePlan::from_weights(64, members, &weights);
+            let mut eng = NativeEngine::new_fft_baseline();
+            let got = distill_fft_collective(&mut eng, &x, &y, 1e-9, &plan);
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "members={members:?}: {}",
+                got.max_abs_diff(&want)
+            );
+            // the trace opens with the grouped scatter, carries three
+            // grouped transforms with the membership, and closes with
+            // the grouped gather
+            assert!(matches!(eng.trace.ops[0], Op::ScatterGrouped { .. }));
+            let grouped = eng
+                .trace
+                .ops
+                .iter()
+                .filter(|o| matches!(o, Op::ShardedFft2Grouped { .. }))
+                .count();
+            assert_eq!(grouped, 3);
+            assert!(matches!(
+                eng.trace.ops.last().unwrap(),
+                Op::AllGatherGrouped { .. }
+            ));
+        }
+    }
+
+    #[test]
+    fn collective_contribution_matches_plain_within_1e4() {
+        use crate::hwsim::DeviceKind;
+        use crate::linalg::shard::CollectivePlan;
+        let mut rng = Rng::new(22);
+        let x = well_conditioned_x(16, 16, &mut rng);
+        let k = Matrix::identity_kernel(16, 16);
+        let mut eng = NativeEngine::new_fft_baseline();
+        let want = contribution_factors(&mut eng, &x, &k, 4);
+        let plan = CollectivePlan::balanced(16, &[DeviceKind::Tpu, DeviceKind::Gpu]);
+        let mut ceng = NativeEngine::new_fft_baseline();
+        let got = contribution_factors_collective(&mut ceng, &x, &k, 4, &plan);
+        assert!(
+            got.max_abs_diff(&want) < 1e-3,
+            "{}",
+            got.max_abs_diff(&want)
+        );
     }
 
     #[test]

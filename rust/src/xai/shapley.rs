@@ -145,6 +145,55 @@ pub fn shapley_batch_fused(eng: &mut NativeEngine, games: &[ValueTable]) -> Matr
     eng.batched_matmul(&t, &v, games.len())
 }
 
+/// Batched Shapley executed by a typed collective group: the 2ⁿ
+/// value-table rows band across the group members (the k dimension of
+/// φ = T·V), each member contracting its row band of T's columns
+/// against its band of stacked value columns, with the partial φ
+/// matrices ring-summed back.  Recorded as one
+/// [`crate::trace::Op::ShardedMatmulGrouped`] carrying the member
+/// classes plus the merging all-gather, so the hwsim pool prices the
+/// banded GEMM on the group's actual links.  Numerically within 1e-4
+/// of [`shapley_batch_fused`] (the band-partial sums re-associate the
+/// k-accumulation).  Returns n×B.
+pub fn shapley_batch_collective(
+    eng: &mut NativeEngine,
+    games: &[ValueTable],
+    plan: &crate::linalg::shard::CollectivePlan,
+) -> Matrix {
+    assert!(!games.is_empty());
+    let n = games[0].n;
+    assert!(games.iter().all(|g| g.n == n));
+    let rows = 1usize << n;
+    plan.validate(rows);
+    let b = games.len();
+    let group = crate::trace::GroupSpec::new(&plan.members);
+    eng.trace.push(crate::trace::Op::ShardedMatmulGrouped {
+        m: n,
+        k: rows,
+        n: b,
+        group,
+    });
+    // partial n×B φ matrices gather over the group's links
+    eng.trace.push(crate::trace::Op::AllGatherGrouped {
+        bytes: 4 * (n * b) as u64,
+        group,
+    });
+    let t = weight_matrix_cached(n);
+    let mut phi = Matrix::zeros(n, b);
+    for band in &plan.bands {
+        // member's band of value rows: partial φ += T[:, band]·V[band, :]
+        for s in band.start..band.start + band.len {
+            for i in 0..n {
+                let w = t.get(i, s);
+                for (col, game) in games.iter().enumerate() {
+                    phi.set(i, col, phi.get(i, col) + w * game.values[s]);
+                }
+            }
+        }
+    }
+    phi
+}
+
 /// Permutation-sampling approximation with `samples` random orders.
 pub fn shapley_sampled(game: &ValueTable, samples: usize, rng: &mut Rng) -> Vec<f32> {
     let n = game.n;
@@ -288,6 +337,55 @@ mod tests {
                 for i in 0..n {
                     let d = (fused.get(i, col) - lone.get(i, 0)).abs();
                     assert!(d < 1e-5, "n={n} b={b} i={i} col={col}: diff {d}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn collective_banding_matches_fused() {
+        use crate::hwsim::DeviceKind::{Cpu, Gpu, Tpu};
+        use crate::linalg::shard::CollectivePlan;
+        use crate::trace::Op;
+        // Banding the 2ⁿ value rows across a typed group must agree
+        // with the fused single-device GEMM for every group shape the
+        // planner can emit: even 2-way, 3-way, and a weighted
+        // mixed-kind plan.
+        check("collective T·V == fused T·V", 20, |rng: &mut Rng| {
+            let n = rng.int_range(3, 11) as usize;
+            let b = rng.int_range(1, 9) as usize;
+            let games: Vec<ValueTable> = (0..b).map(|_| random_game(n, rng)).collect();
+            let mut fused_eng = NativeEngine::new();
+            let fused = shapley_batch_fused(&mut fused_eng, &games);
+            let rows = 1usize << n;
+            let plans = [
+                CollectivePlan::balanced(rows, &[Tpu, Tpu]),
+                CollectivePlan::balanced(rows, &[Tpu, Gpu, Cpu]),
+                CollectivePlan::from_weights(rows, &[Gpu, Tpu, Tpu], &[1.0, 3.0, 3.0]),
+            ];
+            for plan in &plans {
+                let mut eng = NativeEngine::new();
+                let phi = shapley_batch_collective(&mut eng, &games, plan);
+                assert_eq!((phi.rows, phi.cols), (n, b));
+                // the group op stream: one banded GEMM + the φ merge
+                assert_eq!(eng.trace.ops.len(), 2);
+                match (&eng.trace.ops[0], &eng.trace.ops[1]) {
+                    (
+                        Op::ShardedMatmulGrouped { m, k, n: cols, group },
+                        Op::AllGatherGrouped { bytes, group: g2 },
+                    ) => {
+                        assert_eq!((*m, *k, *cols), (n, rows, b));
+                        assert_eq!(group.len(), plan.len());
+                        assert_eq!(group, g2);
+                        assert_eq!(*bytes, 4 * (n * b) as u64);
+                    }
+                    other => panic!("unexpected op stream: {other:?}"),
+                }
+                for i in 0..n {
+                    for col in 0..b {
+                        let d = (phi.get(i, col) - fused.get(i, col)).abs();
+                        assert!(d < 1e-4, "n={n} b={b} i={i} col={col}: diff {d}");
+                    }
                 }
             }
         });

@@ -8,8 +8,9 @@
 //! the real pipeline execution — so the replay costs are grounded in
 //! real algorithm structure, not hand-waving.
 
+use crate::hwsim::DeviceKind;
 use crate::models::ModelSpec;
-use crate::trace::{Op, OpTrace};
+use crate::trace::{GroupSpec, Op, OpTrace};
 
 /// Which DFT schedule a trace encodes.  Accelerators run the paper's
 /// matmul form (Eq. 14, MXU-friendly); the CPU baseline runs its best
@@ -72,6 +73,71 @@ pub fn distill_solve_trace_sharded(n: usize, parts: usize) -> OpTrace {
         bytes: f * (n * n) as u64,
         parts,
     });
+    t
+}
+
+/// Distillation solve (Eq. 5) executed by a typed collective group:
+/// the grouped twin of [`distill_solve_trace_sharded`], with membership
+/// (and therefore link classes) carried on every op.  Matches the op
+/// stream [`crate::xai::distillation::distill_fft_collective`] records
+/// (unit-tested below).
+pub fn distill_solve_trace_collective(n: usize, members: &[DeviceKind]) -> OpTrace {
+    let f = 4u64; // f32
+    let group = GroupSpec::new(members);
+    let mut t = OpTrace::new();
+    t.push(Op::ScatterGrouped {
+        bytes: 2 * f * (n * n) as u64,
+        group,
+    });
+    t.push(Op::ShardedFft2Grouped { b: 1, m: n, n, group });
+    t.push(Op::ShardedFft2Grouped { b: 1, m: n, n, group });
+    t.push(Op::HadamardDiv { m: n, n });
+    t.push(Op::ShardedFft2Grouped { b: 1, m: n, n, group });
+    t.push(Op::Elementwise { elems: 2 * n * n });
+    t.push(Op::AllGatherGrouped {
+        bytes: f * (n * n) as u64,
+        group,
+    });
+    t
+}
+
+/// Eq. 6 occlusion sweep executed by a typed collective group: the
+/// input spectrum is broadcast once, then the per-block convolutions
+/// are *image-banded* over the members — each member batch-transforms
+/// its share of the `(n/block)²` occluded images with the fused batch
+/// kernels (PR 2), so the stream is one grouped op per pipeline stage
+/// instead of one op per block.  Matches the op stream
+/// [`crate::xai::distillation::contribution_factors_collective`]
+/// records (unit-tested below).
+pub fn contribution_trace_collective(n: usize, block: usize, members: &[DeviceKind]) -> OpTrace {
+    let f = 4u64; // f32
+    let blocks = (n / block) * (n / block);
+    let group = GroupSpec::new(members);
+    let mut t = OpTrace::new();
+    t.push(Op::AllGatherGrouped {
+        bytes: f * (n * n) as u64,
+        group,
+    });
+    t.push(Op::ShardedFft2Grouped { b: blocks, m: n, n, group });
+    t.push(Op::ShardedFft2Grouped { b: blocks, m: n, n, group });
+    t.push(Op::Elementwise { elems: 2 * blocks * n * n }); // hadamard
+    t.push(Op::Elementwise { elems: 2 * blocks * n * n }); // scale
+    t.push(Op::ShardedFft2Grouped { b: blocks, m: n, n, group });
+    t.push(Op::Reduce { elems: blocks * n * n });
+    t
+}
+
+/// Full collective distillation interpretation of one I/O pair:
+/// grouped solve + grouped occlusion sweep.  This is the workload the
+/// `sim_collective_*` bench rows replay and the coordinator's router
+/// prices when it weighs group variants against a single lane.
+pub fn distill_interpretation_trace_collective(
+    n: usize,
+    block: usize,
+    members: &[DeviceKind],
+) -> OpTrace {
+    let mut t = distill_solve_trace_collective(n, members);
+    t.extend(&contribution_trace_collective(n, block, members));
     t
 }
 
@@ -240,6 +306,42 @@ mod tests {
             let analytic = distill_solve_trace_sharded(16, parts);
             assert_eq!(recorded.ops, analytic.ops, "parts={parts}");
         }
+    }
+
+    #[test]
+    fn analytic_collective_solve_trace_matches_recorded() {
+        use crate::linalg::shard::CollectivePlan;
+        let mut rng = Rng::new(8);
+        let x = Matrix::from_fn(16, 16, |_, _| 3.0 + rng.gauss_f32());
+        let y = circ_conv2(&x, &Matrix::identity_kernel(16, 16));
+        let groups: [&[DeviceKind]; 3] = [
+            &[DeviceKind::Tpu, DeviceKind::Tpu],
+            &[DeviceKind::Tpu, DeviceKind::Gpu, DeviceKind::Tpu],
+            &[DeviceKind::Gpu, DeviceKind::Cpu],
+        ];
+        for members in groups {
+            let plan = CollectivePlan::balanced(16, members);
+            let mut eng = NativeEngine::new_fft_baseline();
+            distillation::distill_fft_collective(&mut eng, &x, &y, 1e-6, &plan);
+            let recorded = eng.take_trace();
+            let analytic = distill_solve_trace_collective(16, members);
+            assert_eq!(recorded.ops, analytic.ops, "members={members:?}");
+        }
+    }
+
+    #[test]
+    fn analytic_collective_contribution_trace_matches_recorded() {
+        use crate::linalg::shard::CollectivePlan;
+        let mut rng = Rng::new(9);
+        let x = Matrix::from_fn(16, 16, |_, _| 3.0 + rng.gauss_f32());
+        let k = Matrix::identity_kernel(16, 16);
+        let members = [DeviceKind::Tpu, DeviceKind::Gpu];
+        let plan = CollectivePlan::balanced(16, &members);
+        let mut eng = NativeEngine::new_fft_baseline();
+        distillation::contribution_factors_collective(&mut eng, &x, &k, 4, &plan);
+        let recorded = eng.take_trace();
+        let analytic = contribution_trace_collective(16, 4, &members);
+        assert_eq!(recorded.ops, analytic.ops);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use std::time::Instant;
 use xai_accel::coordinator::batcher::{BatchAssembler, BatchPolicy};
 use xai_accel::coordinator::decomposition::plan_splits;
 use xai_accel::coordinator::queue::BoundedQueue;
-use xai_accel::coordinator::request::{Envelope, Request, RequestKind};
+use xai_accel::coordinator::request::{Envelope, Request, RequestKind, Response};
 use xai_accel::coordinator::{BackendMode, Coordinator, CoordinatorConfig};
 use xai_accel::linalg::matrix::Matrix;
 use xai_accel::util::prop::check;
@@ -281,6 +281,102 @@ fn mixed_lane_coordinator_accounts_per_kind() {
     );
     let leftover: u64 = stats.devices.iter().map(|d| d.queue_depth).sum();
     assert_eq!(leftover, 0, "all placed batches must have drained");
+    coord.shutdown();
+}
+
+#[test]
+fn cross_lane_collective_distill_completes_and_matches_native() {
+    // The PR 6 live acceptance: ONE ≥SHARD_THRESHOLD distillation
+    // submitted to a 3-lane plane is worth a cross-lane collective
+    // group (the simulator prices the grouped plan under the best
+    // single lane), so the batcher dispatches member stages to every
+    // lane and the barrier merge answers the envelope — numerically
+    // identical to the unsharded native pipeline.
+    let mut config = CoordinatorConfig::default();
+    config.lanes = vec![
+        xai_accel::hwsim::DeviceKind::Tpu,
+        xai_accel::hwsim::DeviceKind::Tpu,
+        xai_accel::hwsim::DeviceKind::Tpu,
+    ];
+    config.backend = BackendMode::NativeOnly;
+    let coord = Coordinator::start(config).expect("start collective coordinator");
+    let mut rng = Rng::new(111);
+    let n = 256;
+    let x = Matrix::random(n, n, &mut rng);
+    let y = Matrix::random(n, n, &mut rng);
+    let resp = coord
+        .submit(Request::Distill {
+            x: x.clone(),
+            y: y.clone(),
+        })
+        .expect("submit")
+        .wait()
+        .expect("collective distill reply");
+    let Response::Distillation { kernel, contributions } = resp else {
+        panic!("wrong response kind");
+    };
+    let stats = coord.stats();
+    assert!(
+        stats.collective_jobs >= 1,
+        "a 256² distill on an idle 3-lane plane must dispatch cross-lane"
+    );
+    assert_eq!(stats.completed, 1);
+    coord.shutdown();
+    // oracle: the unsharded native pipeline
+    let mut eng = xai_accel::trace::NativeEngine::new_fft_baseline();
+    let want_k = xai_accel::xai::distillation::distill_fft(&mut eng, &x, &y, 1e-9);
+    assert!(
+        kernel.max_abs_diff(&want_k) < 1e-4,
+        "collective kernel drifted: {}",
+        kernel.max_abs_diff(&want_k)
+    );
+    let want_c = xai_accel::xai::distillation::contribution_factors(&mut eng, &x, &want_k, n / 4);
+    assert!(
+        contributions.max_abs_diff(&want_c) < 1e-3,
+        "collective contributions drifted: {}",
+        contributions.max_abs_diff(&want_c)
+    );
+}
+
+#[test]
+fn killed_member_degrades_collective_and_records_replan() {
+    // The PR 6 robustness acceptance: lane 2's device dies before the
+    // big distill arrives.  The planner still groups all three lanes
+    // (the backlog counters don't know yet), dispatch to the closed
+    // queue fails, the member's stage drops un-run, and its block band
+    // re-plans onto the survivors — the request completes whole on the
+    // degraded group and the re-plan is visible in CoordinatorStats.
+    let mut config = CoordinatorConfig::default();
+    config.lanes = vec![
+        xai_accel::hwsim::DeviceKind::Tpu,
+        xai_accel::hwsim::DeviceKind::Tpu,
+        xai_accel::hwsim::DeviceKind::Tpu,
+    ];
+    config.backend = BackendMode::NativeOnly;
+    let coord = Coordinator::start(config).expect("start collective coordinator");
+    coord.kill_lane(2);
+    let mut rng = Rng::new(112);
+    let n = 256;
+    let x = Matrix::random(n, n, &mut rng);
+    let y = Matrix::random(n, n, &mut rng);
+    let resp = coord
+        .submit(Request::Distill { x, y })
+        .expect("submit")
+        .wait()
+        .expect("degraded collective must still answer");
+    let Response::Distillation { contributions, .. } = resp else {
+        panic!("wrong response kind");
+    };
+    // every occlusion block was computed by a survivor (none left at
+    // the zero fill)
+    assert!(contributions.data.iter().all(|&v| v > 0.0));
+    let stats = coord.stats();
+    assert!(stats.collective_jobs >= 1, "group must still dispatch");
+    assert!(
+        stats.replans >= 1,
+        "the dead member's band must re-plan onto survivors"
+    );
+    assert_eq!(stats.completed, 1);
     coord.shutdown();
 }
 

@@ -213,6 +213,109 @@ fn heterogeneous_weighted_bands_match_single_plan_at_256() {
 }
 
 #[test]
+fn collective_plans_validate_and_conserve_merge_bytes() {
+    // The PR 6 plan-layer property: every CollectivePlan — balanced or
+    // throughput-weighted, over any member mix and any band skew — is a
+    // strict in-order partition of `0..total`, and its ring merge moves
+    // exactly `payload·(p−1)` bytes regardless of how unevenly the
+    // bands are sized (bucket-ring conservation).
+    use xai_accel::hwsim::DeviceKind;
+    use xai_accel::linalg::shard::CollectivePlan;
+    let mut rng = Rng::new(109);
+    let kinds = [DeviceKind::Tpu, DeviceKind::Gpu, DeviceKind::Cpu];
+    for case in 0..200 {
+        let total = 1 + rng.below(2048) as usize;
+        let width = 1 + rng.below(8) as usize;
+        let members: Vec<DeviceKind> = (0..width).map(|_| kinds[rng.below(3) as usize]).collect();
+        let plan = if case % 2 == 0 {
+            CollectivePlan::balanced(total, &members)
+        } else {
+            // deliberately skewed weights (up to 160:1) so some members
+            // round to zero-share and drop out of the group
+            let weights: Vec<f64> = (0..width).map(|_| rng.range(0.05, 8.0)).collect();
+            CollectivePlan::from_weights(total, &members, &weights)
+        };
+        plan.validate(total);
+        assert!(!plan.is_empty(), "case {case}: plan lost every member");
+        assert_eq!(plan.total_lines(), total, "case {case}");
+        let payload = 8 * total as u64;
+        assert_eq!(
+            plan.merge_bytes(payload),
+            payload * (plan.len() as u64 - 1),
+            "case {case}: ring merge must conserve payload·(p−1) bytes"
+        );
+    }
+}
+
+#[test]
+fn collective_execution_matches_unsharded_at_256_and_1024() {
+    // The PR 6 execution-layer acceptance: cross-lane collective
+    // execution through a typed CollectivePlan must stay within 1e-4 of
+    // the unsharded transform at 256² AND 1024², for group sizes 2, 3,
+    // and a mixed-kind throughput-weighted fleet slice.
+    use xai_accel::hwsim::{DeviceKind, DevicePool};
+    use xai_accel::linalg::shard::CollectivePlan;
+    use xai_accel::trace::Op;
+    let two = [DeviceKind::Tpu, DeviceKind::Tpu];
+    let three = [DeviceKind::Tpu, DeviceKind::Gpu, DeviceKind::Tpu];
+    let mixed = [
+        DeviceKind::Tpu,
+        DeviceKind::Tpu,
+        DeviceKind::Gpu,
+        DeviceKind::Cpu,
+    ];
+    let mk_groups = |n: usize| -> Vec<CollectivePlan> {
+        let pool = DevicePool::mixed(&mixed);
+        let probe = Op::BatchedFft2 { b: n, m: 1, n };
+        vec![
+            CollectivePlan::balanced(n, &two),
+            CollectivePlan::balanced(n, &three),
+            CollectivePlan::from_weights(n, &mixed, &pool.stage_weights(mixed.len(), &probe)),
+        ]
+    };
+    let mut rng = Rng::new(110);
+    for n in [256usize, 1024] {
+        let plan = fft::plan2(n, n);
+        let x = Matrix::random(n, n, &mut rng);
+        let want = plan.rfft2(&x, 1);
+        for cplan in &mk_groups(n) {
+            cplan.validate(n);
+            let got = fft::rfft2_collective(&plan, &x, cplan);
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "{n}² rfft2 over {:?}: {}",
+                cplan.members,
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+    // and the full 256² deconvolution solve through each group's bands
+    // matches the unsharded solve (same contract as the PR 5
+    // heterogeneous test, now driven by typed plans)
+    let n = 256;
+    let plan = fft::plan2(n, n);
+    let x = Matrix::random(n, n, &mut rng);
+    let y = circ_conv2(&x, &Matrix::identity_kernel(n, n));
+    let fx1 = plan.rfft2(&x, 1);
+    let fy1 = plan.rfft2(&y, 1);
+    let mut q1 = xai_accel::linalg::conv::spectral_divide(&fy1, &fx1, 1e-6);
+    plan.process(&mut q1, true, 1);
+    let k_unsharded = q1.real();
+    for cplan in &mk_groups(n) {
+        let fx = fft::rfft2_collective(&plan, &x, cplan);
+        let fy = fft::rfft2_collective(&plan, &y, cplan);
+        let mut q = xai_accel::linalg::conv::spectral_divide(&fy, &fx, 1e-6);
+        fft::process_collective(&plan, &mut q, true, cplan);
+        assert!(
+            q.real().max_abs_diff(&k_unsharded) < 1e-4,
+            "collective 256² solve over {:?} drifted: {}",
+            cplan.members,
+            q.real().max_abs_diff(&k_unsharded)
+        );
+    }
+}
+
+#[test]
 fn parseval_at_256() {
     let mut rng = Rng::new(105);
     let x = Matrix::random(256, 256, &mut rng);
