@@ -259,26 +259,7 @@ impl CollectiveJob {
     /// indices) — the same masked-convolution math as
     /// [`distillation::contribution_factors`].
     fn compute_band(&self, kernel: &Matrix, band: Assignment) -> Vec<f32> {
-        let cols = self.grid_cols();
-        (band.start..band.start + band.len)
-            .map(|idx| {
-                let (br, bc) = (idx / cols, idx % cols);
-                let masked = Matrix::from_fn(self.n, self.n, |r, c| {
-                    if r / self.block == br && c / self.block == bc {
-                        self.x.get(r, c)
-                    } else {
-                        0.0
-                    }
-                });
-                let delta = crate::linalg::conv::circ_conv2(&masked, kernel);
-                delta
-                    .data
-                    .iter()
-                    .map(|&v| (v as f64) * (v as f64))
-                    .sum::<f64>()
-                    .sqrt() as f32
-            })
-            .collect()
+        compute_band_values(&self.x, kernel, self.n, self.block, band)
     }
 
     fn publish_band(&self, g: &mut JobInner, band: Assignment, values: &[f32]) {
@@ -312,6 +293,41 @@ impl CollectiveJob {
             contributions,
         }));
     }
+}
+
+/// Per-block contribution norms for `band` of the `(n/block)²` grid —
+/// the masked-convolution math of the Eq. 6 occlusion sweep, shared by
+/// in-process member stages and remote host executors
+/// (`coordinator::remote`).  Both planes calling exactly this function
+/// is what makes the Loopback transport reproduce the in-memory
+/// collective bit-for-bit.
+pub(crate) fn compute_band_values(
+    x: &Matrix,
+    kernel: &Matrix,
+    n: usize,
+    block: usize,
+    band: Assignment,
+) -> Vec<f32> {
+    let cols = n / block;
+    (band.start..band.start + band.len)
+        .map(|idx| {
+            let (br, bc) = (idx / cols, idx % cols);
+            let masked = Matrix::from_fn(n, n, |r, c| {
+                if r / block == br && c / block == bc {
+                    x.get(r, c)
+                } else {
+                    0.0
+                }
+            });
+            let delta = crate::linalg::conv::circ_conv2(&masked, kernel);
+            delta
+                .data
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum::<f64>()
+                .sqrt() as f32
+        })
+        .collect()
 }
 
 /// One member lane's work item of a [`CollectiveJob`], carried by an

@@ -66,6 +66,14 @@ pub struct Metrics {
     collective_jobs: AtomicU64,
     /// collective re-plans: member stages degraded onto survivors
     replans: AtomicU64,
+    /// multi-host collective jobs driven over the transport plane
+    multihost_jobs: AtomicU64,
+    /// frame bytes the coordinator put on the wire (host plane)
+    wire_tx_bytes: AtomicU64,
+    /// frame bytes the coordinator received off the wire (host plane)
+    wire_rx_bytes: AtomicU64,
+    /// per-host heartbeat-miss counters (sized by [`Metrics::init_hosts`])
+    host_heartbeat_misses: Mutex<Vec<u64>>,
     /// per-kind latency samples (seconds)
     latencies: Mutex<HashMap<RequestKind, Vec<f64>>>,
     /// per-kind queue-wait samples (seconds)
@@ -265,6 +273,55 @@ impl Metrics {
         self.collective_jobs.load(Ordering::Relaxed)
     }
 
+    /// Size the per-host counters: one heartbeat-miss slot per host.
+    /// Called once by the host plane at bring-up.
+    pub fn init_hosts(&self, n: usize) {
+        self.host_heartbeat_misses.lock().unwrap().resize(n, 0);
+    }
+
+    /// A collective job was driven over the multi-host transport plane.
+    pub fn record_multihost_dispatch(&self) {
+        self.multihost_jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Multi-host collective jobs dispatched so far.
+    pub fn multihost_jobs(&self) -> u64 {
+        self.multihost_jobs.load(Ordering::Relaxed)
+    }
+
+    /// The coordinator put `bytes` of frame on the wire.
+    pub fn record_wire_tx(&self, bytes: usize) {
+        self.wire_tx_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// The coordinator received `bytes` of frame off the wire.
+    pub fn record_wire_rx(&self, bytes: usize) {
+        self.wire_rx_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Frame bytes sent to hosts so far.
+    pub fn wire_tx_bytes(&self) -> u64 {
+        self.wire_tx_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Frame bytes received from hosts so far.
+    pub fn wire_rx_bytes(&self) -> u64 {
+        self.wire_rx_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Host `h`'s liveness monitor found its heartbeat overdue.
+    pub fn record_heartbeat_miss(&self, h: usize) {
+        let mut misses = self.host_heartbeat_misses.lock().unwrap();
+        if let Some(slot) = misses.get_mut(h) {
+            *slot += 1;
+        }
+    }
+
+    /// Per-host heartbeat-miss counters (empty when no host plane).
+    pub fn heartbeat_misses(&self) -> Vec<u64> {
+        self.host_heartbeat_misses.lock().unwrap().clone()
+    }
+
     /// Collective re-plans (degraded member stages) so far.
     pub fn replans(&self) -> u64 {
         self.replans.load(Ordering::Relaxed)
@@ -329,6 +386,19 @@ impl Metrics {
             self.collective_jobs(),
             self.replans(),
         );
+        // the multi-host transport plane, when one is configured
+        let misses = self.heartbeat_misses();
+        if !misses.is_empty() {
+            out.push_str(&format!(
+                "  wire: multihost jobs={} tx={}B rx={}B\n",
+                self.multihost_jobs(),
+                self.wire_tx_bytes(),
+                self.wire_rx_bytes(),
+            ));
+            for (h, m) in misses.iter().enumerate() {
+                out.push_str(&format!("  host {h:<2} heartbeat misses={m}\n"));
+            }
+        }
         for kind in RequestKind::all() {
             if let Some(s) = self.latency_summary(kind) {
                 out.push_str(&format!(

@@ -46,6 +46,7 @@ pub mod decomposition;
 pub mod metrics;
 pub mod native;
 pub mod queue;
+pub mod remote;
 pub mod request;
 pub mod router;
 pub mod service;
@@ -53,6 +54,7 @@ pub mod worker;
 
 pub use metrics::{DeviceStat, KindStat, Metrics};
 pub use native::NativeBackend;
+pub use remote::{HostRegistry, MultiHostConfig, TransportKind};
 pub use request::{Request, RequestKind, Response};
 pub use service::{Coordinator, CoordinatorConfig, CoordinatorStats};
 pub use worker::BackendMode;

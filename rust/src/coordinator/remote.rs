@@ -1,0 +1,917 @@
+//! The multi-host plane: one collective request spanning simulated
+//! hosts over the [`crate::transport`] wire.
+//!
+//! PR 6 fanned a ≥-threshold distillation across executor *lanes*
+//! sharing one address space.  This module makes the same decomposition
+//! cross a process boundary: every byte between the coordinator and a
+//! host travels as a [`wire`] frame over an abstract [`Transport`] —
+//! [`Loopback`] queues in-process (bit-for-bit the PR 6 result), or
+//! [`SimNet`] with bandwidth, latency, and injected faults.
+//!
+//! Shape of the plane:
+//!
+//! * [`HostRegistry`] — brings up one simulated host per configured
+//!   device class (a worker thread + a heartbeat thread, holding only
+//!   its endpoint), plus coordinator-side receiver threads and a
+//!   liveness monitor.
+//! * **Dispatch** ([`try_dispatch`]) prices a cross-host group with the
+//!   SAME planner chain as the in-process collective
+//!   ([`router::plan_cross_lane_group`] → [`DevicePool::mixed`] band
+//!   plans), then hands the job to a driver thread.
+//! * **The driver** sends each member a `Claim` (problem + band + group
+//!   shape); the solver host answers `KernelDone`; the driver
+//!   broadcasts `Kernel` to the rest; members answer `BandDone`; the
+//!   driver merges and replies to the envelope, then `BarrierMerge`
+//!   lets hosts drop job state.
+//! * **Degrade**: a host whose heartbeats stop (timeout, partition,
+//!   kill) is marked dead by the monitor; the driver re-plans its band
+//!   onto a surviving host that holds the kernel — or computes it
+//!   locally when none is left — counting every re-plan in
+//!   [`Metrics::record_replan`].  A dead solver degrades to a local
+//!   solve.  The terminal fallback (total silence) completes the whole
+//!   job on the coordinator, so a reply is always produced.
+//!
+//! Hosts are deliberately dumb: per-job state keyed by id, idempotent
+//! against duplicated frames, no knowledge of the fleet.  All policy
+//! (placement, replanning, liveness) stays on the coordinator.
+
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::collective;
+use crate::coordinator::decomposition::SHARD_THRESHOLD;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::native::NATIVE_DISTILL_SIZES;
+use crate::coordinator::request::{Envelope, Request, RequestKind, Response};
+use crate::coordinator::router;
+use crate::hwsim::pool::DevicePool;
+use crate::hwsim::DeviceKind;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::shard::{self, Assignment, CollectivePlan, MergeTopology};
+use crate::trace::{NativeEngine, Op};
+use crate::transport::inproc::Loopback;
+use crate::transport::simnet::{LinkConfig, SimNet};
+use crate::transport::wire::{self, WireMessage};
+use crate::transport::{Recv, Transport};
+use crate::xai::distillation;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Which [`Transport`] the host plane runs over.
+#[derive(Debug, Clone)]
+pub enum TransportKind {
+    /// In-process bounded queues: zero loss, zero delay — the PR 6
+    /// in-memory collective, bit-for-bit, with a wire in the middle.
+    Loopback,
+    /// Deterministic simulated network; per-host links derive their
+    /// fault/jitter seeds from [`LinkConfig::seed`] and the host id.
+    SimNet(LinkConfig),
+}
+
+/// Configuration of the multi-host plane
+/// ([`crate::coordinator::CoordinatorConfig::multihost`]).
+#[derive(Debug, Clone)]
+pub struct MultiHostConfig {
+    /// Device class served by each simulated host.
+    pub hosts: Vec<DeviceKind>,
+    /// The wire the plane runs over.
+    pub transport: TransportKind,
+    /// Host heartbeat beacon period.
+    pub heartbeat_period: Duration,
+    /// Silence longer than this marks a host dead (degrade + re-plan).
+    pub heartbeat_timeout: Duration,
+}
+
+impl MultiHostConfig {
+    /// Hosts over the in-process loopback wire.
+    pub fn loopback(hosts: &[DeviceKind]) -> Self {
+        MultiHostConfig {
+            hosts: hosts.to_vec(),
+            transport: TransportKind::Loopback,
+            heartbeat_period: Duration::from_millis(20),
+            heartbeat_timeout: Duration::from_millis(120),
+        }
+    }
+
+    /// Hosts over a simulated network, one link per host.
+    pub fn simnet(hosts: &[DeviceKind], link: LinkConfig) -> Self {
+        MultiHostConfig {
+            transport: TransportKind::SimNet(link),
+            ..MultiHostConfig::loopback(hosts)
+        }
+    }
+}
+
+/// Frames per direction a loopback link buffers before backpressure.
+const LOOPBACK_CAPACITY: usize = 64;
+
+/// Coordinator-side shared state of the host plane.
+struct PlaneShared {
+    kinds: Vec<DeviceKind>,
+    /// Coordinator endpoint of each host link.
+    links: Vec<Arc<dyn Transport>>,
+    alive: Vec<AtomicBool>,
+    /// Milliseconds since `epoch` a frame was last seen from each host.
+    last_seen_ms: Vec<AtomicU64>,
+    /// In-flight job id → driver inbox (receiver threads route
+    /// `KernelDone` / `BandDone` frames here).
+    routes: Mutex<HashMap<u64, mpsc::Sender<(usize, WireMessage)>>>,
+    next_job: AtomicU64,
+    metrics: Arc<Metrics>,
+    stop: AtomicBool,
+    epoch: Instant,
+    heartbeat_period: Duration,
+    heartbeat_timeout: Duration,
+}
+
+impl PlaneShared {
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    fn is_alive(&self, h: usize) -> bool {
+        self.alive[h].load(Ordering::SeqCst)
+    }
+
+    fn mark_dead(&self, h: usize) {
+        self.alive[h].store(false, Ordering::SeqCst);
+    }
+
+    /// Encode and send one message to host `h`, counting the bytes.
+    /// `Err` means the host is dead or the link refused the frame — an
+    /// `Ok` is still no delivery guarantee on a lossy wire.
+    fn send_to(&self, h: usize, msg: &WireMessage) -> Result<(), ()> {
+        if !self.is_alive(h) {
+            return Err(());
+        }
+        let frame = wire::encode_frame(msg).map_err(|_| ())?;
+        let len = frame.len();
+        match self.links[h].send(frame) {
+            Ok(()) => {
+                self.metrics.record_wire_tx(len);
+                Ok(())
+            }
+            Err(_) => {
+                self.mark_dead(h);
+                Err(())
+            }
+        }
+    }
+}
+
+/// The coordinator's registry of simulated hosts: endpoints, liveness,
+/// and the threads of the plane (per-host receivers, the heartbeat
+/// monitor, in-flight job drivers, and the hosts themselves).
+pub struct HostRegistry {
+    shared: Arc<PlaneShared>,
+    /// Coordinator-side SimNet handles for fault injection (`None` on
+    /// loopback links).
+    partition_ctl: Vec<Option<Arc<SimNet>>>,
+    receivers: Mutex<Vec<JoinHandle<()>>>,
+    monitor: Mutex<Option<JoinHandle<()>>>,
+    host_threads: Mutex<Vec<JoinHandle<()>>>,
+    drivers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl HostRegistry {
+    /// Bring the plane up: one link + worker + heartbeat thread per
+    /// configured host, coordinator-side receivers, and the monitor.
+    pub fn start(cfg: &MultiHostConfig, metrics: Arc<Metrics>) -> HostRegistry {
+        let n = cfg.hosts.len();
+        metrics.init_hosts(n);
+        let mut links: Vec<Arc<dyn Transport>> = Vec::with_capacity(n);
+        let mut partition_ctl: Vec<Option<Arc<SimNet>>> = Vec::with_capacity(n);
+        let mut host_threads = Vec::with_capacity(2 * n);
+        for (h, &kind) in cfg.hosts.iter().enumerate() {
+            let (coord_end, host_end): (Arc<dyn Transport>, Arc<dyn Transport>) =
+                match &cfg.transport {
+                    TransportKind::Loopback => {
+                        let (a, b) = Loopback::pair(LOOPBACK_CAPACITY);
+                        partition_ctl.push(None);
+                        (Arc::new(a), Arc::new(b))
+                    }
+                    TransportKind::SimNet(link) => {
+                        let mut link = link.clone();
+                        // distinct per-host fault/jitter schedules
+                        link.seed ^= (h as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                        let (a, b) = SimNet::pair(link);
+                        let a = Arc::new(a);
+                        partition_ctl.push(Some(a.clone()));
+                        (a, Arc::new(b))
+                    }
+                };
+            links.push(coord_end);
+            let worker_end = host_end.clone();
+            host_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("xai-host-{h}"))
+                    .spawn(move || host_loop(h as u32, kind, worker_end))
+                    .expect("spawn host worker"),
+            );
+            let beat_end = host_end;
+            let period = cfg.heartbeat_period;
+            host_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("xai-host-{h}-hb"))
+                    .spawn(move || heartbeat_loop(h as u32, beat_end, period))
+                    .expect("spawn host heartbeat"),
+            );
+        }
+        let shared = Arc::new(PlaneShared {
+            kinds: cfg.hosts.clone(),
+            links,
+            alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            last_seen_ms: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            routes: Mutex::new(HashMap::new()),
+            next_job: AtomicU64::new(1),
+            metrics,
+            stop: AtomicBool::new(false),
+            epoch: Instant::now(),
+            heartbeat_period: cfg.heartbeat_period,
+            heartbeat_timeout: cfg.heartbeat_timeout,
+        });
+        let receivers = (0..n)
+            .map(|h| {
+                let s = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("xai-hostrx-{h}"))
+                    .spawn(move || receiver_loop(h, s))
+                    .expect("spawn host receiver")
+            })
+            .collect();
+        let mon = {
+            let s = shared.clone();
+            std::thread::Builder::new()
+                .name("xai-hostmon".into())
+                .spawn(move || monitor_loop(s))
+                .expect("spawn host monitor")
+        };
+        HostRegistry {
+            shared,
+            partition_ctl,
+            receivers: Mutex::new(receivers),
+            monitor: Mutex::new(Some(mon)),
+            host_threads: Mutex::new(host_threads),
+            drivers: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Number of configured hosts.
+    pub fn host_count(&self) -> usize {
+        self.shared.kinds.len()
+    }
+
+    /// Whether host `h` is currently considered live.
+    pub fn host_alive(&self, h: usize) -> bool {
+        self.shared.is_alive(h)
+    }
+
+    /// Tear host `h`'s link down (test hook: a crashed host).  The
+    /// worker exits, the receiver marks the host dead, and in-flight
+    /// bands re-plan onto survivors.
+    pub fn kill_host(&self, h: usize) {
+        self.shared.links[h].close();
+    }
+
+    /// Partition (or heal) host `h`'s link — only meaningful over
+    /// [`TransportKind::SimNet`]; frames are held, heartbeats stop
+    /// arriving, and the monitor declares the host dead after the
+    /// timeout.  Returns whether the link supported partitioning.
+    pub fn partition_host(&self, h: usize, sealed: bool) -> bool {
+        match &self.partition_ctl[h] {
+            Some(net) => {
+                net.partition(sealed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Stop the plane: polite `Shutdown` to every host, links closed,
+    /// every thread joined.  Idempotent.
+    pub fn shutdown(&self) {
+        if self.shared.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for h in 0..self.shared.links.len() {
+            // heal any partition so the shutdown frame can land
+            if let Some(net) = &self.partition_ctl[h] {
+                net.partition(false);
+            }
+            let _ = self.shared.send_to(h, &WireMessage::Shutdown);
+        }
+        for link in &self.shared.links {
+            link.close();
+        }
+        // unsettle any driver still routing: its inbox disconnects and
+        // it completes the job locally
+        self.shared.routes.lock().unwrap().clear();
+        for t in self.drivers.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+        for t in self.receivers.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+        if let Some(t) = self.monitor.lock().unwrap().take() {
+            let _ = t.join();
+        }
+        for t in self.host_threads.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HostRegistry {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// --------------------------------------------------------------------------
+// coordinator-side threads
+// --------------------------------------------------------------------------
+
+/// Drain host `h`'s link: every frame refreshes liveness, job frames
+/// route to their driver's inbox, corrupt frames are dropped (the
+/// job-level timeout is the recovery path).
+fn receiver_loop(h: usize, shared: Arc<PlaneShared>) {
+    loop {
+        match shared.links[h].recv_timeout(Duration::from_millis(25)) {
+            Recv::Closed => {
+                shared.mark_dead(h);
+                return;
+            }
+            Recv::Timeout => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Recv::Frame(frame) => {
+                shared.metrics.record_wire_rx(frame.len());
+                shared.last_seen_ms[h].store(shared.now_ms(), Ordering::SeqCst);
+                shared.alive[h].store(true, Ordering::SeqCst);
+                let Ok(msg) = wire::decode_frame(&frame) else {
+                    continue; // checksum / framing reject: drop it
+                };
+                let job = match &msg {
+                    WireMessage::KernelDone { job, .. } | WireMessage::BandDone { job, .. } => {
+                        Some(*job)
+                    }
+                    _ => None,
+                };
+                if let Some(job) = job {
+                    let routes = shared.routes.lock().unwrap();
+                    if let Some(tx) = routes.get(&job) {
+                        let _ = tx.send((h, msg));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Declare hosts dead when their beacons stop: overdue beacons count
+/// as heartbeat misses, silence past the timeout marks the host dead.
+fn monitor_loop(shared: Arc<PlaneShared>) {
+    let period = shared.heartbeat_period;
+    let period_ms = period.as_millis() as u64;
+    let timeout_ms = shared.heartbeat_timeout.as_millis() as u64;
+    loop {
+        std::thread::sleep(period);
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let now = shared.now_ms();
+        for h in 0..shared.alive.len() {
+            if !shared.is_alive(h) {
+                continue;
+            }
+            let age = now.saturating_sub(shared.last_seen_ms[h].load(Ordering::SeqCst));
+            if age > period_ms.saturating_mul(2) {
+                shared.metrics.record_heartbeat_miss(h);
+            }
+            if age > timeout_ms {
+                shared.mark_dead(h);
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// host-side threads (everything a "remote" host runs)
+// --------------------------------------------------------------------------
+
+/// Per-job state a host keeps between frames.
+struct HostJob {
+    n: usize,
+    block: usize,
+    x: Matrix,
+    kernel: Option<Matrix>,
+    /// Bands claimed/adopted but not yet computable (kernel pending).
+    pending: Vec<Assignment>,
+}
+
+/// Compute every computable pending band and answer `BandDone`.
+fn flush_pending(job: u64, st: &mut HostJob, ep: &dyn Transport) {
+    let Some(kernel) = &st.kernel else { return };
+    for band in st.pending.drain(..) {
+        let values = collective::compute_band_values(&st.x, kernel, st.n, st.block, band);
+        send_msg(ep, &WireMessage::BandDone { job, band, values });
+    }
+}
+
+fn send_msg(ep: &dyn Transport, msg: &WireMessage) {
+    if let Ok(frame) = wire::encode_frame(msg) {
+        let _ = ep.send(frame);
+    }
+}
+
+/// A simulated host's worker: decode frames, keep per-job state, run
+/// the solve when claimed as solver, compute bands, stay idempotent
+/// under duplicated delivery.
+fn host_loop(host: u32, kind: DeviceKind, ep: Arc<dyn Transport>) {
+    send_msg(&*ep, &WireMessage::Hello { host, kind });
+    let mut jobs: HashMap<u64, HostJob> = HashMap::new();
+    loop {
+        let frame = match ep.recv_timeout(Duration::from_millis(50)) {
+            Recv::Closed => return,
+            Recv::Timeout => continue,
+            Recv::Frame(f) => f,
+        };
+        let Ok(msg) = wire::decode_frame(&frame) else {
+            continue; // corrupt frame: the coordinator re-plans on timeout
+        };
+        match msg {
+            WireMessage::Claim {
+                job,
+                n,
+                block,
+                solver,
+                band,
+                members,
+                row_bands,
+                x,
+                y,
+            } => {
+                if jobs.contains_key(&job) {
+                    continue; // duplicated claim: already held
+                }
+                let mut st = HostJob {
+                    n: n as usize,
+                    block: block as usize,
+                    x,
+                    kernel: None,
+                    pending: Vec::new(),
+                };
+                if solver {
+                    // the Eq. 5 spectral solve through the SAME
+                    // group-banded entry point an in-process member uses
+                    let rows_plan = CollectivePlan {
+                        members,
+                        bands: row_bands,
+                        merge: MergeTopology::Ring,
+                    };
+                    let mut eng = NativeEngine::new_fft_baseline();
+                    let kernel =
+                        distillation::distill_fft_collective(&mut eng, &st.x, &y, 1e-9, &rows_plan);
+                    send_msg(
+                        &*ep,
+                        &WireMessage::KernelDone {
+                            job,
+                            kernel: kernel.clone(),
+                        },
+                    );
+                    st.kernel = Some(kernel);
+                }
+                if band.len > 0 {
+                    st.pending.push(band);
+                }
+                flush_pending(job, &mut st, &*ep);
+                jobs.insert(job, st);
+            }
+            WireMessage::Kernel { job, kernel } => {
+                if let Some(st) = jobs.get_mut(&job) {
+                    if st.kernel.is_none() {
+                        st.kernel = Some(kernel);
+                    }
+                    flush_pending(job, st, &*ep);
+                }
+            }
+            WireMessage::Band { job, band } => {
+                // adopt an orphaned band (degrade re-plan)
+                if let Some(st) = jobs.get_mut(&job) {
+                    st.pending.push(band);
+                    flush_pending(job, st, &*ep);
+                }
+            }
+            WireMessage::BarrierMerge { job } => {
+                jobs.remove(&job);
+            }
+            WireMessage::Shutdown => return,
+            _ => {}
+        }
+    }
+}
+
+/// A host's liveness beacon: one `Heartbeat` per period until the link
+/// dies.
+fn heartbeat_loop(host: u32, ep: Arc<dyn Transport>, period: Duration) {
+    let mut seq = 0u64;
+    loop {
+        let Ok(frame) = wire::encode_frame(&WireMessage::Heartbeat { host, seq }) else {
+            return;
+        };
+        if ep.send(frame).is_err() {
+            return;
+        }
+        seq += 1;
+        std::thread::sleep(period);
+    }
+}
+
+// --------------------------------------------------------------------------
+// dispatch + the per-job driver
+// --------------------------------------------------------------------------
+
+/// Intercept a batch on the placement path, exactly like
+/// [`collective::try_dispatch`] but with hosts as the group members:
+/// a single ≥-threshold distillation the simulator prices cheaper on a
+/// cross-host group than on the best single host is claimed by a
+/// driver thread and returns `None`; anything else passes through.
+pub(crate) fn try_dispatch(
+    registry: &Arc<HostRegistry>,
+    mut batch: Batch,
+    metrics: &Arc<Metrics>,
+) -> Option<Batch> {
+    if batch.kind != RequestKind::Distill
+        || batch.envelopes.len() != 1
+        || batch.collective.is_some()
+    {
+        return Some(batch);
+    }
+    let n = match &batch.envelopes[0].request {
+        Request::Distill { x, y }
+            if x.rows == x.cols
+                && (y.rows, y.cols) == (x.rows, x.cols)
+                && x.rows >= SHARD_THRESHOLD
+                && NATIVE_DISTILL_SIZES.contains(&x.rows) =>
+        {
+            x.rows
+        }
+        _ => return Some(batch),
+    };
+    let block = n / 4;
+    let shared = &registry.shared;
+    // dead hosts price out of the group exactly like dead lanes
+    let backlogs: Vec<u64> = (0..shared.kinds.len())
+        .map(|h| if shared.is_alive(h) { 0 } else { u64::MAX })
+        .collect();
+    let choice = router::plan_cross_lane_group(&shared.kinds, &backlogs, n, block)?;
+    let env = batch.envelopes.pop().expect("single-envelope batch");
+    let (x, y) = match &env.request {
+        Request::Distill { x, y } => (x.clone(), y.clone()),
+        _ => unreachable!("kind checked above"),
+    };
+    // The identical plan chain the in-process collective uses — this
+    // is what makes Loopback reproduce PR 6 bit-for-bit.
+    let pool = DevicePool::mixed(&choice.kinds);
+    let rows_plan = pool.plan_for(n, &Op::BatchedFft2 { b: n, m: 1, n });
+    let blocks = (n / block) * (n / block);
+    let weights = pool.stage_weights(
+        choice.kinds.len(),
+        &Op::BatchedFft2 { b: blocks, m: n, n },
+    );
+    let bands = shard::plan_splits_weighted(blocks, &weights);
+    metrics.record_collective_dispatch();
+    metrics.record_multihost_dispatch();
+    let s = shared.clone();
+    let handle = std::thread::Builder::new()
+        .name("xai-mh-driver".into())
+        .spawn(move || drive_job(s, env, x, y, n, block, choice.lanes, rows_plan, bands))
+        .expect("spawn multihost driver");
+    registry.drivers.lock().unwrap().push(handle);
+    None
+}
+
+/// Where one occlusion band currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BandState {
+    /// Claimed by (or re-planned onto) a host.
+    Assigned(usize),
+    /// Owner died; awaiting adoption.
+    Orphan,
+    /// Values merged into the contribution grid.
+    Done,
+}
+
+/// Drive one multi-host collective job to completion.  Every path out
+/// of this function answers the envelope — degradation re-plans onto
+/// survivors, and the terminal fallback computes on the coordinator.
+#[allow(clippy::too_many_arguments)]
+fn drive_job(
+    shared: Arc<PlaneShared>,
+    env: Envelope,
+    x: Matrix,
+    y: Matrix,
+    n: usize,
+    block: usize,
+    hosts: Vec<usize>,
+    rows_plan: CollectivePlan,
+    bands: Vec<Assignment>,
+) {
+    let job = shared.next_job.fetch_add(1, Ordering::SeqCst);
+    let (tx, rx) = mpsc::channel();
+    shared.routes.lock().unwrap().insert(job, tx);
+
+    let cols = n / block;
+    let mut contrib = vec![0.0f32; cols * cols];
+    let mut state: Vec<BandState> = Vec::with_capacity(bands.len());
+    let mut claimed: Vec<usize> = Vec::new();
+    let mut solver_host: Option<usize> = None;
+
+    // Claim every member; the first host that accepts gets the solve.
+    for (m, &h) in hosts.iter().enumerate() {
+        let claim = WireMessage::Claim {
+            job,
+            n: n as u32,
+            block: block as u32,
+            solver: solver_host.is_none(),
+            band: bands[m],
+            members: rows_plan.members.clone(),
+            row_bands: rows_plan.bands.clone(),
+            x: x.clone(),
+            y: y.clone(),
+        };
+        if shared.send_to(h, &claim).is_ok() {
+            claimed.push(h);
+            if solver_host.is_none() {
+                solver_host = Some(h);
+            }
+            state.push(if bands[m].len == 0 {
+                BandState::Done
+            } else {
+                BandState::Assigned(h)
+            });
+        } else if bands[m].len == 0 {
+            state.push(BandState::Done);
+        } else {
+            shared.metrics.record_replan();
+            state.push(BandState::Orphan);
+        }
+    }
+
+    let mut kernel: Option<Matrix> = None;
+    let mut kernel_hosts: Vec<usize> = Vec::new();
+    // Terminal stall guard: a plane that stops making progress (lost
+    // frames with no heartbeat failure, or shutdown) falls back to
+    // local computation rather than hanging the envelope.
+    let grace = (shared.heartbeat_timeout * 20).max(Duration::from_secs(5));
+    let mut last_progress = Instant::now();
+    let mut stalled = false;
+
+    loop {
+        if kernel.is_some() && state.iter().all(|s| *s == BandState::Done) {
+            break;
+        }
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok((from, WireMessage::KernelDone { kernel: k, .. })) => {
+                if kernel.is_none() {
+                    // broadcast to every other claimed live member
+                    for &h in &claimed {
+                        if h != from
+                            && shared
+                                .send_to(
+                                    h,
+                                    &WireMessage::Kernel {
+                                        job,
+                                        kernel: k.clone(),
+                                    },
+                                )
+                                .is_ok()
+                        {
+                            kernel_hosts.push(h);
+                        }
+                    }
+                    kernel_hosts.push(from);
+                    kernel = Some(k);
+                    last_progress = Instant::now();
+                }
+            }
+            Ok((_, WireMessage::BandDone { band, values, .. })) => {
+                let slot = (0..bands.len())
+                    .find(|&m| bands[m] == band && state[m] != BandState::Done);
+                if let Some(m) = slot {
+                    if values.len() == band.len {
+                        contrib[band.start..band.start + band.len].copy_from_slice(&values);
+                        state[m] = BandState::Done;
+                        last_progress = Instant::now();
+                    }
+                }
+            }
+            Ok(_) => {}
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => stalled = true,
+        }
+        if last_progress.elapsed() > grace {
+            stalled = true;
+        }
+
+        // degrade pass: bands whose host died orphan + re-plan
+        for m in 0..bands.len() {
+            if let BandState::Assigned(h) = state[m] {
+                if !shared.is_alive(h) {
+                    shared.metrics.record_replan();
+                    state[m] = BandState::Orphan;
+                }
+            }
+        }
+
+        // a dead solver (or a stalled plane) degrades the solve to the
+        // coordinator: deterministic math, identical kernel
+        let solver_gone =
+            solver_host.map_or(true, |h| !shared.is_alive(h)) || stalled;
+        if kernel.is_none() && solver_gone {
+            shared.metrics.record_replan();
+            let mut eng = NativeEngine::new_fft_baseline();
+            let k = distillation::distill_fft_collective(&mut eng, &x, &y, 1e-9, &rows_plan);
+            for &h in &claimed {
+                if shared.is_alive(h)
+                    && shared
+                        .send_to(
+                            h,
+                            &WireMessage::Kernel {
+                                job,
+                                kernel: k.clone(),
+                            },
+                        )
+                        .is_ok()
+                {
+                    kernel_hosts.push(h);
+                }
+            }
+            kernel = Some(k);
+            last_progress = Instant::now();
+        }
+
+        // adoption pass: orphans go to a surviving kernel holder, or
+        // are computed here when none is left
+        if let Some(k) = &kernel {
+            for m in 0..bands.len() {
+                if state[m] != BandState::Orphan {
+                    continue;
+                }
+                let target = kernel_hosts.iter().copied().find(|&t| shared.is_alive(t));
+                let sent = !stalled
+                    && target.is_some()
+                    && shared
+                        .send_to(
+                            target.expect("checked above"),
+                            &WireMessage::Band { job, band: bands[m] },
+                        )
+                        .is_ok();
+                if sent {
+                    state[m] = BandState::Assigned(target.expect("checked above"));
+                } else {
+                    let band = bands[m];
+                    let values = collective::compute_band_values(&x, k, n, block, band);
+                    contrib[band.start..band.start + band.len].copy_from_slice(&values);
+                    state[m] = BandState::Done;
+                }
+            }
+            if stalled {
+                // terminal fallback: finish every remaining band here
+                for m in 0..bands.len() {
+                    if let BandState::Assigned(_) = state[m] {
+                        shared.metrics.record_replan();
+                        let band = bands[m];
+                        let values = collective::compute_band_values(&x, k, n, block, band);
+                        contrib[band.start..band.start + band.len].copy_from_slice(&values);
+                        state[m] = BandState::Done;
+                    }
+                }
+            }
+        }
+    }
+
+    shared.routes.lock().unwrap().remove(&job);
+    for &h in &claimed {
+        let _ = shared.send_to(h, &WireMessage::BarrierMerge { job });
+    }
+    let kernel = kernel.expect("loop exits with a kernel");
+    let contributions = Matrix::from_vec(cols, cols, contrib);
+    let latency = env.enqueued_at.elapsed();
+    shared
+        .metrics
+        .record_complete(RequestKind::Distill, latency, Duration::ZERO);
+    let _ = env.reply.send(Ok(Response::Distillation {
+        kernel,
+        contributions,
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn distill_pair(n: usize) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(7);
+        (Matrix::random(n, n, &mut rng), Matrix::random(n, n, &mut rng))
+    }
+
+    fn drive(
+        registry: &HostRegistry,
+        members: &[DeviceKind],
+        hosts: Vec<usize>,
+        n: usize,
+    ) -> Response {
+        let (x, y) = distill_pair(n);
+        let (tx, rx) = mpsc::channel();
+        let env = Envelope {
+            id: 1,
+            request: Request::Distill {
+                x: x.clone(),
+                y: y.clone(),
+            },
+            reply: tx,
+            enqueued_at: Instant::now(),
+        };
+        let block = n / 4;
+        let blocks = (n / block) * (n / block);
+        let rows_plan = CollectivePlan::balanced(n, members);
+        let bands = shard::plan_splits(blocks, members.len());
+        drive_job(
+            registry.shared.clone(),
+            env,
+            x,
+            y,
+            n,
+            block,
+            hosts,
+            rows_plan,
+            bands,
+        );
+        rx.recv().unwrap().unwrap()
+    }
+
+    #[test]
+    fn two_loopback_hosts_complete_a_job() {
+        let members = [DeviceKind::Tpu, DeviceKind::Tpu];
+        let metrics = Arc::new(Metrics::with_devices(1));
+        let registry = HostRegistry::start(&MultiHostConfig::loopback(&members), metrics.clone());
+        let resp = drive(&registry, &members, vec![0, 1], 32);
+        let Response::Distillation { kernel, contributions } = resp else {
+            panic!("wrong response kind");
+        };
+        // oracle: the unsharded native pipeline
+        let (x, y) = distill_pair(32);
+        let mut eng = NativeEngine::new_fft_baseline();
+        let want_k = distillation::distill_fft(&mut eng, &x, &y, 1e-9);
+        assert!(kernel.max_abs_diff(&want_k) < 1e-4);
+        let want_c = distillation::contribution_factors(&mut eng, &x, &want_k, 8);
+        assert!(contributions.max_abs_diff(&want_c) < 1e-3);
+        assert_eq!(metrics.completed(), 1);
+        assert_eq!(metrics.replans(), 0);
+        assert!(metrics.wire_tx_bytes() > 0);
+        assert!(metrics.wire_rx_bytes() > 0);
+        registry.shutdown();
+    }
+
+    #[test]
+    fn killed_host_degrades_onto_survivors() {
+        let members = [DeviceKind::Tpu, DeviceKind::Tpu, DeviceKind::Tpu];
+        let metrics = Arc::new(Metrics::with_devices(1));
+        let registry = HostRegistry::start(&MultiHostConfig::loopback(&members), metrics.clone());
+        registry.kill_host(2);
+        let resp = drive(&registry, &members, vec![0, 1, 2], 32);
+        let Response::Distillation { contributions, .. } = resp else {
+            panic!("wrong response kind");
+        };
+        // every block was computed (none left at the zero fill)
+        assert!(contributions.data.iter().all(|&v| v > 0.0));
+        assert!(metrics.replans() >= 1, "replans={}", metrics.replans());
+        assert_eq!(metrics.completed(), 1);
+        assert!(!registry.host_alive(2));
+        registry.shutdown();
+    }
+
+    #[test]
+    fn heartbeats_mark_silent_hosts_dead() {
+        let members = [DeviceKind::Tpu, DeviceKind::Tpu];
+        let metrics = Arc::new(Metrics::with_devices(1));
+        let mut cfg = MultiHostConfig::simnet(&members, LinkConfig::ideal(11));
+        cfg.heartbeat_period = Duration::from_millis(10);
+        cfg.heartbeat_timeout = Duration::from_millis(60);
+        let registry = HostRegistry::start(&cfg, metrics.clone());
+        assert!(registry.partition_host(1, true));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while registry.host_alive(1) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!registry.host_alive(1), "partitioned host never declared dead");
+        assert!(registry.host_alive(0), "healthy host must stay alive");
+        assert!(metrics.heartbeat_misses()[1] >= 1);
+        registry.shutdown();
+    }
+}

@@ -49,6 +49,13 @@ pub struct CoordinatorConfig {
     /// fused-batch kernels, or (default) artifacts with native
     /// fallback.
     pub backend: crate::coordinator::worker::BackendMode,
+    /// Optional multi-host plane: simulated hosts behind a
+    /// [`crate::transport::Transport`] wire.  When set, a single
+    /// ≥-threshold distillation the simulator prices cheaper on a
+    /// cross-host group is driven over the wire
+    /// ([`crate::coordinator::remote`]) before any in-process
+    /// placement is considered.
+    pub multihost: Option<crate::coordinator::remote::MultiHostConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -61,6 +68,7 @@ impl Default for CoordinatorConfig {
             work_capacity: 64,
             policy: BatchPolicy::default(),
             backend: crate::coordinator::worker::BackendMode::default(),
+            multihost: None,
         }
     }
 }
@@ -110,6 +118,14 @@ pub struct CoordinatorStats {
     /// Collective re-plans: member stages degraded onto survivors
     /// after a lane died mid-dispatch.
     pub replans: u64,
+    /// Collective jobs driven over the multi-host transport plane.
+    pub multihost_jobs: u64,
+    /// Frame bytes the coordinator sent to hosts (0 with no host plane).
+    pub wire_tx_bytes: u64,
+    /// Frame bytes the coordinator received from hosts.
+    pub wire_rx_bytes: u64,
+    /// Per-host heartbeat-miss counters (empty with no host plane).
+    pub heartbeat_misses: Vec<u64>,
     /// One entry per executor device (kind, queue depth, batches, busy
     /// time).
     pub devices: Vec<DeviceStat>,
@@ -126,6 +142,7 @@ pub struct Coordinator {
     batcher: Option<JoinHandle<()>>,
     executors: Vec<JoinHandle<()>>,
     work: Vec<BoundedQueue<Batch>>,
+    hosts: Option<Arc<crate::coordinator::remote::HostRegistry>>,
 }
 
 impl Coordinator {
@@ -161,14 +178,21 @@ impl Coordinator {
         // wait for worker 0's registry (compile errors surface here)
         crate::coordinator::worker::await_readiness(&ready_rx)?;
 
+        // optional multi-host plane: simulated hosts + wire + liveness
+        let hosts = config
+            .multihost
+            .as_ref()
+            .map(|mh| Arc::new(crate::coordinator::remote::HostRegistry::start(mh, metrics.clone())));
+
         let batcher = {
             let ingress = ingress.clone();
             let work = work.clone();
             let metrics = metrics.clone();
             let policy = config.policy.clone();
+            let hosts = hosts.clone();
             std::thread::Builder::new()
                 .name("xai-batcher".into())
-                .spawn(move || batcher_loop(ingress, work, policy, metrics, lane_kinds))
+                .spawn(move || batcher_loop(ingress, work, policy, metrics, lane_kinds, hosts))
                 .expect("spawn batcher")
         };
 
@@ -179,6 +203,7 @@ impl Coordinator {
             batcher: Some(batcher),
             executors,
             work,
+            hosts,
         })
     }
 
@@ -224,6 +249,10 @@ impl Coordinator {
             mean_batch_size: self.metrics.mean_batch_size(),
             collective_jobs: self.metrics.collective_jobs(),
             replans: self.metrics.replans(),
+            multihost_jobs: self.metrics.multihost_jobs(),
+            wire_tx_bytes: self.metrics.wire_tx_bytes(),
+            wire_rx_bytes: self.metrics.wire_rx_bytes(),
+            heartbeat_misses: self.metrics.heartbeat_misses(),
             devices,
             kinds,
         }
@@ -240,6 +269,24 @@ impl Coordinator {
         }
     }
 
+    /// Test hook: tear host `i`'s link down, simulating a crashed host
+    /// of the multi-host plane.  No-op without a host plane.
+    #[doc(hidden)]
+    pub fn kill_host(&self, i: usize) {
+        if let Some(reg) = &self.hosts {
+            reg.kill_host(i);
+        }
+    }
+
+    /// Test hook: partition (or heal) host `i`'s simulated network
+    /// link.  Returns whether the plane's transport supports it.
+    #[doc(hidden)]
+    pub fn partition_host(&self, i: usize, sealed: bool) -> bool {
+        self.hosts
+            .as_ref()
+            .is_some_and(|reg| reg.partition_host(i, sealed))
+    }
+
     /// Drain and stop all threads.
     pub fn shutdown(mut self) {
         self.ingress.close();
@@ -252,6 +299,9 @@ impl Coordinator {
         for h in self.executors.drain(..) {
             let _ = h.join();
         }
+        if let Some(reg) = self.hosts.take() {
+            reg.shutdown();
+        }
     }
 }
 
@@ -260,6 +310,9 @@ impl Drop for Coordinator {
         self.ingress.close();
         for q in &self.work {
             q.close();
+        }
+        if let Some(reg) = self.hosts.take() {
+            reg.shutdown();
         }
     }
 }
@@ -273,6 +326,7 @@ fn batcher_loop(
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
     lane_kinds: Vec<DeviceKind>,
+    hosts: Option<Arc<crate::coordinator::remote::HostRegistry>>,
 ) {
     let max_wait = policy.max_wait;
     let mut assembler = BatchAssembler::new(policy);
@@ -288,6 +342,19 @@ fn batcher_loop(
     // Blocking on a full live lane is the backpressure.
     let mut alive: Vec<bool> = vec![true; work.len()];
     let mut place = |batch: Batch| -> std::result::Result<(), ()> {
+        // Multi-host interception first: with a host plane configured,
+        // a single ≥-threshold distillation that prices cheaper on a
+        // cross-host group is serialized over the wire and driven by
+        // the remote plane — the batch never reaches a local lane.
+        let batch = match &hosts {
+            Some(reg) => {
+                match crate::coordinator::remote::try_dispatch(reg, batch, &metrics) {
+                    Some(b) => b,
+                    None => return Ok(()),
+                }
+            }
+            None => batch,
+        };
         // Cross-lane interception: a single ≥-threshold distillation
         // may be worth a typed collective group over several lanes —
         // the simulator prices the variants and, when a group wins,

@@ -36,6 +36,9 @@ pub enum Error {
     /// Numerical failure (singular system, non-finite values).
     Numeric(String),
 
+    /// Wire-format encode/decode failure on the transport plane.
+    Wire(crate::transport::wire::WireError),
+
     /// Filesystem errors (artifact loading, bench output).
     Io(std::io::Error),
 }
@@ -51,6 +54,7 @@ impl fmt::Display for Error {
             Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Numeric(msg) => write!(f, "numeric error: {msg}"),
+            Error::Wire(e) => write!(f, "wire error: {e}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -60,6 +64,7 @@ impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             Error::Io(e) => Some(e),
+            Error::Wire(e) => Some(e),
             _ => None,
         }
     }
@@ -68,6 +73,12 @@ impl std::error::Error for Error {
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {
         Error::Io(e)
+    }
+}
+
+impl From<crate::transport::wire::WireError> for Error {
+    fn from(e: crate::transport::wire::WireError) -> Self {
+        Error::Wire(e)
     }
 }
 

@@ -69,6 +69,13 @@ pub struct Interconnect {
     pub link_bw: f64,
     /// Per-hop latency (s).
     pub hop_latency_s: f64,
+    /// Per-byte serialization cost (s/B) on top of raw bandwidth — the
+    /// CPU/NIC cost of framing, checksumming, and copying each byte
+    /// onto the wire.  Zero for chip-class links (DMA between
+    /// co-packaged dies pays no marshalling); nonzero for the network
+    /// classes ([`Interconnect::ethernet`] / [`Interconnect::rdma`]),
+    /// where it prices the wire format of the transport plane.
+    pub ser_s_per_byte: f64,
 }
 
 impl Interconnect {
@@ -78,38 +85,69 @@ impl Interconnect {
             DeviceKind::Tpu => Interconnect {
                 link_bw: 100.0e9,
                 hop_latency_s: 1e-6,
+                ser_s_per_byte: 0.0,
             },
             DeviceKind::Gpu => Interconnect {
                 link_bw: 50.0e9,
                 hop_latency_s: 2e-6,
+                ser_s_per_byte: 0.0,
             },
             DeviceKind::Cpu => Interconnect {
                 link_bw: 20.0e9,
                 hop_latency_s: 5e-7,
+                ser_s_per_byte: 0.0,
             },
+        }
+    }
+
+    /// Datacenter Ethernet class: 25 GbE through a kernel network
+    /// stack — 3.125 GB/s on the wire, ~30 µs one-way, and a hefty
+    /// 0.25 ns/B serialization term (socket copies + software
+    /// checksums ≈ 4 GB/s of marshalling throughput).  Matches
+    /// [`crate::transport::simnet::LinkConfig::ethernet`].
+    pub fn ethernet() -> Interconnect {
+        Interconnect {
+            link_bw: 3.125e9,
+            hop_latency_s: 30e-6,
+            ser_s_per_byte: 0.25e-9,
+        }
+    }
+
+    /// RDMA class: a 100 Gb/s kernel-bypass fabric — 12.5 GB/s,
+    /// ~2 µs one-way, and only 0.02 ns/B of serialization (zero-copy
+    /// verbs, CRC offloaded to the NIC).  Matches
+    /// [`crate::transport::simnet::LinkConfig::rdma`].
+    pub fn rdma() -> Interconnect {
+        Interconnect {
+            link_bw: 12.5e9,
+            hop_latency_s: 2e-6,
+            ser_s_per_byte: 0.02e-9,
         }
     }
 
     /// Effective interconnect of a ring built from mixed link classes:
     /// every collective step crosses every link, so the slowest
-    /// bandwidth and the largest hop latency gate the ring.
+    /// bandwidth, the largest hop latency, and the costliest
+    /// serialization gate the ring.
     pub fn ring_of(links: &[Interconnect]) -> Interconnect {
         assert!(!links.is_empty(), "a ring needs at least one link");
         Interconnect {
             link_bw: links.iter().map(|l| l.link_bw).fold(f64::INFINITY, f64::min),
             hop_latency_s: links.iter().map(|l| l.hop_latency_s).fold(0.0, f64::max),
+            ser_s_per_byte: links.iter().map(|l| l.ser_s_per_byte).fold(0.0, f64::max),
         }
     }
 
     /// Ring all-gather of a `payload` so every core ends with all of
     /// it: `(p−1)` hops of latency, `payload·(p−1)/p` through each
-    /// link.
+    /// link (paying bandwidth + serialization per byte moved).
     pub fn all_gather_s(&self, payload: u64, parts: usize) -> f64 {
         if parts <= 1 {
             return 0.0;
         }
         let p = parts as f64;
-        (p - 1.0) * self.hop_latency_s + payload as f64 * (p - 1.0) / p / self.link_bw
+        let moved = payload as f64 * (p - 1.0) / p;
+        (p - 1.0) * self.hop_latency_s + moved / self.link_bw + moved * self.ser_s_per_byte
     }
 
     /// Root-to-pool scatter of disjoint shards: one hop of latency,
@@ -119,7 +157,8 @@ impl Interconnect {
             return 0.0;
         }
         let p = parts as f64;
-        self.hop_latency_s + payload as f64 * (p - 1.0) / p / self.link_bw
+        let moved = payload as f64 * (p - 1.0) / p;
+        self.hop_latency_s + moved / self.link_bw + moved * self.ser_s_per_byte
     }
 }
 
@@ -138,7 +177,7 @@ pub fn all_gather_group_s(payload: u64, links: &[Interconnect]) -> f64 {
     let chunk = payload as f64 / p as f64;
     let step = links
         .iter()
-        .map(|l| l.hop_latency_s + chunk / l.link_bw)
+        .map(|l| l.hop_latency_s + chunk / l.link_bw + chunk * l.ser_s_per_byte)
         .fold(0.0, f64::max);
     (p as f64 - 1.0) * step
 }
@@ -153,12 +192,115 @@ pub fn scatter_group_s(payload: u64, links: &[Interconnect]) -> f64 {
     }
     let chunk = payload as f64 / p as f64;
     let lat = links.iter().map(|l| l.hop_latency_s).fold(0.0, f64::max);
-    lat + links.iter().skip(1).map(|l| chunk / l.link_bw).sum::<f64>()
+    lat + links
+        .iter()
+        .skip(1)
+        .map(|l| chunk / l.link_bw + chunk * l.ser_s_per_byte)
+        .sum::<f64>()
 }
 
 /// Link classes of a member list (helper for the grouped pricing).
 fn links_of(kinds: &[DeviceKind]) -> Vec<Interconnect> {
     kinds.iter().map(|&k| Interconnect::for_kind(k)).collect()
+}
+
+/// Partition a member list by host id, preserving member order within
+/// each host.  Member `i` lives on `hosts[i]`; members beyond the
+/// host-map length fold onto the last mapped host.
+fn members_by_host(kinds: &[DeviceKind], hosts: &[usize]) -> Vec<Vec<DeviceKind>> {
+    let last = *hosts.last().expect("multihost pools map at least one host");
+    let mut out: Vec<(usize, Vec<DeviceKind>)> = Vec::new();
+    for (i, &k) in kinds.iter().enumerate() {
+        let h = hosts.get(i).copied().unwrap_or(last);
+        match out.iter_mut().find(|(id, _)| *id == h) {
+            Some((_, v)) => v.push(k),
+            None => out.push((h, vec![k])),
+        }
+    }
+    out.into_iter().map(|(_, v)| v).collect()
+}
+
+/// Hierarchical two-level ring all-gather across hosts.  Phase 1: each
+/// host ring-gathers its own members' shards over chip links.  Phase 2:
+/// one representative per host runs a ring over the network link,
+/// moving the largest host share per step (bandwidth + serialization
+/// per byte).  Phase 3: each multi-member host fans the remote share
+/// out over its slowest chip link.  With all members on one host this
+/// degenerates exactly to [`all_gather_group_s`].
+pub fn multihost_all_gather_s(
+    payload: u64,
+    kinds: &[DeviceKind],
+    hosts: &[usize],
+    net: &Interconnect,
+) -> f64 {
+    let p = kinds.len();
+    if p <= 1 {
+        return 0.0;
+    }
+    let groups = members_by_host(kinds, hosts);
+    let nh = groups.len();
+    if nh <= 1 {
+        return all_gather_group_s(payload, &links_of(kinds));
+    }
+    let pf = p as f64;
+    // phase 1: local gathers run concurrently; the slowest host gates
+    let t_local = groups
+        .iter()
+        .map(|g| {
+            let share = (payload as f64 * g.len() as f64 / pf) as u64;
+            all_gather_group_s(share, &links_of(g))
+        })
+        .fold(0.0, f64::max);
+    // phase 2: inter-host ring, (nh−1) steps of the largest host share
+    let max_share =
+        payload as f64 * groups.iter().map(|g| g.len()).max().unwrap_or(1) as f64 / pf;
+    let t_net = (nh as f64 - 1.0)
+        * (net.hop_latency_s + max_share / net.link_bw + max_share * net.ser_s_per_byte);
+    // phase 3: everything that arrived from other hosts crosses the
+    // host's weakest chip link once
+    let t_fan = groups
+        .iter()
+        .filter(|g| g.len() > 1)
+        .map(|g| {
+            let remote = payload as f64 * (p - g.len()) as f64 / pf;
+            let ring = Interconnect::ring_of(&links_of(g));
+            ring.hop_latency_s + remote / ring.link_bw + remote * ring.ser_s_per_byte
+        })
+        .fold(0.0, f64::max);
+    t_local + t_net + t_fan
+}
+
+/// Hierarchical root scatter across hosts: the root host pushes every
+/// other host's combined share through its NIC once, then each host
+/// scatters its share over its own chip ring (local scatters run
+/// concurrently).  Degenerates exactly to [`scatter_group_s`] when all
+/// members share one host.
+pub fn multihost_scatter_s(
+    payload: u64,
+    kinds: &[DeviceKind],
+    hosts: &[usize],
+    net: &Interconnect,
+) -> f64 {
+    let p = kinds.len();
+    if p <= 1 {
+        return 0.0;
+    }
+    let groups = members_by_host(kinds, hosts);
+    let nh = groups.len();
+    if nh <= 1 {
+        return scatter_group_s(payload, &links_of(kinds));
+    }
+    let pf = p as f64;
+    let remote = payload as f64 * (p - groups[0].len()) as f64 / pf;
+    let t_net = net.hop_latency_s + remote / net.link_bw + remote * net.ser_s_per_byte;
+    let t_local = groups
+        .iter()
+        .map(|g| {
+            let share = (payload as f64 * g.len() as f64 / pf) as u64;
+            scatter_group_s(share, &links_of(g))
+        })
+        .fold(0.0, f64::max);
+    t_net + t_local
 }
 
 /// Greedy weak-link exclusion: starting from the full candidate
@@ -224,6 +366,10 @@ pub struct DevicePool {
     devices: Vec<Box<dyn Device>>,
     /// Effective ring interconnect (weakest member link gates it).
     pub interconnect: Interconnect,
+    /// Multi-host topology, when set: member `i` lives on host
+    /// `hosts[i]` and grouped collectives crossing hosts pay the
+    /// network link's hierarchical price.
+    multihost: Option<(Vec<usize>, Interconnect)>,
 }
 
 /// One single-core member device of a pool (the pool owns cross-core
@@ -265,7 +411,23 @@ impl DevicePool {
             kinds: members.to_vec(),
             devices: members.iter().map(|&k| single_core(k)).collect(),
             interconnect: Interconnect::ring_of(&links),
+            multihost: None,
         }
+    }
+
+    /// A multi-host pool: member `i` lives on host `hosts[i]`, and the
+    /// hosts are joined by the `net` link class (e.g.
+    /// [`Interconnect::rdma`]).  Compute stages price exactly as on
+    /// [`DevicePool::mixed`]; grouped collectives whose membership
+    /// spans hosts pay the hierarchical two-level ring
+    /// ([`multihost_all_gather_s`] / [`multihost_scatter_s`]) instead
+    /// of the flat chip ring.  With every member mapped to one host the
+    /// pool degenerates bit-for-bit to the flat pool.
+    pub fn multihost(members: &[DeviceKind], hosts: &[usize], net: Interconnect) -> DevicePool {
+        assert_eq!(members.len(), hosts.len(), "one host id per member");
+        let mut pool = DevicePool::mixed(members);
+        pool.multihost = Some((hosts.to_vec(), net));
+        pool
     }
 
     /// Number of member devices.
@@ -378,12 +540,11 @@ impl DevicePool {
                 // own model, per-hop merges over the member's own link.
                 Op::ShardedFft2Grouped { b, m, n, group } => {
                     let kinds = group.kinds();
-                    let links = links_of(kinds);
                     if b <= 1 {
                         // line-banded single transform: row stage,
                         // merge, column stage, merge — grouped twin of
                         // the ShardedFft2 arm above
-                        let merge = all_gather_group_s(2 * 4 * (m * n) as u64, &links);
+                        let merge = self.group_all_gather(2 * 4 * (m * n) as u64, kinds);
                         self.band_stage_group(&mut rep, m, kinds, |band| Op::BatchedFft2 {
                             b: band,
                             m: 1,
@@ -408,28 +569,18 @@ impl DevicePool {
                 }
                 Op::ShardedMatmulGrouped { m, k, n, group } => {
                     let kinds = group.kinds();
-                    let links = links_of(kinds);
                     self.band_stage_group(&mut rep, m, kinds, |band| Op::Matmul {
                         m: band,
                         k,
                         n,
                     });
-                    self.collective(
-                        &mut rep,
-                        all_gather_group_s(4 * (m * n) as u64, &links),
-                    );
+                    self.collective(&mut rep, self.group_all_gather(4 * (m * n) as u64, kinds));
                 }
                 Op::AllGatherGrouped { bytes, group } => {
-                    self.collective(
-                        &mut rep,
-                        all_gather_group_s(bytes, &links_of(group.kinds())),
-                    );
+                    self.collective(&mut rep, self.group_all_gather(bytes, group.kinds()));
                 }
                 Op::ScatterGrouped { bytes, group } => {
-                    self.collective(
-                        &mut rep,
-                        scatter_group_s(bytes, &links_of(group.kinds())),
-                    );
+                    self.collective(&mut rep, self.group_scatter(bytes, group.kinds()));
                 }
                 // undecomposed work runs on core 0
                 _ => {
@@ -541,6 +692,24 @@ impl DevicePool {
     fn collective(&self, rep: &mut PoolReport, seconds: f64) {
         rep.time_s += seconds;
         rep.collective_s += seconds;
+    }
+
+    /// Grouped all-gather price: hierarchical over the host map when
+    /// this is a multi-host pool, flat chip ring otherwise.
+    fn group_all_gather(&self, payload: u64, kinds: &[DeviceKind]) -> f64 {
+        match &self.multihost {
+            Some((hosts, net)) => multihost_all_gather_s(payload, kinds, hosts, net),
+            None => all_gather_group_s(payload, &links_of(kinds)),
+        }
+    }
+
+    /// Grouped scatter price, same dispatch as
+    /// [`DevicePool::group_all_gather`].
+    fn group_scatter(&self, payload: u64, kinds: &[DeviceKind]) -> f64 {
+        match &self.multihost {
+            Some((hosts, net)) => multihost_scatter_s(payload, kinds, hosts, net),
+            None => scatter_group_s(payload, &links_of(kinds)),
+        }
     }
 }
 
@@ -881,6 +1050,99 @@ mod tests {
         assert!(chosen.len() >= 2, "a collective group survived: {chosen:?}");
         // exclusion must actually pay: the chosen group beats the fleet
         assert!(price(&chosen) < price(&fleet));
+    }
+
+    // ---- multi-host link classes and hierarchical collectives ----------
+
+    #[test]
+    fn network_link_classes_match_their_documented_figures() {
+        // Satellite 1: the constructors' figures, checked against the
+        // per-hop grouped pricing they feed.
+        let eth = Interconnect::ethernet();
+        assert_eq!(eth.link_bw, 3.125e9);
+        assert_eq!(eth.hop_latency_s, 30e-6);
+        assert_eq!(eth.ser_s_per_byte, 0.25e-9);
+        let rdma = Interconnect::rdma();
+        assert_eq!(rdma.link_bw, 12.5e9);
+        assert_eq!(rdma.hop_latency_s, 2e-6);
+        assert_eq!(rdma.ser_s_per_byte, 0.02e-9);
+        // a 4-host RDMA ring prices (p−1)·(lat + chunk/bw + chunk·ser)
+        let payload = 8 * 1024 * 1024u64;
+        let chunk = payload as f64 / 4.0;
+        let expect =
+            3.0 * (rdma.hop_latency_s + chunk / rdma.link_bw + chunk * rdma.ser_s_per_byte);
+        let got = all_gather_group_s(payload, &[rdma; 4]);
+        assert!(((got - expect) / expect).abs() < 1e-12, "{got} vs {expect}");
+        // Ethernet's software stack is dearer than RDMA on every axis
+        assert!(
+            all_gather_group_s(payload, &[eth; 4]) > got,
+            "ethernet must out-price rdma"
+        );
+        // and the serialization term alone is visible: zeroing it must
+        // cheapen the ring
+        let mut free_ser = rdma;
+        free_ser.ser_s_per_byte = 0.0;
+        assert!(all_gather_group_s(payload, &[free_ser; 4]) < got);
+    }
+
+    #[test]
+    fn chip_links_pay_no_serialization() {
+        // ser=0 on every chip class keeps all pre-transport baselines
+        // bit-for-bit: the new term prices only the wire format.
+        for k in [DeviceKind::Tpu, DeviceKind::Gpu, DeviceKind::Cpu] {
+            assert_eq!(Interconnect::for_kind(k).ser_s_per_byte, 0.0);
+        }
+    }
+
+    #[test]
+    fn single_host_multihost_pool_degenerates_to_the_flat_pool() {
+        use crate::xai::workloads::distill_interpretation_trace_collective;
+        let members = [DeviceKind::Tpu; 4];
+        let trace = distill_interpretation_trace_collective(1024, 256, &members);
+        let flat = DevicePool::mixed(&members).replay_sharded(&trace).time_s;
+        let one_host = DevicePool::multihost(&members, &[0; 4], Interconnect::rdma())
+            .replay_sharded(&trace)
+            .time_s;
+        assert!(
+            ((flat - one_host) / flat).abs() < 1e-12,
+            "flat {flat} vs one-host {one_host}"
+        );
+    }
+
+    #[test]
+    fn crossing_hosts_costs_more_and_more_hosts_cost_more() {
+        use crate::xai::workloads::distill_interpretation_trace_collective;
+        let members = [DeviceKind::Tpu; 8];
+        let trace = distill_interpretation_trace_collective(1024, 256, &members);
+        let net = Interconnect::rdma();
+        let flat = DevicePool::mixed(&members).replay_sharded(&trace).time_s;
+        let two = DevicePool::multihost(&members, &[0, 0, 0, 0, 1, 1, 1, 1], net)
+            .replay_sharded(&trace)
+            .time_s;
+        let four = DevicePool::multihost(&members, &[0, 0, 1, 1, 2, 2, 3, 3], net)
+            .replay_sharded(&trace)
+            .time_s;
+        assert!(two > flat, "2-host {two} must out-price chip links {flat}");
+        assert!(four > two, "4-host {four} must out-price 2-host {two}");
+        // ethernet's kernel stack out-prices rdma on the same split
+        let eth = DevicePool::multihost(&members, &[0, 0, 0, 0, 1, 1, 1, 1], Interconnect::ethernet())
+            .replay_sharded(&trace)
+            .time_s;
+        assert!(eth > two, "ethernet {eth} vs rdma {two}");
+    }
+
+    #[test]
+    fn hierarchical_collectives_degenerate_on_one_host() {
+        let kinds = [DeviceKind::Tpu; 4];
+        let net = Interconnect::ethernet();
+        let payload = 4 * 1024 * 1024u64;
+        let flat_ag = all_gather_group_s(payload, &links_of(&kinds));
+        let flat_sc = scatter_group_s(payload, &links_of(&kinds));
+        assert_eq!(multihost_all_gather_s(payload, &kinds, &[0; 4], &net), flat_ag);
+        assert_eq!(multihost_scatter_s(payload, &kinds, &[0; 4], &net), flat_sc);
+        // and spanning hosts strictly exceeds the flat price
+        assert!(multihost_all_gather_s(payload, &kinds, &[0, 0, 1, 1], &net) > flat_ag);
+        assert!(multihost_scatter_s(payload, &kinds, &[0, 0, 1, 1], &net) > flat_sc);
     }
 
     #[test]

@@ -61,6 +61,7 @@ pub mod linalg;
 pub mod models;
 pub mod runtime;
 pub mod trace;
+pub mod transport;
 pub mod util;
 pub mod xai;
 

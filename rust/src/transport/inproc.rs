@@ -1,0 +1,121 @@
+//! In-process loopback transport: the [`Transport`] contract over two
+//! bounded queues, nothing more.
+//!
+//! `Loopback` is the proof that the wire boundary costs no semantics:
+//! frames cross in order, unmodified, and undropped, so a coordinator
+//! driving hosts through `Loopback` reproduces the in-memory collective
+//! plane bit-for-bit (`tests/prop_coordinator.rs` asserts exactly
+//! that).  It is also the default transport of the multi-host plane
+//! when no network simulation is requested.
+
+use crate::coordinator::queue::{BoundedQueue, QueueError};
+use crate::transport::{Recv, SendError, Transport};
+use std::time::Duration;
+
+/// One end of an in-process frame pipe.  Build both ends with
+/// [`Loopback::pair`].
+pub struct Loopback {
+    tx: BoundedQueue<Vec<u8>>,
+    rx: BoundedQueue<Vec<u8>>,
+}
+
+impl Loopback {
+    /// A connected endpoint pair, each direction bounded by `capacity`
+    /// frames (backpressure: a full direction blocks the sender).
+    pub fn pair(capacity: usize) -> (Loopback, Loopback) {
+        let a_to_b = BoundedQueue::new(capacity);
+        let b_to_a = BoundedQueue::new(capacity);
+        (
+            Loopback {
+                tx: a_to_b.clone(),
+                rx: b_to_a.clone(),
+            },
+            Loopback {
+                tx: b_to_a,
+                rx: a_to_b,
+            },
+        )
+    }
+
+    /// Close both directions of this endpoint's link.
+    pub fn close(&self) {
+        self.tx.close();
+        self.rx.close();
+    }
+}
+
+impl Transport for Loopback {
+    fn send(&self, frame: Vec<u8>) -> Result<(), SendError> {
+        // `push` blocks while full (backpressure) and only errs closed
+        self.tx.push(frame).map_err(|_: QueueError| SendError::Closed)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Recv {
+        match self.rx.pop_timeout(timeout) {
+            Some(frame) => Recv::Frame(frame),
+            None => {
+                if self.rx.is_closed() && self.rx.is_empty() {
+                    Recv::Closed
+                } else {
+                    Recv::Timeout
+                }
+            }
+        }
+    }
+
+    fn close(&self) {
+        Loopback::close(self);
+    }
+}
+
+impl Drop for Loopback {
+    fn drop(&mut self) {
+        // a dropped endpoint closes the link for the peer
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::wire::{self, WireMessage};
+
+    #[test]
+    fn frames_cross_in_order_and_unmodified() {
+        let (a, b) = Loopback::pair(8);
+        for seq in 0..5u64 {
+            let f = wire::encode_frame(&WireMessage::Heartbeat { host: 0, seq }).unwrap();
+            a.send(f).unwrap();
+        }
+        for seq in 0..5u64 {
+            let Recv::Frame(f) = b.recv_timeout(Duration::from_secs(1)) else {
+                panic!("frame {seq} missing");
+            };
+            assert_eq!(
+                wire::decode_frame(&f).unwrap(),
+                WireMessage::Heartbeat { host: 0, seq }
+            );
+        }
+        assert_eq!(b.recv_timeout(Duration::from_millis(1)), Recv::Timeout);
+    }
+
+    #[test]
+    fn both_directions_work() {
+        let (a, b) = Loopback::pair(4);
+        a.send(vec![1]).unwrap();
+        b.send(vec![2]).unwrap();
+        assert_eq!(b.recv_timeout(Duration::from_secs(1)), Recv::Frame(vec![1]));
+        assert_eq!(a.recv_timeout(Duration::from_secs(1)), Recv::Frame(vec![2]));
+    }
+
+    #[test]
+    fn dropping_an_endpoint_closes_the_peer() {
+        let (a, b) = Loopback::pair(4);
+        a.send(vec![9]).unwrap();
+        drop(a);
+        // queued frames still drain, then the close is visible
+        assert_eq!(b.recv_timeout(Duration::from_secs(1)), Recv::Frame(vec![9]));
+        assert_eq!(b.recv_timeout(Duration::from_millis(1)), Recv::Closed);
+        assert_eq!(b.send(vec![1]), Err(SendError::Closed));
+    }
+}

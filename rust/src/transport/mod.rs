@@ -1,0 +1,83 @@
+//! The transport plane: serialized band payloads over an abstract wire.
+//!
+//! PR 6 let one collective request span every lane of one process; the
+//! lane → host leap needs frames instead of `Arc`s.  This module owns
+//! that boundary:
+//!
+//! * [`wire`] — the versioned binary frame format (magic + version
+//!   header, length framing, CRC-32 checksum) every byte of the
+//!   multi-host plane travels in;
+//! * the [`Transport`] trait — a symmetric, thread-safe frame pipe
+//!   between the coordinator and one host;
+//! * [`inproc::Loopback`] — a channel-backed transport that preserves
+//!   today's in-process behavior bit-for-bit (frames hop one bounded
+//!   queue, nothing is reordered, dropped, or delayed);
+//! * [`simnet::SimNet`] — a deterministic simulated network with
+//!   per-link bandwidth, latency, and jitter, plus seeded fault
+//!   injection (drop, duplicate, delay, partition) for exercising the
+//!   degrade path under realistic link behavior.
+//!
+//! The host plane built on top lives in
+//! [`crate::coordinator::remote`]; pricing of cross-host rings lives
+//! with the rest of the cost model in [`crate::hwsim::pool`]
+//! (Ethernet/RDMA link classes, per-hop serialization cost).
+
+pub mod inproc;
+pub mod simnet;
+pub mod wire;
+
+use std::time::Duration;
+
+/// Outcome of a bounded receive on a [`Transport`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Recv {
+    /// A complete frame arrived.
+    Frame(Vec<u8>),
+    /// Nothing arrived before the deadline; the link is still up.
+    Timeout,
+    /// The peer endpoint closed; no further frame will ever arrive.
+    Closed,
+}
+
+/// Failure of a [`Transport::send`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SendError {
+    /// The link is closed; the frame was not queued.
+    Closed,
+}
+
+impl std::fmt::Display for SendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SendError::Closed => write!(f, "transport closed"),
+        }
+    }
+}
+
+impl std::error::Error for SendError {}
+
+/// One end of a bidirectional frame pipe between the coordinator and a
+/// host.  Implementations are thread-safe: a host shares one endpoint
+/// between its worker loop and its heartbeat thread.
+///
+/// Semantics every implementation honors:
+///
+/// * `send` queues a whole frame (as produced by
+///   [`wire::encode_frame`]) and returns without waiting for delivery;
+///   an `Ok` send is **not** a delivery guarantee — a lossy transport
+///   ([`simnet::SimNet`] with faults) may still drop the frame.
+/// * `recv_timeout` yields whole frames in delivery order, or
+///   [`Recv::Timeout`] / [`Recv::Closed`].
+/// * Dropping an endpoint closes the link for the peer.
+pub trait Transport: Send + Sync {
+    /// Queue one frame for the peer.
+    fn send(&self, frame: Vec<u8>) -> Result<(), SendError>;
+
+    /// Wait up to `timeout` for the next frame from the peer.
+    fn recv_timeout(&self, timeout: Duration) -> Recv;
+
+    /// Tear the link down: both endpoints see sends fail and receives
+    /// drain to [`Recv::Closed`].  Used by the host plane to kill a
+    /// host and at coordinator shutdown.
+    fn close(&self);
+}

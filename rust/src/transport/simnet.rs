@@ -1,0 +1,404 @@
+//! Deterministic simulated network transport with fault injection.
+//!
+//! [`SimNet`] implements [`Transport`] over an in-memory link that
+//! behaves like a real one: every frame pays a serialization delay
+//! (`bytes / bandwidth`, back-to-back frames queue behind each other on
+//! the link), a propagation latency, and a seeded uniform jitter; the
+//! fault injector can **drop** frames, **duplicate** them, or
+//! **partition** the link entirely.  All randomness comes from one
+//! seeded [`Rng`] per direction, so a given send sequence makes the
+//! same drop/duplicate/jitter decisions on every run — network tests
+//! are reproducible, not flaky.
+//!
+//! Failure semantics (mirrored in `docs/ARCHITECTURE.md` §6):
+//!
+//! * a **dropped** frame is lost silently — `send` still returns `Ok`,
+//!   exactly like a real NIC;
+//! * a **duplicated** frame is delivered twice, in order — receivers
+//!   must be idempotent (the host plane's per-job state makes them so);
+//! * a **partitioned** link delivers nothing in either direction;
+//!   frames already in flight are *held*, not dropped, and flow again
+//!   if the partition heals — the worst case for timeout logic;
+//! * frames are never reordered within a direction, and never
+//!   corrupted — corruption is the wire checksum's department, and is
+//!   tested there by flipping bits explicitly.
+
+use crate::transport::{Recv, SendError, Transport};
+use crate::util::rng::Rng;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Behavior of one simulated link (both directions share it).
+#[derive(Debug, Clone)]
+pub struct LinkConfig {
+    /// Link bandwidth (bytes/s); each frame occupies the link for
+    /// `len / bandwidth` before it propagates.
+    pub bandwidth_bytes_per_s: f64,
+    /// One-way propagation latency added to every frame.
+    pub latency: Duration,
+    /// Per-frame jitter, uniform in `[0, jitter)`, added to latency.
+    pub jitter: Duration,
+    /// Probability a frame is silently lost.
+    pub drop_rate: f64,
+    /// Probability a frame is delivered twice.
+    pub duplicate_rate: f64,
+    /// Seed of the per-direction fault/jitter RNGs.
+    pub seed: u64,
+}
+
+impl LinkConfig {
+    /// A perfect link: infinite bandwidth, zero latency, no faults.
+    pub fn ideal(seed: u64) -> LinkConfig {
+        LinkConfig {
+            bandwidth_bytes_per_s: f64::INFINITY,
+            latency: Duration::ZERO,
+            jitter: Duration::ZERO,
+            drop_rate: 0.0,
+            duplicate_rate: 0.0,
+            seed,
+        }
+    }
+
+    /// Datacenter Ethernet-class figures (25 GbE through a kernel
+    /// stack): ~3.1 GB/s, 30 µs one-way, a little jitter.  Matches the
+    /// pricing constants of
+    /// [`crate::hwsim::pool::Interconnect::ethernet`].
+    pub fn ethernet(seed: u64) -> LinkConfig {
+        LinkConfig {
+            bandwidth_bytes_per_s: 3.125e9,
+            latency: Duration::from_micros(30),
+            jitter: Duration::from_micros(5),
+            drop_rate: 0.0,
+            duplicate_rate: 0.0,
+            seed,
+        }
+    }
+
+    /// RDMA-class figures (100 Gb/s fabric, kernel-bypass): 12.5 GB/s,
+    /// 2 µs one-way, negligible jitter.  Matches
+    /// [`crate::hwsim::pool::Interconnect::rdma`].
+    pub fn rdma(seed: u64) -> LinkConfig {
+        LinkConfig {
+            bandwidth_bytes_per_s: 12.5e9,
+            latency: Duration::from_micros(2),
+            jitter: Duration::ZERO,
+            drop_rate: 0.0,
+            duplicate_rate: 0.0,
+            seed,
+        }
+    }
+}
+
+/// A frame scheduled for delivery at a virtual-clock instant.
+struct Delivery {
+    at: Instant,
+    seq: u64,
+    frame: Vec<u8>,
+}
+
+// BinaryHeap is a max-heap; order Deliveries inverted so the earliest
+// (at, seq) pops first.
+impl PartialEq for Delivery {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Delivery {}
+impl PartialOrd for Delivery {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Delivery {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+/// One direction of the link: pending deliveries + its own fault RNG.
+struct Dir {
+    state: Mutex<DirState>,
+    arrived: Condvar,
+}
+
+struct DirState {
+    heap: BinaryHeap<Delivery>,
+    /// The link is occupied transmitting until this instant
+    /// (bandwidth serialization: back-to-back frames queue).
+    busy_until: Instant,
+    /// Monotonic sequence, tie-breaks equal delivery instants.
+    seq: u64,
+    rng: Rng,
+    closed: bool,
+}
+
+struct Link {
+    cfg: LinkConfig,
+    partitioned: AtomicBool,
+    dirs: [Dir; 2],
+}
+
+/// One endpoint of a simulated network link.  Build a connected pair
+/// with [`SimNet::pair`]; inject a partition with
+/// [`SimNet::partition`].
+pub struct SimNet {
+    link: Arc<Link>,
+    /// This endpoint transmits into `dirs[side]` and receives from
+    /// `dirs[1 - side]`.
+    side: usize,
+}
+
+impl SimNet {
+    /// A connected endpoint pair over one link with the given behavior.
+    /// The two directions get independent RNG streams derived from
+    /// `cfg.seed`, so either side's fault schedule is reproducible.
+    pub fn pair(cfg: LinkConfig) -> (SimNet, SimNet) {
+        let now = Instant::now();
+        let dir = |seed: u64| Dir {
+            state: Mutex::new(DirState {
+                heap: BinaryHeap::new(),
+                busy_until: now,
+                seq: 0,
+                rng: Rng::new(seed),
+                closed: false,
+            }),
+            arrived: Condvar::new(),
+        };
+        let link = Arc::new(Link {
+            dirs: [dir(cfg.seed), dir(cfg.seed ^ 0x9E37_79B9_7F4A_7C15)],
+            partitioned: AtomicBool::new(false),
+            cfg,
+        });
+        (
+            SimNet {
+                link: link.clone(),
+                side: 0,
+            },
+            SimNet { link, side: 1 },
+        )
+    }
+
+    /// Partition or heal the link (both directions).  While
+    /// partitioned nothing is delivered; in-flight frames are held and
+    /// resume on heal.
+    pub fn partition(&self, sealed: bool) {
+        self.link.partitioned.store(sealed, Ordering::SeqCst);
+        if !sealed {
+            for d in &self.link.dirs {
+                d.arrived.notify_all();
+            }
+        }
+    }
+
+    /// Whether the link is currently partitioned.
+    pub fn is_partitioned(&self) -> bool {
+        self.link.partitioned.load(Ordering::SeqCst)
+    }
+
+    /// Close both directions (peers see [`Recv::Closed`] once drained).
+    pub fn close(&self) {
+        for d in &self.link.dirs {
+            let mut s = d.state.lock().unwrap();
+            s.closed = true;
+            drop(s);
+            d.arrived.notify_all();
+        }
+    }
+}
+
+impl Transport for SimNet {
+    fn send(&self, frame: Vec<u8>) -> Result<(), SendError> {
+        let cfg = &self.link.cfg;
+        let dir = &self.link.dirs[self.side];
+        let mut s = dir.state.lock().unwrap();
+        if s.closed {
+            return Err(SendError::Closed);
+        }
+        // Fault schedule: one uniform draw per decision, in a fixed
+        // order, so a send sequence replays identically for a seed.
+        let dropped = cfg.drop_rate > 0.0 && s.rng.uniform() < cfg.drop_rate;
+        let duplicated = cfg.duplicate_rate > 0.0 && s.rng.uniform() < cfg.duplicate_rate;
+        let jitter = if cfg.jitter.is_zero() {
+            Duration::ZERO
+        } else {
+            cfg.jitter.mul_f64(s.rng.uniform())
+        };
+        if dropped {
+            // silently lost: the sender cannot tell (like a real NIC)
+            return Ok(());
+        }
+        let now = Instant::now();
+        let xmit = if cfg.bandwidth_bytes_per_s.is_finite() {
+            Duration::from_secs_f64(frame.len() as f64 / cfg.bandwidth_bytes_per_s)
+        } else {
+            Duration::ZERO
+        };
+        // bandwidth serialization: this frame occupies the link after
+        // whatever is already transmitting
+        let start = s.busy_until.max(now);
+        s.busy_until = start + xmit;
+        let at = s.busy_until + cfg.latency + jitter;
+        let seq = s.seq;
+        s.seq += if duplicated { 2 } else { 1 };
+        if duplicated {
+            s.heap.push(Delivery {
+                at,
+                seq: seq + 1,
+                frame: frame.clone(),
+            });
+        }
+        s.heap.push(Delivery { at, seq, frame });
+        drop(s);
+        dir.arrived.notify_all();
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Recv {
+        let deadline = Instant::now() + timeout;
+        let dir = &self.link.dirs[1 - self.side];
+        let mut s = dir.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let partitioned = self.link.partitioned.load(Ordering::SeqCst);
+            if s.closed && (s.heap.is_empty() || partitioned) {
+                // held frames on a closed, partitioned link never land
+                return Recv::Closed;
+            }
+            let next_at = if partitioned {
+                None // deliveries are held while partitioned
+            } else {
+                s.heap.peek().map(|d| d.at)
+            };
+            if let Some(at) = next_at {
+                if at <= now {
+                    let d = s.heap.pop().expect("peeked above");
+                    return Recv::Frame(d.frame);
+                }
+            }
+            if now >= deadline {
+                return Recv::Timeout;
+            }
+            // sleep until the earliest of: delivery due, caller deadline
+            let until = next_at.map_or(deadline, |at| at.min(deadline));
+            let (g, _) = dir
+                .arrived
+                .wait_timeout(s, until.saturating_duration_since(now))
+                .unwrap();
+            s = g;
+        }
+    }
+
+    fn close(&self) {
+        SimNet::close(self);
+    }
+}
+
+impl Drop for SimNet {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frames_until_timeout(ep: &SimNet) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        while let Recv::Frame(f) = ep.recv_timeout(Duration::from_millis(50)) {
+            out.push(f);
+        }
+        out
+    }
+
+    #[test]
+    fn ideal_link_delivers_in_order() {
+        let (a, b) = SimNet::pair(LinkConfig::ideal(1));
+        for i in 0..4u8 {
+            a.send(vec![i]).unwrap();
+        }
+        assert_eq!(
+            frames_until_timeout(&b),
+            vec![vec![0], vec![1], vec![2], vec![3]]
+        );
+    }
+
+    #[test]
+    fn latency_and_bandwidth_delay_delivery() {
+        // 10 kB at 1 MB/s = 10 ms serialization + 5 ms latency
+        let cfg = LinkConfig {
+            bandwidth_bytes_per_s: 1.0e6,
+            latency: Duration::from_millis(5),
+            ..LinkConfig::ideal(2)
+        };
+        let (a, b) = SimNet::pair(cfg);
+        let t0 = Instant::now();
+        a.send(vec![0u8; 10_000]).unwrap();
+        let Recv::Frame(f) = b.recv_timeout(Duration::from_secs(2)) else {
+            panic!("frame lost");
+        };
+        assert_eq!(f.len(), 10_000);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(14),
+            "arrived after {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn drops_are_silent_and_deterministic() {
+        let cfg = LinkConfig {
+            drop_rate: 0.5,
+            ..LinkConfig::ideal(3)
+        };
+        let run = || {
+            let (a, b) = SimNet::pair(cfg.clone());
+            for i in 0..32u8 {
+                a.send(vec![i]).unwrap(); // Ok even when dropped
+            }
+            frames_until_timeout(&b)
+        };
+        let first = run();
+        assert!(!first.is_empty() && first.len() < 32, "got {}", first.len());
+        // seeded: the same sequence drops the same frames
+        assert_eq!(first, run());
+    }
+
+    #[test]
+    fn duplicates_deliver_twice_in_order() {
+        let cfg = LinkConfig {
+            duplicate_rate: 1.0,
+            ..LinkConfig::ideal(4)
+        };
+        let (a, b) = SimNet::pair(cfg);
+        a.send(vec![7]).unwrap();
+        a.send(vec![8]).unwrap();
+        assert_eq!(
+            frames_until_timeout(&b),
+            vec![vec![7], vec![7], vec![8], vec![8]]
+        );
+    }
+
+    #[test]
+    fn partition_holds_frames_until_heal() {
+        let (a, b) = SimNet::pair(LinkConfig::ideal(5));
+        a.partition(true);
+        a.send(vec![1]).unwrap();
+        assert_eq!(b.recv_timeout(Duration::from_millis(20)), Recv::Timeout);
+        a.partition(false);
+        assert_eq!(
+            b.recv_timeout(Duration::from_secs(1)),
+            Recv::Frame(vec![1])
+        );
+    }
+
+    #[test]
+    fn closed_link_reports_closed() {
+        let (a, b) = SimNet::pair(LinkConfig::ideal(6));
+        drop(a);
+        assert_eq!(b.recv_timeout(Duration::from_millis(5)), Recv::Closed);
+        assert_eq!(b.send(vec![1]), Err(SendError::Closed));
+    }
+}

@@ -1,0 +1,747 @@
+//! The versioned binary wire format for the multi-host plane.
+//!
+//! Every frame is a 16-byte header followed by one encoded
+//! [`WireMessage`]:
+//!
+//! ```text
+//!  offset  size  field
+//!  0       4     magic    "XAIW" (little-endian u32)
+//!  4       2     version  wire-format revision (this file: 1)
+//!  6       2     reserved must be zero
+//!  8       4     payload length in bytes (≤ MAX_PAYLOAD)
+//!  12      4     CRC-32 (IEEE) of the payload bytes
+//!  16      …     payload: tag byte + message fields, little-endian
+//! ```
+//!
+//! Design rules, all load-bearing for the transport plane:
+//!
+//! * **Zero dependencies.**  Matrices serialize as `rows, cols` (u32)
+//!   followed by row-major f32 bits, little-endian — bit-exact, so a
+//!   band computed on a remote host merges into the same f32s an
+//!   in-process member would have produced (the Loopback equivalence
+//!   guarantee).
+//! * **Fail closed, never panic.**  [`decode_frame`] treats the input
+//!   as hostile: truncated headers, bad magic, foreign versions,
+//!   length fields that disagree with the bytes on the wire, checksum
+//!   mismatches, unknown tags, and short or oversized payloads all
+//!   return a typed [`WireError`] — property-tested in
+//!   `tests/prop_transport.rs` against random corruption.
+//! * **Length fields are bounds-checked before allocation.**  A
+//!   malformed `rows×cols` can claim gigabytes; the decoder verifies
+//!   every element count against the bytes actually present first.
+
+use crate::hwsim::DeviceKind;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::shard::Assignment;
+use std::fmt;
+
+/// Frame magic: `b"XAIW"` read as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"XAIW");
+
+/// Wire-format revision encoded in every header.
+pub const VERSION: u16 = 1;
+
+/// Fixed header size in bytes (magic, version, reserved, length, CRC).
+pub const HEADER_LEN: usize = 16;
+
+/// Hard payload cap (64 MiB): larger length fields are rejected before
+/// any allocation happens.
+pub const MAX_PAYLOAD: usize = 64 << 20;
+
+/// Explicit encode/decode failures of the wire format.
+///
+/// Carried by [`crate::error::Error::Wire`] when a transport-plane
+/// operation surfaces through the crate-wide `Result`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// Frame shorter than a full 16-byte header.
+    Truncated,
+    /// Header magic is not `XAIW`.
+    BadMagic(u32),
+    /// Header names a wire revision this build does not speak.
+    BadVersion(u16),
+    /// Declared payload length disagrees with the frame, or exceeds
+    /// [`MAX_PAYLOAD`].
+    BadLength {
+        /// Length the header declared.
+        declared: usize,
+        /// Payload bytes actually present after the header.
+        actual: usize,
+    },
+    /// Payload checksum mismatch (bit corruption in flight).
+    BadChecksum {
+        /// CRC the header carried.
+        expected: u32,
+        /// CRC computed over the received payload.
+        got: u32,
+    },
+    /// Unknown message tag byte.
+    BadTag(u8),
+    /// Payload ended in the middle of a field.
+    ShortPayload,
+    /// A complete message left unconsumed payload bytes behind.
+    TrailingBytes(usize),
+    /// Encoding was refused (message larger than [`MAX_PAYLOAD`]).
+    TooLarge(usize),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "frame shorter than the {HEADER_LEN}-byte header"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            WireError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            WireError::BadLength { declared, actual } => {
+                write!(f, "payload length {declared} disagrees with frame ({actual} bytes)")
+            }
+            WireError::BadChecksum { expected, got } => {
+                write!(f, "payload checksum {got:#010x} != header {expected:#010x}")
+            }
+            WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            WireError::ShortPayload => write!(f, "payload ended mid-field"),
+            WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes after message"),
+            WireError::TooLarge(n) => write!(f, "message payload {n} exceeds {MAX_PAYLOAD} bytes"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Everything that crosses the wire between the coordinator and a
+/// host: collective control (claim / kernel hand-off / band-done /
+/// barrier-merge), liveness beacons, and final replies.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireMessage {
+    /// Host registration: id and the device class it serves.
+    Hello {
+        /// Host id within the registry.
+        host: u32,
+        /// Device class of the host's local fleet.
+        kind: DeviceKind,
+    },
+    /// Liveness beacon, sent on a fixed period by every host.
+    Heartbeat {
+        /// Sending host id.
+        host: u32,
+        /// Monotonic beacon counter.
+        seq: u64,
+    },
+    /// One member's share of a collective distillation: the full
+    /// problem (`x`, `y`), the member's occlusion band, and the group
+    /// shape needed to reproduce the banded solve plan.  `solver` marks
+    /// the member that executes the Eq. 5 spectral solve.
+    Claim {
+        /// Job id the coordinator assigned.
+        job: u64,
+        /// Problem size (`x` and `y` are `n×n`).
+        n: u32,
+        /// Occlusion block edge.
+        block: u32,
+        /// Whether this member runs the solve.
+        solver: bool,
+        /// This member's band of the `(n/block)²` occlusion blocks.
+        band: Assignment,
+        /// Group membership, placement order.
+        members: Vec<DeviceKind>,
+        /// Row bands of the group-banded solve transforms.
+        row_bands: Vec<Assignment>,
+        /// Model input.
+        x: Matrix,
+        /// Model output the surrogate fits.
+        y: Matrix,
+    },
+    /// Solver → coordinator: the fitted kernel.
+    KernelDone {
+        /// Job id.
+        job: u64,
+        /// The Eq. 5 kernel.
+        kernel: Matrix,
+    },
+    /// Coordinator → non-solver members: kernel broadcast.
+    Kernel {
+        /// Job id.
+        job: u64,
+        /// The Eq. 5 kernel.
+        kernel: Matrix,
+    },
+    /// Coordinator → member: adopt another band (degrade re-plan) of a
+    /// job the member already holds state for.
+    Band {
+        /// Job id.
+        job: u64,
+        /// The orphaned band to adopt.
+        band: Assignment,
+    },
+    /// Member → coordinator: per-block contribution norms for a band.
+    BandDone {
+        /// Job id.
+        job: u64,
+        /// The band these values cover.
+        band: Assignment,
+        /// One norm per block, band order.
+        values: Vec<f32>,
+    },
+    /// Coordinator → members: the job merged and replied; drop state.
+    BarrierMerge {
+        /// Job id.
+        job: u64,
+    },
+    /// A serialized final answer (kernel + contribution grid) — the
+    /// reply form a remote client of the plane would receive.
+    Reply {
+        /// Job id.
+        job: u64,
+        /// The fitted kernel.
+        kernel: Matrix,
+        /// Per-block contribution factors.
+        contributions: Matrix,
+    },
+    /// Coordinator → host: stop the host loop.
+    Shutdown,
+}
+
+// --------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected, polynomial 0xEDB88320)
+// --------------------------------------------------------------------------
+
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// IEEE CRC-32 of `bytes` (the checksum in every frame header).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// --------------------------------------------------------------------------
+// payload writer / reader
+// --------------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_kind(out: &mut Vec<u8>, k: DeviceKind) {
+    out.push(match k {
+        DeviceKind::Cpu => 0,
+        DeviceKind::Gpu => 1,
+        DeviceKind::Tpu => 2,
+    });
+}
+
+fn put_assignment(out: &mut Vec<u8>, a: Assignment) {
+    put_u32(out, a.start as u32);
+    put_u32(out, a.len as u32);
+}
+
+fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
+    put_u32(out, m.rows as u32);
+    put_u32(out, m.cols as u32);
+    for &v in &m.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for &v in xs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::ShortPayload);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn kind(&mut self) -> Result<DeviceKind, WireError> {
+        match self.u8()? {
+            0 => Ok(DeviceKind::Cpu),
+            1 => Ok(DeviceKind::Gpu),
+            2 => Ok(DeviceKind::Tpu),
+            t => Err(WireError::BadTag(t)),
+        }
+    }
+
+    fn assignment(&mut self) -> Result<Assignment, WireError> {
+        let start = self.u32()? as usize;
+        let len = self.u32()? as usize;
+        Ok(Assignment { start, len })
+    }
+
+    /// Element count bounds-checked against the bytes actually present
+    /// BEFORE any allocation (a hostile length field cannot OOM us).
+    fn checked_count(&self, elems: u64, elem_bytes: u64) -> Result<usize, WireError> {
+        let need = elems.checked_mul(elem_bytes).ok_or(WireError::ShortPayload)?;
+        if need > self.remaining() as u64 {
+            return Err(WireError::ShortPayload);
+        }
+        Ok(elems as usize)
+    }
+
+    fn matrix(&mut self) -> Result<Matrix, WireError> {
+        let rows = self.u32()? as u64;
+        let cols = self.u32()? as u64;
+        let elems = rows.checked_mul(cols).ok_or(WireError::ShortPayload)?;
+        let count = self.checked_count(elems, 4)?;
+        let mut data = Vec::with_capacity(count);
+        for _ in 0..count {
+            data.push(self.f32()?);
+        }
+        Ok(Matrix::from_vec(rows as usize, cols as usize, data))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.u32()? as u64;
+        let count = self.checked_count(n, 4)?;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    fn kinds(&mut self) -> Result<Vec<DeviceKind>, WireError> {
+        let n = self.u32()? as u64;
+        let count = self.checked_count(n, 1)?;
+        (0..count).map(|_| self.kind()).collect()
+    }
+
+    fn assignments(&mut self) -> Result<Vec<Assignment>, WireError> {
+        let n = self.u32()? as u64;
+        let count = self.checked_count(n, 8)?;
+        (0..count).map(|_| self.assignment()).collect()
+    }
+}
+
+// --------------------------------------------------------------------------
+// message payload codec
+// --------------------------------------------------------------------------
+
+const TAG_HELLO: u8 = 1;
+const TAG_HEARTBEAT: u8 = 2;
+const TAG_CLAIM: u8 = 3;
+const TAG_KERNEL_DONE: u8 = 4;
+const TAG_KERNEL: u8 = 5;
+const TAG_BAND: u8 = 6;
+const TAG_BAND_DONE: u8 = 7;
+const TAG_BARRIER_MERGE: u8 = 8;
+const TAG_REPLY: u8 = 9;
+const TAG_SHUTDOWN: u8 = 10;
+
+fn encode_payload(msg: &WireMessage) -> Vec<u8> {
+    let mut out = Vec::new();
+    match msg {
+        WireMessage::Hello { host, kind } => {
+            out.push(TAG_HELLO);
+            put_u32(&mut out, *host);
+            put_kind(&mut out, *kind);
+        }
+        WireMessage::Heartbeat { host, seq } => {
+            out.push(TAG_HEARTBEAT);
+            put_u32(&mut out, *host);
+            put_u64(&mut out, *seq);
+        }
+        WireMessage::Claim {
+            job,
+            n,
+            block,
+            solver,
+            band,
+            members,
+            row_bands,
+            x,
+            y,
+        } => {
+            out.push(TAG_CLAIM);
+            put_u64(&mut out, *job);
+            put_u32(&mut out, *n);
+            put_u32(&mut out, *block);
+            out.push(u8::from(*solver));
+            put_assignment(&mut out, *band);
+            put_u32(&mut out, members.len() as u32);
+            for &k in members {
+                put_kind(&mut out, k);
+            }
+            put_u32(&mut out, row_bands.len() as u32);
+            for &b in row_bands {
+                put_assignment(&mut out, b);
+            }
+            put_matrix(&mut out, x);
+            put_matrix(&mut out, y);
+        }
+        WireMessage::KernelDone { job, kernel } => {
+            out.push(TAG_KERNEL_DONE);
+            put_u64(&mut out, *job);
+            put_matrix(&mut out, kernel);
+        }
+        WireMessage::Kernel { job, kernel } => {
+            out.push(TAG_KERNEL);
+            put_u64(&mut out, *job);
+            put_matrix(&mut out, kernel);
+        }
+        WireMessage::Band { job, band } => {
+            out.push(TAG_BAND);
+            put_u64(&mut out, *job);
+            put_assignment(&mut out, *band);
+        }
+        WireMessage::BandDone { job, band, values } => {
+            out.push(TAG_BAND_DONE);
+            put_u64(&mut out, *job);
+            put_assignment(&mut out, *band);
+            put_f32s(&mut out, values);
+        }
+        WireMessage::BarrierMerge { job } => {
+            out.push(TAG_BARRIER_MERGE);
+            put_u64(&mut out, *job);
+        }
+        WireMessage::Reply {
+            job,
+            kernel,
+            contributions,
+        } => {
+            out.push(TAG_REPLY);
+            put_u64(&mut out, *job);
+            put_matrix(&mut out, kernel);
+            put_matrix(&mut out, contributions);
+        }
+        WireMessage::Shutdown => out.push(TAG_SHUTDOWN),
+    }
+    out
+}
+
+fn decode_payload(payload: &[u8]) -> Result<WireMessage, WireError> {
+    let mut r = Reader::new(payload);
+    let msg = match r.u8()? {
+        TAG_HELLO => WireMessage::Hello {
+            host: r.u32()?,
+            kind: r.kind()?,
+        },
+        TAG_HEARTBEAT => WireMessage::Heartbeat {
+            host: r.u32()?,
+            seq: r.u64()?,
+        },
+        TAG_CLAIM => WireMessage::Claim {
+            job: r.u64()?,
+            n: r.u32()?,
+            block: r.u32()?,
+            solver: r.u8()? != 0,
+            band: r.assignment()?,
+            members: r.kinds()?,
+            row_bands: r.assignments()?,
+            x: r.matrix()?,
+            y: r.matrix()?,
+        },
+        TAG_KERNEL_DONE => WireMessage::KernelDone {
+            job: r.u64()?,
+            kernel: r.matrix()?,
+        },
+        TAG_KERNEL => WireMessage::Kernel {
+            job: r.u64()?,
+            kernel: r.matrix()?,
+        },
+        TAG_BAND => WireMessage::Band {
+            job: r.u64()?,
+            band: r.assignment()?,
+        },
+        TAG_BAND_DONE => WireMessage::BandDone {
+            job: r.u64()?,
+            band: r.assignment()?,
+            values: r.f32s()?,
+        },
+        TAG_BARRIER_MERGE => WireMessage::BarrierMerge { job: r.u64()? },
+        TAG_REPLY => WireMessage::Reply {
+            job: r.u64()?,
+            kernel: r.matrix()?,
+            contributions: r.matrix()?,
+        },
+        TAG_SHUTDOWN => WireMessage::Shutdown,
+        t => return Err(WireError::BadTag(t)),
+    };
+    if r.remaining() != 0 {
+        return Err(WireError::TrailingBytes(r.remaining()));
+    }
+    Ok(msg)
+}
+
+// --------------------------------------------------------------------------
+// framing
+// --------------------------------------------------------------------------
+
+/// Serialize one message into a complete frame (header + payload).
+pub fn encode_frame(msg: &WireMessage) -> Result<Vec<u8>, WireError> {
+    let payload = encode_payload(msg);
+    if payload.len() > MAX_PAYLOAD {
+        return Err(WireError::TooLarge(payload.len()));
+    }
+    let mut frame = Vec::with_capacity(HEADER_LEN + payload.len());
+    put_u32(&mut frame, MAGIC);
+    put_u16(&mut frame, VERSION);
+    put_u16(&mut frame, 0); // reserved
+    put_u32(&mut frame, payload.len() as u32);
+    put_u32(&mut frame, crc32(&payload));
+    frame.extend_from_slice(&payload);
+    Ok(frame)
+}
+
+/// Parse one complete frame.  Never panics: every malformed input maps
+/// to a [`WireError`].
+pub fn decode_frame(frame: &[u8]) -> Result<WireMessage, WireError> {
+    if frame.len() < HEADER_LEN {
+        return Err(WireError::Truncated);
+    }
+    let mut h = Reader::new(&frame[..HEADER_LEN]);
+    let magic = h.u32().expect("header sliced above");
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = h.u16().expect("header sliced above");
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let _reserved = h.u16().expect("header sliced above");
+    let declared = h.u32().expect("header sliced above") as usize;
+    let expected_crc = h.u32().expect("header sliced above");
+    let payload = &frame[HEADER_LEN..];
+    if declared > MAX_PAYLOAD || declared != payload.len() {
+        return Err(WireError::BadLength {
+            declared,
+            actual: payload.len(),
+        });
+    }
+    let got = crc32(payload);
+    if got != expected_crc {
+        return Err(WireError::BadChecksum {
+            expected: expected_crc,
+            got,
+        });
+    }
+    decode_payload(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_messages() -> Vec<WireMessage> {
+        let mut rng = Rng::new(42);
+        vec![
+            WireMessage::Hello {
+                host: 3,
+                kind: DeviceKind::Gpu,
+            },
+            WireMessage::Heartbeat { host: 1, seq: 77 },
+            WireMessage::Claim {
+                job: 9,
+                n: 8,
+                block: 2,
+                solver: true,
+                band: Assignment { start: 4, len: 3 },
+                members: vec![DeviceKind::Tpu, DeviceKind::Gpu, DeviceKind::Cpu],
+                row_bands: vec![
+                    Assignment { start: 0, len: 5 },
+                    Assignment { start: 5, len: 3 },
+                ],
+                x: Matrix::random(8, 8, &mut rng),
+                y: Matrix::random(8, 8, &mut rng),
+            },
+            WireMessage::KernelDone {
+                job: 9,
+                kernel: Matrix::random(8, 8, &mut rng),
+            },
+            WireMessage::Kernel {
+                job: 9,
+                kernel: Matrix::random(4, 4, &mut rng),
+            },
+            WireMessage::Band {
+                job: 9,
+                band: Assignment { start: 1, len: 2 },
+            },
+            WireMessage::BandDone {
+                job: 9,
+                band: Assignment { start: 1, len: 2 },
+                values: vec![1.25, -3.5],
+            },
+            WireMessage::BarrierMerge { job: 9 },
+            WireMessage::Reply {
+                job: 9,
+                kernel: Matrix::random(4, 4, &mut rng),
+                contributions: Matrix::random(2, 2, &mut rng),
+            },
+            WireMessage::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // the classic "123456789" check value of CRC-32/IEEE
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        for msg in sample_messages() {
+            let frame = encode_frame(&msg).unwrap();
+            assert_eq!(&frame[..4], b"XAIW");
+            let back = decode_frame(&frame).unwrap();
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn matrix_bits_survive_the_wire_exactly() {
+        // f32 bit patterns must be preserved verbatim — the Loopback
+        // bit-for-bit equivalence rests on this.
+        let mut rng = Rng::new(7);
+        let x = Matrix::random(16, 16, &mut rng);
+        let frame = encode_frame(&WireMessage::Kernel {
+            job: 1,
+            kernel: x.clone(),
+        })
+        .unwrap();
+        let WireMessage::Kernel { kernel, .. } = decode_frame(&frame).unwrap() else {
+            panic!("wrong message");
+        };
+        for (a, b) in x.data.iter().zip(kernel.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn corruption_is_rejected_not_panicked() {
+        let frame = encode_frame(&sample_messages()[2]).unwrap();
+        // truncated header
+        assert_eq!(decode_frame(&frame[..10]), Err(WireError::Truncated));
+        // truncated payload: length disagrees
+        assert!(matches!(
+            decode_frame(&frame[..frame.len() - 3]),
+            Err(WireError::BadLength { .. })
+        ));
+        // bad magic
+        let mut bad = frame.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(decode_frame(&bad), Err(WireError::BadMagic(_))));
+        // foreign version
+        let mut bad = frame.clone();
+        bad[4] = 99;
+        assert_eq!(decode_frame(&bad), Err(WireError::BadVersion(99)));
+        // flipped payload bit: checksum catches it
+        let mut bad = frame.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x10;
+        assert!(matches!(
+            decode_frame(&bad),
+            Err(WireError::BadChecksum { .. })
+        ));
+    }
+
+    #[test]
+    fn hostile_length_fields_do_not_allocate() {
+        // a Kernel message whose matrix claims u32::MAX × u32::MAX
+        let mut payload = vec![TAG_KERNEL];
+        put_u64(&mut payload, 1);
+        put_u32(&mut payload, u32::MAX);
+        put_u32(&mut payload, u32::MAX);
+        let mut frame = Vec::new();
+        put_u32(&mut frame, MAGIC);
+        put_u16(&mut frame, VERSION);
+        put_u16(&mut frame, 0);
+        put_u32(&mut frame, payload.len() as u32);
+        put_u32(&mut frame, crc32(&payload));
+        frame.extend_from_slice(&payload);
+        assert_eq!(decode_frame(&frame), Err(WireError::ShortPayload));
+    }
+
+    #[test]
+    fn oversized_payloads_are_refused_on_both_sides() {
+        // decode: a header declaring more than the cap
+        let mut frame = Vec::new();
+        put_u32(&mut frame, MAGIC);
+        put_u16(&mut frame, VERSION);
+        put_u16(&mut frame, 0);
+        put_u32(&mut frame, (MAX_PAYLOAD + 1) as u32);
+        put_u32(&mut frame, 0);
+        assert!(matches!(
+            decode_frame(&frame),
+            Err(WireError::BadLength { .. })
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_are_an_error() {
+        let mut payload = vec![TAG_SHUTDOWN];
+        payload.push(0xAB);
+        let mut frame = Vec::new();
+        put_u32(&mut frame, MAGIC);
+        put_u16(&mut frame, VERSION);
+        put_u16(&mut frame, 0);
+        put_u32(&mut frame, payload.len() as u32);
+        put_u32(&mut frame, crc32(&payload));
+        frame.extend_from_slice(&payload);
+        assert_eq!(decode_frame(&frame), Err(WireError::TrailingBytes(1)));
+    }
+}

@@ -381,6 +381,158 @@ fn killed_member_degrades_collective_and_records_replan() {
 }
 
 #[test]
+fn loopback_multihost_reproduces_the_in_memory_collective_bit_for_bit() {
+    // PR 7 satellite: the transport plane must be a *wire*, not a
+    // re-implementation.  The same 256² distill answered by (A) the
+    // PR 6 in-memory 3-lane collective and (B) three simulated hosts
+    // over the in-process loopback wire must agree to the last bit —
+    // both planes run the identical planning chain and the identical
+    // band kernels; the only difference is f32-LE serialization in the
+    // middle, which is exact.
+    let tpu = xai_accel::hwsim::DeviceKind::Tpu;
+    let mut rng = Rng::new(113);
+    let n = 256;
+    let x = Matrix::random(n, n, &mut rng);
+    let y = Matrix::random(n, n, &mut rng);
+
+    let mut config_a = CoordinatorConfig::default();
+    config_a.lanes = vec![tpu, tpu, tpu];
+    config_a.backend = BackendMode::NativeOnly;
+    let coord_a = Coordinator::start(config_a).expect("start in-memory plane");
+    let resp_a = coord_a
+        .submit(Request::Distill { x: x.clone(), y: y.clone() })
+        .expect("submit")
+        .wait()
+        .expect("in-memory collective reply");
+    assert!(coord_a.stats().collective_jobs >= 1, "A must go collective");
+    coord_a.shutdown();
+
+    let mut config_b = CoordinatorConfig::default();
+    config_b.lanes = vec![tpu];
+    config_b.backend = BackendMode::NativeOnly;
+    config_b.multihost = Some(xai_accel::coordinator::MultiHostConfig::loopback(&[
+        tpu, tpu, tpu,
+    ]));
+    let coord_b = Coordinator::start(config_b).expect("start loopback plane");
+    let resp_b = coord_b
+        .submit(Request::Distill { x, y })
+        .expect("submit")
+        .wait()
+        .expect("loopback multihost reply");
+    let stats_b = coord_b.stats();
+    assert!(stats_b.multihost_jobs >= 1, "B must dispatch over the wire");
+    assert!(stats_b.wire_tx_bytes > 0 && stats_b.wire_rx_bytes > 0);
+    coord_b.shutdown();
+
+    let Response::Distillation { kernel: ka, contributions: ca } = resp_a else {
+        panic!("wrong response kind from the in-memory plane");
+    };
+    let Response::Distillation { kernel: kb, contributions: cb } = resp_b else {
+        panic!("wrong response kind from the loopback plane");
+    };
+    assert_eq!(ka.max_abs_diff(&kb), 0.0, "kernel drifted across the wire");
+    assert_eq!(ca.max_abs_diff(&cb), 0.0, "contributions drifted across the wire");
+}
+
+#[test]
+fn simnet_multihost_distill_matches_the_native_oracle() {
+    // ISSUE acceptance: a 256² collective distill across ≥2 simulated
+    // hosts over SimNet (real latency/bandwidth, RDMA class) matches
+    // the native single-process reference within 1e-4.
+    use xai_accel::transport::simnet::LinkConfig;
+    let tpu = xai_accel::hwsim::DeviceKind::Tpu;
+    let mut config = CoordinatorConfig::default();
+    config.lanes = vec![tpu];
+    config.backend = BackendMode::NativeOnly;
+    config.multihost = Some(xai_accel::coordinator::MultiHostConfig::simnet(
+        &[tpu, tpu, tpu],
+        LinkConfig::rdma(7),
+    ));
+    let coord = Coordinator::start(config).expect("start simnet plane");
+    let mut rng = Rng::new(114);
+    let n = 256;
+    let x = Matrix::random(n, n, &mut rng);
+    let y = Matrix::random(n, n, &mut rng);
+    let resp = coord
+        .submit(Request::Distill { x: x.clone(), y: y.clone() })
+        .expect("submit")
+        .wait()
+        .expect("simnet multihost reply");
+    let Response::Distillation { kernel, contributions } = resp else {
+        panic!("wrong response kind");
+    };
+    let stats = coord.stats();
+    assert!(stats.multihost_jobs >= 1, "must dispatch across hosts");
+    assert_eq!(stats.completed, 1);
+    coord.shutdown();
+    let mut eng = xai_accel::trace::NativeEngine::new_fft_baseline();
+    let want_k = xai_accel::xai::distillation::distill_fft(&mut eng, &x, &y, 1e-9);
+    assert!(
+        kernel.max_abs_diff(&want_k) < 1e-4,
+        "simnet kernel drifted: {}",
+        kernel.max_abs_diff(&want_k)
+    );
+    let want_c = xai_accel::xai::distillation::contribution_factors(&mut eng, &x, &want_k, n / 4);
+    assert!(
+        contributions.max_abs_diff(&want_c) < 1e-3,
+        "simnet contributions drifted: {}",
+        contributions.max_abs_diff(&want_c)
+    );
+}
+
+#[test]
+fn partitioned_host_degrades_multihost_job_onto_survivors() {
+    // ISSUE acceptance: partition one host mid-job; the survivors
+    // complete the job degraded, the re-plan is visible in stats, and
+    // the monitor charges the silent host with heartbeat misses.
+    use xai_accel::transport::simnet::LinkConfig;
+    let tpu = xai_accel::hwsim::DeviceKind::Tpu;
+    let mut mh = xai_accel::coordinator::MultiHostConfig::simnet(
+        &[tpu, tpu, tpu],
+        LinkConfig::ideal(9),
+    );
+    mh.heartbeat_period = std::time::Duration::from_millis(15);
+    mh.heartbeat_timeout = std::time::Duration::from_millis(120);
+    let mut config = CoordinatorConfig::default();
+    config.lanes = vec![tpu];
+    config.backend = BackendMode::NativeOnly;
+    config.multihost = Some(mh);
+    let coord = Coordinator::start(config).expect("start simnet plane");
+    // seal host 2's link (frames held, both directions) right before
+    // the job arrives: the planner still believes the host is alive,
+    // claims it, then the monitor's silence detector forces the
+    // degrade path while the job is in flight.
+    assert!(coord.partition_host(2, true), "host 2 must be partitionable");
+    let mut rng = Rng::new(115);
+    let n = 256;
+    let x = Matrix::random(n, n, &mut rng);
+    let y = Matrix::random(n, n, &mut rng);
+    let resp = coord
+        .submit(Request::Distill { x, y })
+        .expect("submit")
+        .wait()
+        .expect("partitioned plane must still answer");
+    let Response::Distillation { contributions, .. } = resp else {
+        panic!("wrong response kind");
+    };
+    // every occlusion block was computed by a survivor
+    assert!(contributions.data.iter().all(|&v| v > 0.0));
+    let stats = coord.stats();
+    assert!(stats.multihost_jobs >= 1, "job must have gone multi-host");
+    assert!(
+        stats.replans >= 1,
+        "the partitioned host's band must re-plan onto survivors"
+    );
+    assert!(
+        stats.heartbeat_misses[2] >= 1,
+        "silence must be charged to host 2: {:?}",
+        stats.heartbeat_misses
+    );
+    assert_eq!(stats.completed, 1);
+    coord.shutdown();
+}
+
+#[test]
 fn split_plans_compose_with_matrix_vstack() {
     check("plan_splits slices reassemble", 20, |rng: &mut Rng| {
         let rows = rng.int_range(1, 64) as usize;

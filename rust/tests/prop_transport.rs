@@ -1,0 +1,203 @@
+//! Property tests for the transport plane (PR 7).
+//!
+//! The wire format is the trust boundary of the multi-host plane:
+//! whatever a peer (or a faulty link) hands us, `decode_frame` must
+//! either return the exact message that was encoded or reject the
+//! frame with a typed [`WireError`] — it must never panic and never
+//! accept a corrupted frame as valid.
+//!
+//! Same harness as `prop_fft.rs`: the crate's own deterministic
+//! mini-proptest (`util::prop::check`), no external crates.
+
+use xai_accel::coordinator::decomposition::Assignment;
+use xai_accel::hwsim::DeviceKind;
+use xai_accel::linalg::matrix::Matrix;
+use xai_accel::transport::simnet::{LinkConfig, SimNet};
+use xai_accel::transport::wire::{
+    crc32, decode_frame, encode_frame, WireError, WireMessage, HEADER_LEN,
+};
+use xai_accel::transport::{Recv, Transport};
+use xai_accel::util::prop::check;
+use xai_accel::util::rng::Rng;
+
+/// A random matrix of gaussian entries; exact f32 bit survival across
+/// the wire is what the round-trip property asserts.
+fn random_matrix(rng: &mut Rng, max_dim: usize) -> Matrix {
+    let rows = 1 + rng.below(max_dim as u64) as usize;
+    let cols = 1 + rng.below(max_dim as u64) as usize;
+    Matrix::from_fn(rows, cols, |_, _| rng.gauss_f32())
+}
+
+fn random_assignment(rng: &mut Rng) -> Assignment {
+    Assignment {
+        start: rng.below(1 << 20) as usize,
+        len: rng.below(1 << 20) as usize,
+    }
+}
+
+fn random_kind(rng: &mut Rng) -> DeviceKind {
+    match rng.below(3) {
+        0 => DeviceKind::Cpu,
+        1 => DeviceKind::Gpu,
+        _ => DeviceKind::Tpu,
+    }
+}
+
+/// Draw one random message covering every tag.
+fn random_message(rng: &mut Rng) -> WireMessage {
+    match rng.below(10) {
+        0 => WireMessage::Hello {
+            host: rng.below(1 << 16) as u32,
+            kind: random_kind(rng),
+        },
+        1 => WireMessage::Heartbeat {
+            host: rng.below(1 << 16) as u32,
+            seq: rng.next_u64(),
+        },
+        2 => {
+            let members: Vec<DeviceKind> =
+                (0..1 + rng.below(8)).map(|_| random_kind(rng)).collect();
+            let row_bands: Vec<Assignment> =
+                (0..members.len()).map(|_| random_assignment(rng)).collect();
+            WireMessage::Claim {
+                job: rng.next_u64(),
+                n: 1 + rng.below(1 << 12) as u32,
+                block: 1 + rng.below(1 << 10) as u32,
+                solver: rng.below(2) == 0,
+                band: random_assignment(rng),
+                members,
+                row_bands,
+                x: random_matrix(rng, 12),
+                y: random_matrix(rng, 12),
+            }
+        }
+        3 => WireMessage::KernelDone {
+            job: rng.next_u64(),
+            kernel: random_matrix(rng, 12),
+        },
+        4 => WireMessage::Kernel {
+            job: rng.next_u64(),
+            kernel: random_matrix(rng, 12),
+        },
+        5 => WireMessage::Band {
+            job: rng.next_u64(),
+            band: random_assignment(rng),
+        },
+        6 => WireMessage::BandDone {
+            job: rng.next_u64(),
+            band: random_assignment(rng),
+            values: (0..rng.below(64)).map(|_| rng.gauss_f32()).collect(),
+        },
+        7 => WireMessage::BarrierMerge { job: rng.next_u64() },
+        8 => WireMessage::Reply {
+            job: rng.next_u64(),
+            kernel: random_matrix(rng, 12),
+            contributions: random_matrix(rng, 12),
+        },
+        _ => WireMessage::Shutdown,
+    }
+}
+
+#[test]
+fn prop_every_message_roundtrips_bit_for_bit() {
+    check("wire round-trip", 300, |rng| {
+        let msg = random_message(rng);
+        let frame = encode_frame(&msg).expect("encodable");
+        let back = decode_frame(&frame).expect("decodable");
+        // PartialEq on Matrix/f32 vectors is bitwise for finite gauss
+        // draws; NaN never appears in the generator.
+        assert_eq!(msg, back, "message did not survive the wire");
+    });
+}
+
+#[test]
+fn prop_truncated_frames_are_rejected_never_accepted() {
+    check("wire truncation", 200, |rng| {
+        let msg = random_message(rng);
+        let frame = encode_frame(&msg).expect("encodable");
+        // every strict prefix must fail: header cut → Truncated,
+        // payload cut → BadLength (header still declares full length)
+        let cut = rng.below(frame.len() as u64) as usize;
+        let err = decode_frame(&frame[..cut]).expect_err("prefix accepted");
+        match err {
+            WireError::Truncated => assert!(cut < HEADER_LEN, "cut {cut}"),
+            WireError::BadLength { declared, actual } => {
+                assert!(cut >= HEADER_LEN);
+                assert_eq!(actual, cut - HEADER_LEN);
+                assert!(declared > actual);
+            }
+            other => panic!("unexpected rejection {other:?} at cut {cut}"),
+        }
+    });
+}
+
+#[test]
+fn prop_bit_flips_never_pass_the_checksum() {
+    check("wire bit-flip", 300, |rng| {
+        let msg = random_message(rng);
+        let mut frame = encode_frame(&msg).expect("encodable");
+        let byte = rng.below(frame.len() as u64) as usize;
+        let bit = rng.below(8) as u8;
+        frame[byte] ^= 1 << bit;
+        // A single flipped bit lands in the header (magic / version /
+        // length / crc fields police themselves) or the payload (the
+        // CRC catches every 1-bit error by construction). Either way:
+        // typed error, no panic, no silent acceptance.
+        decode_frame(&frame).expect_err("corrupted frame accepted");
+    });
+}
+
+#[test]
+fn prop_random_garbage_never_panics() {
+    check("wire garbage", 300, |rng| {
+        let len = rng.below(256) as usize;
+        let garbage: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        // overwhelmingly rejected; decode returning Ok on random bytes
+        // would require forging magic, version, length AND crc32
+        let _ = decode_frame(&garbage);
+    });
+}
+
+#[test]
+fn crc32_matches_the_ieee_check_value() {
+    // The classic IEEE 802.3 check vector pins the polynomial and
+    // reflection conventions.
+    assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    assert_eq!(crc32(b""), 0);
+}
+
+#[test]
+fn prop_simnet_faults_lose_or_duplicate_but_never_corrupt() {
+    // Frames through a lossy SimNet link arrive intact or not at all:
+    // the fault model drops and duplicates whole frames, it does not
+    // invent bytes. Every arrival must decode to a message we sent.
+    check("simnet integrity", 20, |rng| {
+        let mut cfg = LinkConfig::ideal(rng.next_u64());
+        cfg.drop_rate = 0.3;
+        cfg.duplicate_rate = 0.3;
+        let (a, b) = SimNet::pair(cfg);
+        let mut sent = Vec::new();
+        for _ in 0..20 {
+            let msg = random_message(rng);
+            let frame = encode_frame(&msg).expect("encodable");
+            a.send(frame).expect("open link");
+            sent.push(msg);
+        }
+        a.close();
+        let mut delivered = 0usize;
+        loop {
+            match b.recv_timeout(std::time::Duration::from_millis(200)) {
+                Recv::Frame(f) => {
+                    let msg = decode_frame(&f).expect("fault model corrupted a frame");
+                    assert!(sent.contains(&msg), "link invented a message");
+                    delivered += 1;
+                }
+                Recv::Closed => break,
+                Recv::Timeout => break,
+            }
+        }
+        // 20 sends at 30% drop / 30% duplicate: statistically some
+        // arrive; a hard zero would mean the link ate everything.
+        assert!(delivered > 0, "lossy link delivered nothing out of 20");
+    });
+}
