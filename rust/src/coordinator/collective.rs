@@ -403,7 +403,14 @@ pub fn try_dispatch(
             *b = u64::MAX;
         }
     }
-    let choice = router::plan_cross_lane_group(lane_kinds, &backlogs, n, block)?;
+    // A declined plan (fewer than two live lanes, or no group pricing
+    // under the best single lane) hands the batch BACK for ordinary
+    // placement — `None` from this function means "dispatched", so
+    // propagating the planner's `None` here would silently drop the
+    // envelope and its reply sender.
+    let Some(choice) = router::plan_cross_lane_group(lane_kinds, &backlogs, n, block) else {
+        return Some(batch);
+    };
     let env = batch.envelopes.pop().expect("single-envelope batch");
     let (x, y) = match &env.request {
         Request::Distill { x, y } => (x.clone(), y.clone()),
@@ -579,6 +586,25 @@ mod tests {
         assert!(contributions.data.iter().all(|&v| v > 0.0));
         assert_eq!(job.metrics.replans(), 1);
         assert_eq!(job.metrics.completed(), 1);
+    }
+
+    #[test]
+    fn declined_plan_hands_the_batch_back() {
+        // Regression: a ≥-threshold distillation the planner declines
+        // (here: only one live lane, so no group is possible) must
+        // come BACK for single-lane placement — the old `?` on the
+        // planner result silently consumed the batch, dropping the
+        // envelope and its reply sender.
+        let metrics = Arc::new(Metrics::with_devices(1));
+        let mut alive = vec![true];
+        let work: Vec<BoundedQueue<Batch>> = vec![BoundedQueue::new(4)];
+        let kinds = [DeviceKind::Tpu];
+        let (env, _rx) = distill_env(SHARD_THRESHOLD);
+        let b = Batch::new(RequestKind::Distill, vec![env]);
+        let back = try_dispatch(b, &kinds, &mut alive, &work, &metrics)
+            .expect("a declined plan must pass the batch through");
+        assert_eq!(back.envelopes.len(), 1);
+        assert_eq!(metrics.collective_jobs(), 0);
     }
 
     #[test]

@@ -14,10 +14,14 @@
 //!   device class (a worker thread + a heartbeat thread, holding only
 //!   its endpoint), plus coordinator-side receiver threads and a
 //!   liveness monitor.
-//! * **Dispatch** ([`try_dispatch`]) prices a cross-host group with the
-//!   SAME planner chain as the in-process collective
-//!   ([`router::plan_cross_lane_group`] → [`DevicePool::mixed`] band
-//!   plans), then hands the job to a driver thread.
+//! * **Dispatch** ([`try_dispatch`]) prices a cross-host group with
+//!   the in-process collective's planner chain on the pool model of
+//!   the configured wire — [`router::plan_cross_host_group`] over the
+//!   hierarchical multi-host pool for SimNet (network bandwidth,
+//!   latency, per-byte serialization), [`router::plan_cross_lane_group`]
+//!   over the chip-link pool for loopback — then hands the job to a
+//!   driver thread.  A declined plan passes the batch back to the
+//!   in-process path.
 //! * **The driver** sends each member a `Claim` (problem + band + group
 //!   shape); the solver host answers `KernelDone`; the driver
 //!   broadcasts `Kernel` to the rest; members answer `BandDone`; the
@@ -42,7 +46,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::native::NATIVE_DISTILL_SIZES;
 use crate::coordinator::request::{Envelope, Request, RequestKind, Response};
 use crate::coordinator::router;
-use crate::hwsim::pool::DevicePool;
+use crate::hwsim::pool::{DevicePool, Interconnect};
 use crate::hwsim::DeviceKind;
 use crate::linalg::matrix::Matrix;
 use crate::linalg::shard::{self, Assignment, CollectivePlan, MergeTopology};
@@ -67,6 +71,20 @@ pub enum TransportKind {
     /// Deterministic simulated network; per-host links derive their
     /// fault/jitter seeds from [`LinkConfig::seed`] and the host id.
     SimNet(LinkConfig),
+}
+
+impl TransportKind {
+    /// The hwsim pricing of this wire: `None` over the in-process
+    /// loopback (zero-cost queues — the PR 6 chip-link pool model),
+    /// the link's [`Interconnect`] class over SimNet, so placement
+    /// pays the network bandwidth, per-hop latency, and per-byte
+    /// serialization the job will actually travel.
+    pub fn pricing(&self) -> Option<Interconnect> {
+        match self {
+            TransportKind::Loopback => None,
+            TransportKind::SimNet(link) => Some(link.interconnect()),
+        }
+    }
 }
 
 /// Configuration of the multi-host plane
@@ -109,11 +127,16 @@ const LOOPBACK_CAPACITY: usize = 64;
 /// Coordinator-side shared state of the host plane.
 struct PlaneShared {
     kinds: Vec<DeviceKind>,
+    /// Network pricing of the wire (`None` over loopback).
+    net: Option<Interconnect>,
     /// Coordinator endpoint of each host link.
     links: Vec<Arc<dyn Transport>>,
     alive: Vec<AtomicBool>,
     /// Milliseconds since `epoch` a frame was last seen from each host.
     last_seen_ms: Vec<AtomicU64>,
+    /// Milliseconds since `epoch` each host was last declared dead —
+    /// the incident marker liveness resurrection is gated on.
+    dead_since_ms: Vec<AtomicU64>,
     /// In-flight job id → driver inbox (receiver threads route
     /// `KernelDone` / `BandDone` frames here).
     routes: Mutex<HashMap<u64, mpsc::Sender<(usize, WireMessage)>>>,
@@ -135,6 +158,9 @@ impl PlaneShared {
     }
 
     fn mark_dead(&self, h: usize) {
+        // stamp the incident before flipping liveness so a concurrent
+        // resurrection check never reads a stale death time
+        self.dead_since_ms[h].store(self.now_ms(), Ordering::SeqCst);
         self.alive[h].store(false, Ordering::SeqCst);
     }
 
@@ -220,9 +246,11 @@ impl HostRegistry {
         }
         let shared = Arc::new(PlaneShared {
             kinds: cfg.hosts.clone(),
+            net: cfg.transport.pricing(),
             links,
             alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
             last_seen_ms: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            dead_since_ms: (0..n).map(|_| AtomicU64::new(0)).collect(),
             routes: Mutex::new(HashMap::new()),
             next_job: AtomicU64::new(1),
             metrics,
@@ -332,10 +360,19 @@ impl Drop for HostRegistry {
 // coordinator-side threads
 // --------------------------------------------------------------------------
 
-/// Drain host `h`'s link: every frame refreshes liveness, job frames
-/// route to their driver's inbox, corrupt frames are dropped (the
-/// job-level timeout is the recovery path).
+/// Drain host `h`'s link: every frame from a live host refreshes its
+/// liveness, job frames route to their driver's inbox, corrupt frames
+/// are dropped (the job-level timeout is the recovery path).
+///
+/// Liveness is monotonic per incident: a host the monitor declared
+/// dead is only resurrected by a heartbeat provably sent AFTER the
+/// death verdict — the beacon sleeps one period per beat from plane
+/// start, so `seq × period` lower-bounds its send time.  A stale beat
+/// released by a healing partition therefore stays dead instead of
+/// resurrecting a host whose in-flight `Claim`/`Kernel` frames may
+/// have been dropped on the floor.
 fn receiver_loop(h: usize, shared: Arc<PlaneShared>) {
+    let period_ms = (shared.heartbeat_period.as_millis() as u64).max(1);
     loop {
         match shared.links[h].recv_timeout(Duration::from_millis(25)) {
             Recv::Closed => {
@@ -349,11 +386,21 @@ fn receiver_loop(h: usize, shared: Arc<PlaneShared>) {
             }
             Recv::Frame(frame) => {
                 shared.metrics.record_wire_rx(frame.len());
-                shared.last_seen_ms[h].store(shared.now_ms(), Ordering::SeqCst);
-                shared.alive[h].store(true, Ordering::SeqCst);
+                if shared.is_alive(h) {
+                    shared.last_seen_ms[h].store(shared.now_ms(), Ordering::SeqCst);
+                }
                 let Ok(msg) = wire::decode_frame(&frame) else {
                     continue; // checksum / framing reject: drop it
                 };
+                if !shared.is_alive(h) {
+                    if let WireMessage::Heartbeat { seq, .. } = &msg {
+                        let sent_ms = seq.saturating_mul(period_ms);
+                        if sent_ms >= shared.dead_since_ms[h].load(Ordering::SeqCst) {
+                            shared.last_seen_ms[h].store(shared.now_ms(), Ordering::SeqCst);
+                            shared.alive[h].store(true, Ordering::SeqCst);
+                        }
+                    }
+                }
                 let job = match &msg {
                     WireMessage::KernelDone { job, .. } | WireMessage::BandDone { job, .. } => {
                         Some(*job)
@@ -537,8 +584,10 @@ fn heartbeat_loop(host: u32, ep: Arc<dyn Transport>, period: Duration) {
 /// Intercept a batch on the placement path, exactly like
 /// [`collective::try_dispatch`] but with hosts as the group members:
 /// a single ≥-threshold distillation the simulator prices cheaper on a
-/// cross-host group than on the best single host is claimed by a
-/// driver thread and returns `None`; anything else passes through.
+/// cross-host group than on the best single host — priced on the
+/// configured wire's link class, not on chip links — is claimed by a
+/// driver thread and returns `None`; anything else (wrong kind, too
+/// small, or a declined plan) passes through to the in-process path.
 pub(crate) fn try_dispatch(
     registry: &Arc<HostRegistry>,
     mut batch: Batch,
@@ -567,15 +616,34 @@ pub(crate) fn try_dispatch(
     let backlogs: Vec<u64> = (0..shared.kinds.len())
         .map(|h| if shared.is_alive(h) { 0 } else { u64::MAX })
         .collect();
-    let choice = router::plan_cross_lane_group(&shared.kinds, &backlogs, n, block)?;
+    // Price the cross-host variant on the wire it will actually
+    // travel: over SimNet the group is priced on the hierarchical
+    // multi-host pool (network bandwidth, per-hop latency, per-byte
+    // serialization); over loopback on the PR 6 chip-link pool — the
+    // zero-cost queues ARE chip-class, and the identical plan chain is
+    // what makes Loopback reproduce PR 6 bit-for-bit.
+    let plan = match &shared.net {
+        Some(net) => router::plan_cross_host_group(&shared.kinds, &backlogs, n, block, net),
+        None => router::plan_cross_lane_group(&shared.kinds, &backlogs, n, block),
+    };
+    // A declined plan (fewer than two live hosts, or no group pricing
+    // under the best single host) hands the batch BACK for the
+    // in-process collective / single-lane path — `None` from this
+    // function means "dispatched", so propagating the planner's `None`
+    // would silently drop the envelope and its reply sender.
+    let Some(choice) = plan else {
+        return Some(batch);
+    };
     let env = batch.envelopes.pop().expect("single-envelope batch");
     let (x, y) = match &env.request {
         Request::Distill { x, y } => (x.clone(), y.clone()),
         _ => unreachable!("kind checked above"),
     };
-    // The identical plan chain the in-process collective uses — this
-    // is what makes Loopback reproduce PR 6 bit-for-bit.
-    let pool = DevicePool::mixed(&choice.kinds);
+    // Band plans from the SAME pool model the pricing used.
+    let pool = match &shared.net {
+        Some(net) => router::cross_host_pool(&choice.kinds, net),
+        None => DevicePool::mixed(&choice.kinds),
+    };
     let rows_plan = pool.plan_for(n, &Op::BatchedFft2 { b: n, m: 1, n });
     let blocks = (n / block) * (n / block);
     let weights = pool.stage_weights(
@@ -590,7 +658,11 @@ pub(crate) fn try_dispatch(
         .name("xai-mh-driver".into())
         .spawn(move || drive_job(s, env, x, y, n, block, choice.lanes, rows_plan, bands))
         .expect("spawn multihost driver");
-    registry.drivers.lock().unwrap().push(handle);
+    // reap finished drivers opportunistically so a long-running
+    // coordinator does not accumulate dead JoinHandles without bound
+    let mut drivers = registry.drivers.lock().unwrap();
+    drivers.retain(|d| !d.is_finished());
+    drivers.push(handle);
     None
 }
 
@@ -893,6 +965,66 @@ mod tests {
         assert!(metrics.replans() >= 1, "replans={}", metrics.replans());
         assert_eq!(metrics.completed(), 1);
         assert!(!registry.host_alive(2));
+        registry.shutdown();
+    }
+
+    #[test]
+    fn declined_plan_hands_the_batch_back() {
+        // Regression: with a single host the planner declines, and the
+        // batch must come BACK for the in-process collective /
+        // single-lane path — the old `?` on the planner result
+        // silently consumed it, dropping the envelope and its reply
+        // sender.
+        let members = [DeviceKind::Tpu];
+        let metrics = Arc::new(Metrics::with_devices(1));
+        let registry = Arc::new(HostRegistry::start(
+            &MultiHostConfig::loopback(&members),
+            metrics.clone(),
+        ));
+        let (x, y) = distill_pair(SHARD_THRESHOLD);
+        let (tx, _rx) = mpsc::channel();
+        let env = Envelope {
+            id: 1,
+            request: Request::Distill { x, y },
+            reply: tx,
+            enqueued_at: Instant::now(),
+        };
+        let batch = Batch::new(RequestKind::Distill, vec![env]);
+        let back = try_dispatch(&registry, batch, &metrics)
+            .expect("a declined plan must pass the batch through");
+        assert_eq!(back.envelopes.len(), 1);
+        assert_eq!(metrics.multihost_jobs(), 0);
+        registry.shutdown();
+    }
+
+    #[test]
+    fn healed_partition_resurrects_host_on_fresh_heartbeat() {
+        // Liveness is monotonic per incident: while partitioned the
+        // host stays dead, and after the heal only a beacon sent
+        // after the death verdict (seq × period ≥ death time) brings
+        // it back — which the still-beating host produces within a
+        // few periods.
+        let members = [DeviceKind::Tpu, DeviceKind::Tpu];
+        let metrics = Arc::new(Metrics::with_devices(1));
+        let mut cfg = MultiHostConfig::simnet(&members, LinkConfig::ideal(13));
+        cfg.heartbeat_period = Duration::from_millis(10);
+        cfg.heartbeat_timeout = Duration::from_millis(60);
+        let registry = HostRegistry::start(&cfg, metrics.clone());
+        assert!(registry.partition_host(1, true));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while registry.host_alive(1) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!registry.host_alive(1), "partitioned host never declared dead");
+        assert!(registry.partition_host(1, false));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !registry.host_alive(1) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            registry.host_alive(1),
+            "healed host must resurrect on a fresh heartbeat"
+        );
         registry.shutdown();
     }
 

@@ -29,6 +29,7 @@ use crate::coordinator::batcher::Batch;
 use crate::coordinator::request::{Request, RequestKind, Response};
 use crate::coordinator::worker::ExecBackend;
 use crate::error::{Error, Result};
+use crate::hwsim::pool::Interconnect;
 use crate::hwsim::{self, DeviceKind};
 use crate::linalg::matrix::Matrix;
 use crate::runtime::ArtifactRegistry;
@@ -336,6 +337,52 @@ pub fn plan_cross_lane_group(
     n: usize,
     block: usize,
 ) -> Option<GroupChoice> {
+    plan_group_on(kinds, backlogs, n, block, &|members| {
+        hwsim::pool::DevicePool::mixed(members)
+    })
+}
+
+/// Like [`plan_cross_lane_group`], but the candidate members are
+/// HOSTS joined by the network link class `net` rather than lanes
+/// sharing chip links: every grouped variant is priced on
+/// [`cross_host_pool`] — the hierarchical multi-host ring with network
+/// bandwidth, per-hop latency, and per-byte serialization — so the
+/// decision to cross hosts pays the wire the job will actually travel.
+pub fn plan_cross_host_group(
+    kinds: &[DeviceKind],
+    backlogs: &[u64],
+    n: usize,
+    block: usize,
+    net: &Interconnect,
+) -> Option<GroupChoice> {
+    plan_group_on(kinds, backlogs, n, block, &|members| {
+        cross_host_pool(members, net)
+    })
+}
+
+/// The pricing/banding pool of a cross-host group: one single-device
+/// host per member, joined by `net`.  Compute stages price exactly as
+/// on the flat mixed pool; grouped collectives pay the network link.
+pub fn cross_host_pool(
+    members: &[DeviceKind],
+    net: &Interconnect,
+) -> hwsim::pool::DevicePool {
+    let hosts: Vec<usize> = (0..members.len()).collect();
+    hwsim::pool::DevicePool::multihost(members, &hosts, *net)
+}
+
+/// The shared planner core: `pool_of` decides what interconnect a
+/// candidate membership is priced on (flat chip-link pool for lanes,
+/// hierarchical multi-host pool for hosts).  The single-member status
+/// quo is priced through the same constructor — a one-member
+/// multi-host pool degenerates bit-for-bit to the flat pool.
+fn plan_group_on(
+    kinds: &[DeviceKind],
+    backlogs: &[u64],
+    n: usize,
+    block: usize,
+    pool_of: &dyn Fn(&[DeviceKind]) -> hwsim::pool::DevicePool,
+) -> Option<GroupChoice> {
     let m = kinds.len().min(backlogs.len());
     let live: Vec<usize> = (0..m).filter(|&i| backlogs[i] != u64::MAX).collect();
     if live.len() < 2 {
@@ -343,7 +390,7 @@ pub fn plan_cross_lane_group(
     }
     let live_kinds: Vec<DeviceKind> = live.iter().map(|&i| kinds[i]).collect();
     let price = |members: &[DeviceKind]| {
-        hwsim::pool::DevicePool::mixed(members)
+        pool_of(members)
             .replay_sharded(&workloads::distill_interpretation_trace_collective(
                 n, block, members,
             ))
@@ -366,7 +413,7 @@ pub fn plan_cross_lane_group(
                 block,
                 workloads::Schedule::FftForm,
             ));
-            hwsim::pool::DevicePool::mixed(&[k]).replay_sharded(&t).time_s
+            pool_of(&[k]).replay_sharded(&t).time_s
         })
         .fold(f64::INFINITY, f64::min);
     if group_s >= single_s {
@@ -928,6 +975,48 @@ mod tests {
             assert!(seen.insert(lane), "lane {lane} assigned twice");
             assert_eq!(kinds[lane], k);
         }
+    }
+
+    #[test]
+    fn cross_host_planner_pays_the_network_not_chip_links() {
+        // The cross-host variant prices the wire the job actually
+        // travels: the same idle 3-TPU membership is dearer over RDMA
+        // than over chip links, dearer still over Ethernet — and all
+        // of them must still beat the best single host at 1024² (the
+        // Fig. 10 scale-out premise) and at the 256² serving floor.
+        let kinds = [DeviceKind::Tpu; 3];
+        let backlogs = [0u64; 3];
+        let chip = plan_cross_lane_group(&kinds, &backlogs, 1024, 256)
+            .expect("chip links must group at 1024²");
+        let rdma = plan_cross_host_group(&kinds, &backlogs, 1024, 256, &Interconnect::rdma())
+            .expect("rdma must group at 1024²");
+        let eth =
+            plan_cross_host_group(&kinds, &backlogs, 1024, 256, &Interconnect::ethernet())
+                .expect("ethernet must group at 1024²");
+        assert!(rdma.group_s > chip.group_s, "network must out-price chip links");
+        assert!(eth.group_s > rdma.group_s, "ethernet must out-price rdma");
+        assert!(eth.group_s < eth.single_s);
+        assert!(
+            plan_cross_host_group(&kinds, &backlogs, 256, 64, &Interconnect::rdma()).is_some(),
+            "the 256² serving floor must still group over rdma"
+        );
+    }
+
+    #[test]
+    fn cross_host_planner_declines_a_group_the_network_prices_out() {
+        // Over chip links the idle mixed fleet groups at 1024²; over a
+        // real network the same fleet prices out — every band crosses
+        // the wire and the best single host wins.  The decline must
+        // surface as `None` so dispatch hands the batch back to the
+        // in-process path instead of dropping it.
+        let kinds = mixed_lanes();
+        let backlogs = vec![0u64; kinds.len()];
+        assert!(plan_cross_lane_group(&kinds, &backlogs, 1024, 256).is_some());
+        assert!(
+            plan_cross_host_group(&kinds, &backlogs, 1024, 256, &Interconnect::rdma())
+                .is_none(),
+            "the mixed fleet must price out over rdma"
+        );
     }
 
     #[test]

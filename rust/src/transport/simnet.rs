@@ -23,6 +23,7 @@
 //!   corrupted — corruption is the wire checksum's department, and is
 //!   tested there by flipping bits explicitly.
 
+use crate::hwsim::pool::Interconnect;
 use crate::transport::{Recv, SendError, Transport};
 use crate::util::rng::Rng;
 use std::collections::BinaryHeap;
@@ -87,6 +88,31 @@ impl LinkConfig {
             drop_rate: 0.0,
             duplicate_rate: 0.0,
             seed,
+        }
+    }
+
+    /// The [`Interconnect`] pricing class of this link for the hwsim
+    /// cost model: bandwidth and one-way latency carry over directly;
+    /// the per-byte serialization term comes from the named class the
+    /// figures belong to — links at RDMA-fabric bandwidth or better
+    /// are assumed kernel-bypass
+    /// ([`crate::hwsim::pool::Interconnect::rdma`]), slower finite
+    /// links pay the Ethernet-class software-stack marshalling
+    /// ([`crate::hwsim::pool::Interconnect::ethernet`]), and an
+    /// infinite-bandwidth (ideal) link serializes for free.
+    pub fn interconnect(&self) -> Interconnect {
+        let rdma = Interconnect::rdma();
+        let ser_s_per_byte = if self.bandwidth_bytes_per_s.is_infinite() {
+            0.0
+        } else if self.bandwidth_bytes_per_s >= rdma.link_bw {
+            rdma.ser_s_per_byte
+        } else {
+            Interconnect::ethernet().ser_s_per_byte
+        };
+        Interconnect {
+            link_bw: self.bandwidth_bytes_per_s,
+            hop_latency_s: self.latency.as_secs_f64(),
+            ser_s_per_byte,
         }
     }
 }

@@ -435,6 +435,35 @@ fn loopback_multihost_reproduces_the_in_memory_collective_bit_for_bit() {
 }
 
 #[test]
+fn single_host_multihost_plane_falls_through_to_the_local_path() {
+    // Regression (review): a host plane that cannot form a group —
+    // here a single configured host — must hand a ≥-threshold
+    // distillation BACK to the in-process path instead of silently
+    // consuming it; the reply must still arrive and no multihost job
+    // may be counted.
+    let tpu = xai_accel::hwsim::DeviceKind::Tpu;
+    let mut config = CoordinatorConfig::default();
+    config.lanes = vec![tpu];
+    config.backend = BackendMode::NativeOnly;
+    config.multihost = Some(xai_accel::coordinator::MultiHostConfig::loopback(&[tpu]));
+    let coord = Coordinator::start(config).expect("start 1-host plane");
+    let mut rng = Rng::new(116);
+    let n = 256;
+    let x = Matrix::random(n, n, &mut rng);
+    let y = Matrix::random(n, n, &mut rng);
+    let resp = coord
+        .submit(Request::Distill { x, y })
+        .expect("submit")
+        .wait()
+        .expect("a 1-host plane must still answer");
+    assert!(matches!(resp, Response::Distillation { .. }));
+    let stats = coord.stats();
+    assert_eq!(stats.multihost_jobs, 0, "no group can form on one host");
+    assert_eq!(stats.completed, 1);
+    coord.shutdown();
+}
+
+#[test]
 fn simnet_multihost_distill_matches_the_native_oracle() {
     // ISSUE acceptance: a 256² collective distill across ≥2 simulated
     // hosts over SimNet (real latency/bandwidth, RDMA class) matches
