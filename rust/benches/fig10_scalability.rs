@@ -34,9 +34,19 @@
 //! ring with per-byte wire serialization.  Acceptance: scale-out to 8
 //! chips on 2 (or 4) hosts beats the single host's 4 local chips by
 //! ≥ 1.3× despite the wire.
+//!
+//! Since PR 8 the gate also tracks the closed-loop serving rows
+//! `sim_openloop_{static,adaptive,calibrated}_p99`: deterministic
+//! open-loop bursty traffic on a {2×TPU, 2×GPU} plane with lane 0's
+//! silicon 3× slower than its cost model claims.  Acceptance: the
+//! measured-EWMA adaptive placement must deliver a p99 ≥ 1.3× better
+//! than the static analytic prior, and a calibrated fleet must
+//! reproduce the static run bit-for-bit (the corrections normalize to
+//! exactly 1.0).
 
 use std::time::Instant;
 use xai_accel::bench::{json, BenchResult};
+use xai_accel::coordinator::openloop::{simulate_open_loop, OpenLoopConfig};
 use xai_accel::coordinator::router::{self, PlacementPolicy};
 use xai_accel::hwsim::{self, DeviceKind, DevicePool};
 use xai_accel::linalg::conv::circ_conv2;
@@ -358,6 +368,49 @@ fn main() {
         if multihost_ok { "PASS" } else { "FAIL" }
     );
 
+    // ---- closed-loop serving: open-loop traffic, measured placement --
+    // PR 8: deterministic virtual-time open-loop traffic (2000 bursty
+    // mixed-kind arrivals at 70% of calibrated capacity) on a
+    // {2×TPU, 2×GPU} plane where lane 0's silicon runs 3× slower than
+    // its cost model claims.  The static analytic prior keeps feeding
+    // the slow lane and its queue diverges; the measured-EWMA
+    // corrections re-price it within a handful of batches and the
+    // fleet routes around it.  All three rows are pure functions of
+    // the config (no wallclock, no threads) and CI-tracked.
+    let ol_static = simulate_open_loop(&OpenLoopConfig::miscalibrated(3.0, false));
+    let ol_adaptive = simulate_open_loop(&OpenLoopConfig::miscalibrated(3.0, true));
+    let ol_calib = simulate_open_loop(&OpenLoopConfig::miscalibrated(1.0, true));
+    let ol_calib_static = simulate_open_loop(&OpenLoopConfig::miscalibrated(1.0, false));
+    let mut serving = Table::new(
+        "Fig. 10 serving loop: open-loop p99 on 2xTPU+2xGPU, lane 0 3x mis-calibrated",
+    )
+    .header(&["placement", "p50", "p99", "mean", "shed", "degraded"]);
+    for (label, r) in [
+        ("static prior (3x miscal)", &ol_static),
+        ("adaptive EWMA (3x miscal)", &ol_adaptive),
+        ("adaptive (calibrated)", &ol_calib),
+    ] {
+        serving.row(&[
+            label.to_string(),
+            fmt_time(r.p50_s),
+            fmt_time(r.p99_s),
+            fmt_time(r.mean_s),
+            format!("{}", r.shed),
+            format!("{}", r.degraded),
+        ]);
+    }
+    serving.print();
+    results.push(BenchResult::point("sim_openloop_static_p99", ol_static.p99_s));
+    results.push(BenchResult::point("sim_openloop_adaptive_p99", ol_adaptive.p99_s));
+    results.push(BenchResult::point("sim_openloop_calibrated_p99", ol_calib.p99_s));
+    let serving_gain = ol_static.p99_s / ol_adaptive.p99_s;
+    let serving_ok = serving_gain >= 1.3 && ol_calib == ol_calib_static;
+    println!(
+        "acceptance (adaptive p99 >= 1.3x better than static under 3x mis-calibration, \
+         calibrated fleet bit-for-bit static): {} ({serving_gain:.2}x)",
+        if serving_ok { "PASS" } else { "FAIL" }
+    );
+
     let refs: Vec<&BenchResult> = results.iter().collect();
     json::emit(&refs);
 
@@ -366,12 +419,13 @@ fn main() {
     let enforce = std::env::var("BENCH_ENFORCE")
         .map(|v| v == "1" || v == "true")
         .unwrap_or(false);
-    if enforce && !(sweep_ok && hetero_ok && collective_ok && multihost_ok) {
+    if enforce && !(sweep_ok && hetero_ok && collective_ok && multihost_ok && serving_ok) {
         eprintln!(
             "acceptance FAILED: sharded sweep {speedup:.2}x (need >= 3x, sub-linear), \
              affinity gain {gain:.2}x (need >= 1.3x), \
              collective gain {collective_gain:.2}x (need >= 1.3x), \
-             multi-host gain {multihost_gain:.2}x (need >= 1.3x)"
+             multi-host gain {multihost_gain:.2}x (need >= 1.3x), \
+             serving-loop gain {serving_gain:.2}x (need >= 1.3x + calibrated bit-for-bit)"
         );
         std::process::exit(1);
     }

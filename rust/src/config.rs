@@ -130,6 +130,23 @@ impl Config {
         if let Some(lanes) = self.get("coordinator", "lanes") {
             c.lanes = parse_lanes(lanes)?;
         }
+        if let Some(b) = self.get_bool("coordinator", "adaptive_placement")? {
+            c.adaptive_placement = b;
+        }
+        if let Some(b) = self.get_bool("coordinator", "placement_batching")? {
+            c.placement_batching = b;
+        }
+        if let Some(b) = self.get_bool("coordinator", "degrade_overload")? {
+            c.degrade_under_overload = b;
+        }
+        if let Some(ms) = self.get_f64("coordinator", "default_deadline_ms")? {
+            if !(ms > 0.0) {
+                return Err(Error::Config(
+                    "default_deadline_ms must be > 0".into(),
+                ));
+            }
+            c.default_deadline = Some(std::time::Duration::from_secs_f64(ms / 1e3));
+        }
         Ok(c)
     }
 }
@@ -234,6 +251,36 @@ verbose = true
         assert!(d.lanes.is_empty());
         assert!(parse_lanes("tpu,npu").is_err());
         assert!(parse_lanes("").is_err());
+    }
+
+    #[test]
+    fn serving_loop_knobs_parse() {
+        // defaults: closed loop on, no deadline
+        let d = Config::parse("").unwrap().coordinator().unwrap();
+        assert!(d.adaptive_placement);
+        assert!(d.placement_batching);
+        assert!(d.degrade_under_overload);
+        assert!(d.default_deadline.is_none());
+        // explicit overrides
+        let c = Config::parse(
+            "[coordinator]\nadaptive_placement = false\n\
+             placement_batching = false\ndegrade_overload = false\n\
+             default_deadline_ms = 250.0",
+        )
+        .unwrap()
+        .coordinator()
+        .unwrap();
+        assert!(!c.adaptive_placement);
+        assert!(!c.placement_batching);
+        assert!(!c.degrade_under_overload);
+        assert_eq!(
+            c.default_deadline,
+            Some(std::time::Duration::from_millis(250))
+        );
+        // deadline must be positive
+        let bad = Config::parse("[coordinator]\ndefault_deadline_ms = 0")
+            .unwrap();
+        assert!(bad.coordinator().is_err());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! is split into per-kind batches in arrival order.
 
 use crate::coordinator::request::{Envelope, RequestKind};
+use crate::hwsim::DeviceKind;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -20,6 +21,12 @@ pub struct Batch {
     /// A cross-lane collective work item riding this (otherwise empty)
     /// batch — the member-stage transport of the collective plane.
     pub collective: Option<crate::coordinator::collective::CollectiveStage>,
+    /// The analytic service-time prior (seconds) the placement layer
+    /// priced this batch at on its chosen lane — the denominator of
+    /// the executor's measured/predicted EWMA sample.  `0.0` until the
+    /// batcher places the batch (and for collective stages, which are
+    /// priced by the group planner instead).
+    pub predicted_s: f64,
 }
 
 impl Batch {
@@ -29,6 +36,7 @@ impl Batch {
             kind,
             envelopes,
             collective: None,
+            predicted_s: 0.0,
         }
     }
 
@@ -39,6 +47,7 @@ impl Batch {
             kind: RequestKind::Distill,
             envelopes: Vec::new(),
             collective: Some(stage),
+            predicted_s: 0.0,
         }
     }
 }
@@ -74,6 +83,29 @@ impl BatchPolicy {
     /// Maximum batch size for `kind` (1 when unconfigured).
     pub fn max_for(&self, kind: RequestKind) -> usize {
         *self.max_batch.get(&kind).unwrap_or(&1)
+    }
+
+    /// Placement-aware re-tuning: size each kind's batch to the sweet
+    /// spot of the lane class that will win it
+    /// ([`crate::coordinator::router::preferred_batch`]), never above
+    /// the compiled-variant cap this policy already carries.  On the
+    /// homogeneous TPU plane the fused kinds stay at (or within the
+    /// sweet-spot tolerance of) their caps — deep batches amortize the
+    /// dispatch and systolic fill/drain — while distillation drops to
+    /// depth 1 on *every* lane class: its profile is priced once per
+    /// member ([`crate::coordinator::router::profile_repeat`] scales
+    /// with `b`), so companions buy no amortization and only add
+    /// `max_wait` queueing delay.  CPU-won kinds stay shallow for the
+    /// same reason — there is no per-op dispatch worth amortizing.
+    pub fn tuned_for(&self, lanes: &[DeviceKind]) -> BatchPolicy {
+        let mut tuned = self.clone();
+        for (kind, cap) in self.max_batch.iter() {
+            tuned.max_batch.insert(
+                *kind,
+                crate::coordinator::router::preferred_batch(*kind, lanes, *cap),
+            );
+        }
+        tuned
     }
 }
 
@@ -168,6 +200,8 @@ mod tests {
             request: req,
             reply: tx,
             enqueued_at: Instant::now(),
+            deadline: None,
+            degraded: false,
         }
     }
 

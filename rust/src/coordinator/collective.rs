@@ -491,6 +491,8 @@ mod tests {
                 },
                 reply: tx,
                 enqueued_at: Instant::now(),
+                deadline: None,
+                degraded: false,
             },
             rx,
         )

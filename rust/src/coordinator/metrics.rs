@@ -6,12 +6,13 @@
 //! at a glance.
 
 use crate::coordinator::request::RequestKind;
+use crate::coordinator::router::ServiceEwma;
 use crate::hwsim::DeviceKind;
 use crate::util::stats;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Counters for one executor device.
 #[derive(Default)]
@@ -22,6 +23,9 @@ struct DeviceCounters {
     batches: AtomicU64,
     /// Nanoseconds spent executing batches.
     busy_ns: AtomicU64,
+    /// Measured-service correction (EWMA of measured/predicted) and
+    /// the time of its last sample (for the idle decay).
+    correction: Mutex<(ServiceEwma, Option<Instant>)>,
 }
 
 /// A point-in-time view of one device's counters.
@@ -37,6 +41,10 @@ pub struct DeviceStat {
     pub batches: u64,
     /// Seconds the lane has spent executing batches.
     pub busy_s: f64,
+    /// Measured-service correction factor currently applied to the
+    /// lane's analytic prior (1.0 = the cost model is trusted as-is;
+    /// above 1 the lane has been observed running slower than priced).
+    pub correction: f64,
 }
 
 /// Aggregate counters for every lane of one device kind.
@@ -60,6 +68,10 @@ pub struct Metrics {
     submitted: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
+    /// requests refused at admission: deadline provably unmeetable
+    shed: AtomicU64,
+    /// requests rewritten to a cheaper tier to meet their deadline
+    degraded: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
     /// cross-lane collective jobs dispatched (one per grouped request)
@@ -97,6 +109,17 @@ pub struct LatencySummary {
     pub p99_s: f64,
     /// Worst latency (s).
     pub max_s: f64,
+}
+
+/// One request kind's latency summary, as carried by
+/// [`crate::coordinator::CoordinatorStats`].
+#[derive(Debug, Clone)]
+pub struct KindLatency {
+    /// The request kind the samples belong to.
+    pub kind: RequestKind,
+    /// Count / mean / p50 / p99 / max over the kind's completed
+    /// requests.
+    pub latency: LatencySummary,
 }
 
 impl Metrics {
@@ -166,8 +189,54 @@ impl Metrics {
             .collect()
     }
 
+    /// Fold one measured-vs-predicted service sample into device `d`'s
+    /// correction EWMA: `predicted_s` is the analytic prior the placer
+    /// priced the batch at, `measured` the lane's real busy time.  The
+    /// idle decay since the previous sample is applied first, so a
+    /// correction learned before a quiet period has already relaxed
+    /// toward the prior by the time fresh evidence lands.
+    pub fn record_service_sample(&self, d: usize, predicted_s: f64, measured: Duration) {
+        if let Some(dev) = self.devices.get(d) {
+            let now = Instant::now();
+            let mut c = dev.correction.lock().unwrap();
+            if let Some(last) = c.1 {
+                c.0.decay_idle(now.duration_since(last).as_secs_f64());
+            }
+            c.0.observe(measured.as_secs_f64(), predicted_s);
+            c.1 = Some(now);
+        }
+    }
+
+    /// The effective per-lane correction factors, in lane order — what
+    /// [`crate::coordinator::router::place_affinity_corrected`]
+    /// multiplies onto the analytic priors.  Each lane's raw smoothed
+    /// ratio is read with the idle decay applied at *this* instant
+    /// (without mutating the stored state), then the fleet is
+    /// median-normalized and clamped
+    /// ([`crate::coordinator::router::normalize_corrections`]) — so a
+    /// uniform wallclock-vs-simulated units offset cancels, unsampled
+    /// lanes stay at exactly 1.0, and a lane that went quiet drifts
+    /// back toward the prior even between samples.
+    pub fn device_corrections(&self) -> Vec<f64> {
+        let now = Instant::now();
+        let raw: Vec<Option<f64>> = self
+            .devices
+            .iter()
+            .map(|dev| {
+                let c = dev.correction.lock().unwrap();
+                c.1.map(|last| {
+                    let mut e = c.0;
+                    e.decay_idle(now.duration_since(last).as_secs_f64());
+                    e.factor()
+                })
+            })
+            .collect();
+        crate::coordinator::router::normalize_corrections(&raw)
+    }
+
     /// Point-in-time per-device counters.
     pub fn device_stats(&self) -> Vec<DeviceStat> {
+        let corrections = self.device_corrections();
         self.devices
             .iter()
             .enumerate()
@@ -181,6 +250,7 @@ impl Metrics {
                 queue_depth: d.queue_depth.load(Ordering::Relaxed),
                 batches: d.batches.load(Ordering::Relaxed),
                 busy_s: d.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                correction: corrections.get(i).copied().unwrap_or(1.0),
             })
             .collect()
     }
@@ -248,6 +318,28 @@ impl Metrics {
     /// A request failed.
     pub fn record_failure(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was shed at admission: its deadline was provably
+    /// unmeetable and no cheaper tier could save it.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was rewritten to its cheaper explanation tier at
+    /// admission to meet its deadline.
+    pub fn record_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests shed at admission so far.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Requests degraded to a cheaper tier so far.
+    pub fn degraded(&self) -> u64 {
+        self.degraded.load(Ordering::Relaxed)
     }
 
     /// A batch of `size` requests began executing.
@@ -368,6 +460,19 @@ impl Metrics {
         })
     }
 
+    /// Per-kind latency summaries for every kind with at least one
+    /// sample, in [`RequestKind::all`] order — the p50/p99 accounting
+    /// [`crate::coordinator::CoordinatorStats`] carries.
+    pub fn latency_summaries(&self) -> Vec<KindLatency> {
+        RequestKind::all()
+            .iter()
+            .filter_map(|&kind| {
+                self.latency_summary(kind)
+                    .map(|latency| KindLatency { kind, latency })
+            })
+            .collect()
+    }
+
     /// Mean queue wait for one request kind (None before any sample).
     pub fn mean_queue_wait(&self, kind: RequestKind) -> Option<f64> {
         let map = self.queue_waits.lock().unwrap();
@@ -377,11 +482,13 @@ impl Metrics {
     /// Render a metrics report for all kinds with data.
     pub fn report(&self) -> String {
         let mut out = format!(
-            "requests: submitted={} completed={} failed={} | mean batch={:.2} | \
-             collective jobs={} replans={}\n",
+            "requests: submitted={} completed={} failed={} shed={} degraded={} | \
+             mean batch={:.2} | collective jobs={} replans={}\n",
             self.submitted(),
             self.completed(),
             self.failed(),
+            self.shed(),
+            self.degraded(),
             self.mean_batch_size(),
             self.collective_jobs(),
             self.replans(),
@@ -416,12 +523,13 @@ impl Metrics {
         let devices = self.device_stats();
         for d in &devices {
             out.push_str(&format!(
-                "  device {:<2} ({:<3}) batches={:<5} busy={:.2}ms depth={}\n",
+                "  device {:<2} ({:<3}) batches={:<5} busy={:.2}ms depth={} corr={:.2}\n",
                 d.device,
                 d.kind.name(),
                 d.batches,
                 d.busy_s * 1e3,
                 d.queue_depth,
+                d.correction,
             ));
         }
         for k in Self::kind_stats_of(&devices) {
@@ -533,6 +641,68 @@ mod tests {
             .iter()
             .all(|d| d.kind == DeviceKind::Tpu));
         assert_eq!(legacy.kind_stats().len(), 1);
+    }
+
+    #[test]
+    fn service_samples_drive_the_lane_correction() {
+        let m = Metrics::with_devices(2);
+        // fresh lanes trust the prior
+        assert_eq!(m.device_corrections(), vec![1.0, 1.0]);
+        // lane 0 sustains a 3×-slow signal, lane 1 runs as priced:
+        // after median normalization the lanes keep their 3× relative
+        // separation (the absolute level is normalized out)
+        for _ in 0..64 {
+            m.record_service_sample(0, 1.0, Duration::from_secs(3));
+            m.record_service_sample(1, 1.0, Duration::from_secs(1));
+        }
+        let c = m.device_corrections();
+        assert!(
+            (c[0] / c[1] - 3.0).abs() < 0.1,
+            "lanes must stay ~3x apart, got {c:?}"
+        );
+        assert!(c[0] > c[1]);
+        // the per-lane stat snapshot carries the same factors
+        let stats = m.device_stats();
+        assert!((stats[0].correction - c[0]).abs() < 0.2);
+        // a single sampled lane normalizes to the prior (no siblings
+        // to be slow relative to)
+        let solo = Metrics::with_devices(2);
+        for _ in 0..16 {
+            solo.record_service_sample(0, 1.0, Duration::from_secs(3));
+        }
+        let c = solo.device_corrections();
+        assert_eq!(c, vec![1.0, 1.0]);
+        // out-of-range lanes are ignored, not panics
+        m.record_service_sample(99, 1.0, Duration::from_secs(1));
+    }
+
+    #[test]
+    fn shed_and_degraded_counters() {
+        let m = Metrics::new();
+        assert_eq!(m.shed(), 0);
+        assert_eq!(m.degraded(), 0);
+        m.record_shed();
+        m.record_shed();
+        m.record_degraded();
+        assert_eq!(m.shed(), 2);
+        assert_eq!(m.degraded(), 1);
+        let r = m.report();
+        assert!(r.contains("shed=2"), "{r}");
+        assert!(r.contains("degraded=1"), "{r}");
+    }
+
+    #[test]
+    fn latency_summaries_cover_kinds_with_samples_in_stable_order() {
+        let m = Metrics::new();
+        assert!(m.latency_summaries().is_empty());
+        m.record_complete(RequestKind::Saliency, Duration::from_millis(1), Duration::ZERO);
+        m.record_complete(RequestKind::Classify, Duration::from_millis(2), Duration::ZERO);
+        let s = m.latency_summaries();
+        assert_eq!(s.len(), 2);
+        // RequestKind::all() order: classify before saliency
+        assert_eq!(s[0].kind, RequestKind::Classify);
+        assert_eq!(s[1].kind, RequestKind::Saliency);
+        assert_eq!(s[0].latency.count, 1);
     }
 
     #[test]

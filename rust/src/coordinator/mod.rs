@@ -45,6 +45,7 @@ pub mod collective;
 pub mod decomposition;
 pub mod metrics;
 pub mod native;
+pub mod openloop;
 pub mod queue;
 pub mod remote;
 pub mod request;
@@ -52,8 +53,9 @@ pub mod router;
 pub mod service;
 pub mod worker;
 
-pub use metrics::{DeviceStat, KindStat, Metrics};
+pub use metrics::{DeviceStat, KindLatency, KindStat, Metrics};
 pub use native::NativeBackend;
+pub use openloop::{simulate_open_loop, OpenLoopConfig, OpenLoopReport};
 pub use remote::{HostRegistry, MultiHostConfig, TransportKind};
 pub use request::{Request, RequestKind, Response};
 pub use service::{Coordinator, CoordinatorConfig, CoordinatorStats};

@@ -429,6 +429,8 @@ mod tests {
                         request,
                         reply: tx,
                         enqueued_at: Instant::now(),
+                        deadline: None,
+                        degraded: false,
                     }
                 })
                 .collect(),

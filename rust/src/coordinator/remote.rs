@@ -908,6 +908,8 @@ mod tests {
             },
             reply: tx,
             enqueued_at: Instant::now(),
+            deadline: None,
+            degraded: false,
         };
         let block = n / 4;
         let blocks = (n / block) * (n / block);
@@ -988,6 +990,8 @@ mod tests {
             request: Request::Distill { x, y },
             reply: tx,
             enqueued_at: Instant::now(),
+            deadline: None,
+            degraded: false,
         };
         let batch = Batch::new(RequestKind::Distill, vec![env]);
         let back = try_dispatch(&registry, batch, &metrics)

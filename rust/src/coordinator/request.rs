@@ -77,6 +77,42 @@ impl Request {
             Request::Saliency { .. } => RequestKind::Saliency,
         }
     }
+
+    /// The request's characteristic edge — the `n` its analytic op
+    /// profile is priced at: players for Shapley, the square side for
+    /// everything else (see
+    /// [`crate::coordinator::router::profile_for`]).
+    pub fn edge(&self) -> usize {
+        match self {
+            Request::Classify { image } => image.rows,
+            Request::Distill { x, .. } => x.rows,
+            Request::Shapley { n, .. } => *n,
+            Request::IntGrad { image, .. } => image.rows,
+            Request::Saliency { image, .. } => image.rows,
+        }
+    }
+
+    /// The cheaper explanation tier this request can degrade to under
+    /// overload (the ApproXAI escape hatch): smoothed saliency degrades
+    /// to the plain integrated-gradients heatmap, which answers with
+    /// the same [`Response::Heatmap`] payload.  The direction follows
+    /// the analytic cost model, not folk intuition: at serving scale
+    /// the MicroCNN's gradient evaluations are cheap, and saliency's
+    /// spectral-smoothing pipeline (two fused FFT stages on the
+    /// VPU/divergent path, plus their dispatches) makes it the dearest
+    /// kind on *every* lane class — so dropping the smoothing is the
+    /// one degradation that actually lowers the admission estimate.
+    /// Kinds with no cheaper tier return `None` and can only be shed.
+    pub fn cheaper_tier(&self) -> Option<Request> {
+        match self {
+            Request::Saliency { image, class } => Some(Request::IntGrad {
+                baseline: Matrix::zeros(image.rows, image.cols),
+                image: image.clone(),
+                class: *class,
+            }),
+            _ => None,
+        }
+    }
 }
 
 impl RequestKind {
@@ -131,6 +167,14 @@ pub struct Envelope {
     pub reply: mpsc::Sender<crate::error::Result<Response>>,
     /// When the request entered the ingress queue.
     pub enqueued_at: Instant,
+    /// Latest completion the client will accept, when it declared one.
+    /// Admission control sheds (or degrades) a request whose deadline
+    /// is provably unmeetable at submit time; `None` means "whenever".
+    pub deadline: Option<Instant>,
+    /// Whether admission control rewrote this request to a cheaper
+    /// explanation tier ([`Request::cheaper_tier`]) to meet its
+    /// deadline.
+    pub degraded: bool,
 }
 
 impl std::fmt::Debug for Envelope {
@@ -153,5 +197,39 @@ mod tests {
         };
         assert_eq!(r.kind(), RequestKind::Classify);
         assert_eq!(RequestKind::all().len(), 5);
+    }
+
+    #[test]
+    fn only_saliency_has_a_cheaper_tier() {
+        let sal = Request::Saliency {
+            image: Matrix::zeros(4, 4),
+            class: 2,
+        };
+        // saliency degrades to IG on the same image and class (zero
+        // baseline), dropping the spectral-smoothing stages...
+        match sal.cheaper_tier() {
+            Some(Request::IntGrad { image, baseline, class }) => {
+                assert_eq!(image.rows, 4);
+                assert_eq!(baseline.rows, 4);
+                assert_eq!(class, 2);
+            }
+            other => panic!("expected intgrad tier, got {other:?}"),
+        }
+        // ...and the degraded tier itself bottoms out
+        assert!(sal.cheaper_tier().unwrap().cheaper_tier().is_none());
+        let classify = Request::Classify {
+            image: Matrix::zeros(2, 2),
+        };
+        assert!(classify.cheaper_tier().is_none());
+        assert_eq!(classify.edge(), 2);
+        assert_eq!(
+            Request::Shapley {
+                n: 6,
+                values: vec![0.0; 64],
+                names: vec![]
+            }
+            .edge(),
+            6
+        );
     }
 }

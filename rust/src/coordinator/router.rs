@@ -85,6 +85,143 @@ pub fn place_least_loaded(backlogs: &[u64]) -> usize {
         .unwrap_or(0)
 }
 
+/// EWMA smoothing weight of the measured-service correction: each
+/// observed `measured / predicted` ratio moves the lane's smoothed
+/// ratio a quarter of the way toward the new evidence.  Low enough
+/// that one outlier batch cannot swing placement, high enough that a
+/// genuinely mis-calibrated lane is re-priced within a handful of
+/// batches.
+pub const EWMA_ALPHA: f64 = 0.25;
+
+/// Per-sample sanity bounds on an observed `measured / predicted`
+/// ratio: a sample outside six orders of magnitude is a measurement
+/// artifact (timer glitch, degenerate prediction), not evidence, and
+/// is clamped before entering the EWMA.  Deliberately wide — the
+/// *applied* correction is bounded separately by [`EWMA_CLAMP_MAX`];
+/// the raw smoothed ratio must stay wide so a uniform units offset
+/// between wallclock measurements and simulated priors survives
+/// smoothing and can cancel in [`normalize_corrections`].
+pub const EWMA_RATIO_FLOOR: f64 = 1e-3;
+/// Upper per-sample sanity bound; see [`EWMA_RATIO_FLOOR`].
+pub const EWMA_RATIO_CEIL: f64 = 1e3;
+
+/// Lower clamp of the *applied* measured-service correction factor (a
+/// lane can be trusted as at most 4× *cheaper* than its analytic
+/// prior).  See [`EWMA_CLAMP_MAX`] for the rationale.
+pub const EWMA_CLAMP_MIN: f64 = 0.25;
+
+/// Upper clamp of the *applied* measured-service correction factor (a
+/// lane can be distrusted as at most 4× *dearer* than its analytic
+/// prior).
+///
+/// Why clamp, and why only after normalization: in live serving the
+/// observed ratio compares wallclock seconds against *simulated*
+/// seconds — two different units, so the absolute ratio is
+/// meaningless and only its variation *across lanes* carries signal.
+/// [`normalize_corrections`] therefore divides every lane's smoothed
+/// ratio by the fleet median first (the uniform units offset cancels;
+/// a well-calibrated fleet normalizes to exactly 1.0 and reproduces
+/// static placement bit-for-bit) and clamps the normalized factor
+/// into [[`EWMA_CLAMP_MIN`], [`EWMA_CLAMP_MAX`]].  The clamp
+/// guarantees measurement can never override the analytic prior by
+/// more than a constant factor: a lane that looks absurdly slow
+/// (driver hang, one-off GC pause surviving the EWMA) is priced at
+/// most 4× dearer, never so dear that the CPU-vs-TPU
+/// orders-of-magnitude structure the cost model encodes is inverted.
+/// [0.25, 4.0] is symmetric in log space — distrust and trust
+/// saturate at the same distance from 1.  Clamping the raw ratio
+/// instead (before normalization) would be wrong: a uniform 100×
+/// wallclock-vs-sim offset would saturate every lane at the bound and
+/// erase the cross-lane signal the loop exists to recover.
+pub const EWMA_CLAMP_MAX: f64 = 4.0;
+
+/// Half-life (seconds) of the idle decay: a smoothed ratio with no
+/// fresh samples relaxes halfway back toward the analytic prior (1.0)
+/// every this-many seconds, so a transient slowdown observed before a
+/// quiet period does not poison placement forever.
+pub const EWMA_IDLE_HALF_LIFE_S: f64 = 10.0;
+
+/// Per-lane measured-service state: an EWMA of the lane's
+/// `measured / predicted` service-time ratio.  The raw smoothed ratio
+/// is deliberately *not* the applied correction — lanes are corrected
+/// relative to each other through [`normalize_corrections`], which
+/// cancels the units offset between wallclock measurements and
+/// simulated priors and bounds the result.  Pure state — the
+/// coordinator's metrics registry owns one per lane and feeds it from
+/// the executor's per-batch busy time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceEwma {
+    factor: f64,
+}
+
+impl Default for ServiceEwma {
+    fn default() -> Self {
+        Self { factor: 1.0 }
+    }
+}
+
+impl ServiceEwma {
+    /// A fresh state: no evidence, smoothed ratio 1.0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The current smoothed `measured / predicted` ratio.
+    pub fn factor(&self) -> f64 {
+        self.factor
+    }
+
+    /// Fold one observed batch into the smoothed ratio: `measured_s`
+    /// is the lane's real busy time for the batch, `predicted_s` the
+    /// analytic prior the placer priced it at.  Non-positive or
+    /// non-finite samples are ignored (a degenerate prediction must
+    /// not produce an infinite ratio); valid samples are clamped into
+    /// [[`EWMA_RATIO_FLOOR`], [`EWMA_RATIO_CEIL`]].
+    pub fn observe(&mut self, measured_s: f64, predicted_s: f64) {
+        if !(measured_s > 0.0 && measured_s.is_finite())
+            || !(predicted_s > 0.0 && predicted_s.is_finite())
+        {
+            return;
+        }
+        let ratio = (measured_s / predicted_s).clamp(EWMA_RATIO_FLOOR, EWMA_RATIO_CEIL);
+        self.factor = EWMA_ALPHA * ratio + (1.0 - EWMA_ALPHA) * self.factor;
+    }
+
+    /// Relax the smoothed ratio toward the analytic prior after
+    /// `idle_s` seconds without a sample (half-life
+    /// [`EWMA_IDLE_HALF_LIFE_S`]).
+    pub fn decay_idle(&mut self, idle_s: f64) {
+        if idle_s <= 0.0 || !idle_s.is_finite() {
+            return;
+        }
+        let keep = 0.5f64.powf(idle_s / EWMA_IDLE_HALF_LIFE_S);
+        self.factor = 1.0 + (self.factor - 1.0) * keep;
+    }
+}
+
+/// Turn the per-lane raw smoothed ratios into the correction factors
+/// [`place_affinity_corrected`] actually applies: divide every
+/// sampled lane's ratio by the median over sampled lanes (a uniform
+/// wallclock-vs-simulated units offset cancels — a well-calibrated
+/// fleet normalizes to exactly 1.0), then clamp each normalized
+/// factor into [[`EWMA_CLAMP_MIN`], [`EWMA_CLAMP_MAX`]].  `None`
+/// entries (lanes with no samples yet) stay at exactly 1.0 and are
+/// excluded from the median, so a single-lane or cold fleet is
+/// bit-for-bit the static prior.
+pub fn normalize_corrections(raw: &[Option<f64>]) -> Vec<f64> {
+    let sampled: Vec<f64> = raw.iter().filter_map(|&r| r).collect();
+    if sampled.is_empty() {
+        return vec![1.0; raw.len()];
+    }
+    let median = crate::util::stats::median(&sampled);
+    raw.iter()
+        .map(|r| match r {
+            Some(f) if median > 0.0 => (f / median).clamp(EWMA_CLAMP_MIN, EWMA_CLAMP_MAX),
+            _ => 1.0,
+        })
+        .collect()
+}
+
 /// Backlog-imbalance bound of the affinity placer's starvation guard:
 /// when the cost-model winner is this many batches deeper than the
 /// emptiest lane, the batch spills to the cheapest least-loaded lane
@@ -192,6 +329,76 @@ pub fn profile_repeat(kind: RequestKind, b: usize) -> u64 {
     }
 }
 
+/// Tolerance of the batch sweet-spot search: the smallest batch depth
+/// whose per-request cost is within this fraction of the asymptotic
+/// best is "deep enough" — piling on more depth past that point buys
+/// almost no amortization but costs real queueing delay.
+pub const BATCH_SWEET_SPOT_TOL: f64 = 0.05;
+
+/// Representative characteristic edge of a `kind` request, used when
+/// sizing batches before any request has arrived: the CIFAR image edge
+/// for the image kinds, the mid compiled variant for Shapley and
+/// distillation.
+pub fn typical_edge(kind: RequestKind) -> usize {
+    match kind {
+        RequestKind::Classify | RequestKind::IntGrad | RequestKind::Saliency => {
+            crate::data::cifar::IMG
+        }
+        RequestKind::Shapley => 8,
+        RequestKind::Distill => 64,
+    }
+}
+
+/// Placement-aware batch sizing: the batch depth `kind` should be
+/// assembled at, given the lane classes it can land on, capped at
+/// `cap` (the compiled-variant maximum).  The batcher composes the
+/// batch *for* the lane kind that will win it: it prices
+/// [`profile_for`] at the kind's [`typical_edge`] on every distinct
+/// lane class, takes the idle-fleet winner, then walks depth upward
+/// and returns the smallest `b` whose per-request cost
+/// `service(b) × repeat(b) / b` is within [`BATCH_SWEET_SPOT_TOL`] of
+/// the best depth ≤ `cap`.  On a TPU-class winner the dispatch +
+/// systolic fill/drain amortization pushes the sweet spot deep; on a
+/// CPU-class winner (no dispatch overhead, linear work) depth 1 is
+/// already within tolerance, so requests stop waiting for companions
+/// that buy nothing.
+pub fn preferred_batch(kind: RequestKind, lanes: &[DeviceKind], cap: usize) -> usize {
+    let cap = cap.max(1);
+    let n = typical_edge(kind);
+    // distinct lane classes present (default TPU — the homogeneous plane)
+    let mut classes: Vec<DeviceKind> = Vec::new();
+    for &k in lanes {
+        if !classes.contains(&k) {
+            classes.push(k);
+        }
+    }
+    if classes.is_empty() {
+        classes.push(DeviceKind::Tpu);
+    }
+    // the lane class an idle fleet would win this kind with
+    let winner = classes
+        .iter()
+        .copied()
+        .min_by(|&a, &b| {
+            let p = profile_for(kind, 1, n);
+            lane_service_s(a, &p)
+                .partial_cmp(&lane_service_s(b, &p))
+                .unwrap()
+        })
+        .unwrap();
+    let per_request = |b: usize| -> f64 {
+        lane_service_s(winner, &profile_for(kind, b, n)) * profile_repeat(kind, b) as f64
+            / b as f64
+    };
+    let costs: Vec<f64> = (1..=cap).map(per_request).collect();
+    let best = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+    costs
+        .iter()
+        .position(|&c| c <= best * (1.0 + BATCH_SWEET_SPOT_TOL))
+        .map(|i| i + 1)
+        .unwrap_or(cap)
+}
+
 /// Analytic op profile of one assembled batch.  Batches group by
 /// request KIND only, so same-kind members may differ in size
 /// (different Shapley player counts, different distill edges): the
@@ -260,7 +467,32 @@ pub fn lane_service_s(kind: DeviceKind, profile: &OpTrace) -> f64 {
 /// so slower kinds absorb overflow instead of idling (and mis-priced
 /// queues cannot starve the pool).  Dead lanes are marked by the
 /// batcher with `u64::MAX` backlog and never win.
+///
+/// This is the static-prior placer: every lane is priced exactly as
+/// its analytic cost model says.  The closed-loop serving plane routes
+/// through [`place_affinity_corrected`] with the measured per-lane
+/// EWMA factors instead; an all-ones correction vector reproduces this
+/// function bit-for-bit.
 pub fn place_affinity(kinds: &[DeviceKind], backlogs: &[u64], profile: &OpTrace) -> usize {
+    place_affinity_corrected(kinds, backlogs, &[], profile)
+}
+
+/// [`place_affinity`] with per-lane measured-service corrections: lane
+/// `i`'s analytic service estimate is multiplied by `corrections[i]`
+/// (the bounded [`ServiceEwma`] factor fed back from the lane's
+/// observed busy time), so a lane that has been running 3× slower than
+/// its cost model claims is priced 3× dearer and loses placements it
+/// would win on the prior alone.  Missing entries (short or empty
+/// `corrections`) default to 1.0 — the static prior — which keeps the
+/// uncorrected [`place_affinity`] a strict special case.  The
+/// starvation-guard spill also prices its "cheapest emptiest lane"
+/// choice on the corrected estimates.
+pub fn place_affinity_corrected(
+    kinds: &[DeviceKind],
+    backlogs: &[u64],
+    corrections: &[f64],
+    profile: &OpTrace,
+) -> usize {
     let n = kinds.len().min(backlogs.len());
     if n == 0 {
         return place_least_loaded(backlogs);
@@ -271,13 +503,15 @@ pub fn place_affinity(kinds: &[DeviceKind], backlogs: &[u64], profile: &OpTrace)
     let mut by_kind: [Option<f64>; 3] = [None; 3];
     let service: Vec<f64> = kinds[..n]
         .iter()
-        .map(|&k| {
+        .enumerate()
+        .map(|(i, &k)| {
             let slot = match k {
                 DeviceKind::Cpu => 0,
                 DeviceKind::Gpu => 1,
                 DeviceKind::Tpu => 2,
             };
-            *by_kind[slot].get_or_insert_with(|| lane_service_s(k, profile))
+            let base = *by_kind[slot].get_or_insert_with(|| lane_service_s(k, profile));
+            base * corrections.get(i).copied().unwrap_or(1.0)
         })
         .collect();
     let eta = |i: usize| (backlogs[i] as f64 + 1.0) * service[i];
@@ -909,6 +1143,147 @@ mod tests {
         assert_eq!(place_affinity(&kinds, &[2, 1, 3, 1], &profile), 1);
         assert_eq!(place_affinity(&kinds, &[0, 0, 0, 0], &profile), 0);
     }
+
+    #[test]
+    fn measured_slow_lane_loses_placements_it_wins_statically() {
+        // The PR 8 regression: lane 0 (TPU) wins an FFT-heavy batch on
+        // the static prior, but once its measured busy time reports it
+        // running 3× slower than priced, the corrected placer must
+        // route the same batch to the sibling TPU lane instead.
+        let kinds = vec![DeviceKind::Tpu, DeviceKind::Tpu, DeviceKind::Gpu];
+        let backlogs = vec![0u64, 0, 0];
+        let profile = profile_for(RequestKind::Distill, 1, 256);
+        // static prior: ties go to the lowest index — lane 0 wins
+        assert_eq!(place_affinity(&kinds, &backlogs, &profile), 0);
+        // feed the EWMA a sustained 3×-slow signal for lane 0
+        let mut ewma = ServiceEwma::new();
+        for _ in 0..64 {
+            ewma.observe(3.0, 1.0);
+        }
+        assert!((ewma.factor() - 3.0).abs() < 1e-6, "got {}", ewma.factor());
+        let corrections =
+            normalize_corrections(&[Some(ewma.factor()), Some(1.0), Some(1.0)]);
+        assert!((corrections[0] - 3.0).abs() < 1e-6);
+        let lane = place_affinity_corrected(&kinds, &backlogs, &corrections, &profile);
+        assert_ne!(lane, 0, "the measured-slow lane must lose the placement");
+        // and an all-ones correction vector reproduces the static prior
+        assert_eq!(
+            place_affinity_corrected(&kinds, &backlogs, &[1.0, 1.0, 1.0], &profile),
+            place_affinity(&kinds, &backlogs, &profile)
+        );
+    }
+
+    #[test]
+    fn ewma_is_bounded_and_decays_toward_the_prior() {
+        let mut e = ServiceEwma::new();
+        assert_eq!(e.factor(), 1.0);
+        // per-sample sanity bounds: no amount of absurd evidence
+        // escapes the ratio clamp
+        for _ in 0..10_000 {
+            e.observe(1e12, 1.0);
+        }
+        assert!((e.factor() - EWMA_RATIO_CEIL).abs() < 1e-6);
+        for _ in 0..10_000 {
+            e.observe(1.0, 1e12);
+        }
+        assert!((e.factor() - EWMA_RATIO_FLOOR).abs() < 1e-6);
+        // degenerate samples are ignored, not folded in
+        let before = e.factor();
+        e.observe(0.0, 1.0);
+        e.observe(1.0, 0.0);
+        e.observe(f64::NAN, 1.0);
+        e.observe(1.0, f64::INFINITY);
+        assert_eq!(e.factor(), before);
+        // idle decay relaxes toward 1.0 with the configured half-life
+        let mut slow = ServiceEwma::new();
+        for _ in 0..100 {
+            slow.observe(3.0, 1.0);
+        }
+        let f0 = slow.factor();
+        slow.decay_idle(EWMA_IDLE_HALF_LIFE_S);
+        assert!((slow.factor() - (1.0 + (f0 - 1.0) * 0.5)).abs() < 1e-12);
+        slow.decay_idle(1e6);
+        assert!((slow.factor() - 1.0).abs() < 1e-9, "long idle → prior");
+        // zero / negative idle is a no-op
+        let mut x = ServiceEwma::new();
+        x.observe(2.0, 1.0);
+        let fx = x.factor();
+        x.decay_idle(0.0);
+        x.decay_idle(-5.0);
+        assert_eq!(x.factor(), fx);
+    }
+
+    #[test]
+    fn normalization_cancels_a_uniform_units_offset_and_clamps() {
+        // A well-calibrated fleet measured in different units (every
+        // lane's wallclock/sim ratio is the same 120×) must normalize
+        // to exactly 1.0 — live serving on a correct cost model stays
+        // bit-for-bit the static prior.
+        assert_eq!(
+            normalize_corrections(&[Some(120.0), Some(120.0), Some(120.0)]),
+            vec![1.0, 1.0, 1.0]
+        );
+        // The same units offset with one genuinely 3×-slow lane: the
+        // offset cancels, the mis-calibration survives.
+        let c = normalize_corrections(&[Some(360.0), Some(120.0), Some(120.0)]);
+        assert!((c[0] - 3.0).abs() < 1e-9, "{c:?}");
+        assert!((c[1] - 1.0).abs() < 1e-9);
+        // Unsampled lanes stay at the prior and don't drag the median.
+        let c = normalize_corrections(&[None, Some(200.0), Some(100.0), Some(100.0)]);
+        assert_eq!(c[0], 1.0);
+        assert!((c[2] - 1.0).abs() < 1e-9);
+        // The applied factor is clamped, never the raw ratio.
+        let c = normalize_corrections(&[Some(1e3), Some(1.0), Some(1.0)]);
+        assert_eq!(c[0], EWMA_CLAMP_MAX);
+        let c = normalize_corrections(&[Some(1e-3), Some(1.0), Some(1.0)]);
+        assert_eq!(c[0], EWMA_CLAMP_MIN);
+        // cold fleet / empty input
+        assert_eq!(normalize_corrections(&[None, None]), vec![1.0, 1.0]);
+        assert!(normalize_corrections(&[]).is_empty());
+    }
+
+    #[test]
+    fn sweet_spot_is_deep_on_tpu_and_shallow_on_cpu() {
+        // The placement-aware batching claim at unit level: the same
+        // saliency request kind wants deep batches when the winning
+        // lane is a TPU (4 dispatches of ~3 µs amortize over the
+        // batch) and depth 1 when only CPU lanes exist: a CPU
+        // "dispatch" is ~100 ns against ~18 µs of per-request FFT
+        // work, so companions buy nothing and only add queueing delay.
+        let tpu = preferred_batch(RequestKind::Saliency, &[DeviceKind::Tpu], 8);
+        let cpu = preferred_batch(RequestKind::Saliency, &[DeviceKind::Cpu], 8);
+        assert_eq!(tpu, 8, "TPU saliency amortizes to its cap");
+        assert_eq!(cpu, 1, "CPU saliency has nothing to amortize");
+        // classify: deep on TPU (systolic fill/drain + dispatch), and
+        // deeper there than on a CPU lane, whose only per-batch fixed
+        // cost is two ~100 ns calls
+        let tpu_c = preferred_batch(RequestKind::Classify, &[DeviceKind::Tpu], 32);
+        let cpu_c = preferred_batch(RequestKind::Classify, &[DeviceKind::Cpu], 32);
+        assert!(tpu_c >= 16, "TPU classify must go deep, got {tpu_c}");
+        assert!(
+            tpu_c > cpu_c,
+            "TPU sweet spot ({tpu_c}) must be deeper than CPU ({cpu_c})"
+        );
+        // caps are respected and never underflow
+        assert_eq!(preferred_batch(RequestKind::Classify, &[DeviceKind::Tpu], 1), 1);
+        for kind in RequestKind::all() {
+            let b = preferred_batch(kind, &MIXED_LANES, 32);
+            assert!((1..=32).contains(&b), "{kind:?} → {b}");
+        }
+        // distillation prices per-request (profile_repeat scales with
+        // b), so batching buys no amortization in the priced model:
+        // the sweet spot is depth 1 on every class
+        for k in [DeviceKind::Cpu, DeviceKind::Gpu, DeviceKind::Tpu] {
+            assert_eq!(preferred_batch(RequestKind::Distill, &[k], 4), 1);
+        }
+        // empty lane list defaults to the TPU-class homogeneous plane
+        assert_eq!(
+            preferred_batch(RequestKind::Classify, &[], 32),
+            preferred_batch(RequestKind::Classify, &[DeviceKind::Tpu], 32)
+        );
+    }
+
+    const MIXED_LANES: [DeviceKind; 3] = [DeviceKind::Tpu, DeviceKind::Gpu, DeviceKind::Cpu];
 
     #[test]
     fn batch_profiles_are_kind_and_size_shaped() {

@@ -13,7 +13,7 @@
 //! ([`crate::coordinator::metrics::KindStat`]).
 
 use crate::coordinator::batcher::{Batch, BatchAssembler, BatchPolicy};
-use crate::coordinator::metrics::{DeviceStat, KindStat, Metrics};
+use crate::coordinator::metrics::{DeviceStat, KindLatency, KindStat, Metrics};
 use crate::coordinator::queue::{BoundedQueue, QueueError};
 use crate::coordinator::request::{Envelope, Request, Response};
 use crate::coordinator::router;
@@ -56,6 +56,31 @@ pub struct CoordinatorConfig {
     /// ([`crate::coordinator::remote`]) before any in-process
     /// placement is considered.
     pub multihost: Option<crate::coordinator::remote::MultiHostConfig>,
+    /// Closed-loop measured placement: feed each lane's observed busy
+    /// time back into placement as a bounded EWMA correction over the
+    /// analytic prior
+    /// ([`crate::coordinator::router::place_affinity_corrected`]).
+    /// `true` (the default) adapts when a lane runs slower than its
+    /// cost model claims; `false` pins the static prior (the PR 5–7
+    /// behavior).  A well-calibrated or single-lane fleet places
+    /// identically either way — the corrections median-normalize to
+    /// exactly 1.0.
+    pub adaptive_placement: bool,
+    /// Placement-aware batching: re-tune the per-kind batch depths to
+    /// the sweet spot of the lane class that will win each kind
+    /// ([`crate::coordinator::batcher::BatchPolicy::tuned_for`]).
+    /// `false` keeps the configured policy's depths untouched.
+    pub placement_batching: bool,
+    /// Overload policy: when a deadline is provably unmeetable at
+    /// admission, `true` (the default) first tries the request's
+    /// cheaper explanation tier
+    /// ([`crate::coordinator::request::Request::cheaper_tier`]) before
+    /// shedding; `false` sheds immediately.
+    pub degrade_under_overload: bool,
+    /// Deadline applied to every [`Coordinator::submit`] that does not
+    /// carry its own (via [`Coordinator::submit_with_deadline`]).
+    /// `None` (the default) admits everything — the pre-SLO behavior.
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for CoordinatorConfig {
@@ -69,6 +94,10 @@ impl Default for CoordinatorConfig {
             policy: BatchPolicy::default(),
             backend: crate::coordinator::worker::BackendMode::default(),
             multihost: None,
+            adaptive_placement: true,
+            placement_batching: true,
+            degrade_under_overload: true,
+            default_deadline: None,
         }
     }
 }
@@ -111,6 +140,14 @@ pub struct CoordinatorStats {
     pub completed: u64,
     /// Requests answered with an error.
     pub failed: u64,
+    /// Requests refused at admission: their deadline was provably
+    /// unmeetable on every live lane and no cheaper tier could save
+    /// them.
+    pub shed: u64,
+    /// Requests rewritten to their cheaper explanation tier at
+    /// admission to meet their deadline (smoothed saliency → plain
+    /// IG heatmap).
+    pub degraded: u64,
     /// Mean requests per executed batch (batching efficiency).
     pub mean_batch_size: f64,
     /// Cross-lane collective jobs dispatched (grouped big requests).
@@ -127,10 +164,13 @@ pub struct CoordinatorStats {
     /// Per-host heartbeat-miss counters (empty with no host plane).
     pub heartbeat_misses: Vec<u64>,
     /// One entry per executor device (kind, queue depth, batches, busy
-    /// time).
+    /// time, measured-service correction).
     pub devices: Vec<DeviceStat>,
     /// Per-device-kind aggregates over the lanes (mixed-fleet view).
     pub kinds: Vec<KindStat>,
+    /// Per-request-kind latency summaries (count/mean/p50/p99/max) for
+    /// every kind with at least one completed request.
+    pub latencies: Vec<KindLatency>,
 }
 
 /// The serving engine.  Construct with [`Coordinator::start`], submit
@@ -143,6 +183,12 @@ pub struct Coordinator {
     executors: Vec<JoinHandle<()>>,
     work: Vec<BoundedQueue<Batch>>,
     hosts: Option<Arc<crate::coordinator::remote::HostRegistry>>,
+    /// Lane classes in lane order — admission control prices the
+    /// best-lane completion estimate on these.
+    lane_kinds: Vec<DeviceKind>,
+    adaptive_placement: bool,
+    degrade_under_overload: bool,
+    default_deadline: Option<Duration>,
 }
 
 impl Coordinator {
@@ -184,15 +230,27 @@ impl Coordinator {
             .as_ref()
             .map(|mh| Arc::new(crate::coordinator::remote::HostRegistry::start(mh, metrics.clone())));
 
+        // Placement-aware batching: size each kind's batch to the
+        // sweet spot of the lane class that will win it, bounded by
+        // the configured (compiled-variant) caps.
+        let policy = if config.placement_batching {
+            config.policy.tuned_for(&lane_kinds)
+        } else {
+            config.policy.clone()
+        };
         let batcher = {
             let ingress = ingress.clone();
             let work = work.clone();
             let metrics = metrics.clone();
-            let policy = config.policy.clone();
+            let policy = policy.clone();
             let hosts = hosts.clone();
+            let lane_kinds = lane_kinds.clone();
+            let adaptive = config.adaptive_placement;
             std::thread::Builder::new()
                 .name("xai-batcher".into())
-                .spawn(move || batcher_loop(ingress, work, policy, metrics, lane_kinds, hosts))
+                .spawn(move || {
+                    batcher_loop(ingress, work, policy, metrics, lane_kinds, hosts, adaptive)
+                })
                 .expect("spawn batcher")
         };
 
@@ -204,12 +262,87 @@ impl Coordinator {
             executors,
             work,
             hosts,
+            lane_kinds,
+            adaptive_placement: config.adaptive_placement,
+            degrade_under_overload: config.degrade_under_overload,
+            default_deadline: config.default_deadline,
         })
     }
 
     /// Submit a request; blocks if the ingress queue is full
     /// (backpressure).  Returns a handle to await the response.
+    /// Applies [`CoordinatorConfig::default_deadline`] when one is
+    /// configured; use [`Coordinator::submit_with_deadline`] for a
+    /// per-request SLO.
     pub fn submit(&self, request: Request) -> Result<Pending> {
+        self.submit_with_deadline(request, self.default_deadline)
+    }
+
+    /// Estimated completion (cost-model seconds) of `request` on its
+    /// best live lane: queue-ahead plus one single-request service,
+    /// scaled by the lane's measured-placement correction.
+    fn admission_estimate_s(&self, request: &Request) -> f64 {
+        let kind = request.kind();
+        let profile = router::profile_for(kind, 1, request.edge());
+        let repeat = router::profile_repeat(kind, 1) as f64;
+        let mut backlogs = self.metrics.device_backlogs();
+        backlogs.resize(self.lane_kinds.len(), 0);
+        let corrections = if self.adaptive_placement {
+            self.metrics.device_corrections()
+        } else {
+            Vec::new()
+        };
+        self.lane_kinds
+            .iter()
+            .enumerate()
+            .map(|(i, &lane)| {
+                let queued = backlogs.get(i).copied().unwrap_or(0).saturating_add(1);
+                let c = corrections.get(i).copied().unwrap_or(1.0);
+                queued as f64 * router::lane_service_s(lane, &profile) * repeat * c
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Submit with an explicit deadline (`None` = no SLO).  Admission
+    /// control prices the request's best-lane completion estimate
+    /// against the deadline: a provably unmeetable request is first
+    /// rewritten to its cheaper explanation tier
+    /// ([`Request::cheaper_tier`], when
+    /// [`CoordinatorConfig::degrade_under_overload`] allows), and shed
+    /// with a synchronous error when even that cannot meet the SLO.
+    pub fn submit_with_deadline(
+        &self,
+        request: Request,
+        deadline: Option<Duration>,
+    ) -> Result<Pending> {
+        self.metrics.record_submit();
+        let mut request = request;
+        let mut degraded = false;
+        if let Some(slo) = deadline {
+            let slo_s = slo.as_secs_f64();
+            if self.admission_estimate_s(&request) > slo_s {
+                let cheaper = if self.degrade_under_overload {
+                    request.cheaper_tier()
+                } else {
+                    None
+                };
+                match cheaper {
+                    Some(tier) if self.admission_estimate_s(&tier) <= slo_s => {
+                        request = tier;
+                        degraded = true;
+                        self.metrics.record_degraded();
+                    }
+                    _ => {
+                        self.metrics.record_shed();
+                        return Err(Error::Coordinator(format!(
+                            "shed at admission: {} deadline {:.1}ms unmeetable on every lane",
+                            request.kind().name(),
+                            slo_s * 1e3
+                        )));
+                    }
+                }
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let env = Envelope {
@@ -217,8 +350,9 @@ impl Coordinator {
             request,
             reply: tx,
             enqueued_at: Instant::now(),
+            deadline: deadline.map(|d| Instant::now() + d),
+            degraded,
         };
-        self.metrics.record_submit();
         self.ingress
             .push(env)
             .map_err(|_| Error::Coordinator("coordinator is shut down".into()))?;
@@ -246,6 +380,8 @@ impl Coordinator {
             submitted: self.metrics.submitted(),
             completed: self.metrics.completed(),
             failed: self.metrics.failed(),
+            shed: self.metrics.shed(),
+            degraded: self.metrics.degraded(),
             mean_batch_size: self.metrics.mean_batch_size(),
             collective_jobs: self.metrics.collective_jobs(),
             replans: self.metrics.replans(),
@@ -255,6 +391,7 @@ impl Coordinator {
             heartbeat_misses: self.metrics.heartbeat_misses(),
             devices,
             kinds,
+            latencies: self.metrics.latency_summaries(),
         }
     }
 
@@ -327,6 +464,7 @@ fn batcher_loop(
     metrics: Arc<Metrics>,
     lane_kinds: Vec<DeviceKind>,
     hosts: Option<Arc<crate::coordinator::remote::HostRegistry>>,
+    adaptive: bool,
 ) {
     let max_wait = policy.max_wait;
     let mut assembler = BatchAssembler::new(policy);
@@ -372,6 +510,7 @@ fn batcher_loop(
             None => return Ok(()),
         };
         let profile = router::batch_profile(&batch);
+        let repeat = router::profile_repeat(batch.kind, batch.envelopes.len()) as f64;
         let mut batch = batch;
         loop {
             let mut backlogs = metrics.device_backlogs();
@@ -384,7 +523,19 @@ fn batcher_loop(
             if !alive.iter().any(|&a| a) {
                 return Err(()); // every lane is gone: stop the batcher
             }
-            let d = router::place_affinity(&lane_kinds, &backlogs, &profile);
+            // Measured placement: scale each lane's analytic prior by
+            // its median-normalized busy-time correction (all 1.0 when
+            // adaptive placement is off or the fleet is calibrated).
+            let corrections = if adaptive {
+                metrics.device_corrections()
+            } else {
+                Vec::new()
+            };
+            let d =
+                router::place_affinity_corrected(&lane_kinds, &backlogs, &corrections, &profile);
+            // Price the batch on its chosen lane so the executor can
+            // feed a measured/predicted sample back to the EWMA.
+            batch.predicted_s = router::lane_service_s(lane_kinds[d], &profile) * repeat;
             metrics.record_device_enqueue(d);
             match work[d].try_push(batch) {
                 Ok(()) => return Ok(()),

@@ -209,6 +209,12 @@ fn executor_loop(
         // per-device accounting: this lane's backlog shrinks, its busy
         // time grows — the placement layer reads both
         metrics.record_device_batch(id, started.elapsed());
+        // closed-loop feedback: one measured/predicted sample into the
+        // lane's service EWMA (collective stages keep predicted_s at
+        // 0.0 and are skipped — the group planner priced those).
+        if batch.predicted_s > 0.0 {
+            metrics.record_service_sample(id, batch.predicted_s, started.elapsed());
+        }
         for (env, result) in batch.envelopes.into_iter().zip(results) {
             let ok = result.is_ok();
             let latency = env.enqueued_at.elapsed();

@@ -48,6 +48,8 @@ fn envelope(id: u64, req: Request) -> Envelope {
         request: req,
         reply: tx,
         enqueued_at: Instant::now(),
+        deadline: None,
+        degraded: false,
     }
 }
 
@@ -559,6 +561,107 @@ fn partitioned_host_degrades_multihost_job_onto_survivors() {
     );
     assert_eq!(stats.completed, 1);
     coord.shutdown();
+}
+
+#[test]
+fn admission_degrades_then_sheds_under_a_live_slo() {
+    // PR 8 live acceptance: on a single idle CPU-class lane, a
+    // saliency request whose deadline sits strictly between the
+    // analytic admission estimates of saliency and its cheaper IG
+    // tier must be rewritten (degraded) at admission and still answer
+    // with a heatmap; a deadline below even the cheaper tier must
+    // shed synchronously.  The thresholds are computed from the SAME
+    // router functions the admission path prices with, so the test
+    // tracks the cost model instead of hard-coding microseconds.
+    use xai_accel::coordinator::router;
+    let cpu = xai_accel::hwsim::DeviceKind::Cpu;
+    let sal_eta = router::lane_service_s(
+        cpu,
+        &router::profile_for(RequestKind::Saliency, 1, 16),
+    );
+    let ig_eta = router::lane_service_s(
+        cpu,
+        &router::profile_for(RequestKind::IntGrad, 1, 16),
+    );
+    assert!(
+        ig_eta < sal_eta,
+        "tier direction inverted: the cheaper_tier design assumes the \
+         plain-IG profile undercuts smoothed saliency on every lane \
+         class (ig {ig_eta} vs sal {sal_eta})"
+    );
+    let mut config = CoordinatorConfig::default();
+    config.lanes = vec![cpu];
+    config.backend = BackendMode::NativeOnly;
+    let coord = Coordinator::start(config).expect("start SLO coordinator");
+    let mut rng = Rng::new(119);
+    let image = xai_accel::data::cifar::sample_class(1, &mut rng).image;
+
+    // (a) deadline between the two tiers: degrade, not shed
+    let between = std::time::Duration::from_secs_f64((ig_eta + sal_eta) / 2.0);
+    let resp = coord
+        .submit_with_deadline(
+            Request::Saliency { image: image.clone(), class: 1 },
+            Some(between),
+        )
+        .expect("must be admitted via the cheaper tier")
+        .wait()
+        .expect("degraded request must still answer");
+    assert!(matches!(resp, Response::Heatmap(_)));
+    let stats = coord.stats();
+    assert_eq!(stats.degraded, 1, "admission must record the rewrite");
+    assert_eq!(stats.shed, 0);
+
+    // (b) deadline below even the cheaper tier: synchronous shed
+    let hopeless = std::time::Duration::from_secs_f64(ig_eta / 2.0);
+    let err = coord
+        .submit_with_deadline(
+            Request::Saliency { image: image.clone(), class: 1 },
+            Some(hopeless),
+        )
+        .expect_err("an unmeetable deadline must shed at admission");
+    assert!(err.to_string().contains("shed"), "{err}");
+
+    // (c) a kind with no cheaper tier sheds directly
+    assert!(coord
+        .submit_with_deadline(Request::Classify { image }, Some(hopeless))
+        .is_err());
+    let stats = coord.stats();
+    assert_eq!(stats.shed, 2);
+    assert_eq!(stats.degraded, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn latency_percentiles_match_the_sorted_replay_oracle() {
+    // The p50/p99 accounting CoordinatorStats carries must be exact —
+    // Metrics keeps every sample, so its percentiles must equal a
+    // from-scratch sorted replay through util::stats on the same
+    // stream, for random stream lengths and magnitudes.
+    use xai_accel::coordinator::Metrics;
+    use xai_accel::util::stats;
+    check("percentiles are exact, not approximated", 25, |rng: &mut Rng| {
+        let m = Metrics::new();
+        let n = rng.int_range(1, 400) as usize;
+        let mut replay: Vec<f64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            // span ns..minutes so sort order is non-trivial
+            let s = 10f64.powf(rng.range(-9.0, 2.0));
+            replay.push(std::time::Duration::from_secs_f64(s).as_secs_f64());
+            m.record_complete(
+                RequestKind::Saliency,
+                std::time::Duration::from_secs_f64(s),
+                std::time::Duration::ZERO,
+            );
+        }
+        let got = m
+            .latency_summary(RequestKind::Saliency)
+            .expect("samples were recorded");
+        assert_eq!(got.count, n);
+        assert_eq!(got.p50_s, stats::percentile(&replay, 50.0));
+        assert_eq!(got.p99_s, stats::percentile(&replay, 99.0));
+        assert_eq!(got.max_s, stats::max(&replay));
+        assert_eq!(got.mean_s, stats::mean(&replay));
+    });
 }
 
 #[test]
