@@ -12,6 +12,7 @@ use xai_accel::bench::{json, runner_from_args, BenchResult};
 use xai_accel::linalg::complex::C32;
 use xai_accel::linalg::fft;
 use xai_accel::linalg::matrix::{CMatrix, Matrix};
+use xai_accel::linalg::simd;
 use xai_accel::util::rng::Rng;
 use xai_accel::util::table::{fmt_time, Table};
 
@@ -148,6 +149,36 @@ fn main() {
         if speedup >= 5.0 { "PASS" } else { "FAIL" }
     );
 
+    // ---- SIMD dispatch: forced-scalar vs vector, same runner -----------
+    // PR 9 acceptance row: time the planned single-thread 256²
+    // transform with the kernel dispatch pinned to scalar, then with
+    // the detected level, back to back on the same runner and input.
+    // The committed baseline value of `ratio_fft256_simd_vs_scalar` is
+    // a FLOOR — bench-check regresses the row when the fresh ratio
+    // drops below it — and the `simd_lanes_f32` companion row tells
+    // the gate whether this runner has vector lanes at all (on a
+    // scalar-only machine the ratio is ~1.0 and the gate skips the
+    // row with an explicit note).
+    let detected = simd::active();
+    simd::set_override(Some(simd::Level::Scalar));
+    let scalar_leg = runner.run("fft256_planned_t1_scalar", || {
+        std::hint::black_box(plan.fft2(&x_cplx, 1));
+    });
+    simd::set_override(None);
+    let simd_leg = runner.run("fft256_planned_t1_simd", || {
+        std::hint::black_box(plan.fft2(&x_cplx, 1));
+    });
+    let fft_ratio = scalar_leg.p50_s / simd_leg.p50_s;
+    let lanes = simd::lanes_f32(detected);
+    println!(
+        "simd dispatch {} ({lanes} f32 lanes): scalar p50 {} vs simd p50 {} -> {fft_ratio:.2}x",
+        detected.name(),
+        fmt_time(scalar_leg.p50_s),
+        fmt_time(simd_leg.p50_s),
+    );
+    let ratio_row = BenchResult::point("ratio_fft256_simd_vs_scalar", fft_ratio);
+    let lanes_row = BenchResult::point("simd_lanes_f32", lanes as f64);
+
     // Off powers of two: Bluestein O(n log n) vs the seed's direct
     // O(n²)-per-line fallback (single-shot; the seed path is slow).
     let mut table =
@@ -198,6 +229,28 @@ fn main() {
     }
     table.print();
 
-    let refs: Vec<&BenchResult> = vec![&seed, &plan1, &plan_auto, &rfft_auto];
+    let refs: Vec<&BenchResult> = vec![
+        &seed,
+        &plan1,
+        &plan_auto,
+        &rfft_auto,
+        &scalar_leg,
+        &simd_leg,
+        &ratio_row,
+        &lanes_row,
+    ];
     json::emit(&refs);
+
+    // BENCH_ENFORCE=1 hard-gates the SIMD ratio floor on runners that
+    // actually have vector lanes; a scalar-only runner skips loudly
+    // instead of failing (or silently passing) a vacuous comparison.
+    let enforce = std::env::var("BENCH_ENFORCE")
+        .map(|v| v == "1" || v == "true")
+        .unwrap_or(false);
+    if detected == simd::Level::Scalar {
+        println!("SKIP: scalar-only runner — simd ratio floor not enforced");
+    } else if enforce && fft_ratio < 2.0 {
+        eprintln!("acceptance FAILED: ratio_fft256_simd_vs_scalar {fft_ratio:.2}x (need >= 2x)");
+        std::process::exit(1);
+    }
 }

@@ -277,6 +277,9 @@ pub struct Comparison {
     /// current / baseline (>1 is slower).
     pub ratio: f64,
     pub regressed: bool,
+    /// Annotation explaining non-default gating (ratio floors, runner
+    /// skips); `None` for ordinary latency rows.
+    pub note: Option<String>,
 }
 
 /// Compare `current` against `baseline` on p50 (robust to one slow
@@ -306,6 +309,39 @@ pub fn compare(
         let c = current.get(&name).ok_or_else(|| {
             Error::Config(format!("tracked kernel '{name}' missing from current run"))
         })?;
+        // `ratio_*` rows carry a measured speedup (bigger is better),
+        // not a latency: the committed baseline value is a FLOOR, and
+        // the row regresses when the fresh measurement drops below it.
+        // On a scalar-only runner the SIMD and scalar legs are the same
+        // code, so the floor cannot apply — the companion
+        // `simd_lanes_f32` row (emitted by the same bench run) says
+        // which world we are in, and the row is skipped with an
+        // explicit note, never silently.
+        if name.starts_with("ratio_") {
+            let scalar_only = current
+                .get("simd_lanes_f32")
+                .is_some_and(|r| r.p50_s <= 1.0);
+            let (regressed, note) = if scalar_only {
+                (
+                    false,
+                    "SKIP: scalar-only runner (simd_lanes_f32 <= 1)".to_string(),
+                )
+            } else {
+                (
+                    c.p50_s < b.p50_s,
+                    format!("floor: measured speedup must stay >= {:.2}x", b.p50_s),
+                )
+            };
+            out.push(Comparison {
+                name,
+                baseline_s: b.p50_s,
+                current_s: c.p50_s,
+                ratio: c.p50_s / b.p50_s,
+                regressed,
+                note: Some(note),
+            });
+            continue;
+        }
         if b.p50_s <= 0.0 {
             continue; // unset baseline entry: record-only
         }
@@ -316,6 +352,7 @@ pub fn compare(
             current_s: c.p50_s,
             ratio,
             regressed: ratio > 1.0 + threshold,
+            note: None,
         });
     }
     Ok(out)
@@ -421,6 +458,37 @@ mod tests {
         let cur = base.clone();
         let tracked = vec!["a".to_string(), "ghost".to_string()];
         assert!(compare(&base, &cur, Some(&tracked), 0.25).is_err());
+    }
+
+    #[test]
+    fn ratio_rows_gate_a_floor_not_a_latency() {
+        let mut base = BTreeMap::new();
+        base.insert("ratio_fft256_simd_vs_scalar".to_string(), rec(2.0));
+        base.insert("ratio_gemm_fused_b8_simd_vs_scalar".to_string(), rec(2.0));
+        let mut cur = BTreeMap::new();
+        cur.insert("simd_lanes_f32".to_string(), rec(8.0)); // vector runner
+        cur.insert("ratio_fft256_simd_vs_scalar".to_string(), rec(3.1)); // above floor
+        cur.insert("ratio_gemm_fused_b8_simd_vs_scalar".to_string(), rec(1.4)); // below
+        let cmp = compare(&base, &cur, None, 0.25).unwrap();
+        assert_eq!(cmp.len(), 2);
+        let fft = cmp.iter().find(|c| c.name.contains("fft")).unwrap();
+        let gemm = cmp.iter().find(|c| c.name.contains("gemm")).unwrap();
+        assert!(!fft.regressed, "3.1x is above the 2.0x floor");
+        assert!(gemm.regressed, "1.4x is below the 2.0x floor");
+        assert!(fft.note.as_deref().unwrap().contains("floor"));
+    }
+
+    #[test]
+    fn ratio_rows_skip_with_a_note_on_scalar_only_runners() {
+        let mut base = BTreeMap::new();
+        base.insert("ratio_fft256_simd_vs_scalar".to_string(), rec(2.0));
+        let mut cur = BTreeMap::new();
+        cur.insert("simd_lanes_f32".to_string(), rec(1.0)); // scalar runner
+        cur.insert("ratio_fft256_simd_vs_scalar".to_string(), rec(1.0));
+        let cmp = compare(&base, &cur, None, 0.25).unwrap();
+        assert_eq!(cmp.len(), 1);
+        assert!(!cmp[0].regressed, "1.0x on a scalar runner must not gate");
+        assert!(cmp[0].note.as_deref().unwrap().starts_with("SKIP"));
     }
 
     #[test]

@@ -72,6 +72,13 @@ pub struct Metrics {
     shed: AtomicU64,
     /// requests rewritten to a cheaper tier to meet their deadline
     degraded: AtomicU64,
+    /// requests shed at batch flush: queue-position estimate blew the
+    /// deadline after admission had already accepted them
+    late_shed: AtomicU64,
+    /// requests rewritten to a cheaper tier at batch flush by the same
+    /// re-check; the rewrite is re-checked on its own placement pass,
+    /// so a rewrite that is *still* hopeless also counts a late shed
+    late_degraded: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
     /// cross-lane collective jobs dispatched (one per grouped request)
@@ -342,6 +349,29 @@ impl Metrics {
         self.degraded.load(Ordering::Relaxed)
     }
 
+    /// A request was shed at batch flush: its queue-position completion
+    /// estimate on the chosen lane blew the deadline after admission
+    /// had already accepted it, and no cheaper tier could save it.
+    pub fn record_late_shed(&self) {
+        self.late_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was rewritten to its cheaper explanation tier at batch
+    /// flush because its queue-position estimate blew the deadline.
+    pub fn record_late_degraded(&self) {
+        self.late_degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests shed at batch flush so far.
+    pub fn late_shed(&self) -> u64 {
+        self.late_shed.load(Ordering::Relaxed)
+    }
+
+    /// Requests degraded at batch flush so far.
+    pub fn late_degraded(&self) -> u64 {
+        self.late_degraded.load(Ordering::Relaxed)
+    }
+
     /// A batch of `size` requests began executing.
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
@@ -482,13 +512,16 @@ impl Metrics {
     /// Render a metrics report for all kinds with data.
     pub fn report(&self) -> String {
         let mut out = format!(
-            "requests: submitted={} completed={} failed={} shed={} degraded={} | \
+            "requests: submitted={} completed={} failed={} shed={} degraded={} \
+             late-shed={} late-degraded={} | \
              mean batch={:.2} | collective jobs={} replans={}\n",
             self.submitted(),
             self.completed(),
             self.failed(),
             self.shed(),
             self.degraded(),
+            self.late_shed(),
+            self.late_degraded(),
             self.mean_batch_size(),
             self.collective_jobs(),
             self.replans(),
@@ -689,6 +722,21 @@ mod tests {
         let r = m.report();
         assert!(r.contains("shed=2"), "{r}");
         assert!(r.contains("degraded=1"), "{r}");
+    }
+
+    #[test]
+    fn late_shed_and_late_degraded_counters() {
+        let m = Metrics::new();
+        assert_eq!(m.late_shed(), 0);
+        assert_eq!(m.late_degraded(), 0);
+        m.record_late_shed();
+        m.record_late_degraded();
+        m.record_late_degraded();
+        assert_eq!(m.late_shed(), 1);
+        assert_eq!(m.late_degraded(), 2);
+        let r = m.report();
+        assert!(r.contains("late-shed=1"), "{r}");
+        assert!(r.contains("late-degraded=2"), "{r}");
     }
 
     #[test]

@@ -148,6 +148,14 @@ pub struct CoordinatorStats {
     /// admission to meet their deadline (smoothed saliency → plain
     /// IG heatmap).
     pub degraded: u64,
+    /// Requests shed at batch flush: the queue-position completion
+    /// estimate on the chosen lane blew the deadline *after* admission
+    /// had accepted them (load arrived behind them), and no cheaper
+    /// tier could save them.
+    pub late_shed: u64,
+    /// Requests rewritten to their cheaper tier at batch flush by the
+    /// same queue-position re-check.
+    pub late_degraded: u64,
     /// Mean requests per executed batch (batching efficiency).
     pub mean_batch_size: f64,
     /// Cross-lane collective jobs dispatched (grouped big requests).
@@ -246,10 +254,13 @@ impl Coordinator {
             let hosts = hosts.clone();
             let lane_kinds = lane_kinds.clone();
             let adaptive = config.adaptive_placement;
+            let degrade = config.degrade_under_overload;
             std::thread::Builder::new()
                 .name("xai-batcher".into())
                 .spawn(move || {
-                    batcher_loop(ingress, work, policy, metrics, lane_kinds, hosts, adaptive)
+                    batcher_loop(
+                        ingress, work, policy, metrics, lane_kinds, hosts, adaptive, degrade,
+                    )
                 })
                 .expect("spawn batcher")
         };
@@ -382,6 +393,8 @@ impl Coordinator {
             failed: self.metrics.failed(),
             shed: self.metrics.shed(),
             degraded: self.metrics.degraded(),
+            late_shed: self.metrics.late_shed(),
+            late_degraded: self.metrics.late_degraded(),
             mean_batch_size: self.metrics.mean_batch_size(),
             collective_jobs: self.metrics.collective_jobs(),
             replans: self.metrics.replans(),
@@ -456,7 +469,15 @@ impl Drop for Coordinator {
 
 /// Batcher thread: drain ingress, assemble, flush on size or deadline,
 /// and place each ready batch on the lane the cost model says will
-/// finish it first.
+/// finish it first.  At flush time every deadline is re-checked
+/// against the *queue-position* completion estimate on the chosen
+/// lane — admission priced an empty-queue best case, and load that
+/// arrived behind a request can make its SLO unmeetable by the time
+/// its batch is placed.  Unmeetable envelopes degrade to their
+/// cheaper tier (when `degrade` allows and they haven't already) or
+/// are answered with a synchronous shed error instead of burning lane
+/// time on a reply that will arrive too late.
+#[allow(clippy::too_many_arguments)]
 fn batcher_loop(
     ingress: BoundedQueue<Envelope>,
     work: Vec<BoundedQueue<Batch>>,
@@ -465,6 +486,7 @@ fn batcher_loop(
     lane_kinds: Vec<DeviceKind>,
     hosts: Option<Arc<crate::coordinator::remote::HostRegistry>>,
     adaptive: bool,
+    degrade: bool,
 ) {
     let max_wait = policy.max_wait;
     let mut assembler = BatchAssembler::new(policy);
@@ -480,83 +502,160 @@ fn batcher_loop(
     // Blocking on a full live lane is the backpressure.
     let mut alive: Vec<bool> = vec![true; work.len()];
     let mut place = |batch: Batch| -> std::result::Result<(), ()> {
-        // Multi-host interception first: with a host plane configured,
-        // a single ≥-threshold distillation that prices cheaper on a
-        // cross-host group is serialized over the wire and driven by
-        // the remote plane — the batch never reaches a local lane.
-        let batch = match &hosts {
-            Some(reg) => {
-                match crate::coordinator::remote::try_dispatch(reg, batch, &metrics) {
-                    Some(b) => b,
-                    None => return Ok(()),
+        // The flush-time deadline re-check below can split a degraded
+        // sub-batch (cheaper-tier rewrites are a *different* request
+        // kind) off the batch being placed; a closure cannot recurse,
+        // so the whole placement path runs over an explicit worklist.
+        let mut pending = vec![batch];
+        'next_batch: while let Some(batch) = pending.pop() {
+            // Multi-host interception first: with a host plane
+            // configured, a single ≥-threshold distillation that
+            // prices cheaper on a cross-host group is serialized over
+            // the wire and driven by the remote plane — the batch
+            // never reaches a local lane.
+            let batch = match &hosts {
+                Some(reg) => {
+                    match crate::coordinator::remote::try_dispatch(reg, batch, &metrics) {
+                        Some(b) => b,
+                        None => continue,
+                    }
                 }
-            }
-            None => batch,
-        };
-        // Cross-lane interception: a single ≥-threshold distillation
-        // may be worth a typed collective group over several lanes —
-        // the simulator prices the variants and, when a group wins,
-        // member stages go straight to the group's queues (dead lanes
-        // degrade the group and count a re-plan).  Everything else
-        // comes back for ordinary single-lane placement.
-        let batch = match crate::coordinator::collective::try_dispatch(
-            batch,
-            &lane_kinds,
-            &mut alive,
-            &work,
-            &metrics,
-        ) {
-            Some(b) => b,
-            None => return Ok(()),
-        };
-        let profile = router::batch_profile(&batch);
-        let repeat = router::profile_repeat(batch.kind, batch.envelopes.len()) as f64;
-        let mut batch = batch;
-        loop {
-            let mut backlogs = metrics.device_backlogs();
-            backlogs.resize(work.len(), 0);
-            for (b, &a) in backlogs.iter_mut().zip(&alive) {
-                if !a {
-                    *b = u64::MAX;
-                }
-            }
-            if !alive.iter().any(|&a| a) {
-                return Err(()); // every lane is gone: stop the batcher
-            }
-            // Measured placement: scale each lane's analytic prior by
-            // its median-normalized busy-time correction (all 1.0 when
-            // adaptive placement is off or the fleet is calibrated).
-            let corrections = if adaptive {
-                metrics.device_corrections()
-            } else {
-                Vec::new()
+                None => batch,
             };
-            let d =
-                router::place_affinity_corrected(&lane_kinds, &backlogs, &corrections, &profile);
-            // Price the batch on its chosen lane so the executor can
-            // feed a measured/predicted sample back to the EWMA.
-            batch.predicted_s = router::lane_service_s(lane_kinds[d], &profile) * repeat;
-            metrics.record_device_enqueue(d);
-            match work[d].try_push(batch) {
-                Ok(()) => return Ok(()),
-                Err((b, QueueError::Closed)) => {
-                    metrics.record_device_unenqueue(d);
-                    alive[d] = false;
-                    batch = b;
+            // Cross-lane interception: a single ≥-threshold
+            // distillation may be worth a typed collective group over
+            // several lanes — the simulator prices the variants and,
+            // when a group wins, member stages go straight to the
+            // group's queues (dead lanes degrade the group and count a
+            // re-plan).  Everything else comes back for ordinary
+            // single-lane placement.
+            let batch = match crate::coordinator::collective::try_dispatch(
+                batch,
+                &lane_kinds,
+                &mut alive,
+                &work,
+                &metrics,
+            ) {
+                Some(b) => b,
+                None => continue,
+            };
+            let profile = router::batch_profile(&batch);
+            let mut repeat = router::profile_repeat(batch.kind, batch.envelopes.len()) as f64;
+            let mut batch = batch;
+            let mut rechecked = false;
+            loop {
+                let mut backlogs = metrics.device_backlogs();
+                backlogs.resize(work.len(), 0);
+                for (b, &a) in backlogs.iter_mut().zip(&alive) {
+                    if !a {
+                        *b = u64::MAX;
+                    }
                 }
-                Err((b, QueueError::Full)) => {
-                    return match work[d].push(b) {
-                        Ok(()) => Ok(()),
+                if !alive.iter().any(|&a| a) {
+                    return Err(()); // every lane is gone: stop the batcher
+                }
+                // Measured placement: scale each lane's analytic prior by
+                // its median-normalized busy-time correction (all 1.0 when
+                // adaptive placement is off or the fleet is calibrated).
+                let corrections = if adaptive {
+                    metrics.device_corrections()
+                } else {
+                    Vec::new()
+                };
+                let d = router::place_affinity_corrected(
+                    &lane_kinds,
+                    &backlogs,
+                    &corrections,
+                    &profile,
+                );
+                // Price the batch on its chosen lane so the executor can
+                // feed a measured/predicted sample back to the EWMA.
+                batch.predicted_s = router::lane_service_s(lane_kinds[d], &profile) * repeat;
+                // Queue-position-aware deadline re-check (once per
+                // batch): admission priced the *best-lane, current-
+                // backlog* estimate at submit time; by flush, load that
+                // landed behind a request can have pushed its true
+                // completion past the SLO.  Estimate completion as
+                // (queue position) × (this batch's corrected service
+                // time) on the chosen lane and resolve unmeetable
+                // envelopes now — degrade to the cheaper tier when
+                // allowed, otherwise shed with a synchronous error —
+                // instead of burning lane time on a late reply.
+                if !rechecked {
+                    rechecked = true;
+                    let queued = backlogs[d].saturating_add(1);
+                    let corr = corrections.get(d).copied().unwrap_or(1.0);
+                    let est_s = queued as f64 * batch.predicted_s * corr;
+                    let now = Instant::now();
+                    let unmeetable = |env: &Envelope| {
+                        env.deadline.is_some_and(|dl| {
+                            dl.saturating_duration_since(now).as_secs_f64() < est_s
+                        })
+                    };
+                    if batch.envelopes.iter().any(unmeetable) {
+                        let mut keep = Vec::new();
+                        let mut downgraded: Vec<Envelope> = Vec::new();
+                        for mut env in batch.envelopes.drain(..) {
+                            if !unmeetable(&env) {
+                                keep.push(env);
+                                continue;
+                            }
+                            let cheaper = if degrade && !env.degraded {
+                                env.request.cheaper_tier()
+                            } else {
+                                None
+                            };
+                            match cheaper {
+                                Some(tier) => {
+                                    env.request = tier;
+                                    env.degraded = true;
+                                    metrics.record_late_degraded();
+                                    downgraded.push(env);
+                                }
+                                None => {
+                                    metrics.record_late_shed();
+                                    let _ = env.reply.send(Err(Error::Coordinator(format!(
+                                        "shed at flush: queue-position estimate {:.1}ms \
+                                         blows the deadline",
+                                        est_s * 1e3
+                                    ))));
+                                }
+                            }
+                        }
+                        if let Some(kind) = downgraded.first().map(|e| e.request.kind()) {
+                            pending.push(Batch::new(kind, downgraded));
+                        }
+                        if keep.is_empty() {
+                            continue 'next_batch;
+                        }
+                        batch.envelopes = keep;
+                        // fewer requests may shrink the repeat factor
+                        repeat = router::profile_repeat(batch.kind, batch.envelopes.len()) as f64;
+                        batch.predicted_s =
+                            router::lane_service_s(lane_kinds[d], &profile) * repeat;
+                    }
+                }
+                metrics.record_device_enqueue(d);
+                match work[d].try_push(batch) {
+                    Ok(()) => continue 'next_batch,
+                    Err((b, QueueError::Closed)) => {
+                        metrics.record_device_unenqueue(d);
+                        alive[d] = false;
+                        batch = b;
+                    }
+                    Err((b, QueueError::Full)) => match work[d].push(b) {
+                        Ok(()) => continue 'next_batch,
                         Err(_) => {
                             // closed while we were blocked (shutdown)
                             metrics.record_device_unenqueue(d);
                             alive[d] = false;
-                            Err(())
+                            return Err(());
                         }
-                    };
+                    },
                 }
             }
         }
+        Ok(())
     };
     loop {
         // Wait bounded by the earliest pending deadline.

@@ -170,6 +170,13 @@ fn executor_loop(
     // the readiness channel.
     let backend = match ExecBackend::bring_up(mode, dir, pool) {
         Ok(b) => {
+            let simd = crate::linalg::simd::active();
+            eprintln!(
+                "executor {id} ({kind}-class lane): {} backend up, simd={} ({} f32 lanes)",
+                b.name(),
+                simd.name(),
+                crate::linalg::simd::lanes_f32(simd)
+            );
             let _ = ready.send((id, Ok(())));
             drop(ready);
             b

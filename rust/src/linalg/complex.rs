@@ -3,7 +3,13 @@
 use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
 
 /// Complex number with `f32` parts.
+///
+/// `#[repr(C)]` guarantees the `(re, im)` field order in memory, so a
+/// `&[C32]` is exactly an interleaved contiguous `[re, im, re, im, …]`
+/// f32 buffer — the layout the [`crate::linalg::simd`] kernels load
+/// whole vector registers from (the faer-rs `c64` layout argument).
 #[derive(Copy, Clone, Debug, Default, PartialEq)]
+#[repr(C)]
 pub struct C32 {
     /// Real part.
     pub re: f32,

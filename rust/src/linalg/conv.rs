@@ -8,6 +8,7 @@ use crate::linalg::complex::C32;
 use crate::linalg::fft;
 use crate::linalg::matrix::{CMatrix, Matrix};
 use crate::linalg::shard;
+use crate::linalg::simd;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -108,9 +109,7 @@ pub fn circ_conv2(x: &Matrix, k: &Matrix) -> Matrix {
     let fk = fft::rfft2_sharded(&plan, k, &bands);
     // Unitary transforms: F(x*k) = sqrt(MN) · F_u(x)∘F_u(k)
     let scale = ((m * n) as f32).sqrt();
-    for (a, &b) in fx.data.iter_mut().zip(&fk.data) {
-        *a = (*a * b).scale(scale);
-    }
+    simd::cmul_scale_slice(simd::active(), &mut fx.data, &fk.data, scale);
     fft::process_sharded(&plan, &mut fx, true, &bands);
     fx.real()
 }
@@ -136,10 +135,9 @@ pub fn circ_conv2_batch(xs: &[&Matrix], k: &Matrix) -> Vec<Matrix> {
     let mut fxs = plan.rfft2_batch(xs, threads);
     let fk = cached_kernel_spectrum(k);
     let scale = ((m * n) as f32).sqrt();
+    let level = simd::active();
     for fx in fxs.iter_mut() {
-        for (a, &b) in fx.data.iter_mut().zip(&fk.data) {
-            *a = (*a * b).scale(scale);
-        }
+        simd::cmul_scale_slice(level, &mut fx.data, &fk.data, scale);
     }
     plan.process_batch(&mut fxs, true, threads);
     fxs.into_iter().map(|fx| fx.real()).collect()

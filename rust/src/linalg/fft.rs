@@ -5,11 +5,16 @@
 //! so this module is built around reusable, cached *plans* rather than
 //! ad-hoc per-call recomputation:
 //!
-//! * [`FftPlan`] — per-length state: twiddle tables evaluated in `f64`
-//!   and rounded once to [`C32`] (no multiplicative-recurrence drift),
-//!   a precomputed bit-reversal permutation, and — for non-power-of-two
-//!   lengths — Bluestein chirp tables so every length runs in
-//!   O(n log n) instead of degrading to the direct O(n²) DFT.
+//! * [`FftPlan`] — per-length state: per-stage twiddle *panels*
+//!   evaluated in `f64` and rounded once to [`C32`] (no
+//!   multiplicative-recurrence drift), laid out contiguously per stage
+//!   so the SIMD butterfly kernels ([`crate::linalg::simd`]) stream
+//!   whole vector registers of twiddles; a precomputed bit-reversal
+//!   permutation; and — for non-power-of-two lengths — Bluestein chirp
+//!   tables so every length runs in O(n log n) instead of degrading to
+//!   the direct O(n²) DFT.  The pow2 path opens with a fused radix-4
+//!   kick-off (exact ±i twiddles) and runs every remaining radix-2
+//!   stage through the runtime-dispatched butterfly kernel.
 //! * [`Fft2Plan`] — batched 2-D transform over [`CMatrix`] storage:
 //!   in-place contiguous row passes, strided column passes through a
 //!   reused line buffer (no per-row/per-column heap allocation in the
@@ -34,6 +39,7 @@
 use crate::linalg::complex::C32;
 use crate::linalg::matrix::{CMatrix, Matrix};
 use crate::linalg::shard::{self, Assignment};
+use crate::linalg::simd;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -50,10 +56,17 @@ pub struct FftPlan {
 }
 
 enum PlanKind {
-    /// Iterative radix-2 Cooley-Tukey.  `tw[k] = e^{-2πik/n}` for
-    /// k < n/2 (forward sign; the inverse conjugates on the fly);
-    /// stage `len` reads `tw[k · n/len]`.
-    Pow2 { bitrev: Vec<u32>, tw: Vec<C32> },
+    /// Iterative Cooley-Tukey: a fused radix-4 kick-off (spans 2 and
+    /// 4, exact trivial twiddles) followed by radix-2 stages with
+    /// per-stage twiddle panels.  `stages[s][k] = e^{-2πik/len}` for
+    /// `len = 8 << s`, `k < len/2` (forward sign; the inverse
+    /// conjugates on the fly) — contiguous per stage so the SIMD
+    /// butterfly kernel loads panel vectors directly.  Total panel
+    /// memory is ≈ n complex values, same as the old flat table.
+    Pow2 {
+        bitrev: Vec<u32>,
+        stages: Vec<Vec<C32>>,
+    },
     /// Bluestein chirp-z: any length as three power-of-two FFTs of
     /// length `m = next_pow2(2n − 1)`.  `chirp[k] = e^{-iπk²/n}` and
     /// `fb` is the precomputed forward FFT of the extended conjugate
@@ -78,12 +91,18 @@ impl FftPlan {
                 let odd = if i & 1 == 1 { (n >> 1) as u32 } else { 0 };
                 bitrev[i] = (bitrev[i >> 1] >> 1) | odd;
             }
-            let mut tw = Vec::with_capacity(n / 2);
-            for k in 0..n / 2 {
-                let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
-                tw.push(C32::new(ang.cos() as f32, ang.sin() as f32));
+            let mut stages = Vec::new();
+            let mut len = 8;
+            while len <= n {
+                let mut panel = Vec::with_capacity(len / 2);
+                for k in 0..len / 2 {
+                    let ang = -2.0 * std::f64::consts::PI * k as f64 / len as f64;
+                    panel.push(C32::new(ang.cos() as f32, ang.sin() as f32));
+                }
+                stages.push(panel);
+                len <<= 1;
             }
-            PlanKind::Pow2 { bitrev, tw }
+            PlanKind::Pow2 { bitrev, stages }
         } else {
             let m = bluestein_padded_len(n);
             let inner = Box::new(FftPlan::new(m));
@@ -132,14 +151,32 @@ impl FftPlan {
 
     /// In-place **unnormalized** DFT (sign −1 forward, +1 inverse; the
     /// inverse is *not* divided by n — callers apply their own
-    /// normalization, the unitary wrappers use 1/sqrt(n)).
+    /// normalization, the unitary wrappers use 1/sqrt(n)).  Runs the
+    /// butterflies at the process-wide SIMD level
+    /// ([`crate::linalg::simd::active`]).
     pub fn process(&self, buf: &mut [C32], inverse: bool, scratch: &mut [C32]) {
+        self.process_with_level(buf, inverse, scratch, simd::active());
+    }
+
+    /// [`FftPlan::process`] at an explicit SIMD dispatch level — the
+    /// equivalence suites compare levels call-by-call through this
+    /// without mutating the process-wide table.  Bluestein's inner
+    /// pow2 transforms inherit the same level.
+    pub fn process_with_level(
+        &self,
+        buf: &mut [C32],
+        inverse: bool,
+        scratch: &mut [C32],
+        level: simd::Level,
+    ) {
         assert_eq!(buf.len(), self.n, "buffer length != plan length");
         if self.n <= 1 {
             return;
         }
         match &self.kind {
-            PlanKind::Pow2 { bitrev, tw } => process_pow2(bitrev, tw, buf, inverse),
+            PlanKind::Pow2 { bitrev, stages } => {
+                process_pow2(bitrev, stages, buf, inverse, level)
+            }
             PlanKind::Bluestein {
                 m,
                 chirp,
@@ -162,11 +199,11 @@ impl FftPlan {
                     *dst = x * c;
                 }
                 a[n..].fill(C32::ZERO);
-                inner.process(a, false, &mut []);
+                inner.process_with_level(a, false, &mut [], level);
                 for (z, &b) in a.iter_mut().zip(fb.iter()) {
                     *z = *z * b;
                 }
-                inner.process(a, true, &mut []);
+                inner.process_with_level(a, true, &mut [], level);
                 let inv_m = 1.0 / *m as f32;
                 for ((dst, &src), &c) in buf.iter_mut().zip(a[..n].iter()).zip(chirp.iter()) {
                     let v = (src * c).scale(inv_m);
@@ -209,7 +246,20 @@ fn unitary_scale(buf: &mut [C32], n: usize) {
     }
 }
 
-fn process_pow2(bitrev: &[u32], tw: &[C32], buf: &mut [C32], inverse: bool) {
+/// Pow2 execution: bit-reversal permutation, then a fused radix-4
+/// kick-off (spans 2 and 4 with exact trivial twiddles — the table
+/// entries for those stages were 1 and ≈(6e-17, −1), so the fused
+/// form agrees to ~1e-17 per element), then every remaining radix-2
+/// stage through the runtime-dispatched panel butterfly kernel.
+/// Stage order over the buffer is identical to the historical scalar
+/// loop.
+fn process_pow2(
+    bitrev: &[u32],
+    stages: &[Vec<C32>],
+    buf: &mut [C32],
+    inverse: bool,
+    level: simd::Level,
+) {
     let n = buf.len();
     for (i, &j) in bitrev.iter().enumerate() {
         let j = j as usize;
@@ -217,22 +267,17 @@ fn process_pow2(bitrev: &[u32], tw: &[C32], buf: &mut [C32], inverse: bool) {
             buf.swap(i, j);
         }
     }
-    let mut len = 2;
-    while len <= n {
-        let stride = n / len;
-        let half = len / 2;
-        let mut start = 0;
-        while start < n {
-            for k in 0..half {
-                let t = tw[k * stride];
-                let w = if inverse { t.conj() } else { t };
-                let u = buf[start + k];
-                let v = buf[start + k + half] * w;
-                buf[start + k] = u + v;
-                buf[start + k + half] = u - v;
-            }
-            start += len;
-        }
+    if n == 2 {
+        let (a, b) = (buf[0], buf[1]);
+        buf[0] = a + b;
+        buf[1] = a - b;
+        return;
+    }
+    // n ≥ 4 here (callers handled n ≤ 1; n == 2 above).
+    simd::radix4_kickoff(level, buf, inverse);
+    let mut len = 8;
+    for panel in stages {
+        simd::butterfly_stage(level, buf, len, panel, inverse);
         len <<= 1;
     }
 }

@@ -1,6 +1,7 @@
 //! Row-major dense matrices over `f32` and [`C32`].
 
 use crate::linalg::complex::C32;
+use crate::linalg::simd;
 use crate::util::rng::Rng;
 
 /// Dense row-major `f32` matrix.
@@ -87,24 +88,15 @@ impl Matrix {
         Matrix::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
     }
 
-    /// Naive triple-loop matmul (ikj order for cache locality).
+    /// Matrix product through the runtime-dispatched GEMM kernel
+    /// ([`crate::linalg::simd::gemm_f32`]): a cache-blocked packed-
+    /// panel microkernel at the active SIMD level, or the historical
+    /// ikj triple loop on the scalar fallback.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            for kk in 0..k {
-                let a = self.data[i * k + kk];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        simd::gemm_f32(simd::active(), m, k, n, &self.data, &other.data, &mut out.data);
         out
     }
 
@@ -301,21 +293,13 @@ impl CMatrix {
         )
     }
 
-    /// Complex matrix product.
+    /// Complex matrix product through the runtime-dispatched kernel
+    /// ([`crate::linalg::simd::gemm_c32`]).
     pub fn matmul(&self, other: &CMatrix) -> CMatrix {
         assert_eq!(self.cols, other.rows);
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = CMatrix::zeros(m, n);
-        for i in 0..m {
-            for kk in 0..k {
-                let a = self.data[i * k + kk];
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        simd::gemm_c32(simd::active(), m, k, n, &self.data, &other.data, &mut out.data);
         out
     }
 

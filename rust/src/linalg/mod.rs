@@ -10,6 +10,11 @@
 //! tables, Bluestein off powers of two, threaded batched 2-D
 //! transforms) lives in [`fft`] as the asymptotically-optimal CPU
 //! comparator.
+//!
+//! The inner loops of the hot kernels — GEMM, FFT butterflies, the
+//! convolution spectrum product — are served by the
+//! runtime-dispatched SIMD layer in [`simd`] (AVX2/FMA on x86_64,
+//! NEON on aarch64, portable scalar fallback everywhere).
 
 pub mod block;
 pub mod complex;
@@ -18,5 +23,6 @@ pub mod dft;
 pub mod fft;
 pub mod matrix;
 pub mod shard;
+pub mod simd;
 pub mod solve;
 pub mod vandermonde;

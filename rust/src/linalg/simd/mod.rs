@@ -1,0 +1,530 @@
+//! Runtime-dispatched SIMD kernel layer for the native hot paths.
+//!
+//! Every fused XAI path bottoms out in a handful of inner kernels —
+//! the GEMM under `shapley_batch_fused`'s T·V product, the radix-2/4
+//! butterflies under the planned FFT, and the spectrum Hadamard
+//! product under circulant convolution.  This module gives each of
+//! them three implementations behind one dispatch table:
+//!
+//! | level | ISA | f32 lanes | selected when |
+//! |---|---|---|---|
+//! | [`Level::Scalar`] | portable Rust | 1 | always available; `XAI_SIMD=scalar`; no SIMD ISA detected |
+//! | [`Level::Avx2`] | AVX2 + FMA (`std::arch::x86_64`) | 8 | x86_64 with `avx2` **and** `fma` CPUID bits |
+//! | [`Level::Neon`] | NEON (`std::arch::aarch64`) | 4 | any aarch64 (NEON is baseline) |
+//!
+//! The [`scalar`] kernels are the **single source of truth for
+//! semantics**: the vector paths exist only to compute the same
+//! answer faster, and the unit/property suites pin SIMD ≡ scalar to
+//! ≤ 1e-4 on every kernel.  Dispatch is decided **once per process**
+//! (first call to [`active`]) from the `XAI_SIMD` environment
+//! variable (`scalar` forces the fallback, `auto`/unset detects the
+//! hardware) plus CPUID/target feature detection, and cached in an
+//! atomic so the hot path pays one relaxed load, not a detection.
+//!
+//! Every kernel also takes an explicit [`Level`] parameter, so tests
+//! and benches can compare levels call-by-call without touching the
+//! process-wide table; production entry points pass [`active`].
+//!
+//! Layout: complex kernels operate on interleaved contiguous
+//! `[re, im, re, im, …]` storage — [`crate::linalg::complex::C32`] is
+//! `#[repr(C)]`, so a `&[C32]` *is* such a buffer (the faer-rs `c64`
+//! layout argument; see `docs/ARCHITECTURE.md` §8).  One AVX2 register
+//! holds 4 complex values, one NEON register holds 2, and a
+//! re/im-swap is a single in-register permute.
+
+use crate::linalg::complex::C32;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+/// A SIMD capability level the dispatch table can select.
+///
+/// All variants exist on every target so level-parametric code (tests,
+/// benches, the dispatch table itself) compiles everywhere; a level
+/// that the current target cannot *execute* is simply never returned
+/// by [`active`] and rejected by [`set_override`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Portable scalar Rust — the semantic source of truth.
+    Scalar,
+    /// AVX2 + FMA on x86_64: 8 f32 lanes / 4 complex per register.
+    Avx2,
+    /// NEON on aarch64: 4 f32 lanes / 2 complex per register.
+    Neon,
+}
+
+impl Level {
+    /// Short stable name (used in the worker bring-up log).
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Avx2 => "avx2",
+            Level::Neon => "neon",
+        }
+    }
+}
+
+impl std::fmt::Display for Level {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// f32 lanes per vector register at `level` (1 for scalar).
+pub fn lanes_f32(level: Level) -> usize {
+    match level {
+        Level::Scalar => 1,
+        Level::Avx2 => 8,
+        Level::Neon => 4,
+    }
+}
+
+// Dispatch-table encoding: 0 = undecided, then Level + 1.
+const UNINIT: u8 = 0;
+const SCALAR: u8 = 1;
+const AVX2: u8 = 2;
+const NEON: u8 = 3;
+
+static ACTIVE: AtomicU8 = AtomicU8::new(UNINIT);
+
+fn encode(level: Level) -> u8 {
+    match level {
+        Level::Scalar => SCALAR,
+        Level::Avx2 => AVX2,
+        Level::Neon => NEON,
+    }
+}
+
+fn decode(v: u8) -> Level {
+    match v {
+        AVX2 => Level::Avx2,
+        NEON => Level::Neon,
+        _ => Level::Scalar,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+/// Whether `level` can execute on this machine.
+pub fn supported(level: Level) -> bool {
+    match level {
+        Level::Scalar => true,
+        Level::Avx2 => avx2_available(),
+        Level::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+/// The widest level this machine supports.
+fn hw_detect() -> Level {
+    if avx2_available() {
+        return Level::Avx2;
+    }
+    if cfg!(target_arch = "aarch64") {
+        return Level::Neon;
+    }
+    Level::Scalar
+}
+
+/// Resolve the process-wide level from `XAI_SIMD` + hardware probing.
+fn detect() -> Level {
+    match std::env::var("XAI_SIMD") {
+        Ok(v) if v == "scalar" => Level::Scalar,
+        Ok(v) if v == "auto" || v.is_empty() => hw_detect(),
+        Ok(v) => {
+            eprintln!("XAI_SIMD={v:?} not recognized (expected auto|scalar); auto-detecting");
+            hw_detect()
+        }
+        Err(_) => hw_detect(),
+    }
+}
+
+/// The process-wide dispatch level.  Decided on first call — from
+/// `XAI_SIMD` and hardware detection — then cached; every later call
+/// is one relaxed atomic load.  Production kernel entry points pass
+/// this to the level-parametric kernels below.
+pub fn active() -> Level {
+    match ACTIVE.load(Ordering::Relaxed) {
+        UNINIT => {
+            // Benign race: detect() is deterministic, so concurrent
+            // first callers store the same value.
+            let l = detect();
+            ACTIVE.store(encode(l), Ordering::Relaxed);
+            l
+        }
+        v => decode(v),
+    }
+}
+
+/// Bench/test hook: pin the process-wide level (`Some`, must be
+/// [`supported`]) or restore env + hardware detection (`None`).
+///
+/// This mutates global state — test suites must NOT call it (tests run
+/// concurrently; they pass explicit [`Level`]s to kernels instead).
+/// The bench binaries use it to time SIMD-vs-scalar back-to-back on
+/// one runner, and they are single-threaded at the timing point.
+pub fn set_override(level: Option<Level>) {
+    match level {
+        Some(l) => {
+            assert!(
+                supported(l),
+                "XAI_SIMD override {l} is not executable on this machine"
+            );
+            ACTIVE.store(encode(l), Ordering::Relaxed);
+        }
+        None => ACTIVE.store(UNINIT, Ordering::Relaxed),
+    }
+}
+
+/// f32 GEMM: `out += a · b` with `a` m×k, `b` k×n, `out` m×n, all
+/// row-major.  The caller supplies a zeroed (or accumulating) `out`.
+///
+/// Scalar level preserves the historical `Matrix::matmul` semantics
+/// exactly (ikj order, zero-skip); the vector levels are cache-blocked
+/// packed-panel microkernels whose per-element accumulation order over
+/// k matches the scalar loop, so differences are FMA contraction only.
+pub fn gemm_f32(level: Level, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm_f32: a shape mismatch");
+    assert_eq!(b.len(), k * n, "gemm_f32: b shape mismatch");
+    assert_eq!(out.len(), m * n, "gemm_f32: out shape mismatch");
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by active()/set_override,
+        // both of which verified the avx2+fma CPUID bits via
+        // supported(); slice lengths were asserted above.
+        Level::Avx2 => unsafe { x86::gemm_f32(m, k, n, a, b, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 (supported() verified);
+        // slice lengths were asserted above.
+        Level::Neon => unsafe { neon::gemm_f32(m, k, n, a, b, out) },
+        _ => scalar::gemm_f32(m, k, n, a, b, out),
+    }
+}
+
+/// Complex GEMM: `out += a · b` over interleaved [`C32`] storage,
+/// shapes as in [`gemm_f32`].
+pub fn gemm_c32(level: Level, m: usize, k: usize, n: usize, a: &[C32], b: &[C32], out: &mut [C32]) {
+    assert_eq!(a.len(), m * k, "gemm_c32: a shape mismatch");
+    assert_eq!(b.len(), k * n, "gemm_c32: b shape mismatch");
+    assert_eq!(out.len(), m * n, "gemm_c32: out shape mismatch");
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 implies avx2+fma were detected (see
+        // gemm_f32); lengths asserted above; C32 is #[repr(C)] so the
+        // buffers are valid interleaved f32 pairs.
+        Level::Avx2 => unsafe { x86::gemm_c32(m, k, n, a, b, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; lengths asserted above.
+        Level::Neon => unsafe { neon::gemm_c32(m, k, n, a, b, out) },
+        _ => scalar::gemm_c32(m, k, n, a, b, out),
+    }
+}
+
+/// One radix-2 butterfly stage of span `len` over the whole length-n
+/// interleaved buffer: for every block of `len` and every
+/// `k < len/2`, with `w = panel[k]` and `t = w · buf[j + k + len/2]`,
+/// writes `buf[j+k] = u + t`, `buf[j+k+len/2] = u − t` (conjugated
+/// twiddles when `inverse`).  `panel` holds the stage's `len/2`
+/// forward twiddles `e^{-2πik/len}`.
+pub fn butterfly_stage(level: Level, buf: &mut [C32], len: usize, panel: &[C32], inverse: bool) {
+    debug_assert!(len.is_power_of_two() && len >= 2);
+    debug_assert_eq!(buf.len() % len, 0);
+    debug_assert_eq!(panel.len(), len / 2);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 implies avx2+fma were detected; the
+        // kernel only reads/writes in-bounds of `buf`/`panel` given
+        // the length relations debug-asserted above, which hold for
+        // every call site (the planned-FFT stage loop).
+        Level::Avx2 => unsafe { x86::butterfly_stage(buf, len, panel, inverse) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; bounds as above.
+        Level::Neon => unsafe { neon::butterfly_stage(buf, len, panel, inverse) },
+        _ => scalar::butterfly_stage(buf, len, panel, inverse),
+    }
+}
+
+/// Fused radix-4 kick-off: the first two butterfly stages (spans 2 and
+/// 4) over a bit-reversed buffer, using the *exact* trivial twiddles
+/// (1 and ∓i) instead of table entries.  Requires `buf.len() % 4 == 0`
+/// and `buf.len() ≥ 4`.
+pub fn radix4_kickoff(level: Level, buf: &mut [C32], inverse: bool) {
+    debug_assert!(buf.len() >= 4 && buf.len() % 4 == 0);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 implies avx2+fma were detected; the
+        // kernel processes exact 4-complex blocks of `buf`, whose
+        // length is a multiple of 4 (debug-asserted, guaranteed by
+        // the pow2 FFT caller).
+        Level::Avx2 => unsafe { x86::radix4_kickoff(buf, inverse) },
+        _ => scalar::radix4_kickoff(buf, inverse),
+    }
+}
+
+/// Element-wise complex product with a real scale:
+/// `acc[i] = (acc[i] · other[i]) · scale` — the spectrum Hadamard
+/// product under circulant convolution.
+pub fn cmul_scale_slice(level: Level, acc: &mut [C32], other: &[C32], scale: f32) {
+    assert_eq!(acc.len(), other.len(), "cmul_scale_slice length mismatch");
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 implies avx2+fma were detected; equal
+        // lengths asserted above; C32 is #[repr(C)] interleaved.
+        Level::Avx2 => unsafe { x86::cmul_scale_slice(acc, other, scale) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; lengths asserted above.
+        Level::Neon => unsafe { neon::cmul_scale_slice(acc, other, scale) },
+        _ => scalar::cmul_scale_slice(acc, other, scale),
+    }
+}
+
+/// Every level executable on this machine, scalar first — what the
+/// equivalence suites iterate over.
+pub fn available_levels() -> Vec<Level> {
+    let mut out = vec![Level::Scalar];
+    if supported(Level::Avx2) {
+        out.push(Level::Avx2);
+    }
+    if supported(Level::Neon) {
+        out.push(Level::Neon);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+
+    // Odd/remainder shapes straddling every microkernel edge case:
+    // sub-register, exact-tile, remainder rows, remainder cols, tall,
+    // wide, and the fused b ∈ {1, 8} batch shapes.
+    const SHAPES: [(usize, usize, usize); 9] = [
+        (1, 1, 1),
+        (3, 7, 5),
+        (17, 33, 9),
+        (4, 8, 8),
+        (5, 9, 17),
+        (64, 3, 2),
+        (2, 3, 64),
+        (1, 12, 13),
+        (8, 12, 13),
+    ];
+
+    #[test]
+    fn gemm_f32_all_levels_match_naive_oracle() {
+        let mut rng = Rng::new(42);
+        for &(m, k, n) in &SHAPES {
+            let a: Vec<f32> = rng.gauss_vec(m * k);
+            let b: Vec<f32> = rng.gauss_vec(k * n);
+            let oracle = naive_gemm(m, k, n, &a, &b);
+            for level in available_levels() {
+                let mut out = vec![0.0f32; m * n];
+                gemm_f32(level, m, k, n, &a, &b, &mut out);
+                assert!(
+                    max_diff(&out, &oracle) < 1e-4,
+                    "gemm_f32 {level} diverged at {m}x{k}x{n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_f32_scalar_keeps_zero_skip_semantics() {
+        // A zero row in `a` must leave `out` untouched (historical
+        // Matrix::matmul semantics the scalar level preserves).
+        let a = vec![0.0f32; 6];
+        let b = vec![1.0f32; 9];
+        let mut out = vec![7.0f32; 6];
+        gemm_f32(Level::Scalar, 2, 3, 3, &a, &b, &mut out);
+        assert_eq!(out, vec![7.0f32; 6]);
+    }
+
+    #[test]
+    fn gemm_c32_all_levels_match_naive_oracle() {
+        let mut rng = Rng::new(43);
+        for &(m, k, n) in &SHAPES {
+            let a: Vec<C32> = (0..m * k)
+                .map(|_| C32::new(rng.gauss_f32(), rng.gauss_f32()))
+                .collect();
+            let b: Vec<C32> = (0..k * n)
+                .map(|_| C32::new(rng.gauss_f32(), rng.gauss_f32()))
+                .collect();
+            let mut oracle = vec![C32::ZERO; m * n];
+            scalar::gemm_c32(m, k, n, &a, &b, &mut oracle);
+            for level in available_levels() {
+                let mut out = vec![C32::ZERO; m * n];
+                gemm_c32(level, m, k, n, &a, &b, &mut out);
+                let d = out
+                    .iter()
+                    .zip(&oracle)
+                    .map(|(&x, &y)| (x - y).abs())
+                    .fold(0.0, f32::max);
+                assert!(d < 1e-4, "gemm_c32 {level} diverged at {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn butterfly_stage_levels_agree() {
+        let mut rng = Rng::new(44);
+        for n in [8usize, 16, 64, 256] {
+            for len in [8usize, 16].iter().copied().filter(|&l| l <= n) {
+                let panel: Vec<C32> = (0..len / 2)
+                    .map(|k| {
+                        let ang = -2.0 * std::f64::consts::PI * k as f64 / len as f64;
+                        C32::new(ang.cos() as f32, ang.sin() as f32)
+                    })
+                    .collect();
+                for inverse in [false, true] {
+                    let base: Vec<C32> = (0..n)
+                        .map(|_| C32::new(rng.gauss_f32(), rng.gauss_f32()))
+                        .collect();
+                    let mut want = base.clone();
+                    scalar::butterfly_stage(&mut want, len, &panel, inverse);
+                    for level in available_levels() {
+                        let mut got = base.clone();
+                        butterfly_stage(level, &mut got, len, &panel, inverse);
+                        let d = got
+                            .iter()
+                            .zip(&want)
+                            .map(|(&x, &y)| (x - y).abs())
+                            .fold(0.0, f32::max);
+                        assert!(
+                            d < 1e-4,
+                            "butterfly_stage {level} diverged (n={n} len={len} inv={inverse})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn radix4_kickoff_levels_agree() {
+        let mut rng = Rng::new(45);
+        for n in [4usize, 8, 32, 128] {
+            for inverse in [false, true] {
+                let base: Vec<C32> = (0..n)
+                    .map(|_| C32::new(rng.gauss_f32(), rng.gauss_f32()))
+                    .collect();
+                let mut want = base.clone();
+                scalar::radix4_kickoff(&mut want, inverse);
+                for level in available_levels() {
+                    let mut got = base.clone();
+                    radix4_kickoff(level, &mut got, inverse);
+                    let d = got
+                        .iter()
+                        .zip(&want)
+                        .map(|(&x, &y)| (x - y).abs())
+                        .fold(0.0, f32::max);
+                    assert!(d < 1e-4, "radix4_kickoff {level} diverged (n={n})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn radix4_kickoff_matches_two_table_stages() {
+        // The kick-off must equal the two radix-2 stages it fuses,
+        // run with table twiddles — the pre-SIMD execution order.
+        let mut rng = Rng::new(46);
+        let n = 64;
+        let base: Vec<C32> = (0..n)
+            .map(|_| C32::new(rng.gauss_f32(), rng.gauss_f32()))
+            .collect();
+        for inverse in [false, true] {
+            let mut want = base.clone();
+            for len in [2usize, 4] {
+                let panel: Vec<C32> = (0..len / 2)
+                    .map(|k| {
+                        let ang = -2.0 * std::f64::consts::PI * k as f64 / len as f64;
+                        C32::new(ang.cos() as f32, ang.sin() as f32)
+                    })
+                    .collect();
+                scalar::butterfly_stage(&mut want, len, &panel, inverse);
+            }
+            let mut got = base.clone();
+            scalar::radix4_kickoff(&mut got, inverse);
+            let d = got
+                .iter()
+                .zip(&want)
+                .map(|(&x, &y)| (x - y).abs())
+                .fold(0.0, f32::max);
+            assert!(d < 1e-5, "kickoff != fused table stages (inv={inverse})");
+        }
+    }
+
+    #[test]
+    fn cmul_scale_slice_levels_agree() {
+        let mut rng = Rng::new(47);
+        for n in [1usize, 3, 4, 7, 64, 100] {
+            let base: Vec<C32> = (0..n)
+                .map(|_| C32::new(rng.gauss_f32(), rng.gauss_f32()))
+                .collect();
+            let other: Vec<C32> = (0..n)
+                .map(|_| C32::new(rng.gauss_f32(), rng.gauss_f32()))
+                .collect();
+            let mut want = base.clone();
+            scalar::cmul_scale_slice(&mut want, &other, 0.37);
+            for level in available_levels() {
+                let mut got = base.clone();
+                cmul_scale_slice(level, &mut got, &other, 0.37);
+                let d = got
+                    .iter()
+                    .zip(&want)
+                    .map(|(&x, &y)| (x - y).abs())
+                    .fold(0.0, f32::max);
+                assert!(d < 1e-4, "cmul_scale_slice {level} diverged (n={n})");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_match_levels() {
+        assert_eq!(lanes_f32(Level::Scalar), 1);
+        assert_eq!(lanes_f32(Level::Avx2), 8);
+        assert_eq!(lanes_f32(Level::Neon), 4);
+    }
+
+    #[test]
+    fn scalar_is_always_supported_and_active_is_executable() {
+        assert!(supported(Level::Scalar));
+        assert!(supported(active()));
+        assert!(available_levels().contains(&active()) || active() == Level::Scalar);
+    }
+}

@@ -1,0 +1,196 @@
+//! NEON kernels (aarch64).
+//!
+//! NEON is baseline on aarch64, so these are unconditionally
+//! executable there; the functions are still `unsafe` and
+//! `#[target_feature(enable = "neon")]` to keep the calling contract
+//! identical to the AVX2 level (the dispatch table is the only
+//! caller).  A `float32x4_t` holds 4 f32 lanes = 2 interleaved
+//! complex values; the re/im swap inside each complex is a single
+//! `vrev64q_f32`, and sign-flips are XORs on the bit pattern.
+//!
+//! [`radix4_kickoff`] has no NEON specialization (a whole radix-4
+//! block spans two registers and the shuffles dominate at 128-bit
+//! width); the dispatch table routes it to the scalar kernel, which
+//! is the semantic source of truth anyway.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use crate::linalg::complex::C32;
+use std::arch::aarch64::*;
+
+/// View a `C32` slice as its interleaved f32 storage.
+fn as_f32(buf: &[C32]) -> &[f32] {
+    // SAFETY: C32 is #[repr(C)] { re: f32, im: f32 } — a [C32] of
+    // length n is exactly 2n contiguous aligned f32s, no padding.
+    unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const f32, buf.len() * 2) }
+}
+
+/// Mutable interleaved f32 view of a `C32` slice.
+fn as_f32_mut(buf: &mut [C32]) -> &mut [f32] {
+    // SAFETY: as for `as_f32`; the &mut borrow is exclusive.
+    unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut f32, buf.len() * 2) }
+}
+
+/// `out += a · b`: 4-wide FMA over B rows with broadcast A scalars,
+/// scalar tail for `n % 4` columns.
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64).  Slice shape relations
+/// (`a.len() == m·k` etc.) are asserted by the dispatch wrapper and
+/// bound every index below.
+#[target_feature(enable = "neon")]
+pub unsafe fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    let quads = n / 4 * 4;
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j < quads {
+                let bv = vld1q_f32(brow.as_ptr().add(j));
+                let ov = vld1q_f32(orow.as_ptr().add(j));
+                vst1q_f32(orow.as_mut_ptr().add(j), vfmaq_n_f32(ov, bv, av));
+                j += 4;
+            }
+            for j in quads..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Complex `out += a · b` over interleaved storage: per (i, k) the A
+/// scalar is broadcast and multiplied against 2-complex B vectors.
+///
+/// # Safety
+/// Requires NEON; shape relations asserted by the dispatch wrapper.
+#[target_feature(enable = "neon")]
+pub unsafe fn gemm_c32(m: usize, k: usize, n: usize, a: &[C32], b: &[C32], out: &mut [C32]) {
+    let pairs = n / 2 * 2;
+    let bf = as_f32(b);
+    let of = as_f32_mut(out);
+    // sign mask negating the even (re) lanes: the −ai·bi term
+    let neg_even = vld1q_u32([0x8000_0000u32, 0, 0x8000_0000, 0].as_ptr());
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            let mut j = 0;
+            while j < pairs {
+                let vb = vld1q_f32(bf.as_ptr().add((kk * n + j) * 2));
+                let vo = vld1q_f32(of.as_ptr().add((i * n + j) * 2));
+                // [bi, br, …] for the cross terms
+                let vb_swap = vrev64q_f32(vb);
+                // even: ar·br − ai·bi ; odd: ar·bi + ai·br
+                let cross = veorq_u32(
+                    vreinterpretq_u32_f32(vmulq_n_f32(vb_swap, av.im)),
+                    neg_even,
+                );
+                let t = vfmaq_n_f32(vreinterpretq_f32_u32(cross), vb, av.re);
+                vst1q_f32(of.as_mut_ptr().add((i * n + j) * 2), vaddq_f32(vo, t));
+                j += 2;
+            }
+            if j < n {
+                // odd trailing column: scalar complex FMA on the view
+                let bi = (kk * n + j) * 2;
+                let oi = (i * n + j) * 2;
+                let (br, bim) = (bf[bi], bf[bi + 1]);
+                of[oi] += av.re * br - av.im * bim;
+                of[oi + 1] += av.re * bim + av.im * br;
+            }
+        }
+    }
+}
+
+/// One radix-2 butterfly stage (span `len`) with 2 butterflies per
+/// iteration; delegates to the scalar stage when `len/2 < 2`.
+///
+/// # Safety
+/// Requires NEON.  `buf.len() % len == 0` and `panel.len() == len/2`
+/// (debug-asserted by the dispatch wrapper) bound every index.
+#[target_feature(enable = "neon")]
+pub unsafe fn butterfly_stage(buf: &mut [C32], len: usize, panel: &[C32], inverse: bool) {
+    let half = len / 2;
+    if half < 2 {
+        return super::scalar::butterfly_stage(buf, len, panel, inverse);
+    }
+    // flip the odd (im) lanes of w for the inverse conjugation
+    let conj_mask = if inverse {
+        vld1q_u32([0u32, 0x8000_0000, 0, 0x8000_0000].as_ptr())
+    } else {
+        vdupq_n_u32(0)
+    };
+    let neg_even = vld1q_u32([0x8000_0000u32, 0, 0x8000_0000, 0].as_ptr());
+    let n = buf.len();
+    let bf = as_f32_mut(buf);
+    let pf = as_f32(panel);
+    let mut j = 0;
+    while j < n {
+        let mut kq = 0;
+        // 2 butterflies (one q-register of complex) per step; half is
+        // a power of two ≥ 2, so there is no remainder.
+        while kq < half {
+            let ui = (j + kq) * 2;
+            let vi = (j + kq + half) * 2;
+            let u = vld1q_f32(bf.as_ptr().add(ui));
+            let v = vld1q_f32(bf.as_ptr().add(vi));
+            let w = vreinterpretq_f32_u32(veorq_u32(
+                vreinterpretq_u32_f32(vld1q_f32(pf.as_ptr().add(kq * 2))),
+                conj_mask,
+            ));
+            // w_re = [wr, wr, …], w_im = [wi, wi, …]: trn with itself
+            // duplicates the even / odd lanes
+            let w_re = vtrn1q_f32(w, w);
+            let w_im = vtrn2q_f32(w, w);
+            let v_swap = vrev64q_f32(v);
+            // t = v·w: even vr·wr − vi·wi, odd vi·wr + vr·wi
+            let cross = vreinterpretq_f32_u32(veorq_u32(
+                vreinterpretq_u32_f32(vmulq_f32(v_swap, w_im)),
+                neg_even,
+            ));
+            let t = vfmaq_f32(cross, v, w_re);
+            vst1q_f32(bf.as_mut_ptr().add(ui), vaddq_f32(u, t));
+            vst1q_f32(bf.as_mut_ptr().add(vi), vsubq_f32(u, t));
+            kq += 2;
+        }
+        j += len;
+    }
+}
+
+/// `acc[i] = (acc[i] · other[i]) · scale`, 2 complex per iteration
+/// with a scalar tail.
+///
+/// # Safety
+/// Requires NEON; `acc.len() == other.len()` (asserted by the
+/// dispatch wrapper) bounds all indices.
+#[target_feature(enable = "neon")]
+pub unsafe fn cmul_scale_slice(acc: &mut [C32], other: &[C32], scale: f32) {
+    let n = acc.len();
+    let pairs = n / 2 * 2;
+    let neg_even = vld1q_u32([0x8000_0000u32, 0, 0x8000_0000, 0].as_ptr());
+    {
+        let af = as_f32_mut(acc);
+        let of = as_f32(other);
+        let mut i = 0;
+        while i < pairs {
+            let va = vld1q_f32(af.as_ptr().add(i * 2));
+            let vb = vld1q_f32(of.as_ptr().add(i * 2));
+            let vb_re = vtrn1q_f32(vb, vb);
+            let vb_im = vtrn2q_f32(vb, vb);
+            let va_swap = vrev64q_f32(va);
+            let cross = vreinterpretq_f32_u32(veorq_u32(
+                vreinterpretq_u32_f32(vmulq_f32(va_swap, vb_im)),
+                neg_even,
+            ));
+            let prod = vfmaq_f32(cross, va, vb_re);
+            vst1q_f32(af.as_mut_ptr().add(i * 2), vmulq_n_f32(prod, scale));
+            i += 2;
+        }
+    }
+    for i in pairs..n {
+        acc[i] = (acc[i] * other[i]).scale(scale);
+    }
+}

@@ -1,0 +1,100 @@
+//! Portable scalar kernels — the semantic source of truth every
+//! vector level is pinned against (≤ 1e-4) by the equivalence suites.
+//!
+//! These are the historical hot loops, moved verbatim behind the
+//! dispatch table: [`gemm_f32`] is the ikj triple loop (with its
+//! zero-skip) that used to live in `Matrix::matmul`, [`gemm_c32`] the
+//! `CMatrix` product, and [`butterfly_stage`] the radix-2 stage body
+//! of the planned pow2 FFT.  [`radix4_kickoff`] fuses the first two
+//! butterfly stages with *exact* trivial twiddles (1 and ∓i) — the
+//! table entries for those stages are 1 and `(≈6e-17, −1)`, so the
+//! fused form differs from the historical pass by ~1e-17 per element,
+//! far inside every suite tolerance, and both the scalar and vector
+//! levels share this exact-twiddle semantic.
+
+use crate::linalg::complex::C32;
+
+/// `out += a · b` (row-major, `a` m×k, `b` k×n, `out` m×n): the
+/// historical ikj loop, zero-skip included.
+pub fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Complex `out += a · b` (row-major): the historical `CMatrix` loop.
+pub fn gemm_c32(m: usize, k: usize, n: usize, a: &[C32], b: &[C32], out: &mut [C32]) {
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// One radix-2 butterfly stage of span `len` over the whole buffer
+/// (see [`crate::linalg::simd::butterfly_stage`] for the contract).
+pub fn butterfly_stage(buf: &mut [C32], len: usize, panel: &[C32], inverse: bool) {
+    let half = len / 2;
+    let mut j = 0;
+    while j < buf.len() {
+        for k in 0..half {
+            let w = if inverse { panel[k].conj() } else { panel[k] };
+            let u = buf[j + k];
+            let t = w * buf[j + k + half];
+            buf[j + k] = u + t;
+            buf[j + k + half] = u - t;
+        }
+        j += len;
+    }
+}
+
+/// Fused spans-2-and-4 butterflies over a bit-reversed buffer with
+/// exact trivial twiddles.  For each 4-complex block `[a, b, c, d]`:
+/// span 2 gives `t = [a+b, a−b, c+d, c−d]`, span 4 combines
+/// `t0 ± t2` (twiddle 1) and `t1 ± w·t3` with `w = −i` forward /
+/// `+i` inverse.
+pub fn radix4_kickoff(buf: &mut [C32], inverse: bool) {
+    let mut j = 0;
+    while j + 4 <= buf.len() {
+        let (a, b, c, d) = (buf[j], buf[j + 1], buf[j + 2], buf[j + 3]);
+        let t0 = a + b;
+        let t1 = a - b;
+        let t2 = c + d;
+        let t3 = c - d;
+        // w·t3 with w = ∓i, exactly: forward (−i)·(re,im) = (im,−re),
+        // inverse (+i)·(re,im) = (−im,re).
+        let wt3 = if inverse {
+            C32::new(-t3.im, t3.re)
+        } else {
+            C32::new(t3.im, -t3.re)
+        };
+        buf[j] = t0 + t2;
+        buf[j + 1] = t1 + wt3;
+        buf[j + 2] = t0 - t2;
+        buf[j + 3] = t1 - wt3;
+        j += 4;
+    }
+}
+
+/// `acc[i] = (acc[i] · other[i]) · scale` — the historical spectrum
+/// Hadamard loop of circulant convolution.
+pub fn cmul_scale_slice(acc: &mut [C32], other: &[C32], scale: f32) {
+    for (a, &b) in acc.iter_mut().zip(other) {
+        *a = (*a * b).scale(scale);
+    }
+}

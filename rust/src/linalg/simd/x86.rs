@@ -1,0 +1,350 @@
+//! AVX2 + FMA kernels (x86_64).
+//!
+//! Every function here is `#[target_feature(enable = "avx2,fma")]`
+//! and therefore `unsafe` to call: the caller must have verified the
+//! `avx2` and `fma` CPUID bits (the dispatch table in
+//! [`crate::linalg::simd`] does, via `is_x86_feature_detected!`).
+//! Inside the bodies, all memory access goes through *unaligned*
+//! loads/stores (`_mm256_loadu_ps` / `_mm256_storeu_ps`) on indices
+//! the surrounding safe Rust bounds-derives from slice lengths, so no
+//! alignment obligation exists and no out-of-bounds index can form.
+//!
+//! Complex arithmetic on interleaved `[re, im, …]` storage uses the
+//! classic three-instruction product: with `v = [vr, vi, …]` and
+//! `w = [wr, wi, …]`,
+//!
+//! ```text
+//! w_re   = moveldup(w)        // [wr, wr, …]
+//! w_im   = movehdup(w)        // [wi, wi, …]
+//! v_swap = permute(v, 0xB1)   // [vi, vr, …]
+//! v·w    = fmaddsub(v, w_re, v_swap · w_im)
+//!        = [vr·wr − vi·wi, vi·wr + vr·wi, …]
+//! ```
+//!
+//! and conjugating `w` is one sign-flip of `w_im` (XOR with −0.0).
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use crate::linalg::complex::C32;
+use std::arch::x86_64::*;
+
+/// GEMM blocking parameters: MR×NR register tile, KC-deep packed
+/// panels of B.  MR=4 rows × NR=8 f32 columns uses 4 accumulator
+/// YMM registers plus 2 operand registers — comfortably inside the
+/// 16-register budget; KC=256 keeps a packed panel (KC·NR·4 B = 8 KiB)
+/// resident in L1.
+const MR: usize = 4;
+const NR: usize = 8;
+const KC: usize = 256;
+
+/// View a `C32` slice as its interleaved f32 storage.
+///
+/// SAFETY (of the transmute-like view): `C32` is `#[repr(C)] { re:
+/// f32, im: f32 }`, so a `[C32]` of length `n` is exactly `2n`
+/// contiguous, properly aligned `f32`s with no padding.
+fn as_f32(buf: &[C32]) -> &[f32] {
+    // SAFETY: see function doc — layout guaranteed by #[repr(C)].
+    unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const f32, buf.len() * 2) }
+}
+
+/// Mutable interleaved f32 view of a `C32` slice.
+fn as_f32_mut(buf: &mut [C32]) -> &mut [f32] {
+    // SAFETY: as for `as_f32`; the &mut borrow is exclusive, so no
+    // aliasing view coexists.
+    unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut f32, buf.len() * 2) }
+}
+
+/// `out += a · b`, cache-blocked with a packed-B 4×8 FMA microkernel.
+///
+/// # Safety
+/// Requires the `avx2` and `fma` target features.  Slice lengths must
+/// satisfy `a.len() == m·k`, `b.len() == k·n`, `out.len() == m·n`
+/// (the dispatch wrapper asserts them); all loads/stores are
+/// unaligned and in-bounds by construction of the loop indices.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn gemm_f32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    let mut packed = vec![0.0f32; KC * NR];
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = KC.min(k - k0);
+        let mut j0 = 0;
+        // Full NR-wide column panels.
+        while j0 + NR <= n {
+            // Pack B[k0..k0+kc, j0..j0+NR] row-contiguously so the
+            // microkernel streams one unaligned load per k step.
+            for kk in 0..kc {
+                let src = (k0 + kk) * n + j0;
+                packed[kk * NR..kk * NR + NR].copy_from_slice(&b[src..src + NR]);
+            }
+            let mut i0 = 0;
+            while i0 + MR <= m {
+                kernel_4x8(i0, k0, kc, k, n, a, &packed, out, j0);
+                i0 += MR;
+            }
+            // Remainder rows: 1×8 vector kernel.
+            for i in i0..m {
+                let mut acc = _mm256_loadu_ps(out.as_ptr().add(i * n + j0));
+                for kk in 0..kc {
+                    let av = _mm256_broadcast_ss(&a[i * k + k0 + kk]);
+                    let bv = _mm256_loadu_ps(packed.as_ptr().add(kk * NR));
+                    acc = _mm256_fmadd_ps(av, bv, acc);
+                }
+                _mm256_storeu_ps(out.as_mut_ptr().add(i * n + j0), acc);
+            }
+            j0 += NR;
+        }
+        // Remainder columns: scalar edge handling.
+        if j0 < n {
+            for i in 0..m {
+                for kk in 0..kc {
+                    let av = a[i * k + k0 + kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[(k0 + kk) * n..(k0 + kk) * n + n];
+                    let orow = &mut out[i * n..i * n + n];
+                    for j in j0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+        k0 += kc;
+    }
+}
+
+/// The register-tiled 4×8 inner kernel: accumulates
+/// `out[i0..i0+4, j0..j0+8] += A[i0..i0+4, k0..k0+kc] · packedB`.
+///
+/// # Safety
+/// Requires `avx2`+`fma`; callers guarantee `i0+4 ≤ m`, `j0+8 ≤ n`,
+/// `k0+kc ≤ k`, and `packed` holding `kc` rows of `NR` floats.
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn kernel_4x8(
+    i0: usize,
+    k0: usize,
+    kc: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    packed: &[f32],
+    out: &mut [f32],
+    j0: usize,
+) {
+    let mut acc0 = _mm256_loadu_ps(out.as_ptr().add(i0 * n + j0));
+    let mut acc1 = _mm256_loadu_ps(out.as_ptr().add((i0 + 1) * n + j0));
+    let mut acc2 = _mm256_loadu_ps(out.as_ptr().add((i0 + 2) * n + j0));
+    let mut acc3 = _mm256_loadu_ps(out.as_ptr().add((i0 + 3) * n + j0));
+    for kk in 0..kc {
+        let bv = _mm256_loadu_ps(packed.as_ptr().add(kk * NR));
+        let a0 = _mm256_broadcast_ss(&a[i0 * k + k0 + kk]);
+        let a1 = _mm256_broadcast_ss(&a[(i0 + 1) * k + k0 + kk]);
+        let a2 = _mm256_broadcast_ss(&a[(i0 + 2) * k + k0 + kk]);
+        let a3 = _mm256_broadcast_ss(&a[(i0 + 3) * k + k0 + kk]);
+        acc0 = _mm256_fmadd_ps(a0, bv, acc0);
+        acc1 = _mm256_fmadd_ps(a1, bv, acc1);
+        acc2 = _mm256_fmadd_ps(a2, bv, acc2);
+        acc3 = _mm256_fmadd_ps(a3, bv, acc3);
+    }
+    _mm256_storeu_ps(out.as_mut_ptr().add(i0 * n + j0), acc0);
+    _mm256_storeu_ps(out.as_mut_ptr().add((i0 + 1) * n + j0), acc1);
+    _mm256_storeu_ps(out.as_mut_ptr().add((i0 + 2) * n + j0), acc2);
+    _mm256_storeu_ps(out.as_mut_ptr().add((i0 + 3) * n + j0), acc3);
+}
+
+/// Complex `out += a · b` over interleaved storage: 4×(4 complex)
+/// register tile, broadcast-A FMA with the fmaddsub product.
+///
+/// # Safety
+/// Requires `avx2`+`fma`; slice shape relations as for
+/// [`gemm_f32`] (asserted by the dispatch wrapper).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn gemm_c32(m: usize, k: usize, n: usize, a: &[C32], b: &[C32], out: &mut [C32]) {
+    // NRC complex columns per tile = one YMM of interleaved f32.
+    const NRC: usize = 4;
+    let bf = as_f32(b);
+    // Split borrows: read A scalars while writing OUT rows.
+    let of = as_f32_mut(out);
+    let mut j0 = 0;
+    while j0 + NRC <= n {
+        for i in 0..m {
+            let mut acc = _mm256_loadu_ps(of.as_ptr().add((i * n + j0) * 2));
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                let va_re = _mm256_set1_ps(av.re);
+                let va_im = _mm256_set1_ps(av.im);
+                let vb = _mm256_loadu_ps(bf.as_ptr().add((kk * n + j0) * 2));
+                // [bi, br, …] for the cross terms
+                let vb_swap = _mm256_permute_ps::<0xB1>(vb);
+                // t: even lanes ar·br − ai·bi ; odd lanes ar·bi + ai·br
+                let t = _mm256_fmaddsub_ps(va_re, vb, _mm256_mul_ps(va_im, vb_swap));
+                acc = _mm256_add_ps(acc, t);
+            }
+            _mm256_storeu_ps(of.as_mut_ptr().add((i * n + j0) * 2), acc);
+        }
+        j0 += NRC;
+    }
+    // Remainder columns: scalar.
+    if j0 < n {
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                for j in j0..n {
+                    out[i * n + j] += av * b[kk * n + j];
+                }
+            }
+        }
+    }
+}
+
+/// One radix-2 butterfly stage (span `len`) with 4 butterflies per
+/// iteration; delegates to the scalar stage when `len/2 < 4`.
+///
+/// # Safety
+/// Requires `avx2`+`fma`.  `buf.len()` must be a multiple of `len`
+/// and `panel.len() == len/2` (the dispatch wrapper debug-asserts;
+/// the FFT plan guarantees them), which bounds every index below.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn butterfly_stage(buf: &mut [C32], len: usize, panel: &[C32], inverse: bool) {
+    let half = len / 2;
+    if half < 4 {
+        return super::scalar::butterfly_stage(buf, len, panel, inverse);
+    }
+    // Sign mask flipping the imaginary lanes of w — conjugation for
+    // the inverse transform.
+    let conj_mask = if inverse {
+        _mm256_castsi256_ps(_mm256_set_epi32(
+            i32::MIN,
+            0,
+            i32::MIN,
+            0,
+            i32::MIN,
+            0,
+            i32::MIN,
+            0,
+        ))
+    } else {
+        _mm256_setzero_ps()
+    };
+    let n = buf.len();
+    let bf = as_f32_mut(buf);
+    let pf = as_f32(panel);
+    let mut j = 0;
+    while j < n {
+        let mut kq = 0;
+        // 4 butterflies (one YMM of complex) per step; half is a
+        // power of two ≥ 4, so there is no remainder.
+        while kq < half {
+            let ui = (j + kq) * 2;
+            let vi = (j + kq + half) * 2;
+            let u = _mm256_loadu_ps(bf.as_ptr().add(ui));
+            let v = _mm256_loadu_ps(bf.as_ptr().add(vi));
+            let w = _mm256_xor_ps(_mm256_loadu_ps(pf.as_ptr().add(kq * 2)), conj_mask);
+            let w_re = _mm256_moveldup_ps(w);
+            let w_im = _mm256_movehdup_ps(w);
+            let v_swap = _mm256_permute_ps::<0xB1>(v);
+            // t = v·w on interleaved lanes
+            let t = _mm256_fmaddsub_ps(v, w_re, _mm256_mul_ps(v_swap, w_im));
+            _mm256_storeu_ps(bf.as_mut_ptr().add(ui), _mm256_add_ps(u, t));
+            _mm256_storeu_ps(bf.as_mut_ptr().add(vi), _mm256_sub_ps(u, t));
+            kq += 4;
+        }
+        j += len;
+    }
+}
+
+/// Fused spans-2-and-4 butterflies: each 4-complex block is one YMM,
+/// transformed entirely in-register with exact ±i twiddles.
+///
+/// # Safety
+/// Requires `avx2`+`fma`; `buf.len()` must be a multiple of 4
+/// (debug-asserted by the dispatch wrapper, guaranteed by the pow2
+/// FFT caller).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn radix4_kickoff(buf: &mut [C32], inverse: bool) {
+    let n = buf.len();
+    let bf = as_f32_mut(buf);
+    // The single f32 lane that w = ∓i sign-flips: forward
+    // (−i)·(re, im) = (im, −re) flips lane 3 of [t2, t3s]; inverse
+    // (+i)·(re, im) = (−im, re) flips lane 2.
+    let wt_mask = if inverse {
+        _mm256_castsi256_ps(_mm256_set_epi32(0, 0, 0, 0, 0, i32::MIN, 0, 0))
+    } else {
+        _mm256_castsi256_ps(_mm256_set_epi32(0, 0, 0, 0, i32::MIN, 0, 0, 0))
+    };
+    // Negate the high 128-bit half (the "u − t" outputs).
+    let neg_high = _mm256_castsi256_ps(_mm256_set_epi32(
+        i32::MIN,
+        i32::MIN,
+        i32::MIN,
+        i32::MIN,
+        0,
+        0,
+        0,
+        0,
+    ));
+    let mut j = 0;
+    while j + 4 <= n {
+        // v = [a, b, c, d] as 4 interleaved complex values.
+        let v = _mm256_loadu_ps(bf.as_ptr().add(j * 2));
+        // Span-2 stage: s = [a+b, a−b, c+d, c−d].
+        // swap adjacent complex pairs: [b, a, d, c]
+        let swapped = _mm256_castpd_ps(_mm256_permute_pd::<0b0101>(_mm256_castps_pd(v)));
+        let sum = _mm256_add_ps(v, swapped);
+        // swapped − v so complex positions 1, 3 read a−b, c−d (at
+        // those positions `swapped` holds a, c and `v` holds b, d)
+        let diff = _mm256_sub_ps(swapped, v);
+        // blend mask 0xCC picks diff for lanes 2,3,6,7 (complex 1, 3)
+        let s = _mm256_blend_ps::<0xCC>(sum, diff);
+        // Span-4 stage on s = [t0, t1, t2, t3]:
+        //   out = [t0+t2, t1+w·t3, t0−t2, t1−w·t3]
+        // cross = [t2, t3, t0, t1]
+        let cross = _mm256_permute2f128_ps::<0x01>(s, s);
+        // swap re/im inside each complex: [t2s, t3s, t0s, t1s]
+        let swapped_cross = _mm256_permute_ps::<0xB1>(cross);
+        // h = [t2, (t3.im, t3.re), t0, (t1.im, t1.re)]
+        let h = _mm256_blend_ps::<0xCC>(cross, swapped_cross);
+        // apply the ∓i sign to the t3 half, giving [t2, w·t3, …]
+        let g = _mm256_xor_ps(h, wt_mask);
+        // low half of g twice: [t2, w·t3, t2, w·t3]
+        let g_lo = _mm256_permute2f128_ps::<0x00>(g, g);
+        // [t0, t1, t0, t1]
+        let s_lo = _mm256_permute2f128_ps::<0x00>(s, s);
+        // add on the low half, subtract on the high half
+        let out = _mm256_add_ps(s_lo, _mm256_xor_ps(g_lo, neg_high));
+        _mm256_storeu_ps(bf.as_mut_ptr().add(j * 2), out);
+        j += 4;
+    }
+}
+
+/// `acc[i] = (acc[i] · other[i]) · scale`, 4 complex per iteration
+/// with a scalar tail.
+///
+/// # Safety
+/// Requires `avx2`+`fma`; `acc.len() == other.len()` (asserted by the
+/// dispatch wrapper) bounds all indices.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn cmul_scale_slice(acc: &mut [C32], other: &[C32], scale: f32) {
+    let n = acc.len();
+    let quads = n / 4 * 4;
+    let vs = _mm256_set1_ps(scale);
+    {
+        let af = as_f32_mut(acc);
+        let of = as_f32(other);
+        let mut i = 0;
+        while i < quads {
+            let va = _mm256_loadu_ps(af.as_ptr().add(i * 2));
+            let vb = _mm256_loadu_ps(of.as_ptr().add(i * 2));
+            let vb_re = _mm256_moveldup_ps(vb);
+            let vb_im = _mm256_movehdup_ps(vb);
+            let va_swap = _mm256_permute_ps::<0xB1>(va);
+            let prod = _mm256_fmaddsub_ps(va, vb_re, _mm256_mul_ps(va_swap, vb_im));
+            _mm256_storeu_ps(af.as_mut_ptr().add(i * 2), _mm256_mul_ps(prod, vs));
+            i += 4;
+        }
+    }
+    for i in quads..n {
+        acc[i] = (acc[i] * other[i]).scale(scale);
+    }
+}

@@ -79,15 +79,38 @@ fn run_bench_check(args: &Args) -> Result<()> {
         if c.regressed {
             regressions += 1;
         }
+        // `ratio_*` rows are dimensionless speedups gated against a
+        // floor, not latencies — render them as multipliers.
+        let is_ratio = c.name.starts_with("ratio_");
+        let fmt = |v: f64| {
+            if is_ratio {
+                format!("{v:.2}x")
+            } else {
+                fmt_time(v)
+            }
+        };
+        let skipped = c.note.as_deref().is_some_and(|n| n.starts_with("SKIP"));
         t.row(&[
             c.name.clone(),
-            fmt_time(c.baseline_s),
-            fmt_time(c.current_s),
+            fmt(c.baseline_s),
+            fmt(c.current_s),
             format!("{:.2}x", c.ratio),
-            if c.regressed { "REGRESSED" } else { "ok" }.into(),
+            if c.regressed {
+                "REGRESSED"
+            } else if skipped {
+                "SKIP"
+            } else {
+                "ok"
+            }
+            .into(),
         ]);
     }
     t.print();
+    for c in &comparisons {
+        if let Some(note) = &c.note {
+            println!("  {}: {note}", c.name);
+        }
+    }
     if comparisons.is_empty() {
         println!("(no overlapping kernels compared — record-only run)");
     }

@@ -632,6 +632,68 @@ fn admission_degrades_then_sheds_under_a_live_slo() {
 }
 
 #[test]
+fn flush_recheck_resolves_deadlines_that_expired_in_the_assembler() {
+    // PR 9 satellite: admission prices the queue at *submit* time, so a
+    // request whose deadline is easily meetable on an idle lane can
+    // still be hopeless by the time its batch is placed.  Hold lone
+    // requests in the assembler (long `max_wait`, no companions) until
+    // their SLO has provably expired: the queue-position re-check at
+    // flush must answer them synchronously instead of burning lane
+    // time — shedding kinds with no cheaper tier, and for saliency
+    // first rewriting to the IG tier (counted) before the rewrite's
+    // own re-check sheds it too.
+    use xai_accel::coordinator::router;
+    let cpu = xai_accel::hwsim::DeviceKind::Cpu;
+    let cls_eta = router::lane_service_s(cpu, &router::profile_for(RequestKind::Classify, 1, 16));
+    let sal_eta = router::lane_service_s(cpu, &router::profile_for(RequestKind::Saliency, 1, 16));
+    let hold = std::time::Duration::from_millis(250);
+    // Comfortably above the idle admission estimate (so admission
+    // accepts) yet far below the assembler hold (so it has expired by
+    // flush).  If the cost model ever grows past the hold window this
+    // asserts loudly instead of going flaky.
+    let slack = |eta: f64| std::time::Duration::from_secs_f64((eta * 4.0).max(0.005));
+    assert!(slack(cls_eta) < hold / 2, "classify estimate outgrew the hold window");
+    assert!(slack(sal_eta) < hold / 2, "saliency estimate outgrew the hold window");
+
+    let mut config = CoordinatorConfig::default();
+    config.lanes = vec![cpu];
+    config.backend = BackendMode::NativeOnly;
+    config.policy.max_wait = hold;
+    let coord = Coordinator::start(config).expect("start flush-recheck coordinator");
+
+    // (a) no cheaper tier: late shed, synchronous error reply
+    let err = coord
+        .submit_with_deadline(
+            Request::Classify { image: Matrix::zeros(16, 16) },
+            Some(slack(cls_eta)),
+        )
+        .expect("an idle lane must admit this deadline")
+        .wait()
+        .expect_err("deadline expired in the assembler: the flush re-check must shed");
+    assert!(err.to_string().contains("shed at flush"), "{err}");
+
+    // (b) saliency: the re-check tries the cheaper tier first (counted
+    // as a late degrade), whose own re-check then sheds it
+    let err = coord
+        .submit_with_deadline(
+            Request::Saliency { image: Matrix::zeros(16, 16), class: 1 },
+            Some(slack(sal_eta)),
+        )
+        .expect("an idle lane must admit this deadline")
+        .wait()
+        .expect_err("even the IG rewrite was hopeless by flush");
+    assert!(err.to_string().contains("shed at flush"), "{err}");
+
+    let stats = coord.stats();
+    assert_eq!(stats.late_shed, 2, "classify + the saliency rewrite");
+    assert_eq!(stats.late_degraded, 1, "the saliency → IG rewrite");
+    assert_eq!(stats.shed, 0, "admission must not have shed these");
+    assert_eq!(stats.degraded, 0);
+    assert_eq!(stats.completed, 0);
+    coord.shutdown();
+}
+
+#[test]
 fn latency_percentiles_match_the_sorted_replay_oracle() {
     // The p50/p99 accounting CoordinatorStats carries must be exact —
     // Metrics keeps every sample, so its percentiles must equal a

@@ -316,6 +316,65 @@ fn collective_execution_matches_unsharded_at_256_and_1024() {
 }
 
 #[test]
+fn simd_levels_agree_with_scalar_on_every_plan_kind() {
+    // PR 9 acceptance: the vector butterfly/kickoff paths must be a
+    // pure speedup.  For every dispatch level this machine can
+    // execute, the 1-D plan — pow2 (radix-4 kickoff + panel stages)
+    // and non-pow2 (Bluestein, whose inner pow2 transforms inherit the
+    // level) — must agree with the forced-scalar result to ≤ 1e-4,
+    // forward and inverse.  Levels are passed explicitly per call, so
+    // this is safe under the parallel test runner (no process-global
+    // override).
+    use xai_accel::linalg::complex::C32;
+    use xai_accel::linalg::simd;
+    let mut rng = Rng::new(111);
+    let levels = simd::available_levels();
+    assert!(levels.contains(&simd::Level::Scalar));
+    for n in [2usize, 4, 8, 16, 64, 256, 3, 7, 12, 100, 224] {
+        let plan = fft::plan(n);
+        let input: Vec<C32> = (0..n)
+            .map(|_| C32::new(rng.gauss_f32(), rng.gauss_f32()))
+            .collect();
+        for inverse in [false, true] {
+            let mut want = input.clone();
+            let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+            plan.process_with_level(&mut want, inverse, &mut scratch, simd::Level::Scalar);
+            for &level in &levels {
+                let mut got = input.clone();
+                let mut scratch = vec![C32::ZERO; plan.scratch_len()];
+                plan.process_with_level(&mut got, inverse, &mut scratch, level);
+                let diff = got
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, b)| (*a - *b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(
+                    diff <= 1e-4,
+                    "n={n} inverse={inverse} level {}: {diff}",
+                    level.name()
+                );
+            }
+        }
+    }
+    // The threaded 2-D path runs whatever level the process detects
+    // (the forced-scalar CI leg pins it to scalar); its own oracle
+    // comparisons above keep it honest.  Here, pin down that a full
+    // 2-D transform through the batch machinery matches the per-line
+    // scalar result at the serving size.
+    let x = CMatrix::from_real(&Matrix::random(64, 64, &mut rng));
+    let plan2 = fft::plan2(64, 64);
+    let oracle = dft::dft2_matmul(&x);
+    for threads in THREADS {
+        let got = plan2.fft2(&x, threads);
+        assert!(
+            got.max_abs_diff(&oracle) < 1e-3,
+            "64x64 threads={threads} at the detected level: {}",
+            got.max_abs_diff(&oracle)
+        );
+    }
+}
+
+#[test]
 fn parseval_at_256() {
     let mut rng = Rng::new(105);
     let x = Matrix::random(256, 256, &mut rng);
