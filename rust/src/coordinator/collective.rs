@@ -492,6 +492,8 @@ mod tests {
                 reply: tx,
                 enqueued_at: Instant::now(),
                 deadline: None,
+                tier: crate::xai::tiers::Tier::Exact,
+                max_error: 0.0,
                 degraded: false,
             },
             rx,

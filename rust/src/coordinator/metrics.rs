@@ -8,6 +8,7 @@
 use crate::coordinator::request::RequestKind;
 use crate::coordinator::router::ServiceEwma;
 use crate::hwsim::DeviceKind;
+use crate::xai::tiers::Tier;
 use crate::util::stats;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -79,6 +80,9 @@ pub struct Metrics {
     /// re-check; the rewrite is re-checked on its own placement pass,
     /// so a rewrite that is *still* hopeless also counts a late shed
     late_degraded: AtomicU64,
+    /// completed requests per precision rung, indexed by
+    /// [`Tier::index`] — the ladder's served mix
+    tier_served: [AtomicU64; 4],
     batches: AtomicU64,
     batched_requests: AtomicU64,
     /// cross-lane collective jobs dispatched (one per grouped request)
@@ -372,6 +376,21 @@ impl Metrics {
         self.late_degraded.load(Ordering::Relaxed)
     }
 
+    /// A request completed at the given precision rung.
+    pub fn record_tier(&self, tier: Tier) {
+        self.tier_served[tier.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Completed requests per precision rung, in [`Tier::ALL`] order —
+    /// the served accuracy mix of the ladder.
+    pub fn tier_served(&self) -> [u64; 4] {
+        let mut out = [0u64; 4];
+        for (slot, c) in out.iter_mut().zip(&self.tier_served) {
+            *slot = c.load(Ordering::Relaxed);
+        }
+        out
+    }
+
     /// A batch of `size` requests began executing.
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
@@ -526,6 +545,15 @@ impl Metrics {
             self.collective_jobs(),
             self.replans(),
         );
+        // the served precision mix, once anything ran off-exact
+        let tiers = self.tier_served();
+        if tiers.iter().skip(1).any(|&c| c > 0) {
+            out.push_str("  tiers:");
+            for (t, &c) in Tier::ALL.iter().zip(&tiers) {
+                out.push_str(&format!(" {}={c}", t.name()));
+            }
+            out.push('\n');
+        }
         // the multi-host transport plane, when one is configured
         let misses = self.heartbeat_misses();
         if !misses.is_empty() {
@@ -737,6 +765,21 @@ mod tests {
         let r = m.report();
         assert!(r.contains("late-shed=1"), "{r}");
         assert!(r.contains("late-degraded=2"), "{r}");
+    }
+
+    #[test]
+    fn tier_counters_track_the_served_mix() {
+        let m = Metrics::new();
+        assert_eq!(m.tier_served(), [0; 4]);
+        // an all-exact run keeps the report free of the tier line
+        m.record_tier(Tier::Exact);
+        assert!(!m.report().contains("tiers:"), "{}", m.report());
+        m.record_tier(Tier::Sampled);
+        m.record_tier(Tier::Sampled);
+        m.record_tier(Tier::Int8);
+        assert_eq!(m.tier_served(), [1, 0, 1, 2]);
+        let r = m.report();
+        assert!(r.contains("tiers: exact=1 f32fast=0 int8=1 sampled=2"), "{r}");
     }
 
     #[test]

@@ -38,11 +38,18 @@ use crate::linalg::matrix::Matrix;
 use crate::models::TemplateModel;
 use crate::trace::NativeEngine;
 use crate::xai::attribution::Attribution;
+use crate::xai::tiers::{self, Tier};
 use crate::xai::{distillation, integrated_gradients, saliency, shapley};
 
 /// IG path resolution used by the native pipeline (steps+1 gradient
 /// evaluations per request).
 pub const IG_STEPS: usize = 32;
+
+/// Process-wide seed of the Sampled Shapley rung's shared permutation
+/// schedule.  A fixed constant keeps tiered serving deterministic:
+/// the same request at the same rung always returns the same
+/// estimate, run to run.
+pub const SAMPLED_SEED: u64 = 0x5A3D_5EED;
 
 /// Square sizes the native distillation path accepts.  The first three
 /// mirror the compiled-variant gate (so error behavior matches the
@@ -101,15 +108,19 @@ impl NativeBackend {
     }
 
     /// Execute a whole batch through the fused kernels, one response
-    /// per envelope in order.
+    /// per envelope in order.  Batches still group by kind only; the
+    /// tiered kinds sub-group by each envelope's precision rung (like
+    /// Shapley's per-n grouping), so an all-exact batch executes
+    /// bit-for-bit the pre-ladder path.
     pub fn execute_batch(&self, batch: &Batch) -> Vec<Result<Response>> {
         use crate::coordinator::request::RequestKind;
         let requests: Vec<&Request> = batch.envelopes.iter().map(|e| &e.request).collect();
+        let tiers: Vec<Tier> = batch.envelopes.iter().map(|e| e.tier).collect();
         match batch.kind {
             RequestKind::Classify => self.classify_batch(&requests),
-            RequestKind::Shapley => self.shapley_batch(&requests),
-            RequestKind::IntGrad => self.intgrad_batch(&requests),
-            RequestKind::Saliency => self.saliency_batch(&requests),
+            RequestKind::Shapley => self.shapley_batch(&requests, &tiers),
+            RequestKind::IntGrad => self.intgrad_batch(&requests, &tiers),
+            RequestKind::Saliency => self.saliency_batch(&requests, &tiers),
             // distillation is one spectral solve per request
             RequestKind::Distill => {
                 requests.iter().map(|r| self.execute_single(r)).collect()
@@ -202,12 +213,18 @@ impl NativeBackend {
         out.into_iter().map(|r| r.expect("every slot filled")).collect()
     }
 
-    /// Shapley: group by player count (arrival order preserved inside
-    /// a group), each group fused into one φ = T·V GEMM.
-    fn shapley_batch(&self, requests: &[&Request]) -> Vec<Result<Response>> {
+    /// Shapley: group by (player count, tier) — arrival order preserved
+    /// inside a group — each group fused into ONE GEMM: the exact
+    /// φ = T·V, its int8-quantized twin, or the sampled-schedule
+    /// estimator, per the group's rung.
+    fn shapley_batch(
+        &self,
+        requests: &[&Request],
+        req_tiers: &[Tier],
+    ) -> Vec<Result<Response>> {
         let mut out: Vec<Option<Result<Response>>> = requests.iter().map(|_| None).collect();
-        // indices of valid requests, grouped by n
-        let mut groups: std::collections::BTreeMap<usize, Vec<usize>> =
+        // indices of valid requests, grouped by (n, tier)
+        let mut groups: std::collections::BTreeMap<(usize, Tier), Vec<usize>> =
             std::collections::BTreeMap::new();
         for (i, r) in requests.iter().enumerate() {
             let (n, values) = match r {
@@ -215,11 +232,11 @@ impl NativeBackend {
                 _ => unreachable!("mixed batch"),
             };
             match check_shapley(n, values) {
-                Ok(()) => groups.entry(n).or_default().push(i),
+                Ok(()) => groups.entry((n, req_tiers[i])).or_default().push(i),
                 Err(e) => out[i] = Some(Err(e)),
             }
         }
-        for (n, members) in groups {
+        for ((n, tier), members) in groups {
             let games: Vec<shapley::ValueTable> = members
                 .iter()
                 .map(|&i| match requests[i] {
@@ -230,7 +247,18 @@ impl NativeBackend {
                 })
                 .collect();
             let mut eng = NativeEngine::new();
-            let phi = shapley::shapley_batch_fused(&mut eng, &games);
+            let phi = match tier {
+                Tier::Int8 => tiers::shapley_batch_int8(&mut eng, &games),
+                Tier::Sampled => tiers::shapley_batch_sampled(
+                    &mut eng,
+                    &games,
+                    tiers::SAMPLED_M,
+                    SAMPLED_SEED,
+                ),
+                // Exact — and any off-ladder rung, which the selection
+                // rule never assigns — serves the exact fused GEMM
+                Tier::Exact | Tier::F32Fast => shapley::shapley_batch_fused(&mut eng, &games),
+            };
             for (col, &i) in members.iter().enumerate() {
                 let names = match requests[i] {
                     Request::Shapley { names, .. } => names.clone(),
@@ -246,10 +274,17 @@ impl NativeBackend {
     }
 
     /// IG: every valid request's path gradients stacked into one GEMM +
-    /// one batched trapezoid reduce.
-    fn intgrad_batch(&self, requests: &[&Request]) -> Vec<Result<Response>> {
+    /// one batched trapezoid reduce.  The F32Fast rung runs the same
+    /// stacked pipeline at [`tiers::REDUCED_IG_STEPS`] instead of
+    /// [`IG_STEPS`] — the S/4 trapezoid of the ladder's error model.
+    fn intgrad_batch(
+        &self,
+        requests: &[&Request],
+        req_tiers: &[Tier],
+    ) -> Vec<Result<Response>> {
         let mut out: Vec<Option<Result<Response>>> = requests.iter().map(|_| None).collect();
-        let mut valid: Vec<usize> = Vec::new();
+        let mut valid_exact: Vec<usize> = Vec::new();
+        let mut valid_fast: Vec<usize> = Vec::new();
         for (i, r) in requests.iter().enumerate() {
             let (image, baseline, class) = match r {
                 Request::IntGrad {
@@ -264,10 +299,24 @@ impl NativeBackend {
                 .and_then(|_| self.check_image(baseline))
                 .and_then(|_| self.check_class(class));
             match ok {
-                Ok(()) => valid.push(i),
+                Ok(()) if req_tiers[i] == Tier::F32Fast => valid_fast.push(i),
+                Ok(()) => valid_exact.push(i),
                 Err(e) => out[i] = Some(Err(e)),
             }
         }
+        self.run_intgrad_group(requests, &valid_exact, IG_STEPS, &mut out);
+        self.run_intgrad_group(requests, &valid_fast, tiers::REDUCED_IG_STEPS, &mut out);
+        out.into_iter().map(|r| r.expect("every slot filled")).collect()
+    }
+
+    /// One fused IG sub-group at a given path resolution.
+    fn run_intgrad_group(
+        &self,
+        requests: &[&Request],
+        valid: &[usize],
+        steps: usize,
+        out: &mut [Option<Result<Response>>],
+    ) {
         if !valid.is_empty() {
             let scorers: Vec<_> = valid
                 .iter()
@@ -287,7 +336,7 @@ impl NativeBackend {
                 })
                 .collect();
             let mut eng = NativeEngine::new();
-            let grads = integrated_gradients::path_gradients_batch(&mut eng, &triples, IG_STEPS);
+            let grads = integrated_gradients::path_gradients_batch(&mut eng, &triples, steps);
             let xs: Vec<&[f32]> = triples.iter().map(|t| t.1).collect();
             let bs: Vec<&[f32]> = triples.iter().map(|t| t.2).collect();
             let attrs = integrated_gradients::ig_trapezoid_batch(&mut eng, &grads, &xs, &bs);
@@ -299,12 +348,16 @@ impl NativeBackend {
                 out[i] = Some(Ok(Response::Heatmap(Matrix::from_vec(rows, cols, attr))));
             }
         }
-        out.into_iter().map(|r| r.expect("every slot filled")).collect()
     }
 
     /// Saliency: batched gradient heatmaps smoothed through one shared
-    /// FFT plan.
-    fn saliency_batch(&self, requests: &[&Request]) -> Vec<Result<Response>> {
+    /// FFT plan.  The F32Fast rung returns the raw gradient heatmap and
+    /// skips the fused FFT smoothing pass entirely.
+    fn saliency_batch(
+        &self,
+        requests: &[&Request],
+        req_tiers: &[Tier],
+    ) -> Vec<Result<Response>> {
         let mut out: Vec<Option<Result<Response>>> = requests.iter().map(|_| None).collect();
         let mut valid: Vec<usize> = Vec::new();
         for (i, r) in requests.iter().enumerate() {
@@ -313,6 +366,12 @@ impl NativeBackend {
                 _ => unreachable!("mixed batch"),
             };
             match self.check_image(image).and_then(|_| self.check_class(class)) {
+                Ok(()) if req_tiers[i] == Tier::F32Fast => {
+                    // raw rung: the gradient heatmap IS the answer
+                    out[i] = Some(Ok(Response::Heatmap(
+                        self.model.grad_heatmap(image, class),
+                    )));
+                }
                 Ok(()) => valid.push(i),
                 Err(e) => out[i] = Some(Err(e)),
             }
@@ -415,6 +474,10 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn batch_of(kind: RequestKind, reqs: Vec<Request>) -> Batch {
+        batch_tiered(kind, reqs.into_iter().map(|r| (r, Tier::Exact)).collect())
+    }
+
+    fn batch_tiered(kind: RequestKind, reqs: Vec<(Request, Tier)>) -> Batch {
         use crate::coordinator::request::Envelope;
         use std::sync::mpsc;
         use std::time::Instant;
@@ -422,7 +485,7 @@ mod tests {
             kind,
             reqs.into_iter()
                 .enumerate()
-                .map(|(i, request)| {
+                .map(|(i, (request, tier))| {
                     let (tx, _rx) = mpsc::channel();
                     Envelope {
                         id: i as u64,
@@ -430,7 +493,9 @@ mod tests {
                         reply: tx,
                         enqueued_at: Instant::now(),
                         deadline: None,
-                        degraded: false,
+                        tier,
+                        max_error: 1.0,
+                        degraded: tier != Tier::Exact,
                     }
                 })
                 .collect(),
@@ -485,6 +550,133 @@ mod tests {
                 other => panic!("unexpected responses {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn mixed_tier_shapley_batch_serves_each_rung() {
+        let backend = NativeBackend::new();
+        let mut rng = Rng::new(7);
+        let n = 6usize;
+        let mk = |rng: &mut Rng| Request::Shapley {
+            n,
+            values: rng.gauss_vec(1 << n),
+            names: (0..n).map(|i| format!("f{i}")).collect(),
+        };
+        let reqs = vec![
+            (mk(&mut rng), Tier::Exact),
+            (mk(&mut rng), Tier::Int8),
+            (mk(&mut rng), Tier::Sampled),
+            (mk(&mut rng), Tier::Exact),
+        ];
+        let plain: Vec<Request> = reqs.iter().map(|(r, _)| r.clone()).collect();
+        let out = backend.execute_batch(&batch_tiered(RequestKind::Shapley, reqs));
+        let scores = |r: &Result<Response>| match r.as_ref().unwrap() {
+            Response::Attribution(a) => a.scores.clone(),
+            other => panic!("unexpected response {other:?}"),
+        };
+        // exact members are bit-close to the per-request oracle even in
+        // a mixed-tier batch
+        for &i in &[0usize, 3] {
+            let want = scores(&backend.execute_single(&plain[i]));
+            for (x, y) in scores(&out[i]).iter().zip(&want) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+        // the int8 member matches the quantized reference kernel
+        let game = match &plain[1] {
+            Request::Shapley { values, .. } => {
+                shapley::ValueTable::new(n, values.clone())
+            }
+            _ => unreachable!(),
+        };
+        let q = crate::xai::quantized::shapley_int8(std::slice::from_ref(&game));
+        for (i, got) in scores(&out[1]).iter().enumerate() {
+            assert_eq!(*got, q.get(i, 0));
+        }
+        // the sampled member lands within its modeled error of exact
+        // (scaled by the attribution magnitude) and is deterministic
+        let exact = scores(&backend.execute_single(&plain[2]));
+        let bound = tiers::sampled_shapley_error(tiers::SAMPLED_M);
+        let norm: f32 = exact.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+        let sampled = scores(&out[2]);
+        let dev: f32 = sampled
+            .iter()
+            .zip(&exact)
+            .map(|(s, e)| (s - e) * (s - e))
+            .sum::<f32>()
+            .sqrt();
+        assert!(dev / norm < 4.0 * bound, "sampled rung off: {} vs {bound}", dev / norm);
+        let again = backend.execute_batch(&batch_tiered(
+            RequestKind::Shapley,
+            vec![(plain[2].clone(), Tier::Sampled)],
+        ));
+        assert_eq!(scores(&again[0]), sampled, "sampled rung must be deterministic");
+    }
+
+    #[test]
+    fn f32fast_rungs_reduce_ig_steps_and_skip_smoothing() {
+        let backend = NativeBackend::new();
+        let mut rng = Rng::new(9);
+        let image = crate::data::cifar::sample_class(2, &mut rng).image;
+        let img = crate::data::cifar::IMG;
+        let heat = |r: &Result<Response>| match r.as_ref().unwrap() {
+            Response::Heatmap(h) => h.clone(),
+            other => panic!("unexpected response {other:?}"),
+        };
+        // fast saliency is exactly the raw gradient heatmap
+        let out = backend.execute_batch(&batch_tiered(
+            RequestKind::Saliency,
+            vec![
+                (
+                    Request::Saliency {
+                        image: image.clone(),
+                        class: 2,
+                    },
+                    Tier::F32Fast,
+                ),
+                (
+                    Request::Saliency {
+                        image: image.clone(),
+                        class: 2,
+                    },
+                    Tier::Exact,
+                ),
+            ],
+        ));
+        let raw = backend.model().grad_heatmap(&image, 2);
+        assert_eq!(heat(&out[0]).data, raw.data);
+        let exact_sal = heat(&backend.execute_single(&Request::Saliency {
+            image: image.clone(),
+            class: 2,
+        }));
+        assert_eq!(heat(&out[1]).data, exact_sal.data, "exact rung untouched");
+        // fast IG runs the same pipeline at the reduced step count
+        let ig = Request::IntGrad {
+            image: image.clone(),
+            baseline: Matrix::zeros(img, img),
+            class: 2,
+        };
+        let out = backend.execute_batch(&batch_tiered(
+            RequestKind::IntGrad,
+            vec![(ig.clone(), Tier::F32Fast), (ig.clone(), Tier::Exact)],
+        ));
+        let fast = heat(&out[0]);
+        let exact = heat(&backend.execute_single(&ig));
+        assert_eq!(heat(&out[1]).data, exact.data, "exact rung untouched");
+        // the reduced trapezoid approximates the exact path integral
+        let norm: f32 = exact.data.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-9);
+        let dev: f32 = fast
+            .data
+            .iter()
+            .zip(&exact.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        assert!(
+            dev / norm <= tiers::reduced_ig_error(tiers::REDUCED_IG_STEPS),
+            "reduced IG outside its modeled bound: {}",
+            dev / norm
+        );
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::coordinator::router::{self, ServiceEwma};
 use crate::hwsim::DeviceKind;
 use crate::util::rng::Rng;
 use crate::util::stats;
+use crate::xai::tiers::Tier;
 use std::collections::HashMap;
 
 /// Arrival mixture of the open-loop stream: (kind, relative weight).
@@ -66,13 +67,18 @@ pub struct OpenLoopConfig {
     /// everything).  Admission sheds or degrades exactly like
     /// [`crate::coordinator::service::Coordinator::submit_with_deadline`].
     pub deadline_s: Option<f64>,
-    /// Whether admission may rewrite an unmeetable saliency request to
-    /// its cheaper plain-IG tier before shedding (the
-    /// [`crate::coordinator::request::Request::cheaper_tier`]
-    /// direction: dropping the spectral smoothing is the one
-    /// degradation that lowers the admission estimate on every lane
-    /// class).
+    /// Whether admission may walk an unmeetable request down its
+    /// precision ladder
+    /// ([`crate::coordinator::request::RequestKind::ladder`]), rung by
+    /// rung within the arrival's declared tolerance, before shedding.
     pub degrade: bool,
+    /// Fraction of arrivals that declare the tolerant `max_error`
+    /// below (the rest submit strict, `max_error` = 0).  `0.0` (the
+    /// default) draws no per-arrival tolerance at all, keeping the
+    /// arrival stream bit-identical to the pre-ladder simulator.
+    pub tolerant_frac: f64,
+    /// The error tolerance the tolerant cohort declares.
+    pub tolerant_max_error: f32,
 }
 
 impl OpenLoopConfig {
@@ -95,6 +101,8 @@ impl OpenLoopConfig {
             max_burst: 8,
             deadline_s: None,
             degrade: true,
+            tolerant_frac: 0.0,
+            tolerant_max_error: 0.0,
         }
     }
 }
@@ -105,9 +113,10 @@ impl OpenLoopConfig {
 pub struct OpenLoopReport {
     /// Requests that completed.
     pub completed: u64,
-    /// Requests shed at admission (deadline unmeetable, no tier).
+    /// Requests shed at admission (deadline unmeetable on every
+    /// admissible rung).
     pub shed: u64,
-    /// Requests degraded to their cheaper tier at admission.
+    /// Requests admitted below [`Tier::Exact`] (the ladder walk fired).
     pub degraded: u64,
     /// Median completion latency (s).
     pub p50_s: f64,
@@ -117,6 +126,12 @@ pub struct OpenLoopReport {
     pub mean_s: f64,
     /// Worst completion latency (s).
     pub max_s: f64,
+    /// Completed requests per precision rung, in [`Tier::ALL`] order.
+    pub tiers: [u64; 4],
+    /// p99 of the strict cohort (`max_error` = 0); 0 when empty.
+    pub strict_p99_s: f64,
+    /// p99 of the tolerant cohort; 0 when empty.
+    pub tolerant_p99_s: f64,
 }
 
 /// One queued/completed request inside the virtual-time model.
@@ -139,13 +154,13 @@ pub fn simulate_open_loop(cfg: &OpenLoopConfig) -> OpenLoopReport {
     };
     let true_factor = |i: usize| cfg.true_factors.get(i).copied().unwrap_or(1.0);
 
-    // Analytic single-request service price per (lane class, kind),
-    // cached: the same `lane_service_s × profile_repeat` product the
-    // live admission path prices.
-    let mut price_cache: HashMap<(DeviceKind, RequestKind), f64> = HashMap::new();
-    let mut price = |lane: DeviceKind, kind: RequestKind| -> f64 {
-        *price_cache.entry((lane, kind)).or_insert_with(|| {
-            let profile = router::profile_for(kind, 1, router::typical_edge(kind));
+    // Analytic single-request service price per (lane class, kind,
+    // tier), cached: the same `lane_service_s × profile_repeat`
+    // product the live admission path prices, rung by rung.
+    let mut price_cache: HashMap<(DeviceKind, RequestKind, Tier), f64> = HashMap::new();
+    let mut price = |lane: DeviceKind, kind: RequestKind, tier: Tier| -> f64 {
+        *price_cache.entry((lane, kind, tier)).or_insert_with(|| {
+            let profile = router::profile_for_tier(kind, tier, 1, router::typical_edge(kind));
             router::lane_service_s(lane, &profile) * router::profile_repeat(kind, 1) as f64
         })
     };
@@ -157,7 +172,7 @@ pub fn simulate_open_loop(cfg: &OpenLoopConfig) -> OpenLoopReport {
     for i in 0..n_lanes {
         let mean_s: f64 = OPENLOOP_MIX
             .iter()
-            .map(|&(k, w)| price(lanes[i], k) * w as f64 / total_w as f64)
+            .map(|&(k, w)| price(lanes[i], k, Tier::Exact) * w as f64 / total_w as f64)
             .sum();
         rate += 1.0 / mean_s;
     }
@@ -176,6 +191,9 @@ pub fn simulate_open_loop(cfg: &OpenLoopConfig) -> OpenLoopReport {
     let mut rng = Rng::new(cfg.seed);
     let mut now = 0.0f64;
     let mut latencies: Vec<f64> = Vec::with_capacity(cfg.requests);
+    let mut strict_lat: Vec<f64> = Vec::new();
+    let mut tolerant_lat: Vec<f64> = Vec::new();
+    let mut tier_counts = [0u64; 4];
     let mut shed = 0u64;
     let mut degraded_n = 0u64;
     let mut emitted = 0usize;
@@ -227,6 +245,16 @@ pub fn simulate_open_loop(cfg: &OpenLoopConfig) -> OpenLoopReport {
             pick -= w;
         }
 
+        // Draw the arrival's declared tolerance.  The draw is gated on
+        // a non-zero mix so an all-strict config consumes exactly the
+        // pre-ladder RNG stream (the committed sim_openloop_* baseline
+        // rows stay bit-for-bit).
+        let max_error = if cfg.tolerant_frac > 0.0 && rng.uniform() < cfg.tolerant_frac {
+            cfg.tolerant_max_error
+        } else {
+            0.0
+        };
+
         // Corrections as the live path computes them.
         let corrections: Vec<f64> = if cfg.adaptive {
             let raw: Vec<Option<f64>> = (0..n_lanes)
@@ -237,35 +265,42 @@ pub fn simulate_open_loop(cfg: &OpenLoopConfig) -> OpenLoopReport {
             vec![1.0; n_lanes]
         };
 
-        // Admission: best-lane completion estimate vs the deadline.
+        // Admission: best-lane completion estimate vs the deadline,
+        // walking the precision ladder rung by rung within the
+        // arrival's declared tolerance — exactly like
+        // [`crate::coordinator::service::Coordinator::submit_with_slo`].
+        let mut tier = Tier::Exact;
         if let Some(slo) = cfg.deadline_s {
-            let estimate = |k: RequestKind,
-                            price: &mut dyn FnMut(DeviceKind, RequestKind) -> f64|
+            let estimate = |t: Tier,
+                            price: &mut dyn FnMut(DeviceKind, RequestKind, Tier) -> f64|
              -> f64 {
                 (0..n_lanes)
-                    .map(|i| (backlog[i] as f64 + 1.0) * price(lanes[i], k) * corrections[i])
+                    .map(|i| (backlog[i] as f64 + 1.0) * price(lanes[i], kind, t) * corrections[i])
                     .fold(f64::INFINITY, f64::min)
             };
-            if estimate(kind, &mut price) > slo {
-                let tier = (cfg.degrade && kind == RequestKind::Saliency)
-                    .then_some(RequestKind::IntGrad);
-                match tier {
-                    Some(t) if estimate(t, &mut price) <= slo => {
-                        kind = t;
-                        degraded_n += 1;
-                    }
-                    _ => {
-                        shed += 1;
-                        continue;
+            if estimate(tier, &mut price) > slo {
+                let mut fits = false;
+                if cfg.degrade {
+                    while let Some(next) = kind.next_rung(tier, max_error) {
+                        tier = next;
+                        if estimate(tier, &mut price) <= slo {
+                            fits = true;
+                            break;
+                        }
                     }
                 }
+                if !fits {
+                    shed += 1;
+                    continue;
+                }
+                degraded_n += 1;
             }
         }
 
         // Place through the REAL corrected affinity placer.
-        let profile = router::profile_for(kind, 1, router::typical_edge(kind));
+        let profile = router::profile_for_tier(kind, tier, 1, router::typical_edge(kind));
         let d = router::place_affinity_corrected(&lanes, &backlog, &corrections, &profile);
-        let predicted_s = price(lanes[d], kind);
+        let predicted_s = price(lanes[d], kind, tier);
         let measured_s = predicted_s * true_factor(d);
         let start = now.max(free_at[d]);
         let finish = start + measured_s;
@@ -277,6 +312,12 @@ pub fn simulate_open_loop(cfg: &OpenLoopConfig) -> OpenLoopReport {
             measured_s,
         });
         latencies.push(finish - now);
+        tier_counts[tier.index()] += 1;
+        if max_error > 0.0 {
+            tolerant_lat.push(finish - now);
+        } else {
+            strict_lat.push(finish - now);
+        }
     }
 
     let (p50_s, p99_s, mean_s, max_s) = if latencies.is_empty() {
@@ -289,6 +330,13 @@ pub fn simulate_open_loop(cfg: &OpenLoopConfig) -> OpenLoopReport {
             stats::max(&latencies),
         )
     };
+    let cohort_p99 = |xs: &[f64]| {
+        if xs.is_empty() {
+            0.0
+        } else {
+            stats::percentile(xs, 99.0)
+        }
+    };
     OpenLoopReport {
         completed: latencies.len() as u64,
         shed,
@@ -297,6 +345,9 @@ pub fn simulate_open_loop(cfg: &OpenLoopConfig) -> OpenLoopReport {
         p99_s,
         mean_s,
         max_s,
+        tiers: tier_counts,
+        strict_p99_s: cohort_p99(&strict_lat),
+        tolerant_p99_s: cohort_p99(&tolerant_lat),
     }
 }
 
@@ -351,18 +402,81 @@ mod tests {
         cfg.requests = 500;
         cfg.load = 1.5; // overload: queues must grow
         cfg.deadline_s = Some(1e-4);
+        // half the arrivals declare a tolerance wide enough for any rung
+        cfg.tolerant_frac = 0.5;
+        cfg.tolerant_max_error = 1.0;
         let r = simulate_open_loop(&cfg);
         assert!(r.shed > 0, "overloaded run with tight SLO must shed");
         assert!(
             r.degraded > 0,
-            "saliency arrivals should degrade to plain IG before shedding"
+            "tolerant arrivals should walk the ladder before shedding"
         );
         assert_eq!(r.completed + r.shed, 500);
+        // the served mix shows off-exact rungs, and only for the
+        // tolerant cohort (strict arrivals can only complete exact)
+        assert!(r.tiers.iter().skip(1).sum::<u64>() > 0, "{:?}", r.tiers);
+        assert_eq!(r.tiers.iter().sum::<u64>(), r.completed);
         // Degrading off (shed-only policy) sheds at least as much.
         cfg.degrade = false;
         let r2 = simulate_open_loop(&cfg);
         assert_eq!(r2.degraded, 0);
+        assert_eq!(r2.tiers.iter().skip(1).sum::<u64>(), 0);
         assert!(r2.shed >= r.shed);
+    }
+
+    #[test]
+    fn all_strict_overload_is_bit_for_bit_the_shed_only_policy() {
+        // With no tolerant cohort the ladder can never fire: the
+        // degrade knob changes nothing, bit-for-bit — strict requests
+        // are only ever served exact or shed.
+        let mut cfg = OpenLoopConfig::miscalibrated(1.0, true);
+        cfg.requests = 400;
+        cfg.load = 1.5;
+        cfg.deadline_s = Some(1e-4);
+        let a = simulate_open_loop(&cfg);
+        cfg.degrade = false;
+        let b = simulate_open_loop(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.degraded, 0);
+        assert_eq!(a.tiers.iter().skip(1).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn tiering_improves_the_tolerant_cohorts_tail() {
+        // An overloaded fleet with an SLO and a fully tolerant stream:
+        // the ladder absorbs pressure by serving cheap rungs.
+        let mut cfg = OpenLoopConfig::miscalibrated(1.0, true);
+        cfg.requests = 600;
+        cfg.load = 1.5;
+        cfg.deadline_s = Some(2e-3);
+        cfg.tolerant_frac = 1.0;
+        cfg.tolerant_max_error = 1.0;
+        let tiered = simulate_open_loop(&cfg);
+        assert!(tiered.degraded > 0, "{tiered:?}");
+        assert!(tiered.tiers.iter().skip(1).sum::<u64>() > 0);
+        // shed-only keeps the SLO by refusing work: tiering completes
+        // strictly more of the same arrival stream
+        cfg.degrade = false;
+        let shed_only = simulate_open_loop(&cfg);
+        assert!(
+            tiered.completed > shed_only.completed,
+            "tiered {} vs shed-only {}",
+            tiered.completed,
+            shed_only.completed
+        );
+        // no admission control at all serves everything exact and lets
+        // the queues diverge: the tolerant cohort's p99 is strictly
+        // worse than under tiered admission
+        cfg.degrade = true;
+        cfg.deadline_s = None;
+        let exact_all = simulate_open_loop(&cfg);
+        assert_eq!(exact_all.completed, 600);
+        assert!(
+            tiered.tolerant_p99_s < exact_all.tolerant_p99_s,
+            "tiered p99 {} vs exact-all p99 {}",
+            tiered.tolerant_p99_s,
+            exact_all.tolerant_p99_s
+        );
     }
 
     #[test]

@@ -909,6 +909,8 @@ mod tests {
             reply: tx,
             enqueued_at: Instant::now(),
             deadline: None,
+            tier: crate::xai::tiers::Tier::Exact,
+            max_error: 0.0,
             degraded: false,
         };
         let block = n / 4;
@@ -991,6 +993,8 @@ mod tests {
             reply: tx,
             enqueued_at: Instant::now(),
             deadline: None,
+            tier: crate::xai::tiers::Tier::Exact,
+            max_error: 0.0,
             degraded: false,
         };
         let batch = Batch::new(RequestKind::Distill, vec![env]);

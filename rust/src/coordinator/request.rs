@@ -2,6 +2,7 @@
 
 use crate::linalg::matrix::Matrix;
 use crate::xai::attribution::Attribution;
+use crate::xai::tiers::{self, Tier};
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -92,30 +93,58 @@ impl Request {
         }
     }
 
-    /// The cheaper explanation tier this request can degrade to under
-    /// overload (the ApproXAI escape hatch): smoothed saliency degrades
-    /// to the plain integrated-gradients heatmap, which answers with
-    /// the same [`Response::Heatmap`] payload.  The direction follows
-    /// the analytic cost model, not folk intuition: at serving scale
-    /// the MicroCNN's gradient evaluations are cheap, and saliency's
-    /// spectral-smoothing pipeline (two fused FFT stages on the
-    /// VPU/divergent path, plus their dispatches) makes it the dearest
-    /// kind on *every* lane class — so dropping the smoothing is the
-    /// one degradation that actually lowers the admission estimate.
-    /// Kinds with no cheaper tier return `None` and can only be shed.
-    pub fn cheaper_tier(&self) -> Option<Request> {
-        match self {
-            Request::Saliency { image, class } => Some(Request::IntGrad {
-                baseline: Matrix::zeros(image.rows, image.cols),
-                image: image.clone(),
-                class: *class,
-            }),
-            _ => None,
-        }
-    }
 }
 
 impl RequestKind {
+    /// This kind's precision ladder, accuracy-first: index 0 is always
+    /// [`Tier::Exact`], later rungs are cheaper with a larger modeled
+    /// error ([`RequestKind::modeled_error`]).  Kinds whose output is
+    /// the product itself (classification logits, the distillation
+    /// solve) have no approximate contract and serve exact-only.
+    pub fn ladder(self) -> &'static [Tier] {
+        match self {
+            // drop the 2ⁿ table first via int8 width, then via
+            // sampling — cost falls and modeled error grows rung by
+            // rung (0 → 0.08 → 1/√m)
+            RequestKind::Shapley => &[Tier::Exact, Tier::Int8, Tier::Sampled],
+            // S/4 trapezoid steps
+            RequestKind::IntGrad => &[Tier::Exact, Tier::F32Fast],
+            // raw gradient heatmap, no fused FFT smoothing
+            RequestKind::Saliency => &[Tier::Exact, Tier::F32Fast],
+            RequestKind::Classify | RequestKind::Distill => &[Tier::Exact],
+        }
+    }
+
+    /// The documented analytic error bound of serving this kind at
+    /// `tier`, relative to the exact kernel (see
+    /// [`crate::xai::tiers`] for each rung's model); `None` when the
+    /// tier is not on this kind's ladder.
+    pub fn modeled_error(self, tier: Tier) -> Option<f32> {
+        match (self, tier) {
+            (_, Tier::Exact) => Some(0.0),
+            (RequestKind::Shapley, Tier::Int8) => Some(tiers::INT8_SHAPLEY_ERR),
+            (RequestKind::Shapley, Tier::Sampled) => {
+                Some(tiers::sampled_shapley_error(tiers::SAMPLED_M))
+            }
+            (RequestKind::IntGrad, Tier::F32Fast) => {
+                Some(tiers::reduced_ig_error(tiers::REDUCED_IG_STEPS))
+            }
+            (RequestKind::Saliency, Tier::F32Fast) => Some(tiers::RAW_SALIENCY_ERR),
+            _ => None,
+        }
+    }
+
+    /// The next rung down the ladder from `tier` whose modeled error
+    /// stays within the request's declared tolerance — the overload
+    /// degrade step.  `None` when `tier` is the last admissible rung
+    /// (the request can then only be shed).
+    pub fn next_rung(self, tier: Tier, max_error: f32) -> Option<Tier> {
+        let ladder = self.ladder();
+        let pos = ladder.iter().position(|&t| t == tier)?;
+        let next = *ladder.get(pos + 1)?;
+        let err = self.modeled_error(next)?;
+        (err <= max_error).then_some(next)
+    }
     /// All five kinds in a stable order.
     pub fn all() -> [RequestKind; 5] {
         [
@@ -171,9 +200,19 @@ pub struct Envelope {
     /// Admission control sheds (or degrades) a request whose deadline
     /// is provably unmeetable at submit time; `None` means "whenever".
     pub deadline: Option<Instant>,
-    /// Whether admission control rewrote this request to a cheaper
-    /// explanation tier ([`Request::cheaper_tier`]) to meet its
-    /// deadline.
+    /// The precision rung this request executes at.  Starts at
+    /// [`Tier::Exact`]; admission control and the flush re-check walk
+    /// it down [`RequestKind::ladder`] under pressure, never past a
+    /// rung whose modeled error exceeds [`Envelope::max_error`].
+    pub tier: Tier,
+    /// The client's declared error tolerance: the largest modeled
+    /// error ([`RequestKind::modeled_error`]) any rung serving this
+    /// request may carry.  `0.0` (the default) pins the request to
+    /// [`Tier::Exact`] — strict requests are never degraded, only
+    /// shed.
+    pub max_error: f32,
+    /// Whether overload control moved this request off
+    /// [`Tier::Exact`] to meet its deadline.
     pub degraded: bool,
 }
 
@@ -182,6 +221,7 @@ impl std::fmt::Debug for Envelope {
         f.debug_struct("Envelope")
             .field("id", &self.id)
             .field("kind", &self.request.kind())
+            .field("tier", &self.tier)
             .finish()
     }
 }
@@ -200,27 +240,60 @@ mod tests {
     }
 
     #[test]
-    fn only_saliency_has_a_cheaper_tier() {
-        let sal = Request::Saliency {
-            image: Matrix::zeros(4, 4),
-            class: 2,
-        };
-        // saliency degrades to IG on the same image and class (zero
-        // baseline), dropping the spectral-smoothing stages...
-        match sal.cheaper_tier() {
-            Some(Request::IntGrad { image, baseline, class }) => {
-                assert_eq!(image.rows, 4);
-                assert_eq!(baseline.rows, 4);
-                assert_eq!(class, 2);
+    fn ladders_start_exact_and_cheapen_monotonically() {
+        for kind in RequestKind::all() {
+            let ladder = kind.ladder();
+            assert_eq!(ladder[0], Tier::Exact);
+            // modeled error is defined at every rung and grows strictly
+            // down the ladder
+            let mut prev = -1.0f32;
+            for &t in ladder {
+                let err = kind.modeled_error(t).unwrap();
+                assert!(err > prev, "{kind:?} {t:?}: {err} !> {prev}");
+                prev = err;
             }
-            other => panic!("expected intgrad tier, got {other:?}"),
         }
-        // ...and the degraded tier itself bottoms out
-        assert!(sal.cheaper_tier().unwrap().cheaper_tier().is_none());
+        // off-ladder tiers have no contract
+        assert_eq!(RequestKind::Classify.modeled_error(Tier::Int8), None);
+        assert_eq!(RequestKind::IntGrad.modeled_error(Tier::Sampled), None);
+    }
+
+    #[test]
+    fn next_rung_respects_the_declared_tolerance() {
+        // strict requests (max_error = 0) never leave Exact
+        for kind in RequestKind::all() {
+            assert_eq!(kind.next_rung(Tier::Exact, 0.0), None);
+        }
+        // a loose Shapley tolerance admits int8, then sampling
+        let k = RequestKind::Shapley;
+        assert_eq!(k.next_rung(Tier::Exact, 0.1), Some(Tier::Int8));
+        assert_eq!(k.next_rung(Tier::Int8, 0.1), Some(Tier::Sampled));
+        assert_eq!(k.next_rung(Tier::Sampled, 0.1), None, "ladder bottoms out");
+        // a tolerance between the rungs stops the walk mid-ladder
+        let int8_err = k.modeled_error(Tier::Int8).unwrap();
+        let sampled_err = k.modeled_error(Tier::Sampled).unwrap();
+        assert!(int8_err < sampled_err);
+        assert_eq!(k.next_rung(Tier::Int8, int8_err), None);
+        // exact-only kinds can never degrade, whatever the tolerance
+        assert_eq!(RequestKind::Classify.next_rung(Tier::Exact, 1.0), None);
+        assert_eq!(RequestKind::Distill.next_rung(Tier::Exact, 1.0), None);
+        // IG and saliency have exactly one rung down
+        assert_eq!(
+            RequestKind::IntGrad.next_rung(Tier::Exact, 1.0),
+            Some(Tier::F32Fast)
+        );
+        assert_eq!(
+            RequestKind::Saliency.next_rung(Tier::Exact, 1.0),
+            Some(Tier::F32Fast)
+        );
+        assert_eq!(RequestKind::IntGrad.next_rung(Tier::F32Fast, 1.0), None);
+    }
+
+    #[test]
+    fn edges_are_stable() {
         let classify = Request::Classify {
             image: Matrix::zeros(2, 2),
         };
-        assert!(classify.cheaper_tier().is_none());
         assert_eq!(classify.edge(), 2);
         assert_eq!(
             Request::Shapley {

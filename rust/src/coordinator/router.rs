@@ -36,6 +36,7 @@ use crate::runtime::ArtifactRegistry;
 use crate::trace::{Op, OpTrace};
 use crate::xai::attribution::Attribution;
 use crate::xai::shapley;
+use crate::xai::tiers::{self, Tier};
 use crate::xai::workloads;
 use std::sync::OnceLock;
 
@@ -318,6 +319,72 @@ pub fn profile_for(kind: RequestKind, b: usize, n: usize) -> OpTrace {
     t
 }
 
+/// [`profile_for`] at a precision rung: the analytic op profile of a
+/// `(kind, tier, batch-size, edge)` group, in the same first-order
+/// conventions the native tiered kernels record —
+///
+/// * Shapley [`Tier::Int8`] — the T·V GEMM as one
+///   [`Op::BatchedMatmulInt8`] (double-rate MACs, int8 traffic,
+///   scaled joules on every device model);
+/// * Shapley [`Tier::Sampled`] — the gathered-schedule GEMM:
+///   `SAMPLED_M·(n+1)` coalition columns instead of 2ⁿ, plus the
+///   gather's elementwise pass;
+/// * IntGrad [`Tier::F32Fast`] — the exact profile at
+///   [`tiers::REDUCED_IG_STEPS`] trapezoid steps (S/4 gradient
+///   evaluations);
+/// * Saliency [`Tier::F32Fast`] — the raw gradient heatmap: the
+///   `ModelGrad` stage alone, no fused FFT smoothing.
+///
+/// [`Tier::Exact`] — and any (kind, tier) pair off the kind's ladder,
+/// which the selection rule never emits — prices exactly as
+/// [`profile_for`], so exact serving is bit-for-bit the pre-ladder
+/// router.
+pub fn profile_for_tier(kind: RequestKind, tier: Tier, b: usize, n: usize) -> OpTrace {
+    let b = b.max(1);
+    let mut t = OpTrace::new();
+    match (kind, tier) {
+        (RequestKind::Shapley, Tier::Int8) => {
+            let m = n.min(shapley::MAX_CACHED_PLAYERS);
+            t.push(Op::BatchedMatmulInt8 {
+                b,
+                m,
+                k: 1usize << m,
+                n: 1,
+            });
+        }
+        (RequestKind::Shapley, Tier::Sampled) => {
+            let m = n.min(shapley::MAX_CACHED_PLAYERS);
+            let k = tiers::SAMPLED_M * (m + 1);
+            t.push(Op::Elementwise { elems: k * b });
+            t.push(Op::BatchedMatmul { b, m, k, n: 1 });
+        }
+        (RequestKind::IntGrad, Tier::F32Fast) => {
+            let d = n * n;
+            let steps = tiers::REDUCED_IG_STEPS;
+            t.push(Op::ModelGrad {
+                count: b * (steps + 1),
+                flops_per_grad: 4 * d as u64,
+            });
+            t.push(Op::BatchedMatmul {
+                b,
+                m: 1,
+                k: steps + 1,
+                n: d,
+            });
+            t.push(Op::Elementwise { elems: b * d });
+        }
+        (RequestKind::Saliency, Tier::F32Fast) => {
+            let d = n * n;
+            t.push(Op::ModelGrad {
+                count: b,
+                flops_per_grad: 4 * d as u64,
+            });
+        }
+        _ => return profile_for(kind, b, n),
+    }
+    t
+}
+
 /// How many copies of [`profile_for`]'s trace one batch of `b`
 /// requests executes.  Per-request pipelines (distillation) run the
 /// profile once per member; the fused kinds already encode the batch
@@ -401,11 +468,13 @@ pub fn preferred_batch(kind: RequestKind, lanes: &[DeviceKind], cap: usize) -> u
 
 /// Analytic op profile of one assembled batch.  Batches group by
 /// request KIND only, so same-kind members may differ in size
-/// (different Shapley player counts, different distill edges): the
-/// profile prices the batch at its LARGEST characteristic edge —
-/// conservative, so a mixed batch cannot masquerade as tiny work and
-/// land on a lane that will stall on its big members.  Empty batches
-/// profile as an empty trace.
+/// (different Shapley player counts, different distill edges) and —
+/// since the precision ladder — in tier: the profile prices the batch
+/// at its LARGEST characteristic edge and its DEAREST (closest to
+/// exact) rung present — conservative, so a mixed batch cannot
+/// masquerade as tiny or cheap work and land on a lane that will stall
+/// on its big members.  An all-exact batch prices bit-for-bit as
+/// before the ladder.  Empty batches profile as an empty trace.
 pub fn batch_profile(batch: &Batch) -> OpTrace {
     let b = batch.envelopes.len();
     let n = batch
@@ -422,7 +491,14 @@ pub fn batch_profile(batch: &Batch) -> OpTrace {
     let Some(n) = n else {
         return OpTrace::new();
     };
-    profile_for(batch.kind, b, n)
+    let ladder = batch.kind.ladder();
+    let tier = batch
+        .envelopes
+        .iter()
+        .map(|e| e.tier)
+        .min_by_key(|t| ladder.iter().position(|l| l == t).unwrap_or(0))
+        .unwrap_or(Tier::Exact);
+    profile_for_tier(batch.kind, tier, b, n)
 }
 
 /// The cached placement cost models, one per device kind.  A lane is
@@ -739,7 +815,10 @@ pub fn execute_batch(backend: &ExecBackend, batch: &Batch) -> Vec<Result<Respons
     }
 }
 
-/// Execute one batch against a compiled registry.
+/// Execute one batch against a compiled registry.  The registry holds
+/// exact executables only, so tiered envelopes serve at
+/// [`Tier::Exact`] accuracy here — a request is never answered *less*
+/// accurately than its assigned rung promised.
 pub fn execute_batch_pjrt(reg: &ArtifactRegistry, batch: &Batch) -> Vec<Result<Response>> {
     match batch.kind {
         crate::coordinator::request::RequestKind::Classify => classify_batch(reg, batch),

@@ -19,6 +19,7 @@ use crate::coordinator::request::{Envelope, Request, Response};
 use crate::coordinator::router;
 use crate::error::{Error, Result};
 use crate::hwsim::DeviceKind;
+use crate::xai::tiers::Tier;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -72,10 +73,12 @@ pub struct CoordinatorConfig {
     /// `false` keeps the configured policy's depths untouched.
     pub placement_batching: bool,
     /// Overload policy: when a deadline is provably unmeetable at
-    /// admission, `true` (the default) first tries the request's
-    /// cheaper explanation tier
-    /// ([`crate::coordinator::request::Request::cheaper_tier`]) before
-    /// shedding; `false` sheds immediately.
+    /// admission, `true` (the default) walks the request down its
+    /// precision ladder
+    /// ([`crate::coordinator::request::RequestKind::ladder`]) rung by
+    /// rung — never past a rung whose modeled error exceeds the
+    /// request's declared tolerance — before shedding; `false` sheds
+    /// immediately.
     pub degrade_under_overload: bool,
     /// Deadline applied to every [`Coordinator::submit`] that does not
     /// carry its own (via [`Coordinator::submit_with_deadline`]).
@@ -144,18 +147,21 @@ pub struct CoordinatorStats {
     /// unmeetable on every live lane and no cheaper tier could save
     /// them.
     pub shed: u64,
-    /// Requests rewritten to their cheaper explanation tier at
-    /// admission to meet their deadline (smoothed saliency → plain
-    /// IG heatmap).
+    /// Requests walked down their precision ladder at admission to
+    /// meet their deadline (within their declared `max_error`).
     pub degraded: u64,
     /// Requests shed at batch flush: the queue-position completion
     /// estimate on the chosen lane blew the deadline *after* admission
     /// had accepted them (load arrived behind them), and no cheaper
     /// tier could save them.
     pub late_shed: u64,
-    /// Requests rewritten to their cheaper tier at batch flush by the
-    /// same queue-position re-check.
+    /// Requests walked a rung further down their precision ladder at
+    /// batch flush by the same queue-position re-check.
     pub late_degraded: u64,
+    /// Completed requests per precision rung, indexed like
+    /// [`Tier::ALL`] (exact / f32fast / int8 / sampled) — the served
+    /// accuracy mix.
+    pub tiers: [u64; 4],
     /// Mean requests per executed batch (batching efficiency).
     pub mean_batch_size: f64,
     /// Cross-lane collective jobs dispatched (grouped big requests).
@@ -289,12 +295,20 @@ impl Coordinator {
         self.submit_with_deadline(request, self.default_deadline)
     }
 
-    /// Estimated completion (cost-model seconds) of `request` on its
-    /// best live lane: queue-ahead plus one single-request service,
-    /// scaled by the lane's measured-placement correction.
-    fn admission_estimate_s(&self, request: &Request) -> f64 {
+    /// Submit with an explicit error tolerance and the configured
+    /// default deadline: under pressure the request may serve from any
+    /// ladder rung whose modeled error is within `max_error`.
+    pub fn submit_with_tolerance(&self, request: Request, max_error: f32) -> Result<Pending> {
+        self.submit_with_slo(request, self.default_deadline, max_error)
+    }
+
+    /// Estimated completion (cost-model seconds) of `request` served at
+    /// `tier` on its best live lane: queue-ahead plus one
+    /// single-request service, scaled by the lane's measured-placement
+    /// correction.
+    fn admission_estimate_s(&self, request: &Request, tier: Tier) -> f64 {
         let kind = request.kind();
-        let profile = router::profile_for(kind, 1, request.edge());
+        let profile = router::profile_for_tier(kind, tier, 1, request.edge());
         let repeat = router::profile_repeat(kind, 1) as f64;
         let mut backlogs = self.metrics.device_backlogs();
         backlogs.resize(self.lane_kinds.len(), 0);
@@ -314,44 +328,61 @@ impl Coordinator {
             .fold(f64::INFINITY, f64::min)
     }
 
-    /// Submit with an explicit deadline (`None` = no SLO).  Admission
-    /// control prices the request's best-lane completion estimate
-    /// against the deadline: a provably unmeetable request is first
-    /// rewritten to its cheaper explanation tier
-    /// ([`Request::cheaper_tier`], when
-    /// [`CoordinatorConfig::degrade_under_overload`] allows), and shed
-    /// with a synchronous error when even that cannot meet the SLO.
+    /// Submit with an explicit deadline (`None` = no SLO) and the
+    /// strict default tolerance (`max_error` = 0): the request is
+    /// pinned to [`Tier::Exact`] — under pressure it can only be shed,
+    /// never degraded.
     pub fn submit_with_deadline(
         &self,
         request: Request,
         deadline: Option<Duration>,
     ) -> Result<Pending> {
+        self.submit_with_slo(request, deadline, 0.0)
+    }
+
+    /// Submit with both SLO knobs: an explicit deadline (`None` = no
+    /// SLO) and an error tolerance.  Admission control prices the
+    /// request's best-lane completion estimate against the deadline: a
+    /// provably unmeetable request walks down its kind's precision
+    /// ladder ([`crate::coordinator::request::RequestKind::ladder`])
+    /// rung by rung — each rung priced on its own op profile, never
+    /// past a rung whose modeled error exceeds `max_error` — and is
+    /// shed with a synchronous error when no admissible rung can meet
+    /// the SLO.
+    pub fn submit_with_slo(
+        &self,
+        request: Request,
+        deadline: Option<Duration>,
+        max_error: f32,
+    ) -> Result<Pending> {
         self.metrics.record_submit();
-        let mut request = request;
+        let mut tier = Tier::Exact;
         let mut degraded = false;
         if let Some(slo) = deadline {
             let slo_s = slo.as_secs_f64();
-            if self.admission_estimate_s(&request) > slo_s {
-                let cheaper = if self.degrade_under_overload {
-                    request.cheaper_tier()
-                } else {
-                    None
-                };
-                match cheaper {
-                    Some(tier) if self.admission_estimate_s(&tier) <= slo_s => {
-                        request = tier;
+            if self.admission_estimate_s(&request, tier) > slo_s {
+                let kind = request.kind();
+                let mut fits = false;
+                if self.degrade_under_overload {
+                    while let Some(next) = kind.next_rung(tier, max_error) {
+                        tier = next;
                         degraded = true;
-                        self.metrics.record_degraded();
-                    }
-                    _ => {
-                        self.metrics.record_shed();
-                        return Err(Error::Coordinator(format!(
-                            "shed at admission: {} deadline {:.1}ms unmeetable on every lane",
-                            request.kind().name(),
-                            slo_s * 1e3
-                        )));
+                        if self.admission_estimate_s(&request, tier) <= slo_s {
+                            fits = true;
+                            break;
+                        }
                     }
                 }
+                if !fits {
+                    self.metrics.record_shed();
+                    return Err(Error::Coordinator(format!(
+                        "shed at admission: {} deadline {:.1}ms unmeetable on every lane \
+                         within tolerance {max_error}",
+                        kind.name(),
+                        slo_s * 1e3
+                    )));
+                }
+                self.metrics.record_degraded();
             }
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -362,6 +393,8 @@ impl Coordinator {
             reply: tx,
             enqueued_at: Instant::now(),
             deadline: deadline.map(|d| Instant::now() + d),
+            tier,
+            max_error,
             degraded,
         };
         self.ingress
@@ -395,6 +428,7 @@ impl Coordinator {
             degraded: self.metrics.degraded(),
             late_shed: self.metrics.late_shed(),
             late_degraded: self.metrics.late_degraded(),
+            tiers: self.metrics.tier_served(),
             mean_batch_size: self.metrics.mean_batch_size(),
             collective_jobs: self.metrics.collective_jobs(),
             replans: self.metrics.replans(),
@@ -473,10 +507,11 @@ impl Drop for Coordinator {
 /// against the *queue-position* completion estimate on the chosen
 /// lane — admission priced an empty-queue best case, and load that
 /// arrived behind a request can make its SLO unmeetable by the time
-/// its batch is placed.  Unmeetable envelopes degrade to their
-/// cheaper tier (when `degrade` allows and they haven't already) or
-/// are answered with a synchronous shed error instead of burning lane
-/// time on a reply that will arrive too late.
+/// its batch is placed.  Unmeetable envelopes step one rung further
+/// down their precision ladder (when `degrade` allows and a rung
+/// within their tolerance remains) or are answered with a synchronous
+/// shed error instead of burning lane time on a reply that will
+/// arrive too late.
 #[allow(clippy::too_many_arguments)]
 fn batcher_loop(
     ingress: BoundedQueue<Envelope>,
@@ -503,9 +538,10 @@ fn batcher_loop(
     let mut alive: Vec<bool> = vec![true; work.len()];
     let mut place = |batch: Batch| -> std::result::Result<(), ()> {
         // The flush-time deadline re-check below can split a degraded
-        // sub-batch (cheaper-tier rewrites are a *different* request
-        // kind) off the batch being placed; a closure cannot recurse,
-        // so the whole placement path runs over an explicit worklist.
+        // sub-batch (down-rung rewrites re-price and re-check on their
+        // own pass) off the batch being placed; a closure cannot
+        // recurse, so the whole placement path runs over an explicit
+        // worklist.
         let mut pending = vec![batch];
         'next_batch: while let Some(batch) = pending.pop() {
             // Multi-host interception first: with a host plane
@@ -578,9 +614,10 @@ fn batcher_loop(
                 // completion past the SLO.  Estimate completion as
                 // (queue position) × (this batch's corrected service
                 // time) on the chosen lane and resolve unmeetable
-                // envelopes now — degrade to the cheaper tier when
-                // allowed, otherwise shed with a synchronous error —
-                // instead of burning lane time on a late reply.
+                // envelopes now — walk one rung further down the
+                // precision ladder when a rung within the declared
+                // tolerance remains, otherwise shed with a synchronous
+                // error — instead of burning lane time on a late reply.
                 if !rechecked {
                     rechecked = true;
                     let queued = backlogs[d].saturating_add(1);
@@ -600,14 +637,14 @@ fn batcher_loop(
                                 keep.push(env);
                                 continue;
                             }
-                            let cheaper = if degrade && !env.degraded {
-                                env.request.cheaper_tier()
+                            let cheaper = if degrade {
+                                env.request.kind().next_rung(env.tier, env.max_error)
                             } else {
                                 None
                             };
                             match cheaper {
                                 Some(tier) => {
-                                    env.request = tier;
+                                    env.tier = tier;
                                     env.degraded = true;
                                     metrics.record_late_degraded();
                                     downgraded.push(env);

@@ -228,6 +228,7 @@ fn executor_loop(
             let queue_wait = latency.saturating_sub(started.elapsed());
             if ok {
                 metrics.record_complete(env.request.kind(), latency, queue_wait);
+                metrics.record_tier(env.tier);
             } else {
                 metrics.record_failure();
             }

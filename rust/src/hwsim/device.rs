@@ -75,11 +75,21 @@ pub trait Device: Send + Sync {
     /// `units` cores (the `tf.cross_replica_sum` of §III-E).
     fn merge_cost_s(&self, op: &Op, units: usize) -> f64;
 
+    /// Per-op scale on the device's dynamic (busy) power — the energy
+    /// lever of reduced-precision pipes.  The default `1.0` keeps every
+    /// existing replay bit-identical; devices override it for int8 ops
+    /// ([`Op::BatchedMatmulInt8`]), where each MAC costs a fraction of
+    /// an fp32 MAC's joules
+    /// ([`crate::hwsim::quantization::energy_pj`]).
+    fn op_energy_scale(&self, _op: &Op) -> f64 {
+        1.0
+    }
+
     /// Replay a full trace on `units` cores.
     fn replay_with_units(&self, trace: &OpTrace, units: usize) -> CostReport {
         let mut time = 0.0f64;
         let mut overhead = 0.0f64;
-        let mut busy = 0.0f64;
+        let mut busy_energy = 0.0f64;
         for op in &trace.ops {
             let c = self.op_cost(op, units);
             let merge = if units > 1 {
@@ -89,9 +99,12 @@ pub trait Device: Send + Sync {
             };
             time += c.total() + merge;
             overhead += c.overhead_s + merge;
-            busy += c.busy_s;
+            // busy energy accumulates per op so reduced-precision ops
+            // can draw scaled dynamic power (default scale 1.0 keeps
+            // the classic busy_power·busy_s accounting exactly)
+            busy_energy += self.busy_power_w() * c.busy_s * self.op_energy_scale(op);
         }
-        let energy = self.busy_power_w() * busy + self.idle_power_w() * overhead;
+        let energy = busy_energy + self.idle_power_w() * overhead;
         let energy_total = energy + self.host_power_w() * time;
         CostReport {
             time_s: time,

@@ -70,6 +70,9 @@ impl Default for GpuSim {
 impl GpuSim {
     fn efficiency(&self, op: &Op) -> f64 {
         let base = match op {
+            // dp4a/IMMA int8 pipes retire twice the MACs of fp32 per
+            // cycle — modeled as doubled efficiency, capped at peak
+            Op::BatchedMatmulInt8 { .. } => (2.0 * self.matmul_eff).min(1.0),
             Op::Fft2 { .. } => self.divergent_eff,
             // batched FFT is still branchy per line, but the batch grid
             // keeps more SMs resident between divergent stages
@@ -142,6 +145,15 @@ impl Device for GpuSim {
         // merging partial results costs one pass over output bytes at
         // device bandwidth (device-wide reduction).
         op.output_bytes() as f64 / (2.0 * self.mem_bw)
+    }
+
+    fn op_energy_scale(&self, op: &Op) -> f64 {
+        match op {
+            // int8 MAC energy (energy_pj: 0.23 vs 4.6 pJ) blended with
+            // the board's fixed datapath costs.
+            Op::BatchedMatmulInt8 { .. } => 0.25,
+            _ => 1.0,
+        }
     }
 }
 

@@ -491,6 +491,11 @@ impl DevicePool {
             flops: trace.total_flops(),
             ..PoolReport::default()
         };
+        // Joules the energy accounting below over-charges for
+        // reduced-precision ops (it bills aggregate busy time at full
+        // busy power); exactly 0.0 for traces without such ops, so the
+        // classic numbers are untouched.
+        let mut precision_discount_j = 0.0f64;
         for op in &trace.ops {
             match *op {
                 Op::ShardedFft2 { m, n, parts } => {
@@ -589,17 +594,23 @@ impl DevicePool {
                     rep.compute_s += c.busy_s;
                     rep.overhead_s += c.overhead_s;
                     rep.per_device_busy_s[0] += c.busy_s;
+                    let scale = self.devices[0].op_energy_scale(op);
+                    if scale != 1.0 {
+                        precision_discount_j +=
+                            self.devices[0].busy_power_w() * c.busy_s * (1.0 - scale);
+                    }
                 }
             }
         }
         // Energy: each core pays busy power for its own work and idle
-        // power while the rest of the replay runs.
+        // power while the rest of the replay runs; reduced-precision
+        // ops hand back the joules their cheaper MACs never drew.
         let mut energy = 0.0;
         for (i, d) in self.devices.iter().enumerate() {
             let busy = rep.per_device_busy_s[i];
             energy += d.busy_power_w() * busy + d.idle_power_w() * (rep.time_s - busy).max(0.0);
         }
-        rep.energy_j = energy;
+        rep.energy_j = energy - precision_discount_j;
         rep
     }
 

@@ -80,6 +80,10 @@ impl TpuSim {
             // through it — ONE fill/drain instead of b, which is the
             // §III-E batching speedup the paper measures.
             Op::BatchedMatmul { b, m, k, n } => self.mxu_matmul_s(m, k, b * n),
+            // int8 double-pumps the systolic array (two 8-bit MACs per
+            // PE per cycle — the TPUv1 heritage mode): same streaming
+            // schedule at twice the rate.
+            Op::BatchedMatmulInt8 { b, m, k, n } => self.mxu_matmul_s(m, k, b * n) / 2.0,
             // Sharded matmul: full problem time here; `op_cost` divides
             // by the op's own part count (pool replay prices the
             // per-core bands — and their per-core fill/drain — itself).
@@ -166,6 +170,17 @@ impl Device for TpuSim {
         // ring all-reduce moves 2·(p-1)/p of the *output* bytes.
         let frac = 2.0 * (units as f64 - 1.0) / units as f64;
         op.output_bytes() as f64 * frac / self.ici_bw / units as f64
+    }
+
+    fn op_energy_scale(&self, op: &Op) -> f64 {
+        match op {
+            // the paper's quantization margin: int8 MACs at ~1/20 the
+            // fp32 joules (energy_pj), and the MXU — unlike a vector
+            // datapath — is almost all MACs, so the blended scale
+            // approaches the raw ratio.
+            Op::BatchedMatmulInt8 { .. } => 0.1,
+            _ => 1.0,
+        }
     }
 }
 

@@ -32,6 +32,16 @@
 //!   `b×` the single [`Op::Fft2`] (the data is not shared); the fused
 //!   win is one dispatch instead of `b` and a full-width device grid,
 //!   which is how the device models price it.
+//! * [`Op::BatchedMatmulInt8`]`{ b, m, k, n }` — the int8-quantized
+//!   form of [`Op::BatchedMatmul`] (the serving ladder's Int8 tier,
+//!   see [`crate::xai::tiers`]).  `flops()` counts the same
+//!   `b·2·m·k·n`, now **integer MACs** (int8 multiply, i32
+//!   accumulate); bytes count int8 operands at 1 byte/element — the
+//!   shared left operand once, `b` right operands once each — plus the
+//!   rescaled f32 output at 4 bytes/element.  Device models price the
+//!   cheaper MAC through `op_cost` (double-rate int8 pipes) and the
+//!   cheaper joule through `Device::op_energy_scale` (the
+//!   [`crate::hwsim::quantization::energy_pj`] INT8/FP32 ratio).
 //!
 //! # Sharded-op conventions (Algorithm 1 across a device pool)
 //!
@@ -159,6 +169,21 @@ pub enum Op {
     /// batch-invariant left operand (see the module docs for the
     /// FLOP/byte conventions).
     BatchedMatmul {
+        /// Independent problems fused into the dispatch.
+        b: usize,
+        /// Rows of the shared left operand.
+        m: usize,
+        /// Shared inner (reduction) dimension.
+        k: usize,
+        /// Columns of each problem's right operand.
+        n: usize,
+    },
+    /// The int8-quantized form of [`Op::BatchedMatmul`]: `b` fused
+    /// (m×k)·(k×n) products with int8 operands, i32 accumulation and a
+    /// rescaled f32 output (see the module docs for the FLOP/byte
+    /// conventions and [`crate::xai::tiers`] for the serving tier that
+    /// records it).
+    BatchedMatmulInt8 {
         /// Independent problems fused into the dispatch.
         b: usize,
         /// Rows of the shared left operand.
@@ -338,6 +363,10 @@ impl Op {
             // all b problems do full GEMM work — fusing saves traffic
             // and dispatch, never arithmetic
             Op::BatchedMatmul { b, m, k, n } => b as u64 * 2 * (m * k * n) as u64,
+            // same MAC count as the f32 form — quantization changes the
+            // width of each MAC (priced by the device models), not how
+            // many there are
+            Op::BatchedMatmulInt8 { b, m, k, n } => b as u64 * 2 * (m * k * n) as u64,
             Op::BatchedFft2 { b, m, n } => b as u64 * Op::Fft2 { m, n }.flops(),
             // 4 real matmuls + 2 adds over the output
             Op::CMatmul { m, k, n } => 8 * (m * k * n) as u64 + 2 * (m * n) as u64,
@@ -385,6 +414,11 @@ impl Op {
             // outputs once per batch member (module-doc convention)
             Op::BatchedMatmul { b, m, k, n } => {
                 f * (m * k + b * (k * n + m * n)) as u64
+            }
+            // int8 operands at 1 byte/element (shared left once, right
+            // per member); the rescaled f32 output at 4 bytes/element
+            Op::BatchedMatmulInt8 { b, m, k, n } => {
+                (m * k + b * k * n) as u64 + f * (b * m * n) as u64
             }
             Op::BatchedFft2 { b, m, n } => b as u64 * Op::Fft2 { m, n }.bytes(),
             Op::CMatmul { m, k, n } => 2 * f * (m * k + k * n + m * n) as u64,
@@ -434,6 +468,8 @@ impl Op {
         match *self {
             Op::Matmul { m, n, .. } => f * (m * n) as u64,
             Op::BatchedMatmul { b, m, n, .. } => f * (b * m * n) as u64,
+            // output is dequantized back to f32
+            Op::BatchedMatmulInt8 { b, m, n, .. } => f * (b * m * n) as u64,
             Op::BatchedFft2 { b, m, n } => 2 * f * (b * m * n) as u64,
             Op::CMatmul { m, n, .. } => 2 * f * (m * n) as u64,
             Op::Dft2Matmul { m, n } => 2 * f * (m * n) as u64,
@@ -464,6 +500,7 @@ impl Op {
             self,
             Op::Matmul { .. }
                 | Op::BatchedMatmul { .. }
+                | Op::BatchedMatmulInt8 { .. }
                 | Op::ShardedMatmul { .. }
                 | Op::ShardedMatmulGrouped { .. }
                 | Op::CMatmul { .. }
@@ -653,6 +690,31 @@ impl NativeEngine {
             n: stacked.cols / b,
         });
         a.matmul(stacked)
+    }
+
+    /// Fused batched **int8** matmul — the quantized twin of
+    /// [`NativeEngine::batched_matmul`]: one int8 GEMM with i32
+    /// accumulation over the column-concatenated right operands,
+    /// rescaled to f32 on output.  Records [`Op::BatchedMatmulInt8`].
+    pub fn batched_matmul_int8(
+        &mut self,
+        a: &crate::hwsim::quantization::Quantized,
+        stacked: &crate::hwsim::quantization::Quantized,
+        b: usize,
+    ) -> Matrix {
+        assert!(b > 0, "batch must be non-empty");
+        assert_eq!(
+            stacked.cols % b,
+            0,
+            "stacked right operand must hold b equal column blocks"
+        );
+        self.trace.push(Op::BatchedMatmulInt8 {
+            b,
+            m: a.rows,
+            k: a.cols,
+            n: stacked.cols / b,
+        });
+        crate::hwsim::quantization::matmul_int8(a, stacked)
     }
 
     /// Batched real-input forward 2-D FFT of `b` same-shape matrices

@@ -19,6 +19,7 @@ pub mod integrated_gradients;
 pub mod quantized;
 pub mod saliency;
 pub mod shapley;
+pub mod tiers;
 pub mod workloads;
 
 pub use attribution::Attribution;

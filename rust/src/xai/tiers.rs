@@ -1,0 +1,355 @@
+//! The serving precision ladder: approximate kernels with priced,
+//! analytic error models (ApproXAI's accuracy–energy dial).
+//!
+//! Every explanation workload serves at one of four [`Tier`]s.  A tier
+//! is a *contract*: a concrete kernel, a documented analytic error
+//! bound relative to the exact kernel, and a trace convention so the
+//! [`crate::hwsim`] cost **and** energy models can price the
+//! (workload, tier, device-kind) cell.  The coordinator walks the
+//! ladder under overload — each rung down must keep its modeled error
+//! within the request's declared tolerance (`max_error`), so
+//! degradation is a priced precision choice, never a silent one.
+//!
+//! # Rungs and error models
+//!
+//! * **Exact** — today's fused kernels, bit-for-bit unchanged.
+//!   Modeled error 0.
+//! * **F32Fast** — same arithmetic width, less work:
+//!   * Integrated gradients at [`REDUCED_IG_STEPS`] = S/4 trapezoid
+//!     steps.  The composite trapezoid rule's error is `O(1/S²)` in
+//!     the step count, so the modeled bound is
+//!     [`reduced_ig_error`]`(S) = TRAP_C / S²` (relative to the
+//!     attribution scale; `TRAP_C` absorbs the path-curvature
+//!     constant, calibrated against the template model).
+//!   * Saliency without the fused FFT smoothing stages (the raw
+//!     gradient heatmap).  The modeled bound [`RAW_SALIENCY_ERR`] is a
+//!     calibrated constant: mean absolute deviation of the raw vs the
+//!     smoothed map, normalized by the smoothed map's range, measured
+//!     on the template model and pinned with headroom.
+//! * **Int8** — the Shapley GEMM φ = T·V with both operands
+//!   symmetrically quantized to int8 (promoted from
+//!   [`crate::xai::quantized`] into the fused batch path, recorded as
+//!   [`crate::trace::Op::BatchedMatmulInt8`]).  Symmetric per-tensor
+//!   quantization has per-element error ≤ scale/2 with
+//!   `scale = max|x|/127`; through the T·V contraction the worst-case
+//!   relative error stays within [`INT8_SHAPLEY_ERR`], pinned by the
+//!   measured oracle [`crate::xai::quantized::shapley_int8_error`].
+//! * **Sampled** — permutation-sampling Shapley over [`SAMPLED_M`]
+//!   batch-shared seeded permutations instead of the full 2ⁿ value
+//!   table, fused like [`crate::xai::shapley::shapley_batch_fused`]
+//!   into one GEMM.  The estimator is unbiased (each permutation's
+//!   marginal-contribution vector has expectation φ), and the
+//!   m-sample mean's deviation scales as `O(1/√m)` of the game's
+//!   value range: [`sampled_shapley_error`]`(m) = 1/√m`.
+//!
+//! # Pricing convention
+//!
+//! Approximate kernels record the same op vocabulary the exact ones
+//! do — smaller shapes ([`Sampled`](Tier::Sampled): `m·(n+1)` gathered
+//! coalitions instead of 2ⁿ; F32Fast IG: S/4 gradient evaluations) or
+//! cheaper widths ([`Int8`](Tier::Int8):
+//! [`crate::trace::Op::BatchedMatmulInt8`], priced by the device
+//! models at double MAC rate and at the
+//! [`crate::hwsim::quantization::energy_pj`] INT8/FP32 energy ratio
+//! through `Device::op_energy_scale`).  `fig9_perfwatt` sweeps the
+//! ladder and commits the resulting accuracy-vs-energy frontier as
+//! `sim_tier_*` baseline rows.
+
+use crate::hwsim::quantization;
+use crate::linalg::matrix::Matrix;
+use crate::trace::{NativeEngine, Op};
+use crate::util::rng::Rng;
+use crate::xai::shapley::{weight_matrix_cached, ValueTable};
+
+/// One rung of the serving precision ladder.  Order is "accuracy
+/// first": [`Tier::Exact`] is the top rung every request starts at;
+/// the coordinator only steps down under pressure, and only while the
+/// rung's modeled error stays within the request's tolerance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Tier {
+    /// The exact fused kernel — bit-for-bit today's outputs.
+    #[default]
+    Exact,
+    /// Full f32 arithmetic, reduced work (S/4 IG steps, unsmoothed
+    /// saliency).
+    F32Fast,
+    /// int8-quantized GEMM with i32 accumulation (Shapley φ = T·V).
+    Int8,
+    /// Seeded permutation-sampling Shapley ([`SAMPLED_M`] samples
+    /// instead of the 2ⁿ table).
+    Sampled,
+}
+
+impl Tier {
+    /// Every tier, in ladder (accuracy-first) order — indexable by
+    /// [`Tier::index`] for per-tier counters.
+    pub const ALL: [Tier; 4] = [Tier::Exact, Tier::F32Fast, Tier::Int8, Tier::Sampled];
+
+    /// Stable short name for stats lines and bench row ids.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Exact => "exact",
+            Tier::F32Fast => "f32fast",
+            Tier::Int8 => "int8",
+            Tier::Sampled => "sampled",
+        }
+    }
+
+    /// Position in [`Tier::ALL`] (counter index).
+    pub fn index(self) -> usize {
+        match self {
+            Tier::Exact => 0,
+            Tier::F32Fast => 1,
+            Tier::Int8 => 2,
+            Tier::Sampled => 3,
+        }
+    }
+}
+
+/// Permutation samples the Sampled Shapley rung draws — chosen so the
+/// rung is decisively cheaper than the 2ⁿ table at serving sizes
+/// (`m·(n+1) = 1920` gathered coalitions vs 16384 at n = 14) while its
+/// `1/√m ≈ 0.088` modeled error stays inside a sub-0.1 tolerance.
+pub const SAMPLED_M: usize = 128;
+
+/// Trapezoid steps of the F32Fast integrated-gradients rung: S/4 of
+/// the exact path's `coordinator::native::IG_STEPS` = 32.
+pub const REDUCED_IG_STEPS: usize = 8;
+
+/// Curvature constant of the reduced-IG trapezoid bound
+/// ([`reduced_ig_error`]): the composite trapezoid rule over S steps
+/// errs by `(b−a)³·max|f″|/(12·S²)`; `TRAP_C` absorbs the path length
+/// and the template model's curvature, calibrated with headroom.
+pub const TRAP_C: f32 = 2.0;
+
+/// Modeled relative error of the Int8 Shapley rung — symmetric
+/// per-tensor int8 quantization of both GEMM operands.  Pinned by the
+/// measured oracle [`crate::xai::quantized::shapley_int8_error`] in
+/// `tests/prop_tiers.rs`.
+pub const INT8_SHAPLEY_ERR: f32 = 0.08;
+
+/// Modeled relative error of the F32Fast saliency rung (raw gradient
+/// heatmap, no fused FFT smoothing), as mean |raw − smoothed| over the
+/// smoothed map's range — a calibrated template-model constant, pinned
+/// with headroom by `tests/prop_tiers.rs`.
+pub const RAW_SALIENCY_ERR: f32 = 0.75;
+
+/// Modeled relative error of m-sample permutation Shapley: the
+/// unbiased estimator's deviation scales as `1/√m` of the game's value
+/// range.
+pub fn sampled_shapley_error(m: usize) -> f32 {
+    1.0 / (m.max(1) as f32).sqrt()
+}
+
+/// Modeled relative error of S-step trapezoid integrated gradients:
+/// `TRAP_C / S²` (second-order accurate in the step count).
+pub fn reduced_ig_error(steps: usize) -> f32 {
+    TRAP_C / (steps.max(1) as f32).powi(2)
+}
+
+/// The batch-shared coalition schedule of the Sampled rung: `samples`
+/// seeded permutations of `n` players, each expanded to its n+1 nested
+/// prefix-coalition bitmasks (∅ ⊂ … ⊂ N).
+fn prefix_masks(n: usize, samples: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut masks = Vec::with_capacity(samples * (n + 1));
+    for _ in 0..samples {
+        rng.shuffle(&mut order);
+        let mut s = 0usize;
+        masks.push(s);
+        for &i in &order {
+            s |= 1 << i;
+            masks.push(s);
+        }
+    }
+    masks
+}
+
+/// Fused batched **sampled** Shapley — the Sampled rung's kernel.
+///
+/// All games share one seeded schedule of `samples` permutations (the
+/// batch-invariant structure, exactly like the exact path's shared T):
+/// the ±1/m marginal-contribution weights form an
+/// `n × samples·(n+1)` matrix Ŵ, the games' values at the schedule's
+/// prefix coalitions gather into a `samples·(n+1) × B` matrix V̂
+/// (recorded as an [`Op::Elementwise`] gather), and φ̂ = Ŵ·V̂ is ONE
+/// fused GEMM ([`Op::BatchedMatmul`]) — `m·(n+1)` inner dimension
+/// instead of 2ⁿ.  Per game the result equals m-permutation sampling
+/// with those orders; across seeds it is an unbiased estimator of
+/// [`crate::xai::shapley::shapley_exact`] with `O(1/√m)` deviation
+/// ([`sampled_shapley_error`]).  Returns n×B.
+pub fn shapley_batch_sampled(
+    eng: &mut NativeEngine,
+    games: &[ValueTable],
+    samples: usize,
+    seed: u64,
+) -> Matrix {
+    assert!(!games.is_empty());
+    assert!(samples > 0, "need at least one permutation sample");
+    let n = games[0].n;
+    assert!(games.iter().all(|g| g.n == n));
+    let masks = prefix_masks(n, samples, seed);
+    let cols = masks.len(); // samples·(n+1)
+    let inv_m = 1.0 / samples as f32;
+    // Ŵ: row i gets +1/m at the prefix that adds player i, −1/m at the
+    // prefix just before it — the marginal-contribution weights.
+    let mut w = Matrix::zeros(n, cols);
+    for p in 0..samples {
+        for j in 1..=n {
+            let col = p * (n + 1) + j;
+            let added = masks[col] & !masks[col - 1];
+            let i = added.trailing_zeros() as usize;
+            w.set(i, col, inv_m);
+            w.set(i, col - 1, w.get(i, col - 1) - inv_m);
+        }
+    }
+    // V̂: gather every game's values at the shared schedule (one load
+    // per cell — priced as an elementwise pass over the gathered table)
+    eng.trace.push(Op::Elementwise {
+        elems: cols * games.len(),
+    });
+    let v = Matrix::from_fn(cols, games.len(), |s, b| games[b].values[masks[s]]);
+    eng.batched_matmul(&w, &v, games.len())
+}
+
+/// Fused batched **int8** Shapley — the Int8 rung's kernel: the exact
+/// path's φ = T·V GEMM with both the cached structure matrix T and the
+/// stacked value columns V symmetrically quantized to int8, contracted
+/// with i32 accumulation and rescaled to f32 (recorded as
+/// [`Op::BatchedMatmulInt8`]).  Numerically identical to
+/// [`crate::xai::quantized::shapley_int8`] — that module's measured
+/// error/agreement oracles apply verbatim — within the modeled
+/// [`INT8_SHAPLEY_ERR`] bound.  Returns n×B.
+pub fn shapley_batch_int8(eng: &mut NativeEngine, games: &[ValueTable]) -> Matrix {
+    assert!(!games.is_empty());
+    let n = games[0].n;
+    assert!(games.iter().all(|g| g.n == n));
+    let t = weight_matrix_cached(n);
+    let v = Matrix::from_fn(1 << n, games.len(), |s, b| games[b].values[s]);
+    let qt = quantization::quantize(&t);
+    let qv = quantization::quantize(&v);
+    eng.batched_matmul_int8(&qt, &qv, games.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::xai::shapley::{shapley_batch_fused, shapley_exact, shapley_sampled};
+
+    fn games(n: usize, b: usize, seed: u64) -> Vec<ValueTable> {
+        let mut rng = Rng::new(seed);
+        (0..b)
+            .map(|_| ValueTable::new(n, rng.gauss_vec(1 << n)))
+            .collect()
+    }
+
+    #[test]
+    fn sampled_matches_per_game_sampler_on_shared_orders() {
+        // The fused GEMM form must agree with the reference
+        // permutation sampler driven by the same seeded orders.
+        let n = 6;
+        let gs = games(n, 4, 0xA11CE);
+        let mut eng = NativeEngine::new();
+        let fused = shapley_batch_sampled(&mut eng, &gs, 32, 0x5EED);
+        for (b, g) in gs.iter().enumerate() {
+            let mut rng = Rng::new(0x5EED);
+            let reference = shapley_sampled_with(&g, 32, &mut rng);
+            for i in 0..n {
+                assert!(
+                    (fused.get(i, b) - reference[i]).abs() < 1e-4,
+                    "game {b} player {i}: {} vs {}",
+                    fused.get(i, b),
+                    reference[i]
+                );
+            }
+        }
+    }
+
+    // Reference sampler sharing tiers::prefix_masks' draw order: one
+    // shuffle per sample from a fresh Rng(seed), marginals accumulated
+    // in f32 like the GEMM.
+    fn shapley_sampled_with(game: &ValueTable, samples: usize, rng: &mut Rng) -> Vec<f32> {
+        let n = game.n;
+        let mut phi = vec![0f32; n];
+        let mut order: Vec<usize> = (0..n).collect();
+        for _ in 0..samples {
+            rng.shuffle(&mut order);
+            let mut s = 0usize;
+            for &i in &order {
+                let before = game.values[s];
+                s |= 1 << i;
+                phi[i] += (game.values[s] - before) / samples as f32;
+            }
+        }
+        phi
+    }
+
+    #[test]
+    fn sampled_is_deterministic_for_a_seed() {
+        let gs = games(7, 3, 1);
+        let mut e1 = NativeEngine::new();
+        let mut e2 = NativeEngine::new();
+        let a = shapley_batch_sampled(&mut e1, &gs, SAMPLED_M, 42);
+        let b = shapley_batch_sampled(&mut e2, &gs, SAMPLED_M, 42);
+        assert_eq!(a.data, b.data);
+        let c = shapley_batch_sampled(&mut NativeEngine::new(), &gs, SAMPLED_M, 43);
+        assert_ne!(a.data, c.data, "different seed, different estimate");
+    }
+
+    #[test]
+    fn sampled_records_the_reduced_gemm() {
+        let n = 10;
+        let gs = games(n, 4, 2);
+        let mut eng = NativeEngine::new();
+        shapley_batch_sampled(&mut eng, &gs, SAMPLED_M, 7);
+        let k = SAMPLED_M * (n + 1);
+        assert!(eng.trace.ops.contains(&Op::Elementwise { elems: k * 4 }));
+        assert!(eng
+            .trace
+            .ops
+            .contains(&Op::BatchedMatmul { b: 4, m: n, k, n: 1 }));
+        assert!(k < (1 << n), "sampled schedule must beat the full table");
+    }
+
+    #[test]
+    fn int8_rung_matches_the_quantized_reference() {
+        let gs = games(8, 6, 3);
+        let mut eng = NativeEngine::new();
+        let ours = shapley_batch_int8(&mut eng, &gs);
+        let reference = crate::xai::quantized::shapley_int8(&gs);
+        assert_eq!(ours.data, reference.data);
+        assert!(eng.trace.ops.contains(&Op::BatchedMatmulInt8 {
+            b: 6,
+            m: 8,
+            k: 256,
+            n: 1
+        }));
+    }
+
+    #[test]
+    fn ladder_constants_are_coherent() {
+        // exact < tolerances the router will compare against
+        assert_eq!(Tier::default(), Tier::Exact);
+        assert!(sampled_shapley_error(SAMPLED_M) < 0.1);
+        assert!(reduced_ig_error(REDUCED_IG_STEPS) < sampled_shapley_error(SAMPLED_M));
+        for (i, t) in Tier::ALL.iter().enumerate() {
+            assert_eq!(t.index(), i);
+        }
+    }
+
+    #[test]
+    fn exact_kernels_are_untouched_by_the_ladder() {
+        // shapley_batch_fused must stay bit-for-bit what it was: the
+        // Exact rung IS the pre-ladder kernel.
+        let gs = games(6, 5, 4);
+        let mut eng = NativeEngine::new();
+        let fused = shapley_batch_fused(&mut eng, &gs);
+        for (b, g) in gs.iter().enumerate() {
+            let exact = shapley_exact(g);
+            for i in 0..g.n {
+                assert!((fused.get(i, b) - exact[i]).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -13,6 +13,7 @@ use xai_accel::coordinator::{BackendMode, Coordinator, CoordinatorConfig};
 use xai_accel::linalg::matrix::Matrix;
 use xai_accel::util::prop::check;
 use xai_accel::util::rng::Rng;
+use xai_accel::xai::tiers::{self, Tier};
 
 fn random_request(rng: &mut Rng) -> Request {
     match rng.below(5) {
@@ -49,6 +50,8 @@ fn envelope(id: u64, req: Request) -> Envelope {
         reply: tx,
         enqueued_at: Instant::now(),
         deadline: None,
+        tier: Tier::Exact,
+        max_error: 0.0,
         degraded: false,
     }
 }
@@ -565,69 +568,93 @@ fn partitioned_host_degrades_multihost_job_onto_survivors() {
 
 #[test]
 fn admission_degrades_then_sheds_under_a_live_slo() {
-    // PR 8 live acceptance: on a single idle CPU-class lane, a
-    // saliency request whose deadline sits strictly between the
-    // analytic admission estimates of saliency and its cheaper IG
-    // tier must be rewritten (degraded) at admission and still answer
-    // with a heatmap; a deadline below even the cheaper tier must
-    // shed synchronously.  The thresholds are computed from the SAME
-    // router functions the admission path prices with, so the test
-    // tracks the cost model instead of hard-coding microseconds.
+    // PR 8 live acceptance, restated on the PR 10 precision ladder: on
+    // a single idle CPU-class lane, a TOLERANT saliency request whose
+    // deadline sits strictly between the analytic admission estimates
+    // of the exact rung and its raw-gradient F32Fast rung must be
+    // walked down the ladder (degraded) at admission and still answer
+    // with a heatmap; the same deadline under the strict default
+    // tolerance must shed instead (tight stays exact), as must a
+    // deadline below even the cheapest rung.  The thresholds are
+    // computed from the SAME router functions the admission path
+    // prices with, so the test tracks the cost model instead of
+    // hard-coding microseconds.
     use xai_accel::coordinator::router;
     let cpu = xai_accel::hwsim::DeviceKind::Cpu;
     let sal_eta = router::lane_service_s(
         cpu,
-        &router::profile_for(RequestKind::Saliency, 1, 16),
+        &router::profile_for_tier(RequestKind::Saliency, Tier::Exact, 1, 16),
     );
-    let ig_eta = router::lane_service_s(
+    let fast_eta = router::lane_service_s(
         cpu,
-        &router::profile_for(RequestKind::IntGrad, 1, 16),
+        &router::profile_for_tier(RequestKind::Saliency, Tier::F32Fast, 1, 16),
     );
     assert!(
-        ig_eta < sal_eta,
-        "tier direction inverted: the cheaper_tier design assumes the \
-         plain-IG profile undercuts smoothed saliency on every lane \
-         class (ig {ig_eta} vs sal {sal_eta})"
+        fast_eta < sal_eta,
+        "ladder direction inverted: the raw-gradient F32Fast rung must \
+         undercut fused-smoothed exact saliency on every lane class \
+         (fast {fast_eta} vs exact {sal_eta})"
     );
     let mut config = CoordinatorConfig::default();
     config.lanes = vec![cpu];
     config.backend = BackendMode::NativeOnly;
+    // Depth-1 saliency batches: the size trigger fires at submit, so
+    // the flush-time re-check runs while the µs-scale deadline below
+    // is still live (the deadline is what admission prices, not a
+    // queueing allowance).
+    config.policy.max_batch.insert(RequestKind::Saliency, 1);
+    config.placement_batching = false;
     let coord = Coordinator::start(config).expect("start SLO coordinator");
     let mut rng = Rng::new(119);
     let image = xai_accel::data::cifar::sample_class(1, &mut rng).image;
 
-    // (a) deadline between the two tiers: degrade, not shed
-    let between = std::time::Duration::from_secs_f64((ig_eta + sal_eta) / 2.0);
+    // (a) tolerant + deadline between the two rungs: degrade, not shed
+    let between = std::time::Duration::from_secs_f64((fast_eta + sal_eta) / 2.0);
     let resp = coord
-        .submit_with_deadline(
+        .submit_with_slo(
             Request::Saliency { image: image.clone(), class: 1 },
             Some(between),
+            1.0,
         )
-        .expect("must be admitted via the cheaper tier")
+        .expect("must be admitted on the F32Fast rung")
         .wait()
         .expect("degraded request must still answer");
     assert!(matches!(resp, Response::Heatmap(_)));
     let stats = coord.stats();
-    assert_eq!(stats.degraded, 1, "admission must record the rewrite");
+    assert_eq!(stats.degraded, 1, "admission must record the rung walk");
     assert_eq!(stats.shed, 0);
 
-    // (b) deadline below even the cheaper tier: synchronous shed
-    let hopeless = std::time::Duration::from_secs_f64(ig_eta / 2.0);
+    // (b) the same deadline under the strict default tolerance: the
+    // walk is forbidden (every off-exact rung has modeled error > 0),
+    // so tight stays exact and sheds synchronously
     let err = coord
         .submit_with_deadline(
             Request::Saliency { image: image.clone(), class: 1 },
+            Some(between),
+        )
+        .expect_err("strict tolerance must shed rather than degrade");
+    assert!(err.to_string().contains("shed"), "{err}");
+
+    // (c) deadline below even the cheapest rung: shed despite tolerance
+    let hopeless = std::time::Duration::from_secs_f64(fast_eta / 2.0);
+    let err = coord
+        .submit_with_slo(
+            Request::Saliency { image: image.clone(), class: 1 },
             Some(hopeless),
+            1.0,
         )
         .expect_err("an unmeetable deadline must shed at admission");
     assert!(err.to_string().contains("shed"), "{err}");
 
-    // (c) a kind with no cheaper tier sheds directly
+    // (d) a kind with a one-rung ladder shed directly even when tolerant
     assert!(coord
-        .submit_with_deadline(Request::Classify { image }, Some(hopeless))
+        .submit_with_slo(Request::Classify { image }, Some(hopeless), 1.0)
         .is_err());
     let stats = coord.stats();
-    assert_eq!(stats.shed, 2);
+    assert_eq!(stats.shed, 3);
     assert_eq!(stats.degraded, 1);
+    // the one completion was served on the F32Fast rung
+    assert_eq!(stats.tiers, [0, 1, 0, 0], "served-tier mix: {:?}", stats.tiers);
     coord.shutdown();
 }
 
@@ -639,8 +666,9 @@ fn flush_recheck_resolves_deadlines_that_expired_in_the_assembler() {
     // requests in the assembler (long `max_wait`, no companions) until
     // their SLO has provably expired: the queue-position re-check at
     // flush must answer them synchronously instead of burning lane
-    // time — shedding kinds with no cheaper tier, and for saliency
-    // first rewriting to the IG tier (counted) before the rewrite's
+    // time — shedding kinds whose ladder is spent, and for a tolerant
+    // saliency request first walking one rung down to F32Fast
+    // (counted as a late degrade) before the downgraded sub-batch's
     // own re-check sheds it too.
     use xai_accel::coordinator::router;
     let cpu = xai_accel::hwsim::DeviceKind::Cpu;
@@ -661,7 +689,7 @@ fn flush_recheck_resolves_deadlines_that_expired_in_the_assembler() {
     config.policy.max_wait = hold;
     let coord = Coordinator::start(config).expect("start flush-recheck coordinator");
 
-    // (a) no cheaper tier: late shed, synchronous error reply
+    // (a) a one-rung ladder: late shed, synchronous error reply
     let err = coord
         .submit_with_deadline(
             Request::Classify { image: Matrix::zeros(16, 16) },
@@ -672,24 +700,140 @@ fn flush_recheck_resolves_deadlines_that_expired_in_the_assembler() {
         .expect_err("deadline expired in the assembler: the flush re-check must shed");
     assert!(err.to_string().contains("shed at flush"), "{err}");
 
-    // (b) saliency: the re-check tries the cheaper tier first (counted
-    // as a late degrade), whose own re-check then sheds it
+    // (b) tolerant saliency: the re-check walks one rung down to
+    // F32Fast first (counted as a late degrade); the downgraded
+    // sub-batch re-prices, finds the deadline still expired, and its
+    // spent ladder sheds it too
     let err = coord
-        .submit_with_deadline(
+        .submit_with_slo(
             Request::Saliency { image: Matrix::zeros(16, 16), class: 1 },
             Some(slack(sal_eta)),
+            1.0,
         )
         .expect("an idle lane must admit this deadline")
         .wait()
-        .expect_err("even the IG rewrite was hopeless by flush");
+        .expect_err("even the F32Fast rung was hopeless by flush");
     assert!(err.to_string().contains("shed at flush"), "{err}");
 
     let stats = coord.stats();
-    assert_eq!(stats.late_shed, 2, "classify + the saliency rewrite");
-    assert_eq!(stats.late_degraded, 1, "the saliency → IG rewrite");
+    assert_eq!(stats.late_shed, 2, "classify + the downgraded saliency");
+    assert_eq!(stats.late_degraded, 1, "the saliency → F32Fast rung walk");
     assert_eq!(stats.shed, 0, "admission must not have shed these");
     assert_eq!(stats.degraded, 0);
     assert_eq!(stats.completed, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn tolerance_ladder_walks_rung_by_rung_and_never_past_max_error() {
+    // PR 10 live acceptance: on a single idle CPU-class lane, the
+    // Shapley ladder (exact → int8 → sampled) is walked exactly as far
+    // as the declared tolerance allows.  A loose-tolerance request
+    // whose deadline only the sampled rung can meet serves the seeded
+    // deterministic sampled estimator bit-for-bit; a tolerance of
+    // exactly the int8 bound admits int8 but NOT sampling (1/√m
+    // exceeds it), so the same tight deadline sheds — the walk never
+    // passes `max_error`; and with no SLO at all the strict default
+    // stays exact.  The per-rung served counts must land in
+    // `CoordinatorStats::tiers`.
+    use xai_accel::coordinator::router;
+    use xai_accel::xai::shapley::ValueTable;
+    let cpu = xai_accel::hwsim::DeviceKind::Cpu;
+    let n = 16usize;
+    let eta = |t: Tier| {
+        router::lane_service_s(cpu, &router::profile_for_tier(RequestKind::Shapley, t, 1, n))
+    };
+    let (e_exact, e_int8, e_sampled) = (eta(Tier::Exact), eta(Tier::Int8), eta(Tier::Sampled));
+    assert!(
+        e_sampled < e_int8 && e_int8 < e_exact,
+        "the priced ladder must cheapen monotonically \
+         (exact {e_exact}, int8 {e_int8}, sampled {e_sampled})"
+    );
+
+    let mut config = CoordinatorConfig::default();
+    config.lanes = vec![cpu];
+    config.backend = BackendMode::NativeOnly;
+    // Depth-1 Shapley batches: the size trigger flushes at submit, so
+    // the µs-scale deadlines below are still live at the re-check.
+    config.policy.max_batch.insert(RequestKind::Shapley, 1);
+    config.placement_batching = false;
+    let coord = Coordinator::start(config).expect("start ladder coordinator");
+
+    let mut rng = Rng::new(2026);
+    let values: Vec<f32> = (0..1usize << n).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+    let names: Vec<String> = (0..n).map(|i| format!("f{i}")).collect();
+    let req = || Request::Shapley { n, values: values.clone(), names: names.clone() };
+    let game = ValueTable::new(n, values.clone());
+
+    // (a) loose tolerance + a deadline only the sampled rung meets:
+    // admission walks exact → int8 → sampled
+    let tight = std::time::Duration::from_secs_f64((e_sampled + e_int8) / 2.0);
+    let resp = coord
+        .submit_with_slo(req(), Some(tight), 1.0)
+        .expect("the sampled rung must fit the deadline")
+        .wait()
+        .expect("sampled-rung request must still answer");
+    let Response::Attribution(att) = resp else {
+        panic!("wrong response kind");
+    };
+    // bit-for-bit the fixed-seed sampled estimator the backend runs
+    let mut eng = xai_accel::trace::NativeEngine::new();
+    let phi = tiers::shapley_batch_sampled(
+        &mut eng,
+        std::slice::from_ref(&game),
+        tiers::SAMPLED_M,
+        xai_accel::coordinator::native::SAMPLED_SEED,
+    );
+    for (i, got) in att.scores.iter().enumerate() {
+        assert_eq!(*got, phi.get(i, 0), "sampled rung must be the seeded estimator");
+    }
+
+    // (b) tolerance = the int8 bound: sampling's modeled error 1/√m
+    // sits past it, so the walk stops at int8 — which cannot meet this
+    // deadline — and the request sheds instead of over-degrading
+    assert!(
+        tiers::sampled_shapley_error(tiers::SAMPLED_M) > tiers::INT8_SHAPLEY_ERR,
+        "the sampled rung must sit past the int8 tolerance for this test"
+    );
+    let err = coord
+        .submit_with_slo(req(), Some(tight), tiers::INT8_SHAPLEY_ERR)
+        .expect_err("no rung within tolerance meets the deadline");
+    assert!(err.to_string().contains("shed"), "{err}");
+
+    // (c) the same tolerance with a deadline int8 CAN meet: serves the
+    // quantized kernel exactly
+    let mid = std::time::Duration::from_secs_f64((e_int8 + e_exact) / 2.0);
+    let resp = coord
+        .submit_with_slo(req(), Some(mid), tiers::INT8_SHAPLEY_ERR)
+        .expect("the int8 rung must fit the deadline")
+        .wait()
+        .expect("int8-rung request must still answer");
+    let Response::Attribution(att) = resp else {
+        panic!("wrong response kind");
+    };
+    let q = xai_accel::xai::quantized::shapley_int8(std::slice::from_ref(&game));
+    for (i, got) in att.scores.iter().enumerate() {
+        assert_eq!(*got, q.get(i, 0), "int8 rung must be the quantized kernel");
+    }
+
+    // (d) no SLO, strict default tolerance: exact serving untouched
+    let resp = coord
+        .submit_with_tolerance(req(), 0.0)
+        .expect("no deadline admits unconditionally")
+        .wait()
+        .expect("exact request must answer");
+    assert!(matches!(resp, Response::Attribution(_)));
+
+    let stats = coord.stats();
+    assert_eq!(stats.degraded, 2, "the sampled and int8 ladder walks");
+    assert_eq!(stats.shed, 1, "the over-tight tolerance");
+    assert_eq!(stats.completed, 3);
+    assert_eq!(
+        stats.tiers,
+        [1, 0, 1, 1],
+        "served mix must be one exact, one int8, one sampled: {:?}",
+        stats.tiers
+    );
     coord.shutdown();
 }
 
